@@ -1,0 +1,141 @@
+//! Regenerates every figure of the evaluation section and asserts the
+//! paper's qualitative claims. `cargo bench --bench figures [-- <figN>]`.
+
+use blink::experiments::{self, report};
+use blink::util::stats;
+
+fn main() {
+    // cargo bench passes a `--bench` flag; only non-dash args are filters
+    let filter: Option<String> = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let want = |id: &str| filter.as_deref().map(|f| f == id).unwrap_or(true);
+    let t0 = std::time::Instant::now();
+
+    if want("fig1") {
+        let f = experiments::fig1(1);
+        report::print_fig1(&f);
+        // claims: areas A/B/C exist, optimum at 7, Ernest picks area A and
+        // is accurate only in area B
+        assert_eq!(f.optimal, 7, "svm area C at 7 machines");
+        assert!(f.ernest_pick < 7, "Ernest mispicks into area A");
+        let (n1, t1, c1, _) = f.series[0];
+        let (_, t7, c7, _) = f.series[6];
+        assert_eq!(n1, 1);
+        assert!(c1 / c7 > 8.0, "area A cost blow-up ({c1} vs {c7})");
+        assert!(t1 > t7, "time falls with machines");
+        // Ernest accurate in area B (within 25 % at n=8..12)...
+        for i in 7..12 {
+            let rel = (f.ernest_time_min[i] - f.series[i].1).abs() / f.series[i].1;
+            assert!(rel < 0.25, "ernest area-B accuracy at n={}: {rel}", i + 1);
+        }
+        // ...and catastrophically optimistic at n=1
+        assert!(f.series[0].1 / f.ernest_time_min[0] > 4.0);
+        println!("fig1 claims OK\n");
+    }
+
+    if want("fig2") {
+        let dag = blink::dag::fig2_logistic_regression();
+        let counts = dag.compute_counts_uncached();
+        println!("FIGURE 2 — LR merged DAG compute counts: {counts:?}");
+        assert_eq!(counts[1], 8);
+        assert_eq!(counts[2], 6);
+        println!("fig2 claims OK\n");
+    }
+
+    if want("fig4") {
+        let scales = experiments::fig4(1);
+        report::print_fig4(&scales);
+        for sc in &scales {
+            assert!(sc.sizes_mb.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-9));
+            assert!(stats::cv(&sc.times_s) > 0.001);
+        }
+        println!("fig4 claims OK\n");
+    }
+
+    // figs 6 + 10 share one Table-1 run
+    if want("fig6") || want("fig10") {
+        let table = experiments::table1(1);
+        if want("fig6") {
+            let rows = experiments::fig6(&table);
+            report::print_fig6(&rows);
+            let (vs_avg, vs_worst) = experiments::fig6_ratios(&rows);
+            // paper: 52.6 % of average, 25.1 % of worst
+            assert!(vs_avg < 0.75, "blink should beat the average ({vs_avg})");
+            assert!(vs_worst < 0.45, "and crush the worst ({vs_worst})");
+            assert!(vs_worst < vs_avg);
+            println!("fig6 claims OK\n");
+        }
+        if want("fig10") {
+            let f = experiments::fig10(&table, 1);
+            report::print_fig10(&f);
+            let avg = stats::mean(&f.rows.iter().map(|r| r.overhead).collect::<Vec<_>>());
+            assert!(avg < 0.25, "sampling overhead small ({avg})");
+            assert!(f.ernest_over_blink > 5.0, "Ernest sampling far costlier");
+            // Block-s costs more than Block-n on average (paper: 4.9x)
+            let mean_of = |ap: &str| {
+                stats::mean(
+                    &f.rows
+                        .iter()
+                        .filter(|r| r.approach == ap)
+                        .map(|r| r.overhead)
+                        .collect::<Vec<_>>(),
+                )
+            };
+            assert!(mean_of("Block-s") > mean_of("Block-n"));
+            println!("fig10 claims OK\n");
+        }
+    }
+
+    if want("fig7") {
+        let rows = experiments::fig7();
+        report::print_fig7(&rows);
+        let worst = rows.iter().max_by(|a, b| a.error.partial_cmp(&b.error).unwrap()).unwrap();
+        assert_eq!(worst.app, "gbt", "GBT is the worst-predicted app");
+        assert!(worst.error > 0.10, "GBT error is large");
+        let others: Vec<f64> =
+            rows.iter().filter(|r| r.app != "gbt").map(|r| r.error).collect();
+        assert!(stats::mean(&others) < 0.05, "non-GBT apps predict well");
+        println!("fig7 claims OK\n");
+    }
+
+    if want("fig8") {
+        let pts = experiments::fig8();
+        report::print_fig8(&pts);
+        let first = pts.first().unwrap();
+        let last = pts.last().unwrap();
+        assert!(last.sample_cost_machine_min > first.sample_cost_machine_min);
+        assert!(last.accuracy > first.accuracy, "more samples buy accuracy");
+        assert!(last.accuracy > 0.9, "10-sample accuracy high");
+        assert!(last.cv_rel_err < first.cv_rel_err, "CV error falls (Fig. 9)");
+        println!("fig8 claims OK\n");
+    }
+
+    if want("fig9") {
+        report::print_fig9(&experiments::fig9_sizes());
+        println!();
+    }
+
+    if want("sec4") {
+        let p = experiments::sec4_parallelism(1);
+        let c = experiments::sec4_single_vs_cluster(1);
+        report::print_sec4(&p, &c);
+        assert!(p.time_high_s > p.time_low_s, "more tasks, longer sample run");
+        assert!(p.size_high_mb > p.size_low_mb, "more tasks, larger measured size");
+        assert!(c.cost_cluster > 5.0 * c.cost_single, "cluster sampling is wasteful");
+        println!("sec4 claims OK\n");
+    }
+
+    if want("fig11") {
+        let f = experiments::fig11(1);
+        report::print_fig11(&f);
+        assert_eq!(f.blink_pick, 7, "blink picks 7 for km @ 200 %");
+        assert_eq!(f.true_optimal, 8, "true optimum is 8");
+        let ev: usize = f.evictions_per_machine.iter().sum();
+        assert!(ev > 0, "skew-driven evictions occurred");
+        let max = *f.tasks_per_machine.iter().max().unwrap();
+        let min = *f.tasks_per_machine.iter().min().unwrap();
+        assert!(max > min, "task distribution skewed");
+        println!("fig11 claims OK\n");
+    }
+
+    println!("[figures done in {:.1} s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,102 @@
+//! Micro-benchmarks of the hot paths (the §Perf instrument panel):
+//! simulator task throughput, memory-manager ops, NNLS fitting (Rust vs
+//! PJRT Pallas kernel), selector, and listener-log serialization.
+//! `cargo bench --bench hotpaths`.
+
+use blink::blink::models::{FitBackend, FitProblem, RustFit};
+use blink::blink::select_cluster_size;
+use blink::memory::{EvictionPolicy, PartitionKey, UnifiedMemory};
+use blink::metrics::{EventLog, RunSummary};
+use blink::sim::{simulate, ClusterSpec, MachineSpec, SimOptions};
+use blink::util::bench::Bencher;
+use blink::workloads::{app_by_name, FULL_SCALE};
+
+fn main() {
+    let mut b = Bencher::default();
+
+    // ---- simulator: full svm actual run (2000 parts x 101 jobs) --------
+    let svm = app_by_name("svm").unwrap();
+    let profile = svm.profile(FULL_SCALE);
+    let tasks = profile.parallelism * (profile.iterations + 1);
+    let m = b.bench("sim/svm-100pct-7-machines", || {
+        simulate(
+            &profile,
+            &ClusterSpec::workers(7),
+            SimOptions { seed: 1, detailed_log: false, ..Default::default() },
+        )
+    });
+    println!(
+        "  -> {:.2} M simulated tasks/s",
+        tasks as f64 / m.mean_s() / 1e6
+    );
+
+    // area-A (recompute-heavy, memory churn) variant
+    let m = b.bench("sim/svm-100pct-2-machines-areaA", || {
+        simulate(
+            &profile,
+            &ClusterSpec::workers(2),
+            SimOptions { seed: 1, detailed_log: false, ..Default::default() },
+        )
+    });
+    println!("  -> {:.2} M tasks/s", tasks as f64 / m.mean_s() / 1e6);
+
+    // ---- memory manager --------------------------------------------------
+    b.bench("memory/insert-evict-10k", || {
+        let mut mem = UnifiedMemory::new(1000.0, 500.0, EvictionPolicy::Lru);
+        for i in 0..10_000 {
+            mem.insert(PartitionKey { dataset: i % 4, index: i }, 1.0, 3, 1);
+        }
+        mem.stats().evictions
+    });
+
+    // ---- predictor fit: rust vs pjrt --------------------------------------
+    let problems: Vec<FitProblem> = (0..16)
+        .map(|i| {
+            let xs: Vec<Vec<f64>> =
+                (1..=4).map(|s| vec![1.0, s as f64 + i as f64 * 0.1]).collect();
+            let y: Vec<f64> = xs.iter().map(|r| 2.0 + 3.0 * r[1]).collect();
+            FitProblem { x: xs, y, w: vec![1.0; 4] }
+        })
+        .collect();
+    let mut rust = RustFit::default();
+    b.bench("fit/rust-nnls-16-problems", || rust.fit_batch(&problems));
+
+    if blink::runtime::artifacts_available() {
+        match blink::runtime::Runtime::from_repo_root() {
+            Ok(mut rt) => {
+                // compile once outside the timing loop
+                let _ = rt.get("linfit").expect("linfit compiles");
+                let mut fit = blink::runtime::PjrtFit::new(&mut rt);
+                b.bench("fit/pjrt-linfit-16-problems", || fit.fit_batch(&problems));
+            }
+            Err(e) => eprintln!("skipping pjrt bench: {e:#}"),
+        }
+    } else {
+        eprintln!("skipping pjrt bench: run `make artifacts`");
+    }
+
+    // ---- selector ---------------------------------------------------------
+    let machine = MachineSpec::worker_node();
+    b.bench("selector/sweep-64-sizes", || {
+        let mut acc = 0;
+        for c in 1..=64 {
+            acc += select_cluster_size(c as f64 * 1000.0, 5000.0, &machine, 64).machines;
+        }
+        acc
+    });
+
+    // ---- listener logs ------------------------------------------------------
+    let res = simulate(
+        &app_by_name("km").unwrap().profile(FULL_SCALE),
+        &ClusterSpec::workers(4),
+        SimOptions { seed: 1, ..Default::default() },
+    );
+    let text = res.log.to_jsonl();
+    println!("  (log: {} events, {} KB)", res.log.events.len(), text.len() / 1024);
+    b.bench("metrics/serialize-jsonl", || res.log.to_jsonl());
+    b.bench("metrics/parse-jsonl+summarize", || {
+        RunSummary::from_log(&EventLog::from_jsonl(&text).unwrap())
+    });
+
+    println!("\nall hot-path benches done");
+}

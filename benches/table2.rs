@@ -1,0 +1,24 @@
+//! Regenerates Table 2 (cluster bounds on a fixed 12-machine cluster,
+//! ±5 % probes around the predicted max data scale).
+//! `cargo bench --bench table2`.
+
+use blink::experiments::{self, report};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = experiments::table2(1);
+    report::print_table2(&rows);
+    println!("\n[generated in {:.1} s]", t0.elapsed().as_secs_f64());
+
+    // paper claim: predicted bound within +-5 % of the true boundary
+    for row in &rows {
+        let err = (row.predicted_scale - row.true_boundary).abs() / row.true_boundary;
+        println!("claim {}: bound error {:.2} % (<5 %?)", row.app, err * 100.0);
+        assert!(err < 0.05, "{}: bound error {err}", row.app);
+        // the -5 % probe must be eviction-free; +5 % must not be
+        let at = |off: f64| row.probes.iter().find(|p| (p.0 - off).abs() < 1e-9).unwrap().1;
+        assert!(at(-0.05), "{}: -5 % probe should fit", row.app);
+        assert!(!at(0.05), "{}: +5 % probe should evict", row.app);
+    }
+    println!("Table 2 claims OK");
+}

@@ -1,0 +1,55 @@
+//! Cluster advisor: Blink recommendations for every workload, including
+//! the machines_min/machines_max bracket and headroom diagnostics — the
+//! report an operator would consult before submitting a job.
+//!
+//! ```bash
+//! cargo run --release --example cluster_advisor [-- <scale>]
+//! ```
+
+use blink::blink::{Blink, RustFit};
+use blink::sim::MachineSpec;
+use blink::util::units::{fmt_mb, fmt_secs};
+use blink::workloads::{all_apps, FULL_SCALE};
+
+fn main() {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(FULL_SCALE);
+    let machine = MachineSpec::worker_node();
+    println!(
+        "cluster advisor @ data scale {scale} — machine type: {} cores, {} heap (M={}, R={})\n",
+        machine.cores,
+        fmt_mb(machine.heap_mb),
+        fmt_mb(machine.unified_mb()),
+        fmt_mb(machine.storage_floor_mb()),
+    );
+    println!(
+        "{:<7} {:>10} {:>12} {:>12} {:>5} {:>5} {:>6} {:>12} {:>12}",
+        "app", "input", "pred cache", "pred exec", "min", "max", "PICK", "headroom", "sample cost"
+    );
+    for app in all_apps() {
+        let mut backend = RustFit::default();
+        let mut blink = Blink::new(&mut backend);
+        let scales = blink::experiments::sampling_scales(&app);
+        let d = blink.decide_with_scales(&app, scale, &machine, &scales);
+        let (min, max, headroom) = d
+            .selection
+            .as_ref()
+            .map(|s| (s.machines_min, s.machines_max, s.headroom_mb))
+            .unwrap_or((1, 1, 0.0));
+        println!(
+            "{:<7} {:>10} {:>12} {:>12} {:>5} {:>5} {:>6} {:>12} {:>12}",
+            app.name,
+            fmt_mb(app.input_mb(scale)),
+            fmt_mb(d.predicted_cached_mb),
+            fmt_mb(d.predicted_exec_mb),
+            min,
+            max,
+            d.machines,
+            fmt_mb(headroom),
+            fmt_secs(d.sample_cost_machine_s),
+        );
+    }
+    println!("\n(PICK = minimal eviction-free cluster size; headroom = spare cache per machine)");
+}

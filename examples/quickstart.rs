@@ -1,0 +1,55 @@
+//! Quickstart: the full Blink pipeline on one application.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Runs three tiny sample runs of SVM (0.1–0.3 % of a 59.6 GB input) on a
+//! simulated single sample node, fits the size/memory models, selects the
+//! optimal cluster size, then executes the actual run at that size and
+//! compares its cost against every other cluster size.
+
+use blink::blink::{Blink, RustFit};
+use blink::experiments::actual_run;
+use blink::sim::MachineSpec;
+use blink::util::units::{fmt_mb, fmt_pct, fmt_secs};
+use blink::workloads::{app_by_name, FULL_SCALE};
+
+fn main() {
+    let app = app_by_name("svm").expect("svm registered");
+    println!("== BLINK quickstart: {} ({} input) ==\n", app.name, fmt_mb(app.input_mb_full));
+
+    // 1. sample + predict + select
+    let mut backend = RustFit::default();
+    let mut blink = Blink::new(&mut backend);
+    let machine = MachineSpec::worker_node();
+    let decision = blink.decide(&app, FULL_SCALE, &machine);
+
+    println!("sample runs cost      : {}", fmt_secs(decision.sample_cost_machine_s));
+    println!("predicted cached size : {}", fmt_mb(decision.predicted_cached_mb));
+    println!("actual cached size    : {}", fmt_mb(app.total_true_cached_mb(FULL_SCALE)));
+    println!("predicted exec memory : {}", fmt_mb(decision.predicted_exec_mb));
+    println!("recommended cluster   : {} machines\n", decision.machines);
+
+    // 2. the actual run at the recommendation, vs all other sizes
+    println!("{:>4} {:>12} {:>16} {:>8}", "n", "time", "cost (m-min)", "");
+    let mut costs = Vec::new();
+    for n in 1..=12 {
+        let s = actual_run(&app, FULL_SCALE, n, 42 + n as u64);
+        let mark = if n == decision.machines { "<- pick" } else { "" };
+        println!(
+            "{:>4} {:>12} {:>16.1} {:>8}",
+            n,
+            fmt_secs(s.duration_s),
+            s.cost_machine_min(),
+            mark
+        );
+        costs.push(s.cost_machine_min());
+    }
+    let pick_cost = costs[decision.machines - 1] + decision.sample_cost_machine_s / 60.0;
+    let avg = blink::util::stats::mean(&costs);
+    println!(
+        "\nBLINK total (incl. sampling) = {pick_cost:.1} machine-min = {} of the average cost",
+        fmt_pct(pick_cost / avg)
+    );
+}

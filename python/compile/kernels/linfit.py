@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: batched non-negative least squares (projected gradient).
+
+This is the hot spot of Blink's prediction phase: after the sample runs, the
+size predictor and the execution-memory predictor each fit a zoo of candidate
+models (linear, affine-in-sqrt, quadratic, ...) with leave-one-out
+cross-validation. Expressing every (candidate model x CV fold x dataset)
+fit as one batched NNLS problem lets the whole prediction phase lower into a
+single HLO module that the Rust coordinator executes once per application.
+
+TPU mapping (cf. DESIGN.md #Hardware-Adaptation): the grid walks the batch
+dimension; each program owns one tiny [N, K] design matrix resident in VMEM
+(N <= 16, K <= 4 -> well under a single VMEM tile), computes the [K, K] Gram
+matrix with an MXU-shaped contraction and runs a fixed-trip-count projected
+gradient loop entirely out of registers/VMEM. There is no HBM traffic inside
+the loop. On this image the kernel runs under ``interpret=True`` (CPU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT shapes (padded by the Rust caller; see artifacts/manifest.json).
+BATCH = 64     # candidate-models x folds x cached-datasets, padded
+POINTS = 16    # max sample runs per fit (paper uses 3..10), padded
+FEATURES = 4   # max model features (1, s, s^2 / sqrt(s) / log(s)), padded
+PGD_ITERS = 300
+
+
+def _linfit_kernel(x_ref, y_ref, mask_ref, theta_ref, rmse_ref, *, iters):
+    """One NNLS problem per grid step.
+
+    x_ref:    [1, N, K] design matrix block
+    y_ref:    [1, N]    labels
+    mask_ref: [1, N]    row weights (0 excludes a row -> CV folds, padding)
+    theta_ref:[1, K]    out: non-negative coefficients
+    rmse_ref: [1, 1]    out: residual RMSE over active rows
+    """
+    x = x_ref[0]                                  # [N, K]
+    y = y_ref[0]                                  # [N]
+    m = mask_ref[0]                               # [N]
+
+    xw = x * m[:, None]                           # weighted rows
+    gram = xw.T @ x                               # [K, K]  (MXU contraction)
+    rhs = xw.T @ y                                # [K]
+
+    # Lipschitz bound of the quadratic: row-sum norm of the Gram matrix.
+    lip = jnp.max(jnp.sum(jnp.abs(gram), axis=-1))
+    eta = 1.0 / jnp.maximum(lip, 1e-12)
+
+    # FISTA (accelerated projected gradient): same KKT point as plain PGD
+    # but far fewer iterations on the ill-conditioned quadratic/log feature
+    # families — mirrors rust/src/linalg exactly.
+    def body(_, carry):
+        theta, momentum, t = carry
+        grad = gram @ momentum - rhs
+        nxt = jnp.maximum(momentum - eta * grad, 0.0)
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        beta = (t - 1.0) / t_next
+        return nxt, nxt + beta * (nxt - theta), t_next
+
+    zero = jnp.zeros_like(rhs)
+    theta, _, _ = jax.lax.fori_loop(0, iters, body, (zero, zero, jnp.float32(1.0)))
+
+    pred = x @ theta                              # [N]
+    se = m * (pred - y) ** 2
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    rmse = jnp.sqrt(jnp.sum(se) / n)
+
+    theta_ref[0] = theta
+    rmse_ref[0, 0] = rmse
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def linfit(x, y, mask, iters: int = PGD_ITERS):
+    """Batched NNLS fit + residual RMSE.
+
+    Args:
+      x:    [B, N, K] design matrices.
+      y:    [B, N]    labels.
+      mask: [B, N]    row weights.
+
+    Returns:
+      (theta [B, K], rmse [B]).
+    """
+    b, n, k = x.shape
+    theta, rmse = pl.pallas_call(
+        functools.partial(_linfit_kernel, iters=iters),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), x.dtype),
+            jax.ShapeDtypeStruct((b, 1), x.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y, mask)
+    return theta, rmse[:, 0]

@@ -1,0 +1,140 @@
+"""L1 Pallas kernels: per-iteration compute of the HiBench-style workloads.
+
+These kernels are the task bodies executed by the simulator's RealCompute
+mode (examples/end_to_end.rs): a Spark task that "computes a partition" runs
+one of these over that partition's rows, so the cached-vs-recomputed cost
+asymmetry the paper measures (97x, Section 1) is exercised with real compute
+rather than an analytic constant.
+
+TPU mapping: the grid tiles the row (sample) dimension; each program pulls a
+[TILE_T, D] block of the partition from HBM into VMEM (BlockSpec below),
+performs MXU-shaped [TILE_T, D] x [D] products, and accumulates the reduced
+gradient / centroid statistics into a single VMEM-resident output block that
+every grid step revisits (TPU grids execute sequentially, so `+=` after a
+first-step init is the canonical reduction idiom). interpret=True on this
+image.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT shapes (padded by the Rust caller; see artifacts/manifest.json).
+SVM_ROWS, SVM_DIM = 4096, 64
+KM_ROWS, KM_DIM, KM_K = 4096, 16, 8
+TILE_T = 256
+
+
+def _svm_grad_kernel(x_ref, y_ref, w_ref, gsum_ref, loss_ref):
+    """Hinge-loss subgradient + loss, accumulated across row tiles.
+
+    x_ref: [TILE_T, D], y_ref: [TILE_T], w_ref: [D]
+    gsum_ref: [D] (sum over rows of -y*x*1[margin<1]), loss_ref: [1] (sum).
+    """
+    x = x_ref[...]
+    y = y_ref[...]
+    w = w_ref[...]
+
+    margin = y * (x @ w)                                   # [TILE_T]
+    active = jnp.where(margin < 1.0, 1.0, 0.0).astype(x.dtype)
+    gpart = -(x * (y * active)[:, None]).sum(axis=0)       # [D]
+    lpart = jnp.maximum(0.0, 1.0 - margin).sum()
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        gsum_ref[...] = jnp.zeros_like(gsum_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    gsum_ref[...] += gpart
+    loss_ref[...] += lpart[None]
+
+
+def _logistic_grad_kernel(x_ref, y_ref, w_ref, gsum_ref, loss_ref):
+    """Logistic-loss gradient + stable NLL, accumulated across row tiles."""
+    x = x_ref[...]
+    y = y_ref[...]
+    w = w_ref[...]
+
+    z = x @ w
+    p = 1.0 / (1.0 + jnp.exp(-z))
+    gpart = (x * (p - y)[:, None]).sum(axis=0)
+    lpart = (jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))).sum()
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        gsum_ref[...] = jnp.zeros_like(gsum_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    gsum_ref[...] += gpart
+    loss_ref[...] += lpart[None]
+
+
+def _kmeans_kernel(x_ref, c_ref, sums_ref, counts_ref, inertia_ref):
+    """Lloyd-step statistics (cluster sums / counts / total squared dist)."""
+    x = x_ref[...]                                          # [TILE_T, D]
+    c = c_ref[...]                                          # [K, D]
+
+    d2 = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)     # [TILE_T, K]
+    assign = jnp.argmin(d2, axis=-1)
+    onehot = (assign[:, None] == jnp.arange(c.shape[0])[None, :]).astype(x.dtype)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        inertia_ref[...] = jnp.zeros_like(inertia_ref)
+
+    sums_ref[...] += onehot.T @ x                           # [K, D] MXU
+    counts_ref[...] += onehot.sum(axis=0)
+    inertia_ref[...] += jnp.min(d2, axis=-1).sum()[None]
+
+
+def _row_tiled_call(kernel, x, row_args, bcast_args, out_shapes):
+    """Shared pallas_call wiring: tile rows, broadcast params, reduce outs."""
+    t, d = x.shape
+    assert t % TILE_T == 0, (t, TILE_T)
+    grid = (t // TILE_T,)
+    in_specs = [pl.BlockSpec((TILE_T, d), lambda i: (i, 0))]
+    for a in row_args:
+        in_specs.append(pl.BlockSpec((TILE_T,) + a.shape[1:],
+                                     lambda i: (i,) + (0,) * (a.ndim - 1)))
+    for a in bcast_args:
+        in_specs.append(pl.BlockSpec(a.shape, lambda i, nd=a.ndim: (0,) * nd))
+    out_specs = [pl.BlockSpec(s.shape, lambda i, nd=len(s.shape): (0,) * nd)
+                 for s in out_shapes]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=True,
+    )(x, *row_args, *bcast_args)
+
+
+@jax.jit
+def svm_grad_sums(x, y, w):
+    """Returns (grad_sum [D], hinge_loss_sum [1]) over all rows of x."""
+    outs = [jax.ShapeDtypeStruct(w.shape, x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype)]
+    return _row_tiled_call(_svm_grad_kernel, x, [y], [w], outs)
+
+
+@jax.jit
+def logistic_grad_sums(x, y, w):
+    """Returns (grad_sum [D], nll_sum [1]) over all rows of x."""
+    outs = [jax.ShapeDtypeStruct(w.shape, x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype)]
+    return _row_tiled_call(_logistic_grad_kernel, x, [y], [w], outs)
+
+
+@jax.jit
+def kmeans_stats(x, c):
+    """Returns (cluster_sums [K, D], counts [K], inertia_sum [1])."""
+    k, d = c.shape
+    outs = [jax.ShapeDtypeStruct((k, d), x.dtype),
+            jax.ShapeDtypeStruct((k,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype)]
+    return _row_tiled_call(_kmeans_kernel, x, [], [c], outs)

@@ -1,0 +1,96 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust coordinator.
+
+Each public function here is a pure jax function built on the L1 Pallas
+kernels in ``kernels/``. ``aot.py`` lowers every entry in ``EXPORTS`` once
+(fixed shapes, listed in the manifest) to HLO text; the Rust runtime loads
+and executes them via PJRT. Python never runs on the request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import linfit as linfit_k
+from .kernels import ml_steps
+
+# Hyper-parameters are baked into the AOT artifact (one executable per model
+# variant, as per the architecture); the Rust side scales data instead.
+SVM_LR, SVM_REG = 0.1, 1e-3
+LOGREG_LR, LOGREG_REG = 0.1, 1e-3
+
+
+def predictor_fit(x, y, mask):
+    """Blink's prediction phase: batched NNLS fit + residual RMSE.
+
+    One batch element per (cached-dataset x candidate-model x CV-fold);
+    the Rust coordinator builds the design matrices / fold masks and does
+    model selection on the returned RMSEs.
+    """
+    theta, rmse = linfit_k.linfit(x, y, mask)
+    return theta, rmse
+
+
+def svm_iteration(x, y, w):
+    """One full hinge-loss gradient-descent step over a partition."""
+    gsum, lsum = ml_steps.svm_grad_sums(x, y, w)
+    t = jnp.asarray(x.shape[0], x.dtype)
+    grad = gsum / t + SVM_REG * w
+    loss = lsum[0] / t + 0.5 * SVM_REG * jnp.sum(w * w)
+    return w - SVM_LR * grad, loss
+
+
+def logreg_iteration(x, y, w):
+    """One full logistic-regression gradient-descent step over a partition."""
+    gsum, lsum = ml_steps.logistic_grad_sums(x, y, w)
+    t = jnp.asarray(x.shape[0], x.dtype)
+    grad = gsum / t + LOGREG_REG * w
+    loss = lsum[0] / t + 0.5 * LOGREG_REG * jnp.sum(w * w)
+    return w - LOGREG_LR * grad, loss
+
+
+def kmeans_iteration(x, c):
+    """One Lloyd iteration over a partition (empty clusters keep centroids)."""
+    sums, counts, inertia = ml_steps.kmeans_stats(x, c)
+    c_next = jnp.where(counts[:, None] > 0,
+                       sums / jnp.maximum(counts, 1.0)[:, None], c)
+    t = jnp.asarray(x.shape[0], x.dtype)
+    return c_next, inertia[0] / t
+
+
+def _f32(*shape):
+    import jax
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# name -> (fn, example_args). Shapes are the AOT contract with rust/src/runtime.
+EXPORTS = {
+    "linfit": (
+        predictor_fit,
+        (
+            _f32(linfit_k.BATCH, linfit_k.POINTS, linfit_k.FEATURES),
+            _f32(linfit_k.BATCH, linfit_k.POINTS),
+            _f32(linfit_k.BATCH, linfit_k.POINTS),
+        ),
+    ),
+    "svm_step": (
+        svm_iteration,
+        (
+            _f32(ml_steps.SVM_ROWS, ml_steps.SVM_DIM),
+            _f32(ml_steps.SVM_ROWS),
+            _f32(ml_steps.SVM_DIM),
+        ),
+    ),
+    "logreg_step": (
+        logreg_iteration,
+        (
+            _f32(ml_steps.SVM_ROWS, ml_steps.SVM_DIM),
+            _f32(ml_steps.SVM_ROWS),
+            _f32(ml_steps.SVM_DIM),
+        ),
+    ),
+    "kmeans_step": (
+        kmeans_iteration,
+        (
+            _f32(ml_steps.KM_ROWS, ml_steps.KM_DIM),
+            _f32(ml_steps.KM_K, ml_steps.KM_DIM),
+        ),
+    ),
+}

@@ -1,0 +1,176 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles — the core signal.
+
+Hypothesis sweeps shapes/seeds; every kernel must match ref.py to float32
+tolerances, and the NNLS fit must agree with scipy's bounded curve_fit on
+the paper's Eq.-1 model family.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linfit, ml_steps, ref
+
+jax.config.update("jax_enable_x64", False)
+
+HYP = dict(max_examples=15, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- linfit ---
+
+@settings(**HYP)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 8),
+    n=st.integers(2, 12),
+    k=st.integers(1, 4),
+)
+def test_linfit_matches_ref(seed, b, n, k):
+    r = _rng(seed)
+    x = r.normal(1.0, 0.5, size=(b, n, k)).astype(np.float32)
+    theta_true = r.uniform(0.0, 2.0, size=(b, k)).astype(np.float32)
+    y = np.einsum("bnk,bk->bn", x, theta_true).astype(np.float32)
+    y += r.normal(0, 0.01, size=y.shape).astype(np.float32)
+    mask = (r.uniform(size=(b, n)) > 0.2).astype(np.float32)
+    # keep at least 2 active rows per problem so the fit is sane
+    mask[:, :2] = 1.0
+
+    got_theta, got_rmse = linfit.linfit(x, y, mask)
+    ref_theta = ref.nnls_fit(x, y, mask, iters=linfit.PGD_ITERS)
+    ref_rmse = ref.fit_residual_rmse(x, y, mask, ref_theta)
+
+    np.testing.assert_allclose(got_theta, ref_theta, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_rmse, ref_rmse, rtol=1e-4, atol=1e-4)
+    assert np.all(np.asarray(got_theta) >= 0.0), "NNLS must be non-negative"
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_linfit_matches_scipy_curve_fit(seed):
+    """Paper Eq. 1: D_size = th0 + th1*scale, positive bounds, vs scipy."""
+    from scipy.optimize import curve_fit
+
+    r = _rng(seed)
+    scales = np.array([1.0, 2.0, 3.0], dtype=np.float32)
+    th = r.uniform(0.1, 5.0, size=2).astype(np.float32)
+    sizes = th[0] + th[1] * scales + r.normal(0, 1e-3, 3).astype(np.float32)
+
+    popt, _ = curve_fit(lambda s, a, b: a + b * s, scales, sizes,
+                        bounds=(0, np.inf))
+
+    x = np.stack([np.ones_like(scales), scales], axis=-1)[None]  # [1,3,2]
+    theta, _ = linfit.linfit(x, sizes[None], np.ones((1, 3), np.float32),
+                             iters=3000)
+    np.testing.assert_allclose(theta[0], popt, rtol=5e-3, atol=5e-3)
+
+
+def test_linfit_fold_masks_give_loo_cv():
+    """Masking one row out reproduces a leave-one-out fit of the others."""
+    r = _rng(7)
+    n = 4
+    x = np.stack([np.ones(n), np.arange(1, n + 1, dtype=np.float32)],
+                 axis=-1).astype(np.float32)[None]
+    y = (3.0 + 2.0 * np.arange(1, n + 1)).astype(np.float32)[None]
+    full_mask = np.ones((1, n), np.float32)
+    loo_mask = full_mask.copy()
+    loo_mask[0, 2] = 0.0
+
+    th_loo, _ = linfit.linfit(x, y, loo_mask, iters=2000)
+    # exact data -> same (3, 2) solution with or without the row
+    np.testing.assert_allclose(th_loo[0], [3.0, 2.0], rtol=1e-3, atol=1e-2)
+
+
+def test_linfit_aot_shapes_run():
+    """The exact AOT contract shapes execute and return finite values."""
+    b, n, k = linfit.BATCH, linfit.POINTS, linfit.FEATURES
+    r = _rng(0)
+    x = r.normal(size=(b, n, k)).astype(np.float32)
+    y = r.normal(size=(b, n)).astype(np.float32)
+    m = np.ones((b, n), np.float32)
+    theta, rmse = linfit.linfit(x, y, m)
+    assert theta.shape == (b, k) and rmse.shape == (b,)
+    assert np.all(np.isfinite(theta)) and np.all(np.isfinite(rmse))
+
+
+# -------------------------------------------------------------- ml steps ---
+
+@settings(**HYP)
+@given(seed=st.integers(0, 2**31 - 1), tiles=st.integers(1, 4),
+       d=st.sampled_from([8, 32, 64]))
+def test_svm_step_matches_ref(seed, tiles, d):
+    r = _rng(seed)
+    t = tiles * ml_steps.TILE_T
+    x = r.normal(size=(t, d)).astype(np.float32)
+    y = np.sign(r.normal(size=t)).astype(np.float32)
+    w = r.normal(size=d).astype(np.float32) * 0.1
+
+    gsum, lsum = ml_steps.svm_grad_sums(x, y, w)
+    from compile import model
+    w_ref, loss_ref = ref.svm_step(x, y, w, lr=model.SVM_LR, reg=model.SVM_REG)
+    w_got, loss_got = model.svm_iteration(x, y, w)
+    np.testing.assert_allclose(w_got, w_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(loss_got, loss_ref, rtol=2e-4, atol=2e-4)
+    assert np.all(np.isfinite(gsum)) and np.isfinite(lsum[0])
+
+
+@settings(**HYP)
+@given(seed=st.integers(0, 2**31 - 1), tiles=st.integers(1, 4),
+       d=st.sampled_from([8, 64]))
+def test_logreg_step_matches_ref(seed, tiles, d):
+    r = _rng(seed)
+    t = tiles * ml_steps.TILE_T
+    x = r.normal(size=(t, d)).astype(np.float32)
+    y = (r.uniform(size=t) > 0.5).astype(np.float32)
+    w = r.normal(size=d).astype(np.float32) * 0.1
+
+    from compile import model
+    w_ref, loss_ref = ref.lr_step(x, y, w, lr=model.LOGREG_LR,
+                                  reg=model.LOGREG_REG)
+    w_got, loss_got = model.logreg_iteration(x, y, w)
+    np.testing.assert_allclose(w_got, w_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(loss_got, loss_ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(**HYP)
+@given(seed=st.integers(0, 2**31 - 1), tiles=st.integers(1, 3),
+       d=st.sampled_from([4, 16]), k=st.sampled_from([2, 8]))
+def test_kmeans_step_matches_ref(seed, tiles, d, k):
+    r = _rng(seed)
+    t = tiles * ml_steps.TILE_T
+    x = r.normal(size=(t, d)).astype(np.float32)
+    c = r.normal(size=(k, d)).astype(np.float32)
+
+    from compile import model
+    c_ref, inertia_ref = ref.kmeans_step(x, c)
+    c_got, inertia_got = model.kmeans_iteration(x, c)
+    np.testing.assert_allclose(c_got, c_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(inertia_got, inertia_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_empty_cluster_keeps_centroid():
+    x = np.zeros((ml_steps.TILE_T, 4), np.float32)
+    c = np.stack([np.zeros(4), np.full(4, 100.0)]).astype(np.float32)
+    from compile import model
+    c_next, _ = model.kmeans_iteration(x, c)
+    np.testing.assert_allclose(c_next[1], c[1])  # far centroid untouched
+
+
+def test_svm_converges_on_separable_data():
+    """A few iterations reduce hinge loss on a linearly separable set."""
+    from compile import model
+    r = _rng(3)
+    t, d = ml_steps.TILE_T * 2, 16
+    w_true = r.normal(size=d).astype(np.float32)
+    x = r.normal(size=(t, d)).astype(np.float32)
+    y = np.sign(x @ w_true).astype(np.float32)
+    w = np.zeros(d, np.float32)
+    losses = []
+    for _ in range(10):
+        w, loss = model.svm_iteration(x, y, w)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8

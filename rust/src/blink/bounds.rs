@@ -1,0 +1,109 @@
+//! Cluster-bounds prediction (§6.5 / Table 2).
+//!
+//! The inverse question of the selector: given a *fixed* resource-
+//! constrained cluster (the paper fixes 12 machines), what is the maximum
+//! data scale that still runs eviction-free? Blink answers from the same
+//! trained models by searching the largest scale whose predicted cached
+//! size and execution memory satisfy the §5.4 condition at `n` machines.
+
+use super::predictor::{ExecMemoryPredictor, SizePredictor};
+use crate::sim::MachineSpec;
+
+/// Does the predicted footprint at `scale` fit `n` machines eviction-free?
+pub fn fits(
+    sizes: &SizePredictor,
+    exec: &ExecMemoryPredictor,
+    machine: &MachineSpec,
+    n: usize,
+    scale: f64,
+) -> bool {
+    let m = machine.unified_mb();
+    let r = machine.storage_floor_mb();
+    let cached = sizes.predict_total(scale);
+    let exec_pm = (m - r).min(exec.predict_total(scale) / n as f64);
+    cached / (n as f64) < m - exec_pm
+}
+
+/// Maximum data scale (paper units; monotone bisection to `tol` relative
+/// precision) that the cluster runs eviction-free per the trained models.
+pub fn max_scale(
+    sizes: &SizePredictor,
+    exec: &ExecMemoryPredictor,
+    machine: &MachineSpec,
+    n: usize,
+    tol: f64,
+) -> f64 {
+    assert!(n >= 1);
+    // exponential search for an upper bracket
+    let mut lo = 0.0_f64;
+    let mut hi = 1.0_f64;
+    let mut guard = 0;
+    while fits(sizes, exec, machine, n, hi) {
+        lo = hi;
+        hi *= 2.0;
+        guard += 1;
+        if guard > 64 {
+            return hi; // unboundedly fits (e.g. θ1 == 0)
+        }
+    }
+    // bisect the boundary
+    while (hi - lo) > tol * hi.max(1.0) {
+        let mid = 0.5 * (lo + hi);
+        if fits(sizes, exec, machine, n, mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blink::models::RustFit;
+    use crate::blink::predictor::{ExecMemoryPredictor, SizePredictor};
+    use crate::blink::sample_runs::{SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
+    use crate::workloads::app_by_name;
+
+    fn predictors(name: &str) -> (SizePredictor, ExecMemoryPredictor) {
+        let mgr = SampleRunsManager::default();
+        let runs = match mgr.run(&app_by_name(name).unwrap(), &DEFAULT_SCALES) {
+            SamplingOutcome::Profiled(r) => r,
+            _ => panic!(),
+        };
+        let mut b = RustFit::default();
+        (
+            SizePredictor::train(&mut b, &runs),
+            ExecMemoryPredictor::train(&mut b, &runs),
+        )
+    }
+
+    #[test]
+    fn bound_is_a_true_boundary() {
+        let (sp, ep) = predictors("svm");
+        let m = crate::sim::MachineSpec::worker_node();
+        let s = max_scale(&sp, &ep, &m, 12, 1e-4);
+        assert!(s > 0.0);
+        assert!(fits(&sp, &ep, &m, 12, s * 0.99), "just below fits");
+        assert!(!fits(&sp, &ep, &m, 12, s * 1.01), "just above does not");
+    }
+
+    #[test]
+    fn more_machines_allow_larger_scales() {
+        let (sp, ep) = predictors("lr");
+        let m = crate::sim::MachineSpec::worker_node();
+        let s6 = max_scale(&sp, &ep, &m, 6, 1e-4);
+        let s12 = max_scale(&sp, &ep, &m, 12, 1e-4);
+        assert!(s12 > s6, "{s12} vs {s6}");
+    }
+
+    #[test]
+    fn svm_12_machine_bound_exceeds_its_150pct_scale() {
+        // Table 1: svm at 150 % (scale 1500) runs eviction-free on <= 12
+        let (sp, ep) = predictors("svm");
+        let m = crate::sim::MachineSpec::worker_node();
+        let s = max_scale(&sp, &ep, &m, 12, 1e-4);
+        assert!(s > 1500.0, "{s}");
+    }
+}

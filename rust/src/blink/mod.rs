@@ -1,0 +1,203 @@
+//! BLINK (§5): the autonomous sampling-based cluster-size optimizer.
+//!
+//! The facade wires the four components of Fig. 5 together:
+//!
+//! 1. [`sample_runs::SampleRunsManager`] carries out three tiny sample runs
+//!    on one machine and analyzes their listener logs;
+//! 2. [`predictor::SizePredictor`] fits cross-validated non-negative models
+//!    of cached-dataset size vs. data scale;
+//! 3. [`predictor::ExecMemoryPredictor`] does the same for execution
+//!    memory;
+//! 4. [`selector::select_cluster_size`] picks the minimal eviction-free
+//!    cluster size for the actual run; [`bounds::max_scale`] answers the
+//!    inverse (Table 2) question.
+//!
+//! Model fitting dispatches through [`models::FitBackend`]: in production
+//! the batched Pallas `linfit` executable via PJRT (`runtime::linfit`), in
+//! tests the pure-Rust oracle.
+
+pub mod bounds;
+pub mod models;
+pub mod predictor;
+pub mod sample_runs;
+pub mod selector;
+
+pub use models::{FitBackend, RustFit};
+pub use predictor::{ExecMemoryPredictor, SizePredictor};
+pub use sample_runs::{SampleRun, SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
+pub use selector::{select_cluster_size, Selection};
+
+use crate::sim::MachineSpec;
+use crate::workloads::AppModel;
+
+/// Blink's end-to-end decision for one application.
+#[derive(Debug, Clone)]
+pub struct BlinkDecision {
+    /// Recommended cluster size for the actual run.
+    pub machines: usize,
+    /// Predicted total cached size at the target scale (MB).
+    pub predicted_cached_mb: f64,
+    /// Predicted total execution memory at the target scale (MB).
+    pub predicted_exec_mb: f64,
+    /// Cost of the sampling phase, machine-seconds.
+    pub sample_cost_machine_s: f64,
+    /// Trained predictors (reusable across scales/machine types), absent
+    /// for the no-cached-data atypical case.
+    pub predictors: Option<(SizePredictor, ExecMemoryPredictor)>,
+    pub selection: Option<Selection>,
+}
+
+/// The Blink framework: sampling configuration + fit backend.
+pub struct Blink<'a> {
+    pub manager: SampleRunsManager,
+    pub backend: &'a mut dyn FitBackend,
+    /// Largest cluster the selector may recommend.
+    pub max_machines: usize,
+}
+
+impl<'a> Blink<'a> {
+    pub fn new(backend: &'a mut dyn FitBackend) -> Blink<'a> {
+        Blink { manager: SampleRunsManager::default(), backend, max_machines: 12 }
+    }
+
+    /// Run the full pipeline of Fig. 5 for `app`, recommending a cluster
+    /// size for an actual run at `target_scale` on `machine`-type nodes.
+    pub fn decide(
+        &mut self,
+        app: &AppModel,
+        target_scale: f64,
+        machine: &MachineSpec,
+    ) -> BlinkDecision {
+        self.decide_with_scales(app, target_scale, machine, &DEFAULT_SCALES)
+    }
+
+    /// Same, with explicit sampling scales (Fig. 8 uses up to 10).
+    pub fn decide_with_scales(
+        &mut self,
+        app: &AppModel,
+        target_scale: f64,
+        machine: &MachineSpec,
+        scales: &[f64],
+    ) -> BlinkDecision {
+        match self.manager.run(app, scales) {
+            SamplingOutcome::NoCachedData { sample_cost_machine_s } => BlinkDecision {
+                // atypical case 1: cheapest possible actual run
+                machines: 1,
+                predicted_cached_mb: 0.0,
+                predicted_exec_mb: 0.0,
+                sample_cost_machine_s,
+                predictors: None,
+                selection: None,
+            },
+            SamplingOutcome::Profiled(runs) => {
+                let sizes = SizePredictor::train(self.backend, &runs);
+                let exec = ExecMemoryPredictor::train(self.backend, &runs);
+                let cached = sizes.predict_total(target_scale);
+                let exec_mb = exec.predict_total(target_scale);
+                let sel = select_cluster_size(cached, exec_mb, machine, self.max_machines);
+                BlinkDecision {
+                    machines: sel.machines,
+                    predicted_cached_mb: cached,
+                    predicted_exec_mb: exec_mb,
+                    sample_cost_machine_s: SampleRunsManager::total_cost_machine_s(&runs),
+                    predictors: Some((sizes, exec)),
+                    selection: Some(sel),
+                }
+            }
+        }
+    }
+}
+
+/// The ground-truth optimum: minimal n whose *true* footprint satisfies
+/// the eviction-free condition (what Table 1's first green cell shows).
+pub fn true_optimal(app: &AppModel, scale: f64, machine: &MachineSpec, max: usize) -> usize {
+    select_cluster_size(
+        app.total_true_cached_mb(scale),
+        app.exec_mem_mb(scale),
+        machine,
+        max,
+    )
+    .machines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{all_apps, app_by_name, FULL_SCALE};
+
+    #[test]
+    fn table1_picks_at_100pct() {
+        // the paper's bold numbers, 100 % scale
+        let expect = [
+            ("als", 1),
+            ("bayes", 7),
+            ("gbt", 1),
+            ("km", 4),
+            ("lr", 5),
+            ("pca", 1),
+            ("rfc", 4),
+            ("svm", 7),
+        ];
+        let machine = MachineSpec::worker_node();
+        for (name, want) in expect {
+            let app = app_by_name(name).unwrap();
+            let mut backend = RustFit::default();
+            let mut blink = Blink::new(&mut backend);
+            let d = blink.decide(&app, FULL_SCALE, &machine);
+            assert_eq!(d.machines, want, "{name}: predicted {} MB", d.predicted_cached_mb);
+            // and the pick matches the true optimum (optimal in 8/8 cases)
+            assert_eq!(
+                d.machines,
+                true_optimal(&app, FULL_SCALE, &machine, 12),
+                "{name} pick vs truth"
+            );
+        }
+    }
+
+    #[test]
+    fn enlarged_scale_picks_reuse_models() {
+        // Table 1 bottom half: same sample runs, larger target scales.
+        // GBT and ALS need their extended sampling (10 and 5 runs, §6.4).
+        let machine = MachineSpec::worker_node();
+        for app in all_apps() {
+            let mut backend = RustFit::default();
+            let mut blink = Blink::new(&mut backend);
+            let scales: Vec<f64> = match app.name {
+                "gbt" => (1..=10).map(|s| s as f64).collect(),
+                "als" => (1..=5).map(|s| s as f64).collect(),
+                _ => DEFAULT_SCALES.to_vec(),
+            };
+            let d = blink.decide_with_scales(&app, app.enlarged_scale, &machine, &scales);
+            let truth = true_optimal(&app, app.enlarged_scale, &machine, 12);
+            assert_eq!(
+                d.machines, truth,
+                "{}: blink {} vs selector-truth {}",
+                app.name, d.machines, truth
+            );
+        }
+    }
+
+    #[test]
+    fn gbt_picks_one_machine_despite_bad_size_prediction() {
+        // §6.2: "In spite of data size prediction error, BLINK selects the
+        // optimal cluster size (a single machine) because both the
+        // predicted and the actual size fit the memory of a single machine"
+        let app = app_by_name("gbt").unwrap();
+        let mut backend = RustFit::default();
+        let mut blink = Blink::new(&mut backend);
+        let d = blink.decide(&app, FULL_SCALE, &MachineSpec::worker_node());
+        assert_eq!(d.machines, 1);
+    }
+
+    #[test]
+    fn sample_cost_small_fraction_of_actual_cost() {
+        // the headline 4.6 % claim is checked end-to-end in the benches;
+        // here: sampling an app costs << an hour of one machine
+        let app = app_by_name("svm").unwrap();
+        let mut backend = RustFit::default();
+        let mut blink = Blink::new(&mut backend);
+        let d = blink.decide(&app, FULL_SCALE, &MachineSpec::worker_node());
+        assert!(d.sample_cost_machine_s < 600.0, "{}", d.sample_cost_machine_s);
+        assert!(d.sample_cost_machine_s > 0.0);
+    }
+}

@@ -1,0 +1,267 @@
+//! The candidate model zoo + cross-validated fitting (§5.2).
+//!
+//! The paper: "the data size predictor applies cross validation to
+//! determine the error of each model ... although [it] evaluates many
+//! other models", converging on the linear Eq. 1. We fit every candidate
+//! with non-negative least squares (scipy `curve_fit` with positive
+//! bounds in the paper) and score by leave-one-out CV RMSE.
+//!
+//! Fitting dispatches through [`FitBackend`]: the production path executes
+//! the whole batch of (model x fold) problems as ONE call of the
+//! AOT-compiled Pallas `linfit` executable (see `runtime::linfit`); the
+//! pure-Rust [`RustFit`] is the fallback and test oracle — both implement
+//! the same projected-gradient NNLS.
+
+use crate::linalg;
+
+/// Feature families evaluated per dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// `θ0 + θ1·s` — the paper's Eq. 1.
+    Linear,
+    /// `θ0 + θ1·√s` — sublinear growth.
+    Sqrt,
+    /// `θ0 + θ1·s + θ2·s²` — superlinear growth.
+    Quadratic,
+    /// `θ0 + θ1·s + θ2·ln(1+s)` — linear with a logarithmic correction.
+    LinearLog,
+}
+
+pub const ALL_KINDS: [ModelKind; 4] = [
+    ModelKind::Linear,
+    ModelKind::Sqrt,
+    ModelKind::Quadratic,
+    ModelKind::LinearLog,
+];
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Linear => "linear",
+            ModelKind::Sqrt => "sqrt",
+            ModelKind::Quadratic => "quadratic",
+            ModelKind::LinearLog => "linear+log",
+        }
+    }
+
+    /// Build the feature row for a scale.
+    pub fn features(&self, s: f64) -> Vec<f64> {
+        match self {
+            ModelKind::Linear => vec![1.0, s],
+            ModelKind::Sqrt => vec![1.0, s.sqrt()],
+            ModelKind::Quadratic => vec![1.0, s, s * s],
+            ModelKind::LinearLog => vec![1.0, s, (1.0 + s).ln()],
+        }
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.features(1.0).len()
+    }
+}
+
+/// One NNLS problem handed to a fit backend.
+#[derive(Debug, Clone)]
+pub struct FitProblem {
+    /// Design matrix rows (n points x k features).
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+    /// Row weights; 0 excludes a row (CV folds / padding).
+    pub w: Vec<f64>,
+}
+
+/// Result of one fit: coefficients + residual RMSE over active rows.
+#[derive(Debug, Clone)]
+pub struct FitResult {
+    pub theta: Vec<f64>,
+    pub rmse: f64,
+}
+
+/// Batched NNLS fitting service.
+pub trait FitBackend {
+    fn fit_batch(&mut self, problems: &[FitProblem]) -> Vec<FitResult>;
+    /// Human-readable backend name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend (oracle / fallback when artifacts are absent).
+pub struct RustFit {
+    pub iters: usize,
+}
+
+impl Default for RustFit {
+    fn default() -> Self {
+        RustFit { iters: 3000 }
+    }
+}
+
+impl FitBackend for RustFit {
+    fn fit_batch(&mut self, problems: &[FitProblem]) -> Vec<FitResult> {
+        problems
+            .iter()
+            .map(|p| {
+                let theta = linalg::nnls(&p.x, &p.y, &p.w, self.iters);
+                let rmse = linalg::residual_rmse(&p.x, &p.y, &p.w, &theta);
+                FitResult { theta, rmse }
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-nnls"
+    }
+}
+
+/// A fitted, selected model for one measured quantity.
+#[derive(Debug, Clone)]
+pub struct SelectedModel {
+    pub kind: ModelKind,
+    pub theta: Vec<f64>,
+    /// Leave-one-out cross-validation RMSE (the paper's model-error
+    /// criterion, §5.2 / Fig. 9).
+    pub cv_rmse: f64,
+    /// CV RMSE relative to the mean label (dimensionless, reported in
+    /// Fig. 9 as e.g. "53.9 % with 3 sample runs").
+    pub cv_rel_err: f64,
+}
+
+impl SelectedModel {
+    pub fn predict(&self, scale: f64) -> f64 {
+        linalg::predict(&self.kind.features(scale), &self.theta)
+    }
+}
+
+/// Fit all candidate models to `(scale, value)` points with LOO-CV and
+/// return the best (lowest CV RMSE; ties prefer the simpler/earlier kind).
+///
+/// The whole (model x fold) grid is submitted as one `fit_batch` call so
+/// the PJRT backend can run it as a single batched kernel dispatch.
+pub fn select_model(
+    backend: &mut dyn FitBackend,
+    points: &[(f64, f64)],
+) -> SelectedModel {
+    assert!(points.len() >= 2, "need at least two sample runs (§4.4)");
+    let n = points.len();
+    let mean_y: f64 = points.iter().map(|p| p.1).sum::<f64>() / n as f64;
+
+    // Only consider families whose LOO folds stay determined (k features
+    // need k points in every n-1-sized fold); with the paper's 3 sample
+    // runs that admits the 2-parameter families, matching its Eq. 1.
+    let kinds: Vec<ModelKind> = ALL_KINDS
+        .into_iter()
+        .filter(|k| k.num_features() <= (n - 1).max(2))
+        .collect();
+
+    // batch layout: for each kind -> n fold problems + 1 full fit
+    let mut problems = Vec::new();
+    for kind in &kinds {
+        let x: Vec<Vec<f64>> = points.iter().map(|p| kind.features(p.0)).collect();
+        let y: Vec<f64> = points.iter().map(|p| p.1).collect();
+        for fold in 0..n {
+            let mut w = vec![1.0; n];
+            w[fold] = 0.0;
+            problems.push(FitProblem { x: x.clone(), y: y.clone(), w });
+        }
+        problems.push(FitProblem { x, y: y.clone(), w: vec![1.0; n] });
+    }
+    let results = backend.fit_batch(&problems);
+    assert_eq!(results.len(), problems.len());
+
+    let mut best: Option<SelectedModel> = None;
+    for (ki, kind) in kinds.iter().enumerate() {
+        let base = ki * (n + 1);
+        // LOO-CV: predict each held-out point with the fold model
+        let mut se = 0.0;
+        for fold in 0..n {
+            let theta = &results[base + fold].theta;
+            let pred = linalg::predict(&kind.features(points[fold].0), theta);
+            se += (pred - points[fold].1).powi(2);
+        }
+        let cv_rmse = (se / n as f64).sqrt();
+        let full = &results[base + n];
+        let candidate = SelectedModel {
+            kind: *kind,
+            theta: full.theta.clone(),
+            cv_rmse,
+            cv_rel_err: if mean_y.abs() > 1e-12 { cv_rmse / mean_y } else { 0.0 },
+        };
+        // Complexity guard: the paper's measurements always favored the
+        // linear Eq. 1; a non-linear family may only displace it when its
+        // cross-validation error is DECISIVELY lower (40 %+), because the
+        // predictor extrapolates 2-6 orders of magnitude beyond the
+        // sample scales and a noise-chasing quadratic/sqrt is
+        // catastrophic out there.
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                if *kind == ModelKind::Linear {
+                    cv_rmse < b.cv_rmse - 1e-12
+                } else {
+                    cv_rmse < 0.6 * b.cv_rmse
+                }
+            }
+        };
+        if better {
+            best = Some(candidate);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_data_selects_linear_family() {
+        let pts: Vec<(f64, f64)> = (1..=5).map(|s| (s as f64, 4.0 + 2.5 * s as f64)).collect();
+        let m = select_model(&mut RustFit::default(), &pts);
+        // quadratic with zero curvature also fits; accept any family but
+        // demand exact predictions
+        assert!((m.predict(1000.0) - (4.0 + 2500.0)).abs() / 2504.0 < 0.01, "{m:?}");
+        assert!(m.cv_rel_err < 0.01, "{m:?}");
+    }
+
+    #[test]
+    fn quadratic_data_prefers_quadratic() {
+        let pts: Vec<(f64, f64)> =
+            (1..=6).map(|s| (s as f64, 1.0 + 0.5 * (s * s) as f64)).collect();
+        let m = select_model(&mut RustFit::default(), &pts);
+        assert_eq!(m.kind, ModelKind::Quadratic);
+        assert!((m.predict(10.0) - 51.0).abs() < 1.0, "{m:?}");
+    }
+
+    #[test]
+    fn cv_error_reflects_noise() {
+        let clean: Vec<(f64, f64)> = (1..=4).map(|s| (s as f64, 10.0 * s as f64)).collect();
+        let noisy: Vec<(f64, f64)> = vec![(1.0, 12.0), (2.0, 17.0), (3.0, 35.0), (4.0, 36.0)];
+        let mc = select_model(&mut RustFit::default(), &clean);
+        let mn = select_model(&mut RustFit::default(), &noisy);
+        assert!(mc.cv_rel_err < 0.01);
+        assert!(mn.cv_rel_err > mc.cv_rel_err * 5.0);
+    }
+
+    #[test]
+    fn coefficients_never_negative() {
+        // decreasing data would want a negative slope; bounds forbid it
+        let pts = vec![(1.0, 10.0), (2.0, 8.0), (3.0, 6.5)];
+        let m = select_model(&mut RustFit::default(), &pts);
+        assert!(m.theta.iter().all(|&t| t >= 0.0), "{m:?}");
+    }
+
+    #[test]
+    fn two_points_suffice() {
+        // §4.4: "two sample runs are sufficient to construct a model"
+        let pts = vec![(1.0, 5.0), (3.0, 11.0)];
+        let m = select_model(&mut RustFit::default(), &pts);
+        assert!((m.predict(2.0) - 8.0).abs() < 0.3, "{m:?}");
+    }
+
+    #[test]
+    fn features_shapes() {
+        assert_eq!(ModelKind::Linear.num_features(), 2);
+        assert_eq!(ModelKind::Quadratic.num_features(), 3);
+        for k in ALL_KINDS {
+            assert_eq!(k.features(2.0).len(), k.num_features());
+        }
+    }
+}

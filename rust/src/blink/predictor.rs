@@ -1,0 +1,149 @@
+//! Data-size predictor (§5.2) and execution-memory predictor (§5.3).
+//!
+//! Both consume the sample-run summaries, build `(scale, value)` training
+//! points per quantity and select a cross-validated non-negative model from
+//! the zoo in [`super::models`]. One `FitBackend` call covers the whole
+//! application (all cached datasets + execution memory), which the PJRT
+//! backend executes as a single batched `linfit` dispatch.
+
+use std::collections::BTreeMap;
+
+use super::models::{select_model, FitBackend, SelectedModel};
+use super::sample_runs::SampleRun;
+use crate::util::units::Mb;
+
+/// Trained size models, one per cached dataset id.
+#[derive(Debug, Clone)]
+pub struct SizePredictor {
+    pub models: BTreeMap<usize, SelectedModel>,
+}
+
+impl SizePredictor {
+    /// Train from sample runs (§5.2: scale as feature, size as label).
+    pub fn train(backend: &mut dyn FitBackend, runs: &[SampleRun]) -> SizePredictor {
+        let mut per_dataset: BTreeMap<usize, Vec<(f64, f64)>> = BTreeMap::new();
+        for r in runs {
+            for &(ds, size) in &r.summary.cached_sizes_mb {
+                per_dataset.entry(ds).or_default().push((r.scale, size));
+            }
+        }
+        let models = per_dataset
+            .into_iter()
+            .map(|(ds, pts)| (ds, select_model(backend, &pts)))
+            .collect();
+        SizePredictor { models }
+    }
+
+    /// Predicted size of one dataset at a scale.
+    pub fn predict_dataset(&self, ds: usize, scale: f64) -> Option<Mb> {
+        self.models.get(&ds).map(|m| m.predict(scale))
+    }
+
+    /// Predicted total cached bytes at a scale (the selector's input).
+    pub fn predict_total(&self, scale: f64) -> Mb {
+        self.models.values().map(|m| m.predict(scale)).sum()
+    }
+
+    /// Worst model CV error across datasets (relative; Fig. 9's metric).
+    pub fn worst_cv_rel_err(&self) -> f64 {
+        self.models
+            .values()
+            .map(|m| m.cv_rel_err)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Trained execution-memory model (§5.3).
+#[derive(Debug, Clone)]
+pub struct ExecMemoryPredictor {
+    pub model: SelectedModel,
+}
+
+impl ExecMemoryPredictor {
+    pub fn train(backend: &mut dyn FitBackend, runs: &[SampleRun]) -> ExecMemoryPredictor {
+        let pts: Vec<(f64, f64)> = runs
+            .iter()
+            .map(|r| (r.scale, r.summary.exec_memory_mb))
+            .collect();
+        ExecMemoryPredictor { model: select_model(backend, &pts) }
+    }
+
+    /// Total execution memory the actual run needs at a scale.
+    pub fn predict_total(&self, scale: f64) -> Mb {
+        self.model.predict(scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blink::models::RustFit;
+    use crate::blink::sample_runs::{SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
+    use crate::util::stats::rel_err;
+    use crate::workloads::{app_by_name, FULL_SCALE};
+
+    fn sample(name: &str) -> Vec<SampleRun> {
+        let mgr = SampleRunsManager::default();
+        match mgr.run(&app_by_name(name).unwrap(), &DEFAULT_SCALES) {
+            SamplingOutcome::Profiled(runs) => runs,
+            _ => panic!("{name} caches data"),
+        }
+    }
+
+    #[test]
+    fn svm_size_prediction_is_nearly_exact() {
+        let runs = sample("svm");
+        let p = SizePredictor::train(&mut RustFit::default(), &runs);
+        let app = app_by_name("svm").unwrap();
+        let pred = p.predict_total(FULL_SCALE);
+        let actual = app.total_true_cached_mb(FULL_SCALE);
+        // paper Fig. 7: svm error 0.0008 %; ours must be well under 1 %
+        assert!(rel_err(pred, actual) < 0.01, "pred {pred} vs {actual}");
+    }
+
+    #[test]
+    fn gbt_three_samples_predict_poorly_but_more_samples_fix_it() {
+        // the Fig. 8 effect
+        let app = app_by_name("gbt").unwrap();
+        let mgr = SampleRunsManager::default();
+        let actual = app.total_true_cached_mb(FULL_SCALE);
+
+        let three = match mgr.run(&app, &DEFAULT_SCALES) {
+            SamplingOutcome::Profiled(r) => r,
+            _ => panic!(),
+        };
+        let p3 = SizePredictor::train(&mut RustFit::default(), &three);
+        let err3 = rel_err(p3.predict_total(FULL_SCALE), actual);
+
+        let scales10: Vec<f64> = (1..=10).map(|s| s as f64).collect();
+        let ten = match mgr.run(&app, &scales10) {
+            SamplingOutcome::Profiled(r) => r,
+            _ => panic!(),
+        };
+        let p10 = SizePredictor::train(&mut RustFit::default(), &ten);
+        let err10 = rel_err(p10.predict_total(FULL_SCALE), actual);
+
+        assert!(err3 > 0.10, "gbt 3-sample error should be large, got {err3}");
+        assert!(err10 < err3, "more samples must improve ({err10} vs {err3})");
+        assert!(err10 < 0.10, "10-sample error should be small, got {err10}");
+    }
+
+    #[test]
+    fn exec_memory_prediction_tracks_law() {
+        let runs = sample("lr");
+        let p = ExecMemoryPredictor::train(&mut RustFit::default(), &runs);
+        let app = app_by_name("lr").unwrap();
+        let pred = p.predict_total(FULL_SCALE);
+        let actual = app.exec_mem_mb(FULL_SCALE);
+        assert!(rel_err(pred, actual) < 0.05, "pred {pred} vs {actual}");
+    }
+
+    #[test]
+    fn per_dataset_predictions_available() {
+        let runs = sample("km");
+        let p = SizePredictor::train(&mut RustFit::default(), &runs);
+        assert_eq!(p.models.len(), 1);
+        assert!(p.predict_dataset(0, 500.0).unwrap() > 0.0);
+        assert!(p.predict_dataset(42, 500.0).is_none());
+    }
+}

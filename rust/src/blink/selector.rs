@@ -1,0 +1,164 @@
+//! Cluster size selector (§5.4).
+//!
+//! Given the predicted total cached size and the predicted execution
+//! memory, plus the machine type's memory geometry (M, R), pick the
+//! minimal cluster size that guarantees an eviction-free actual run:
+//!
+//! ```text
+//! Machines_min = ceil(ΣD / M)        Machines_max = ceil(ΣD / R)
+//! MachineMem_exec(n) = min(M - R, Mem_exec / n)
+//! pick the minimal n with  ΣD / n  <  M - MachineMem_exec(n)
+//! ```
+//!
+//! The models are built once; the selector can be re-evaluated for any
+//! machine type or data scale without new sample runs (§5.4's adaptivity).
+
+use crate::sim::MachineSpec;
+use crate::util::units::Mb;
+
+/// The selector's decision with its diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Selection {
+    pub machines: usize,
+    pub machines_min: usize,
+    pub machines_max: usize,
+    /// Per-machine execution memory at the selected size.
+    pub machine_exec_mb: Mb,
+    /// Caching headroom per machine at the selected size.
+    pub headroom_mb: Mb,
+    /// The selector hit `max_machines` without satisfying the condition —
+    /// the cluster cannot run this scale eviction-free.
+    pub saturated: bool,
+}
+
+/// Select the optimal cluster size (§5.4) for a machine type.
+pub fn select_cluster_size(
+    cached_total_mb: Mb,
+    exec_total_mb: Mb,
+    machine: &MachineSpec,
+    max_machines: usize,
+) -> Selection {
+    let m = machine.unified_mb();
+    let r = machine.storage_floor_mb();
+    assert!(max_machines >= 1);
+
+    let machines_min = (cached_total_mb / m).ceil().max(1.0) as usize;
+    let machines_max = (cached_total_mb / r).ceil().max(1.0) as usize;
+
+    for n in 1..=max_machines {
+        let exec_pm = (m - r).min(exec_total_mb / n as f64);
+        let capacity = m - exec_pm;
+        if cached_total_mb / (n as f64) < capacity {
+            return Selection {
+                machines: n,
+                machines_min,
+                machines_max,
+                machine_exec_mb: exec_pm,
+                headroom_mb: capacity - cached_total_mb / n as f64,
+                saturated: false,
+            };
+        }
+    }
+    let exec_pm = (m - r).min(exec_total_mb / max_machines as f64);
+    Selection {
+        machines: max_machines,
+        machines_min,
+        machines_max,
+        machine_exec_mb: exec_pm,
+        headroom_mb: (m - exec_pm) - cached_total_mb / max_machines as f64,
+        saturated: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn worker() -> MachineSpec {
+        MachineSpec::worker_node()
+    }
+
+    #[test]
+    fn small_cache_fits_one_machine() {
+        let s = select_cluster_size(100.0, 50.0, &worker(), 12);
+        assert_eq!(s.machines, 1);
+        assert!(!s.saturated);
+        assert_eq!(s.machines_min, 1);
+    }
+
+    #[test]
+    fn min_max_bounds_bracket_selection() {
+        // 40 GB cached: min = ceil(40960/7192.8) = 6, max = ceil(40960/3596.4) = 12
+        let s = select_cluster_size(40.0 * 1024.0, 6000.0, &worker(), 20);
+        assert_eq!(s.machines_min, 6);
+        assert_eq!(s.machines_max, 12);
+        assert!(s.machines >= s.machines_min && s.machines <= s.machines_max);
+    }
+
+    #[test]
+    fn heavy_execution_memory_needs_more_machines() {
+        let light = select_cluster_size(20_000.0, 100.0, &worker(), 20);
+        let heavy = select_cluster_size(20_000.0, 40_000.0, &worker(), 20);
+        assert!(heavy.machines >= light.machines);
+    }
+
+    #[test]
+    fn saturation_reported_when_cluster_too_small() {
+        let s = select_cluster_size(200_000.0, 1000.0, &worker(), 12);
+        assert!(s.saturated);
+        assert_eq!(s.machines, 12);
+    }
+
+    #[test]
+    fn different_machine_type_changes_pick_without_resampling() {
+        // §5.4: models are reused across machine types
+        let cached = 20_000.0;
+        let exec = 2_000.0;
+        let small = select_cluster_size(cached, exec, &MachineSpec::sample_node(), 64);
+        let big = select_cluster_size(cached, exec, &worker(), 64);
+        assert!(small.machines > big.machines);
+    }
+
+    #[test]
+    fn property_selection_is_minimal_and_sound() {
+        prop::check(
+            &prop::Config { cases: 128, seed: 0x5e1ec7, max_size: 64 },
+            |rng: &mut Rng, _size| {
+                (rng.range(10.0, 150_000.0), rng.range(0.0, 60_000.0))
+            },
+            |&(cached, exec)| {
+                let m = worker();
+                let s = select_cluster_size(cached, exec, &m, 16);
+                let cond = |n: usize| {
+                    let exec_pm = (m.unified_mb() - m.storage_floor_mb())
+                        .min(exec / n as f64);
+                    cached / n as f64 > m.unified_mb() - exec_pm
+                };
+                if !s.saturated {
+                    // selected n satisfies the condition...
+                    if cond(s.machines) {
+                        return Err(format!("selected {} violates condition", s.machines));
+                    }
+                    // ...and is minimal
+                    for n in 1..s.machines {
+                        if !cond(n) {
+                            return Err(format!("{n} < {} also satisfies", s.machines));
+                        }
+                    }
+                    if s.headroom_mb < 0.0 {
+                        return Err("negative headroom".into());
+                    }
+                } else {
+                    for n in 1..=16 {
+                        if !cond(n) {
+                            return Err(format!("saturated but {n} satisfies"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

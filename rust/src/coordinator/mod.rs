@@ -1,0 +1,234 @@
+//! L3 coordinator: ties Blink, the simulator, the PJRT runtime and the
+//! experiment drivers together behind the `blink` CLI.
+//!
+//! The coordinator chooses the fit backend at startup (PJRT `linfit` when
+//! `artifacts/` is present, pure-Rust fallback otherwise), orchestrates
+//! the sample-runs -> predict -> select -> actual-run pipeline, and
+//! exposes each paper experiment as a subcommand.
+
+use anyhow::{anyhow, Result};
+
+use crate::blink::{Blink, BlinkDecision, FitBackend, RustFit};
+use crate::experiments::{self, report};
+use crate::metrics::RunSummary;
+use crate::runtime::{artifacts_available, PjrtFit, Runtime};
+use crate::sim::MachineSpec;
+use crate::util::units::{fmt_mb, fmt_pct, fmt_secs};
+use crate::workloads::{app_by_name, AppModel};
+
+/// Which fit backend the coordinator is using.
+pub enum Backend {
+    Pjrt(Runtime),
+    Rust(RustFit),
+}
+
+impl Backend {
+    /// Prefer the compiled Pallas kernel; fall back to pure Rust.
+    pub fn auto() -> Backend {
+        if artifacts_available() {
+            match Runtime::from_repo_root() {
+                Ok(rt) => return Backend::Pjrt(rt),
+                Err(e) => eprintln!("PJRT unavailable ({e:#}); using rust-nnls"),
+            }
+        }
+        Backend::Rust(RustFit::default())
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt(_) => "pjrt-linfit",
+            Backend::Rust(_) => "rust-nnls",
+        }
+    }
+
+    /// Run a closure with the backend as a `&mut dyn FitBackend`.
+    pub fn with<R>(&mut self, f: impl FnOnce(&mut dyn FitBackend) -> R) -> R {
+        match self {
+            Backend::Pjrt(rt) => {
+                let mut fit = PjrtFit::new(rt);
+                f(&mut fit)
+            }
+            Backend::Rust(fit) => f(fit),
+        }
+    }
+}
+
+fn lookup(app: &str) -> Result<AppModel> {
+    app_by_name(app).ok_or_else(|| {
+        anyhow!("unknown app '{app}' (choose from als bayes gbt km lr pca rfc svm)")
+    })
+}
+
+/// `blink decide`: the full pipeline for one app/scale.
+pub fn cmd_decide(app: &str, scale: f64, verbose: bool) -> Result<BlinkDecision> {
+    let app = lookup(app)?;
+    let mut backend = Backend::auto();
+    println!("fit backend: {}", backend.name());
+    let machine = MachineSpec::worker_node();
+    let scales = experiments::sampling_scales(&app);
+    let d = backend.with(|b| {
+        let mut blink = Blink::new(b);
+        blink.decide_with_scales(&app, scale, &machine, &scales)
+    });
+    println!(
+        "app {}  scale {:.0} ({} input)",
+        app.name,
+        scale,
+        fmt_mb(app.input_mb(scale))
+    );
+    println!(
+        "predicted cached {}  exec memory {}",
+        fmt_mb(d.predicted_cached_mb),
+        fmt_mb(d.predicted_exec_mb)
+    );
+    if let Some(sel) = &d.selection {
+        println!(
+            "machines_min {}  machines_max {}  headroom/machine {}",
+            sel.machines_min,
+            sel.machines_max,
+            fmt_mb(sel.headroom_mb)
+        );
+        if sel.saturated {
+            println!("WARNING: cluster bound hit; run will evict");
+        }
+    }
+    println!(
+        "-> recommended cluster size: {} machines (sampling cost {})",
+        d.machines,
+        fmt_secs(d.sample_cost_machine_s)
+    );
+    if verbose {
+        if let Some((sizes, _)) = &d.predictors {
+            for (ds, m) in &sizes.models {
+                println!(
+                    "  dataset {ds}: {} model, cv err {}",
+                    m.kind.name(),
+                    fmt_pct(m.cv_rel_err)
+                );
+            }
+        }
+    }
+    Ok(d)
+}
+
+/// `blink run`: decide, then simulate the actual run at the pick.
+pub fn cmd_run(app: &str, scale: f64, seed: u64) -> Result<RunSummary> {
+    let model = lookup(app)?;
+    let d = cmd_decide(app, scale, false)?;
+    let s = experiments::actual_run(&model, scale, d.machines, seed);
+    println!(
+        "actual run: {} on {} machines -> {} ({:.1} machine-min, {} evictions)",
+        app,
+        d.machines,
+        fmt_secs(s.duration_s),
+        s.cost_machine_min(),
+        s.evictions
+    );
+    let total = d.sample_cost_machine_s + s.cost_machine_s;
+    println!(
+        "total cost incl. sampling: {:.1} machine-min (sampling {})",
+        total / 60.0,
+        fmt_pct(d.sample_cost_machine_s / s.cost_machine_s.max(1e-9))
+    );
+    Ok(s)
+}
+
+/// `blink bounds`: Table-2 style max-scale prediction for one app.
+pub fn cmd_bounds(app: &str, machines: usize) -> Result<f64> {
+    let model = lookup(app)?;
+    let mut backend = Backend::auto();
+    let mgr = crate::blink::SampleRunsManager::default();
+    let runs = match mgr.run(&model, &experiments::sampling_scales(&model)) {
+        crate::blink::SamplingOutcome::Profiled(r) => r,
+        crate::blink::SamplingOutcome::NoCachedData { .. } => {
+            println!("{app} caches nothing; any scale fits");
+            return Ok(f64::INFINITY);
+        }
+    };
+    let (sp, ep) = backend.with(|b| {
+        (
+            crate::blink::SizePredictor::train(b, &runs),
+            crate::blink::ExecMemoryPredictor::train(b, &runs),
+        )
+    });
+    let machine = MachineSpec::worker_node();
+    let s = crate::blink::bounds::max_scale(&sp, &ep, &machine, machines, 1e-5);
+    println!(
+        "{app}: max eviction-free data scale on {machines} machines ~ {s:.1} ({} input)",
+        fmt_mb(model.input_mb(s))
+    );
+    Ok(s)
+}
+
+/// `blink experiment --id <id>`: regenerate a paper table/figure.
+pub fn cmd_experiment(id: &str, seed: u64) -> Result<()> {
+    match id {
+        "table1" => report::print_table1(&experiments::table1(seed)),
+        "table2" => report::print_table2(&experiments::table2(seed)),
+        "fig1" => report::print_fig1(&experiments::fig1(seed)),
+        "fig2" => {
+            let dag = crate::dag::fig2_logistic_regression();
+            let counts = dag.compute_counts_uncached();
+            println!("FIGURE 2 — merged LR DAG (computed-times without caching)");
+            for d in &dag.datasets {
+                println!("  {:<5} computed {}x", d.name, counts[d.id]);
+            }
+        }
+        "fig4" => report::print_fig4(&experiments::fig4(seed)),
+        "fig6" => {
+            let t = experiments::table1(seed);
+            report::print_fig6(&experiments::fig6(&t));
+        }
+        "fig7" => report::print_fig7(&experiments::fig7()),
+        "fig8" => report::print_fig8(&experiments::fig8()),
+        "fig9" => report::print_fig9(&experiments::fig9_sizes()),
+        "fig10" => {
+            let t = experiments::table1(seed);
+            report::print_fig10(&experiments::fig10(&t, seed));
+        }
+        "fig11" => report::print_fig11(&experiments::fig11(seed)),
+        "sec4" => report::print_sec4(
+            &experiments::sec4_parallelism(seed),
+            &experiments::sec4_single_vs_cluster(seed),
+        ),
+        "all" => {
+            for id in [
+                "fig1", "fig2", "fig4", "fig7", "fig8", "fig9", "fig11", "sec4", "table1",
+                "table2",
+            ] {
+                cmd_experiment(id, seed)?;
+                println!();
+            }
+            // fig6/fig10 derive from table1; print them from one run
+            let t = experiments::table1(seed);
+            report::print_fig6(&experiments::fig6(&t));
+            println!();
+            report::print_fig10(&experiments::fig10(&t, seed));
+        }
+        other => return Err(anyhow!("unknown experiment '{other}'")),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_auto_never_panics() {
+        let mut b = Backend::auto();
+        let name = b.with(|f| f.name());
+        assert!(name == "pjrt-linfit" || name == "rust-nnls");
+    }
+
+    #[test]
+    fn lookup_rejects_unknown() {
+        assert!(lookup("nope").is_err());
+        assert!(lookup("svm").is_ok());
+    }
+
+    #[test]
+    fn unknown_experiment_is_an_error() {
+        assert!(cmd_experiment("fig99", 1).is_err());
+    }
+}

@@ -1,0 +1,631 @@
+//! Experiment drivers: one function per paper table/figure.
+//!
+//! Each driver returns a plain data struct (asserted on by integration
+//! tests) and has a `print_*` companion that emits the same rows/series
+//! the paper reports. `benches/` and the `blink` CLI both call these.
+//! See DESIGN.md §5 for the experiment-to-module index.
+
+pub mod report;
+
+use crate::blink::{Blink, FitBackend, RustFit, SamplingOutcome, DEFAULT_SCALES};
+use crate::ernest::ErnestModel;
+use crate::memory::EvictionPolicy;
+use crate::metrics::RunSummary;
+use crate::sim::{simulate, ClusterSpec, MachineSpec, SimOptions, SimResult};
+use crate::util::stats;
+use crate::workloads::{all_apps, app_by_name, AppModel, FULL_SCALE};
+
+pub const MAX_MACHINES: usize = 12;
+
+/// Simulate one actual run.
+pub fn actual_run(app: &AppModel, scale: f64, machines: usize, seed: u64) -> RunSummary {
+    let res = actual_run_full(app, scale, machines, seed);
+    RunSummary::from_log(&res.log)
+}
+
+pub fn actual_run_full(app: &AppModel, scale: f64, machines: usize, seed: u64) -> SimResult {
+    simulate(
+        &app.profile(scale),
+        &ClusterSpec::workers(machines),
+        SimOptions { policy: EvictionPolicy::Lru, seed, compute: None, detailed_log: false },
+    )
+}
+
+/// Sampling scales per app for the enlarged-scale study (§6.4: GBT and ALS
+/// get extended sampling).
+pub fn sampling_scales(app: &AppModel) -> Vec<f64> {
+    match app.name {
+        "gbt" => (1..=10).map(|s| s as f64).collect(),
+        "als" => (1..=5).map(|s| s as f64).collect(),
+        _ => DEFAULT_SCALES.to_vec(),
+    }
+}
+
+// ======================================================================
+// Table 1
+// ======================================================================
+
+/// One application's Table-1 block.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub app: String,
+    pub approach: String,
+    pub input_gb: f64,
+    pub blocks: usize,
+    pub sample_cost_machine_min: f64,
+    /// (time_min, cost_machine_min, eviction_free) per cluster size 1..=12.
+    pub runs: Vec<(f64, f64, bool)>,
+    /// Blink's recommendation (the bold number).
+    pub blink_pick: usize,
+    /// First eviction-free size (the first green cell).
+    pub optimal: usize,
+}
+
+impl Table1Row {
+    pub fn costs(&self) -> Vec<f64> {
+        self.runs.iter().map(|r| r.1).collect()
+    }
+
+    pub fn pick_cost(&self) -> f64 {
+        self.runs[self.blink_pick - 1].1
+    }
+}
+
+/// Whether a simulated run was eviction-free AND fully cached (a paper
+/// "green cell").
+fn eviction_free(s: &RunSummary, res: &SimResult) -> bool {
+    s.evictions == 0 && (res.cached_fraction_after_load - 1.0).abs() < 1e-9
+}
+
+/// Run one Table-1 block (all cluster sizes at one scale).
+pub fn table1_row(
+    app: &AppModel,
+    scale: f64,
+    sampling: &[f64],
+    backend: &mut dyn FitBackend,
+    seed: u64,
+) -> Table1Row {
+    let mut blink = Blink::new(backend);
+    let d = blink.decide_with_scales(app, scale, &MachineSpec::worker_node(), sampling);
+
+    let mut runs = Vec::new();
+    let mut optimal = MAX_MACHINES;
+    for n in 1..=MAX_MACHINES {
+        let res = actual_run_full(app, scale, n, seed + n as u64);
+        let s = RunSummary::from_log(&res.log);
+        let free = eviction_free(&s, &res);
+        if free && optimal == MAX_MACHINES && runs.iter().all(|&(_, _, f): &(f64, f64, bool)| !f)
+        {
+            optimal = n;
+        }
+        runs.push((s.duration_s / 60.0, s.cost_machine_s / 60.0, free));
+    }
+    Table1Row {
+        app: app.name.to_string(),
+        approach: app
+            .sample_approach(&crate::hdfs::Sampler::default(), 0.001)
+            .to_string(),
+        input_gb: app.input_mb(scale) / 1024.0,
+        blocks: app.parallelism(scale),
+        sample_cost_machine_min: d.sample_cost_machine_s / 60.0,
+        runs,
+        blink_pick: d.machines,
+        optimal,
+    }
+}
+
+/// The full Table 1: all apps at 100 % and at their enlarged scales.
+pub struct Table1 {
+    pub at_100: Vec<Table1Row>,
+    pub enlarged: Vec<Table1Row>,
+}
+
+pub fn table1(seed: u64) -> Table1 {
+    let mut at_100 = Vec::new();
+    let mut enlarged = Vec::new();
+    for app in all_apps() {
+        // 100 %: the paper's standard 3 sample runs for every app
+        let mut b = RustFit::default();
+        at_100.push(table1_row(&app, FULL_SCALE, &DEFAULT_SCALES, &mut b, seed));
+        // enlarged: GBT/ALS get their extended sampling (§6.4 exception)
+        let mut b = RustFit::default();
+        enlarged.push(table1_row(
+            &app,
+            app.enlarged_scale,
+            &sampling_scales(&app),
+            &mut b,
+            seed + 7777,
+        ));
+    }
+    Table1 { at_100, enlarged }
+}
+
+/// Top half only (the 100 % block) — cheap enough for debug-mode tests.
+pub fn table1_at_100(seed: u64) -> Vec<Table1Row> {
+    all_apps()
+        .iter()
+        .map(|app| {
+            let mut b = RustFit::default();
+            table1_row(app, FULL_SCALE, &DEFAULT_SCALES, &mut b, seed)
+        })
+        .collect()
+}
+
+// ======================================================================
+// Figure 1 — svm time/cost vs cluster size, with Ernest's prediction
+// ======================================================================
+
+#[derive(Debug, Clone)]
+pub struct Fig1 {
+    /// (machines, time_min, cost_machine_min, eviction_free)
+    pub series: Vec<(usize, f64, f64, bool)>,
+    pub ernest_time_min: Vec<f64>,
+    pub ernest_pick: usize,
+    pub optimal: usize,
+}
+
+pub fn fig1(seed: u64) -> Fig1 {
+    let app = app_by_name("svm").unwrap();
+    let mut series = Vec::new();
+    let mut optimal = MAX_MACHINES;
+    let mut seen_free = false;
+    for n in 1..=MAX_MACHINES {
+        let res = actual_run_full(&app, FULL_SCALE, n, seed + n as u64);
+        let s = RunSummary::from_log(&res.log);
+        let free = eviction_free(&s, &res);
+        if free && !seen_free {
+            optimal = n;
+            seen_free = true;
+        }
+        series.push((n, s.duration_s / 60.0, s.cost_machine_s / 60.0, free));
+    }
+    let ernest = ErnestModel::train(&app, MAX_MACHINES, seed);
+    let ernest_time_min = (1..=MAX_MACHINES)
+        .map(|n| ernest.predict_time_s(n) / 60.0)
+        .collect();
+    Fig1 {
+        series,
+        ernest_time_min,
+        ernest_pick: ernest.cheapest_cluster(MAX_MACHINES),
+        optimal,
+    }
+}
+
+// ======================================================================
+// Figure 4 — repeated short runs: size constant, time noisy
+// ======================================================================
+
+#[derive(Debug, Clone)]
+pub struct Fig4Scale {
+    pub scale: f64,
+    pub times_s: Vec<f64>,
+    pub sizes_mb: Vec<f64>,
+}
+
+/// 10 runs each on three small data scales (the paper used 738 MB–2.2 GB,
+/// i.e. scales ~12/25/37 of svm) on a single machine.
+pub fn fig4(seed: u64) -> Vec<Fig4Scale> {
+    let app = app_by_name("svm").unwrap();
+    [12.0, 25.0, 37.0]
+        .iter()
+        .map(|&scale| {
+            let mut times = Vec::new();
+            let mut sizes = Vec::new();
+            for run in 0..10 {
+                let res = simulate(
+                    &app.profile(scale),
+                    &ClusterSpec::workers(1),
+                    SimOptions {
+                        policy: EvictionPolicy::Lru,
+                        seed: seed + run,
+                        compute: None,
+                        detailed_log: false,
+                    },
+                );
+                let s = RunSummary::from_log(&res.log);
+                times.push(s.duration_s);
+                sizes.push(s.total_cached_mb());
+            }
+            Fig4Scale { scale, times_s: times, sizes_mb: sizes }
+        })
+        .collect()
+}
+
+// ======================================================================
+// Figure 6 — Blink cost vs average and worst
+// ======================================================================
+
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub app: String,
+    /// Blink total cost (sample runs + actual run at its pick).
+    pub blink_cost: f64,
+    pub avg_cost: f64,
+    pub worst_cost: f64,
+}
+
+pub fn fig6(table: &Table1) -> Vec<Fig6Row> {
+    table
+        .at_100
+        .iter()
+        .map(|row| {
+            let costs = row.costs();
+            Fig6Row {
+                app: row.app.clone(),
+                blink_cost: row.pick_cost() + row.sample_cost_machine_min,
+                avg_cost: stats::mean(&costs),
+                worst_cost: stats::max(&costs),
+            }
+        })
+        .collect()
+}
+
+/// The paper's two headline ratios (52.6 % and 25.1 %).
+pub fn fig6_ratios(rows: &[Fig6Row]) -> (f64, f64) {
+    let vs_avg: Vec<f64> = rows.iter().map(|r| r.blink_cost / r.avg_cost).collect();
+    let vs_worst: Vec<f64> = rows.iter().map(|r| r.blink_cost / r.worst_cost).collect();
+    (stats::mean(&vs_avg), stats::mean(&vs_worst))
+}
+
+// ======================================================================
+// Figure 7 — size prediction error per app
+// ======================================================================
+
+#[derive(Debug, Clone)]
+pub struct Fig7Row {
+    pub app: String,
+    pub predicted_mb: f64,
+    pub actual_mb: f64,
+    pub error: f64,
+}
+
+pub fn fig7() -> Vec<Fig7Row> {
+    all_apps()
+        .iter()
+        .map(|app| {
+            let mut backend = RustFit::default();
+            let mut blink = Blink::new(&mut backend);
+            let d = blink.decide(app, FULL_SCALE, &MachineSpec::worker_node());
+            let actual = app.total_true_cached_mb(FULL_SCALE);
+            Fig7Row {
+                app: app.name.to_string(),
+                predicted_mb: d.predicted_cached_mb,
+                actual_mb: actual,
+                error: stats::rel_err(d.predicted_cached_mb, actual),
+            }
+        })
+        .collect()
+}
+
+// ======================================================================
+// Figures 8 & 9 — GBT: more sample runs buy accuracy
+// ======================================================================
+
+#[derive(Debug, Clone)]
+pub struct Fig8Point {
+    pub num_samples: usize,
+    pub sample_cost_machine_min: f64,
+    pub accuracy: f64,
+    /// Model cross-validation relative error (Fig. 9's 53.9 % -> 28.5 %).
+    pub cv_rel_err: f64,
+}
+
+pub fn fig8() -> Vec<Fig8Point> {
+    let app = app_by_name("gbt").unwrap();
+    let actual = app.total_true_cached_mb(FULL_SCALE);
+    (3..=10)
+        .map(|k| {
+            let scales: Vec<f64> = (1..=k).map(|s| s as f64).collect();
+            let mut backend = RustFit::default();
+            let mut blink = Blink::new(&mut backend);
+            let d = blink.decide_with_scales(
+                &app,
+                FULL_SCALE,
+                &MachineSpec::worker_node(),
+                &scales,
+            );
+            let cv = d
+                .predictors
+                .as_ref()
+                .map(|(s, _)| s.worst_cv_rel_err())
+                .unwrap_or(0.0);
+            Fig8Point {
+                num_samples: k,
+                sample_cost_machine_min: d.sample_cost_machine_s / 60.0,
+                accuracy: 1.0 - stats::rel_err(d.predicted_cached_mb, actual),
+                cv_rel_err: cv,
+            }
+        })
+        .collect()
+}
+
+/// Fig. 9's raw series: measured cached size per sample scale.
+pub fn fig9_sizes() -> Vec<(f64, f64)> {
+    let app = app_by_name("gbt").unwrap();
+    (1..=10)
+        .map(|s| (s as f64, app.measured_cached_mb(0, s as f64)))
+        .collect()
+}
+
+// ======================================================================
+// Figure 10 — sample-run cost vs optimal actual cost; Ernest comparison
+// ======================================================================
+
+#[derive(Debug, Clone)]
+pub struct Fig10Row {
+    pub app: String,
+    pub approach: String,
+    /// sample cost / optimal actual cost.
+    pub overhead: f64,
+}
+
+pub struct Fig10 {
+    pub rows: Vec<Fig10Row>,
+    /// Ernest's sampling cost over Blink's, for svm (paper: 16.4x).
+    pub ernest_over_blink: f64,
+}
+
+pub fn fig10(table: &Table1, seed: u64) -> Fig10 {
+    let rows = table
+        .at_100
+        .iter()
+        .map(|row| {
+            let optimal_cost = row.runs[row.optimal - 1].1;
+            Fig10Row {
+                app: row.app.clone(),
+                approach: row.approach.clone(),
+                overhead: row.sample_cost_machine_min / optimal_cost,
+            }
+        })
+        .collect();
+    let svm = app_by_name("svm").unwrap();
+    let ernest = ErnestModel::train(&svm, MAX_MACHINES, seed);
+    let blink_cost = table
+        .at_100
+        .iter()
+        .find(|r| r.app == "svm")
+        .unwrap()
+        .sample_cost_machine_min;
+    Fig10 {
+        rows,
+        ernest_over_blink: ernest.training_cost_machine_s / 60.0 / blink_cost,
+    }
+}
+
+// ======================================================================
+// Figure 11 — KM task skew on 7 machines at 200 %
+// ======================================================================
+
+#[derive(Debug, Clone)]
+pub struct Fig11 {
+    pub tasks_per_machine: Vec<usize>,
+    pub evictions_per_machine: Vec<usize>,
+    pub blink_pick: usize,
+    pub true_optimal: usize,
+    pub pick_cost: f64,
+    pub optimal_cost: f64,
+}
+
+pub fn fig11(seed: u64) -> Fig11 {
+    let app = app_by_name("km").unwrap();
+    let scale = app.enlarged_scale; // 200 %
+    let mut backend = RustFit::default();
+    let mut blink = Blink::new(&mut backend);
+    let d = blink.decide(&app, scale, &MachineSpec::worker_node());
+
+    let res = actual_run_full(&app, scale, d.machines, seed);
+    let s = RunSummary::from_log(&res.log);
+
+    // the true cost-optimum: sweep a few sizes above the pick
+    let mut best = (d.machines, s.cost_machine_s / 60.0);
+    for n in d.machines + 1..=MAX_MACHINES {
+        let r = actual_run(&app, scale, n, seed + n as u64);
+        if r.cost_machine_s / 60.0 < best.1 {
+            best = (n, r.cost_machine_s / 60.0);
+        }
+    }
+    Fig11 {
+        tasks_per_machine: res.iter_tasks_per_machine.clone(),
+        evictions_per_machine: res.evictions_per_machine.clone(),
+        blink_pick: d.machines,
+        true_optimal: best.0,
+        pick_cost: s.cost_machine_s / 60.0,
+        optimal_cost: best.1,
+    }
+}
+
+// ======================================================================
+// Table 2 — cluster bounds at 12 machines
+// ======================================================================
+
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub app: String,
+    pub predicted_scale: f64,
+    /// (relative offset, eviction_free) for -5 %..+5 % around prediction.
+    pub probes: Vec<(f64, bool)>,
+    /// True eviction-free boundary found by the simulator.
+    pub true_boundary: f64,
+}
+
+pub fn table2(seed: u64) -> Vec<Table2Row> {
+    table2_impl(seed, true)
+}
+
+/// Bounds-only variant (no simulation probes) for cheap test assertions.
+pub fn table2_bounds_only(seed: u64) -> Vec<Table2Row> {
+    table2_impl(seed, false)
+}
+
+fn table2_impl(seed: u64, with_probes: bool) -> Vec<Table2Row> {
+    let machine = MachineSpec::worker_node();
+    all_apps()
+        .iter()
+        .filter(|a| a.name != "km") // excluded per §6.5 (see Fig. 11)
+        .map(|app| {
+            let mgr = crate::blink::SampleRunsManager::default();
+            let runs = match mgr.run(app, &sampling_scales(app)) {
+                SamplingOutcome::Profiled(r) => r,
+                _ => panic!("{} caches data", app.name),
+            };
+            let mut b = RustFit::default();
+            let sp = crate::blink::SizePredictor::train(&mut b, &runs);
+            let ep = crate::blink::ExecMemoryPredictor::train(&mut b, &runs);
+            let predicted = crate::blink::bounds::max_scale(&sp, &ep, &machine, 12, 1e-5);
+
+            let offsets = [-0.05, -0.04, -0.03, -0.02, -0.01, 0.0, 0.01, 0.02, 0.03, 0.04, 0.05];
+            let probes = if with_probes {
+                offsets
+                    .iter()
+                    .map(|&off| {
+                        let scale = predicted * (1.0 + off);
+                        // eviction-free status is decided by materialization
+                        // + the first execution-memory claim; probing with a
+                        // single iteration keeps huge scales affordable
+                        let mut profile = app.profile(scale);
+                        profile.iterations = 1;
+                        let res = simulate(
+                            &profile,
+                            &ClusterSpec::workers(12),
+                            SimOptions {
+                                policy: EvictionPolicy::Lru,
+                                seed,
+                                compute: None,
+                                detailed_log: false,
+                            },
+                        );
+                        let s = RunSummary::from_log(&res.log);
+                        (off, eviction_free(&s, &res))
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            // true boundary via the true laws (selector-style condition)
+            let true_boundary = {
+                let m = machine.unified_mb();
+                let r = machine.storage_floor_mb();
+                // solve cached(s)/12 = m - min(m-r, exec(s)/12) by bisection
+                let fits = |s: f64| {
+                    let exec_pm = (m - r).min(app.exec_mem_mb(s) / 12.0);
+                    app.total_true_cached_mb(s) / 12.0 < m - exec_pm
+                };
+                let mut lo = 0.0;
+                let mut hi = predicted.max(1.0);
+                while fits(hi) {
+                    lo = hi;
+                    hi *= 2.0;
+                }
+                for _ in 0..64 {
+                    let mid = 0.5 * (lo + hi);
+                    if fits(mid) {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                lo
+            };
+            Table2Row {
+                app: app.name.to_string(),
+                predicted_scale: predicted,
+                probes,
+                true_boundary,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_sizes_constant_times_noisy() {
+        for sc in fig4(11) {
+            let (first, rest) = sc.sizes_mb.split_first().unwrap();
+            assert!(rest.iter().all(|s| (s - first).abs() < 1e-9), "sizes vary");
+            assert!(stats::cv(&sc.times_s) > 0.001, "times should be noisy");
+        }
+    }
+
+    #[test]
+    fn fig9_series_has_10_points() {
+        let pts = fig9_sizes();
+        assert_eq!(pts.len(), 10);
+        assert!(pts.iter().all(|p| p.1 > 0.0));
+    }
+
+    #[test]
+    fn table2_boundaries_within_5pct() {
+        for row in table2_bounds_only(5) {
+            let err = (row.predicted_scale - row.true_boundary).abs() / row.true_boundary;
+            assert!(err < 0.05, "{}: predicted {} vs true {}", row.app, row.predicted_scale, row.true_boundary);
+        }
+    }
+}
+
+// ======================================================================
+// Section 4 — the inline experiments motivating efficient sample runs
+// ======================================================================
+
+/// §4.2: same data, 10 vs 1000 tasks — parallelism influences both the
+/// run time and the measured cached size.
+#[derive(Debug, Clone)]
+pub struct Sec4Parallelism {
+    pub tasks_low: usize,
+    pub tasks_high: usize,
+    pub time_low_s: f64,
+    pub time_high_s: f64,
+    pub size_low_mb: f64,
+    pub size_high_mb: f64,
+}
+
+pub fn sec4_parallelism(seed: u64) -> Sec4Parallelism {
+    let app = app_by_name("svm").unwrap();
+    let scale = 20.0; // ~1.2 GB input, the paper's demo size
+    let run = |parallelism: usize, seed: u64| {
+        let mut p = app.profile_with_parallelism(scale, 0.0, parallelism);
+        // on the sample node each task pays scheduling + shuffle-cleanup
+        p.task_overhead_s = 0.02;
+        let res = simulate(
+            &p,
+            &ClusterSpec::workers(1),
+            SimOptions { policy: EvictionPolicy::Lru, seed, compute: None, detailed_log: false },
+        );
+        let s = RunSummary::from_log(&res.log);
+        (s.duration_s, s.total_cached_mb())
+    };
+    let (time_low_s, size_low_mb) = run(10, seed);
+    let (time_high_s, size_high_mb) = run(1000, seed);
+    Sec4Parallelism {
+        tasks_low: 10,
+        tasks_high: 1000,
+        time_low_s,
+        time_high_s,
+        size_low_mb,
+        size_high_mb,
+    }
+}
+
+/// §4.3: the same sample run on a single machine vs the full 12-machine
+/// cluster — sampling on the cluster costs far more (paper: 13.9x).
+#[derive(Debug, Clone)]
+pub struct Sec4Cluster {
+    pub cost_single: f64,
+    pub cost_cluster: f64,
+}
+
+pub fn sec4_single_vs_cluster(seed: u64) -> Sec4Cluster {
+    let app = app_by_name("svm").unwrap();
+    let profile = app.profile(20.0); // ~1.2 GB input
+    let cost = |n: usize| {
+        let res = simulate(
+            &profile,
+            &ClusterSpec::workers(n),
+            SimOptions { policy: EvictionPolicy::Lru, seed, compute: None, detailed_log: false },
+        );
+        RunSummary::from_log(&res.log).cost_machine_s
+    };
+    Sec4Cluster { cost_single: cost(1), cost_cluster: cost(12) }
+}

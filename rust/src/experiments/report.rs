@@ -1,0 +1,233 @@
+//! ASCII renderers: print each experiment the way the paper lays it out.
+
+use super::*;
+use crate::util::units::fmt_pct;
+
+fn hr(width: usize) -> String {
+    "-".repeat(width)
+}
+
+pub fn print_table1(t: &Table1) {
+    println!("TABLE 1 — overview of evaluated applications");
+    for (title, rows) in [("100 % data scale", &t.at_100), ("enlarged data scale", &t.enlarged)] {
+        println!("\n[{title}]");
+        print!("{:<22}", "#Machines");
+        for r in rows {
+            print!("{:>14}", r.app.to_uppercase());
+        }
+        println!();
+        print!("{:<22}", "sample cost (m-min)");
+        for r in rows {
+            print!("{:>14.1}", r.sample_cost_machine_min);
+        }
+        println!();
+        print!("{:<22}", "approach");
+        for r in rows {
+            print!("{:>14}", r.approach);
+        }
+        println!();
+        print!("{:<22}", "input size (GB)");
+        for r in rows {
+            print!("{:>14.2}", r.input_gb);
+        }
+        println!();
+        println!("{}", hr(22 + rows.len() * 14));
+        for n in 1..=MAX_MACHINES {
+            print!("{:<22}", format!("n={n}  time|cost"));
+            for r in rows {
+                let (time, cost, free) = r.runs[n - 1];
+                let mark = if r.blink_pick == n {
+                    "*"
+                } else if free {
+                    "+"
+                } else {
+                    " "
+                };
+                print!("{:>13}{}", format!("{time:.1}|{cost:.1}"), mark);
+            }
+            println!();
+        }
+        print!("{:<22}", "BLINK pick");
+        for r in rows {
+            print!("{:>14}", r.blink_pick);
+        }
+        println!();
+        print!("{:<22}", "first eviction-free");
+        for r in rows {
+            print!("{:>14}", r.optimal);
+        }
+        println!("\n  (* = BLINK's pick, + = eviction-free cell)");
+    }
+}
+
+pub fn print_fig1(f: &Fig1) {
+    println!("FIGURE 1 — svm: time & cost vs cluster size (areas A/B/C)");
+    println!("{:>4} {:>12} {:>16} {:>14} {:>10}", "n", "time (min)", "cost (m-min)", "ernest (min)", "cached");
+    for (i, (n, time, cost, free)) in f.series.iter().enumerate() {
+        println!(
+            "{:>4} {:>12.1} {:>16.1} {:>14.1} {:>10}",
+            n,
+            time,
+            cost,
+            f.ernest_time_min[i],
+            if *free { "full" } else { "partial" }
+        );
+    }
+    println!("area C (optimal) = {} machines; Ernest would pick {}", f.optimal, f.ernest_pick);
+}
+
+pub fn print_fig4(scales: &[Fig4Scale]) {
+    println!("FIGURE 4 — 10 short runs x 3 scales (svm, 1 machine)");
+    for sc in scales {
+        println!(
+            "scale {:>5.0}: cached size {:>8.1} MB (constant: {}), time mean {:>6.1}s cv {}",
+            sc.scale,
+            sc.sizes_mb[0],
+            sc.sizes_mb.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-9),
+            crate::util::stats::mean(&sc.times_s),
+            fmt_pct(crate::util::stats::cv(&sc.times_s)),
+        );
+    }
+}
+
+pub fn print_fig6(rows: &[Fig6Row]) {
+    println!("FIGURE 6 — BLINK cost vs average/worst actual-run cost");
+    println!("{:>6} {:>16} {:>14} {:>14} {:>9} {:>9}", "app", "blink (m-min)", "avg", "worst", "vs avg", "vs worst");
+    for r in rows {
+        println!(
+            "{:>6} {:>16.1} {:>14.1} {:>14.1} {:>9} {:>9}",
+            r.app,
+            r.blink_cost,
+            r.avg_cost,
+            r.worst_cost,
+            fmt_pct(r.blink_cost / r.avg_cost),
+            fmt_pct(r.blink_cost / r.worst_cost),
+        );
+    }
+    let (a, w) = fig6_ratios(rows);
+    println!("mean: {} of average cost, {} of worst cost (paper: 52.6 % / 25.1 %)", fmt_pct(a), fmt_pct(w));
+}
+
+pub fn print_fig7(rows: &[Fig7Row]) {
+    println!("FIGURE 7 — prediction error of cached dataset sizes");
+    println!("{:>6} {:>14} {:>14} {:>8}", "app", "predicted MB", "actual MB", "error");
+    let mut errs = Vec::new();
+    for r in rows {
+        println!("{:>6} {:>14.1} {:>14.1} {:>8}", r.app, r.predicted_mb, r.actual_mb, fmt_pct(r.error));
+        errs.push(r.error);
+    }
+    println!("average error {} (paper: 7.4 %)", fmt_pct(crate::util::stats::mean(&errs)));
+}
+
+pub fn print_fig8(points: &[Fig8Point]) {
+    println!("FIGURE 8 — GBT: sample cost & prediction accuracy vs #samples");
+    println!("{:>9} {:>18} {:>10} {:>10}", "#samples", "cost (m-min)", "accuracy", "cv err");
+    for p in points {
+        println!(
+            "{:>9} {:>18.2} {:>10} {:>10}",
+            p.num_samples,
+            p.sample_cost_machine_min,
+            fmt_pct(p.accuracy),
+            fmt_pct(p.cv_rel_err)
+        );
+    }
+}
+
+pub fn print_fig9(sizes: &[(f64, f64)]) {
+    println!("FIGURE 9 — GBT cached dataset size during sample runs");
+    for (s, mb) in sizes {
+        println!("scale {:>4.0} (0.{:.0} %): {:>8.1} KB", s, s, mb * 1024.0);
+    }
+}
+
+pub fn print_fig10(f: &Fig10) {
+    println!("FIGURE 10 — cost of sample runs vs optimal actual runs");
+    println!("{:>6} {:>10} {:>10}", "app", "approach", "overhead");
+    let mut all = Vec::new();
+    let mut by_approach: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    for r in &f.rows {
+        println!("{:>6} {:>10} {:>10}", r.app, r.approach, fmt_pct(r.overhead));
+        all.push(r.overhead);
+        by_approach.entry(r.approach.as_str()).or_default().push(r.overhead);
+    }
+    println!("average {} (paper: 8.1 %)", fmt_pct(crate::util::stats::mean(&all)));
+    for (a, v) in by_approach {
+        println!("  {a}: avg {}", fmt_pct(crate::util::stats::mean(&v)));
+    }
+    println!("Ernest sampling cost = {:.1}x Blink's (paper: 16.4x)", f.ernest_over_blink);
+}
+
+pub fn print_fig11(f: &Fig11) {
+    println!("FIGURE 11 — KM at 200 %: task distribution on {} machines", f.blink_pick);
+    println!("{:>8} {:>7} {:>10}", "machine", "tasks", "evictions");
+    for (i, (t, e)) in f
+        .tasks_per_machine
+        .iter()
+        .zip(&f.evictions_per_machine)
+        .enumerate()
+    {
+        println!("{:>8} {:>7} {:>10}", i + 1, t, e);
+    }
+    println!(
+        "BLINK picked {} ({:.1} m-min) but the true optimum is {} ({:.1} m-min) — skew-driven evictions",
+        f.blink_pick, f.pick_cost, f.true_optimal, f.optimal_cost
+    );
+}
+
+pub fn print_table2(rows: &[Table2Row]) {
+    println!("TABLE 2 — cluster bounds at 12 machines (✓ = eviction-free)");
+    print!("{:<12}", "scale\\app");
+    for r in rows {
+        print!("{:>7}", r.app.to_uppercase());
+    }
+    println!();
+    let offsets = [-0.05, -0.04, -0.03, -0.02, -0.01, 0.0, 0.01, 0.02, 0.03, 0.04, 0.05];
+    for (oi, off) in offsets.iter().enumerate() {
+        let label = if *off == 0.0 {
+            "Predicted".to_string()
+        } else {
+            format!("{:+.0} %", off * 100.0)
+        };
+        print!("{label:<12}");
+        for r in rows {
+            print!("{:>7}", if r.probes[oi].1 { "✓" } else { "x" });
+        }
+        println!();
+    }
+    for r in rows {
+        let err = (r.predicted_scale - r.true_boundary) / r.true_boundary;
+        println!(
+            "{:>6}: predicted max scale {:>9.1} vs true boundary {:>9.1} ({} error)",
+            r.app,
+            r.predicted_scale,
+            r.true_boundary,
+            fmt_pct(err.abs())
+        );
+    }
+}
+
+pub fn print_sec4(p: &Sec4Parallelism, c: &Sec4Cluster) {
+    println!("SECTION 4.2 — parallelism during sample runs (svm, ~1.2 GB)");
+    println!(
+        "  {} tasks:   {:>8}  cached {:>8.1} MB",
+        p.tasks_low,
+        crate::util::units::fmt_secs(p.time_low_s),
+        p.size_low_mb
+    );
+    println!(
+        "  {} tasks: {:>8}  cached {:>8.1} MB",
+        p.tasks_high,
+        crate::util::units::fmt_secs(p.time_high_s),
+        p.size_high_mb
+    );
+    println!(
+        "  (paper: 41 s vs 3.5 min; 728.9 MB vs 747.8 MB — parallelism\n   changes both, so Blink keeps tasks proportional to the scale)"
+    );
+    println!("\nSECTION 4.3 — sample run on 1 vs 12 machines (svm, ~1.2 GB)");
+    println!(
+        "  single machine: {:>8.1} machine-s   cluster: {:>8.1} machine-s  ({:.1}x, paper: 13.9x)",
+        c.cost_single,
+        c.cost_cluster,
+        c.cost_cluster / c.cost_single
+    );
+}

@@ -1,0 +1,232 @@
+//! HDFS-like block store + the paper's two sampling strategies (§4.2).
+//!
+//! Original input data is fragmented into fixed-size blocks. Sample runs
+//! shrink the data either by selecting few whole blocks (**Block-n**, cheap:
+//! a metadata operation on the DFS) or by re-chunking into smaller blocks
+//! (**Block-s**, costly: a full preparation pass over the sample bytes).
+//! Blink keeps the number of tasks proportional to the data scale by fixing
+//! the block size, so the parallelism level — which influences measured
+//! dataset sizes — is preserved across scales.
+
+use crate::util::units::Mb;
+
+/// Default DFS block size (Hadoop default: 64 or 128 MB).
+pub const DEFAULT_BLOCK_MB: Mb = 64.0;
+
+/// One stored block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub id: usize,
+    pub size_mb: Mb,
+}
+
+/// A file in the distributed file system, fragmented into blocks.
+#[derive(Debug, Clone)]
+pub struct DfsFile {
+    pub name: String,
+    pub blocks: Vec<Block>,
+}
+
+impl DfsFile {
+    /// Fragment `total_mb` of data into blocks of `block_mb` (last block
+    /// holds the remainder).
+    pub fn ingest(name: &str, total_mb: Mb, block_mb: Mb) -> DfsFile {
+        assert!(total_mb > 0.0 && block_mb > 0.0);
+        let full = (total_mb / block_mb).floor() as usize;
+        let rem = total_mb - full as f64 * block_mb;
+        let mut blocks: Vec<Block> = (0..full)
+            .map(|id| Block { id, size_mb: block_mb })
+            .collect();
+        if rem > 1e-9 {
+            blocks.push(Block { id: full, size_mb: rem });
+        }
+        DfsFile { name: name.to_string(), blocks }
+    }
+
+    pub fn total_mb(&self) -> Mb {
+        self.blocks.iter().map(|b| b.size_mb).sum()
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+/// Which sampling strategy produced a sample (determines its preparation
+/// cost and whether it is feasible at all).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SampleApproach {
+    /// Select `n` existing blocks — metadata-only, negligible cost.
+    BlockN,
+    /// Re-chunk the data into smaller blocks — pays a preparation pass.
+    BlockS,
+}
+
+impl std::fmt::Display for SampleApproach {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SampleApproach::BlockN => write!(f, "Block-n"),
+            SampleApproach::BlockS => write!(f, "Block-s"),
+        }
+    }
+}
+
+/// A sample dataset carved out of a [`DfsFile`].
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub approach: SampleApproach,
+    /// Fraction of the original data (e.g. 0.001 = 0.1 %).
+    pub fraction: f64,
+    pub size_mb: Mb,
+    /// Number of blocks == number of input tasks in the sample run.
+    pub num_blocks: usize,
+    /// Extra one-off preparation cost in seconds (Block-s only).
+    pub prep_cost_s: f64,
+}
+
+/// Sampling planner: decides Block-n vs Block-s per §4.2 and carves samples.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    /// Block-s preparation throughput (MB/s of sample data written).
+    pub prep_mb_per_s: f64,
+    /// Minimum number of whole blocks required to use Block-n.
+    pub min_blocks_for_block_n: usize,
+}
+
+impl Default for Sampler {
+    fn default() -> Self {
+        // preparation writes the sample once through the DFS; two whole
+        // blocks are enough to call it a Block-n selection (the paper's
+        // 2K-block inputs sample 2 blocks at 0.1 %)
+        Sampler { prep_mb_per_s: 40.0, min_blocks_for_block_n: 2 }
+    }
+}
+
+impl Sampler {
+    /// Choose the approach for a file: Block-n whenever the file has enough
+    /// blocks that `fraction` still selects whole blocks, else Block-s.
+    pub fn choose(&self, file: &DfsFile, fraction: f64) -> SampleApproach {
+        let picked = (file.num_blocks() as f64 * fraction).floor() as usize;
+        if picked >= self.min_blocks_for_block_n {
+            SampleApproach::BlockN
+        } else {
+            SampleApproach::BlockS
+        }
+    }
+
+    /// Carve a sample using an explicitly chosen approach (workload models
+    /// can force Block-s when whole-block selection is not applicable).
+    pub fn sample_with(&self, file: &DfsFile, fraction: f64, approach: SampleApproach) -> Sample {
+        assert!(fraction > 0.0 && fraction <= 1.0);
+        let size_mb = file.total_mb() * fraction;
+        match approach {
+            SampleApproach::BlockN => {
+                let n = ((file.num_blocks() as f64 * fraction).floor() as usize).max(1);
+                Sample { approach, fraction, size_mb, num_blocks: n, prep_cost_s: 0.0 }
+            }
+            SampleApproach::BlockS => {
+                let n = ((file.num_blocks() as f64 * fraction).ceil() as usize).max(1);
+                Sample {
+                    approach,
+                    fraction,
+                    size_mb,
+                    num_blocks: n,
+                    prep_cost_s: size_mb / self.prep_mb_per_s,
+                }
+            }
+        }
+    }
+
+    /// Carve a sample of `fraction` of the file.
+    ///
+    /// Block-n keeps the original block size (tasks stay proportional to the
+    /// scale). Block-s re-chunks the sample into the same *count* of blocks
+    /// the equivalent Block-n sample would have had, preserving the
+    /// task-per-byte ratio, but pays the preparation pass.
+    pub fn sample(&self, file: &DfsFile, fraction: f64) -> Sample {
+        self.sample_with(file, fraction, self.choose(file, fraction))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn ingest_fragments_with_remainder() {
+        let f = DfsFile::ingest("in", 200.0, 64.0);
+        assert_eq!(f.num_blocks(), 4);
+        assert!((f.total_mb() - 200.0).abs() < 1e-9);
+        assert!((f.blocks[3].size_mb - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ingest_exact_multiple_has_no_stub_block() {
+        let f = DfsFile::ingest("in", 128.0, 64.0);
+        assert_eq!(f.num_blocks(), 2);
+    }
+
+    #[test]
+    fn block_n_chosen_for_many_blocks() {
+        // 1 TB at 64 MB blocks = 16K blocks; 0.1 % -> 16 blocks (paper §4.2)
+        let f = DfsFile::ingest("big", 1024.0 * 1024.0, 64.0);
+        let s = Sampler::default().sample(&f, 0.001);
+        assert_eq!(s.approach, SampleApproach::BlockN);
+        assert_eq!(s.num_blocks, 16);
+        assert_eq!(s.prep_cost_s, 0.0);
+    }
+
+    #[test]
+    fn block_s_chosen_for_small_files_and_costs() {
+        // GBT-like: 30.6 MB in 100 tiny blocks; 0.1 % can't select whole
+        // 64 MB-grade blocks -> Block-s with a preparation cost
+        let f = DfsFile::ingest("gbt", 30.6, 0.306);
+        let sampler = Sampler { min_blocks_for_block_n: 4, ..Default::default() };
+        let s = sampler.sample(&f, 0.001);
+        assert_eq!(s.approach, SampleApproach::BlockS);
+        assert!(s.prep_cost_s > 0.0);
+        assert!(s.num_blocks >= 1);
+    }
+
+    #[test]
+    fn tasks_proportional_to_scale() {
+        // 16K blocks of 64 MB: 0.1/0.2/0.3 % select 16/32/48 blocks (§4.2)
+        let f = DfsFile::ingest("svm", 16_000.0 * 64.0, 64.0);
+        let sampler = Sampler::default();
+        let n1 = sampler.sample(&f, 0.001).num_blocks;
+        let n2 = sampler.sample(&f, 0.002).num_blocks;
+        let n3 = sampler.sample(&f, 0.003).num_blocks;
+        assert_eq!((n1 * 2, n1 * 3), (n2, n3)); // 16, 32, 48 per the paper
+    }
+
+    #[test]
+    fn property_sample_size_and_blocks_sane() {
+        prop::check(
+            &prop::Config { cases: 128, seed: 0xd1f5, max_size: 64 },
+            |rng: &mut Rng, size| {
+                let total = rng.range(10.0, 1e6) * (size.max(1) as f64 / 64.0 + 0.1);
+                let block = rng.range(1.0, 128.0);
+                let frac = rng.range(0.0005, 0.9);
+                (DfsFile::ingest("f", total, block), frac)
+            },
+            |(file, frac)| {
+                let s = Sampler::default().sample(file, *frac);
+                if s.num_blocks == 0 {
+                    return Err("no blocks".into());
+                }
+                if s.num_blocks > file.num_blocks() + 1 {
+                    return Err("more sample blocks than source".into());
+                }
+                if s.size_mb > file.total_mb() {
+                    return Err("sample bigger than file".into());
+                }
+                if s.approach == SampleApproach::BlockN && s.prep_cost_s != 0.0 {
+                    return Err("block-n must be free".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! # Blink — lightweight sample runs for cost optimization of big data apps
+//!
+//! Full reproduction of *"Blink: Lightweight Sample Runs for Cost
+//! Optimization of Big Data Applications"* (Al-Sayeh et al., 2022) as a
+//! three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: a Spark-like in-memory cluster
+//!   substrate ([`sim`], [`memory`], [`dag`], [`hdfs`]), the Blink framework
+//!   itself ([`blink`]: sample-runs manager, size/memory predictors,
+//!   cluster-size selector), the Ernest baseline ([`ernest`]), workload
+//!   models of the eight HiBench apps ([`workloads`]), metrics/cost
+//!   accounting ([`metrics`]), and the PJRT runtime that executes the
+//!   AOT-compiled JAX artifacts ([`runtime`], [`compute`]).
+//! * **L2 (python/compile/model.py)** — jax compute graphs (workload
+//!   iteration steps + the batched predictor fit).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (interpret=True),
+//!   lowered once by `make artifacts`; Python never runs at request time.
+//!
+//! See DESIGN.md for the system inventory and the per-table/figure
+//! experiment index, and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod blink;
+pub mod compute;
+pub mod coordinator;
+pub mod dag;
+pub mod ernest;
+pub mod experiments;
+pub mod hdfs;
+pub mod linalg;
+pub mod memory;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;

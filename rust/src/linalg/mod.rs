@@ -1,0 +1,225 @@
+//! Dense small-matrix least squares, the pure-Rust twin of the Pallas
+//! `linfit` kernel.
+//!
+//! Blink's predictors fit tiny models (<= 16 points, <= 4 features). The
+//! production hot path dispatches those fits as one batched HLO executable
+//! (see `runtime::linfit`); this module provides (a) the same algorithm in
+//! pure Rust as the fallback when artifacts are absent, and (b) the oracle
+//! the integration tests compare the PJRT path against.
+
+/// Ordinary least squares via normal equations + Gaussian elimination with
+/// partial pivoting. `x` is row-major [n][k]. Returns theta[k].
+/// Returns None if the system is singular.
+pub fn ols(x: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    weighted_ols(x, y, &vec![1.0; y.len()])
+}
+
+/// Weighted OLS; rows with weight 0 are excluded (used for CV folds).
+pub fn weighted_ols(x: &[Vec<f64>], y: &[f64], w: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), w.len());
+    let n = x.len();
+    if n == 0 {
+        return None;
+    }
+    let k = x[0].len();
+    // G = X^T W X, b = X^T W y
+    let mut g = vec![vec![0.0; k]; k];
+    let mut b = vec![0.0; k];
+    for i in 0..n {
+        for a in 0..k {
+            let xa = x[i][a] * w[i];
+            b[a] += xa * y[i];
+            for c in 0..k {
+                g[a][c] += xa * x[i][c];
+            }
+        }
+    }
+    solve(&mut g, &mut b)
+}
+
+/// Solve G theta = b in place (partial pivoting). None if singular.
+fn solve(g: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let k = b.len();
+    for col in 0..k {
+        // pivot
+        let (piv, pmax) = (col..k)
+            .map(|r| (r, g[r][col].abs()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        if pmax < 1e-12 {
+            return None;
+        }
+        g.swap(col, piv);
+        b.swap(col, piv);
+        let d = g[col][col];
+        for r in 0..k {
+            if r == col {
+                continue;
+            }
+            let f = g[r][col] / d;
+            for c in col..k {
+                g[r][c] -= f * g[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    Some((0..k).map(|i| b[i] / g[i][i]).collect())
+}
+
+/// Non-negative least squares by FISTA (accelerated projected gradient) on
+/// the normal equations — the exact algorithm of the Pallas `linfit`
+/// kernel (and the same KKT point scipy's bounded `curve_fit` converges to
+/// on these tiny convex problems). Acceleration matters for the
+/// ill-conditioned quadratic/log feature families in the model zoo.
+pub fn nnls(x: &[Vec<f64>], y: &[f64], w: &[f64], iters: usize) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let k = if n == 0 { 0 } else { x[0].len() };
+    let mut g = vec![vec![0.0; k]; k];
+    let mut b = vec![0.0; k];
+    for i in 0..n {
+        for a in 0..k {
+            let xa = x[i][a] * w[i];
+            b[a] += xa * y[i];
+            for c in 0..k {
+                g[a][c] += xa * x[i][c];
+            }
+        }
+    }
+    let lip = g
+        .iter()
+        .map(|row| row.iter().map(|v| v.abs()).sum::<f64>())
+        .fold(0.0f64, f64::max);
+    let eta = 1.0 / lip.max(1e-12);
+    let mut theta = vec![0.0; k];
+    let mut momentum = theta.clone(); // FISTA's extrapolated point
+    let mut t = 1.0f64;
+    let mut grad = vec![0.0; k];
+    for _ in 0..iters {
+        for a in 0..k {
+            grad[a] = -b[a];
+            for c in 0..k {
+                grad[a] += g[a][c] * momentum[c];
+            }
+        }
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let beta = (t - 1.0) / t_next;
+        for a in 0..k {
+            let next = (momentum[a] - eta * grad[a]).max(0.0);
+            momentum[a] = next + beta * (next - theta[a]);
+            theta[a] = next;
+        }
+        t = t_next;
+    }
+    theta
+}
+
+/// Residual RMSE of a fitted model over rows with weight > 0.
+pub fn residual_rmse(x: &[Vec<f64>], y: &[f64], w: &[f64], theta: &[f64]) -> f64 {
+    let mut se = 0.0;
+    let mut n = 0.0;
+    for i in 0..x.len() {
+        if w[i] <= 0.0 {
+            continue;
+        }
+        let pred: f64 = x[i].iter().zip(theta).map(|(a, t)| a * t).sum();
+        se += w[i] * (pred - y[i]) * (pred - y[i]);
+        n += w[i];
+    }
+    (se / n.max(1.0)).sqrt()
+}
+
+/// Predict a single row.
+pub fn predict(row: &[f64], theta: &[f64]) -> f64 {
+    row.iter().zip(theta).map(|(a, t)| a * t).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn design(xs: &[f64]) -> Vec<Vec<f64>> {
+        xs.iter().map(|&s| vec![1.0, s]).collect()
+    }
+
+    #[test]
+    fn ols_recovers_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = xs.iter().map(|s| 3.0 + 2.0 * s).collect();
+        let th = ols(&design(&xs), &y).unwrap();
+        assert!((th[0] - 3.0).abs() < 1e-9 && (th[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ols_singular_returns_none() {
+        // duplicated feature column -> singular Gram
+        let x = vec![vec![1.0, 1.0], vec![2.0, 2.0], vec![3.0, 3.0]];
+        assert!(ols(&x, &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn weighted_ols_ignores_zero_weight_rows() {
+        let xs = [1.0, 2.0, 3.0, 100.0];
+        let mut y: Vec<f64> = xs.iter().map(|s| 1.0 + s).collect();
+        y[3] = -999.0; // corrupted row, weight 0
+        let th = weighted_ols(&design(&xs), &y, &[1.0, 1.0, 1.0, 0.0]).unwrap();
+        assert!((th[0] - 1.0).abs() < 1e-9 && (th[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nnls_matches_ols_when_solution_positive() {
+        let xs = [1.0, 2.0, 3.0, 5.0, 8.0];
+        let y: Vec<f64> = xs.iter().map(|s| 0.7 + 1.3 * s).collect();
+        let w = vec![1.0; 5];
+        let th = nnls(&design(&xs), &y, &w, 5000);
+        assert!((th[0] - 0.7).abs() < 1e-3, "{th:?}");
+        assert!((th[1] - 1.3).abs() < 1e-3, "{th:?}");
+    }
+
+    #[test]
+    fn nnls_clamps_negative_intercept_to_zero() {
+        // true intercept is negative; bounded fit must return theta0 = 0
+        let xs = [1.0, 2.0, 3.0];
+        let y: Vec<f64> = xs.iter().map(|s| -5.0 + 2.0 * s).collect();
+        let th = nnls(&design(&xs), &y, &[1.0; 3], 5000);
+        assert!(th[0].abs() < 1e-6, "{th:?}");
+        assert!(th.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn property_nnls_never_negative_and_fits_clean_lines() {
+        prop::check(
+            &prop::Config { cases: 96, seed: 0x11f17, max_size: 12 },
+            |rng: &mut Rng, size| {
+                let n = (size.max(2)).min(12);
+                let th0 = rng.range(0.0, 5.0);
+                let th1 = rng.range(0.1, 4.0);
+                let xs: Vec<f64> = (0..n).map(|i| 1.0 + i as f64 + rng.f64()).collect();
+                let y: Vec<f64> = xs.iter().map(|s| th0 + th1 * s).collect();
+                (xs, y, th0, th1)
+            },
+            |(xs, y, th0, th1)| {
+                let w = vec![1.0; xs.len()];
+                let th = nnls(&design(xs), y, &w, 8000);
+                if th.iter().any(|&t| t < 0.0) {
+                    return Err("negative coefficient".into());
+                }
+                if (th[1] - th1).abs() > 0.02 * th1.max(1.0) {
+                    return Err(format!("slope {th:?} vs ({th0}, {th1})"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn rmse_zero_on_perfect_fit() {
+        let xs = [1.0, 2.0, 3.0];
+        let y: Vec<f64> = xs.iter().map(|s| 1.0 + s).collect();
+        let x = design(&xs);
+        let rm = residual_rmse(&x, &y, &[1.0; 3], &[1.0, 1.0]);
+        assert!(rm < 1e-12);
+    }
+}

@@ -1,0 +1,116 @@
+//! `blink` — CLI entrypoint of the L3 coordinator.
+//!
+//! ```text
+//! blink decide      --app svm --scale 1000        # recommend a cluster size
+//! blink run         --app km  --scale 2000        # decide + actual run
+//! blink bounds      --app lr  --machines 12       # Table-2 max data scale
+//! blink experiment  --id table1                   # regenerate a paper table/figure
+//! blink apps                                      # list workload models
+//! ```
+
+use blink::coordinator;
+use blink::util::cli::{App, CliError, Command, Opt};
+use blink::workloads::all_apps;
+
+fn app() -> App {
+    App {
+        name: "blink",
+        about: "lightweight sample runs for cost optimization of big data applications",
+        commands: vec![
+            Command {
+                name: "decide",
+                about: "sample, predict and select the optimal cluster size",
+                opts: vec![
+                    Opt::with_default("app", "workload (als|bayes|gbt|km|lr|pca|rfc|svm)", "svm"),
+                    Opt::with_default("scale", "target data scale (1000 = 100 %)", "1000"),
+                    Opt::switch("verbose", "print per-dataset models"),
+                ],
+            },
+            Command {
+                name: "run",
+                about: "decide, then simulate the actual run at the recommendation",
+                opts: vec![
+                    Opt::with_default("app", "workload", "svm"),
+                    Opt::with_default("scale", "target data scale", "1000"),
+                    Opt::with_default("seed", "simulation seed", "1"),
+                ],
+            },
+            Command {
+                name: "bounds",
+                about: "predict the max eviction-free data scale for a fixed cluster",
+                opts: vec![
+                    Opt::with_default("app", "workload", "svm"),
+                    Opt::with_default("machines", "cluster size", "12"),
+                ],
+            },
+            Command {
+                name: "experiment",
+                about: "regenerate a paper table/figure (table1 table2 fig1 fig2 fig4 fig6..fig11 all)",
+                opts: vec![
+                    Opt::with_default("id", "experiment id", "table1"),
+                    Opt::with_default("seed", "simulation seed", "1"),
+                ],
+            },
+            Command { name: "apps", about: "list the workload models", opts: vec![] },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = app();
+    let (cmd, m) = match cli.parse(&argv) {
+        Ok(v) => v,
+        Err(CliError::Help(h)) => {
+            println!("{h}");
+            return;
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.name {
+        "decide" => coordinator::cmd_decide(
+            m.get("app").unwrap(),
+            m.get_f64("scale").unwrap_or(1000.0),
+            m.has("verbose"),
+        )
+        .map(|_| ()),
+        "run" => coordinator::cmd_run(
+            m.get("app").unwrap(),
+            m.get_f64("scale").unwrap_or(1000.0),
+            m.get_usize("seed").unwrap_or(1) as u64,
+        )
+        .map(|_| ()),
+        "bounds" => coordinator::cmd_bounds(
+            m.get("app").unwrap(),
+            m.get_usize("machines").unwrap_or(12),
+        )
+        .map(|_| ()),
+        "experiment" => coordinator::cmd_experiment(
+            m.get("id").unwrap(),
+            m.get_usize("seed").unwrap_or(1) as u64,
+        ),
+        "apps" => {
+            println!("{:<7} {:>10} {:>8} {:>7} {:>12} {:>10}", "app", "input", "blocks", "iters", "cached@100%", "approach");
+            for a in all_apps() {
+                println!(
+                    "{:<7} {:>10} {:>8} {:>7} {:>12} {:>10}",
+                    a.name,
+                    blink::util::units::fmt_mb(a.input_mb_full),
+                    a.blocks_full,
+                    a.iterations,
+                    blink::util::units::fmt_mb(a.total_true_cached_mb(1000.0)),
+                    a.sample_approach(&blink::hdfs::Sampler::default(), 0.001),
+                );
+            }
+            Ok(())
+        }
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

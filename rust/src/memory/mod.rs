@@ -1,0 +1,490 @@
+//! Spark's unified memory model (§3.3, Fig. 3) at partition granularity.
+//!
+//! Per executor, storage (caching) and execution share one unified region
+//! `M`; a floor `R` of storage is protected from execution pressure. Cached
+//! partitions are evicted when cached bytes exceed `M`, or exceed the
+//! storage region left after execution claims its share (execution may
+//! steal at most `M - R`). Eviction order is pluggable: LRU (Spark's
+//! default), plus the DAG-aware baselines the paper compares against —
+//! LRC (lowest remaining reference count) and MRD (largest reference
+//! distance, i.e. furthest next use).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::units::Mb;
+
+/// Identifies one cached partition: (dataset id, partition index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PartitionKey {
+    pub dataset: usize,
+    pub index: usize,
+}
+
+/// Eviction policy (paper §2: MRD and LRC "rank cached datasets based on
+/// their reference distance and reference count, respectively").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    Lru,
+    Lrc,
+    Mrd,
+}
+
+impl std::fmt::Display for EvictionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvictionPolicy::Lru => write!(f, "LRU"),
+            EvictionPolicy::Lrc => write!(f, "LRC"),
+            EvictionPolicy::Mrd => write!(f, "MRD"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct CachedPartition {
+    size_mb: Mb,
+    last_access: u64,
+    /// Remaining references of the owning dataset (LRC key).
+    ref_count: usize,
+    /// Distance (in upcoming actions) to the next reference (MRD key).
+    ref_distance: usize,
+}
+
+/// Counters the listener scrapes after a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemoryStats {
+    pub evictions: usize,
+    pub failed_caches: usize,
+    pub cached_mb: Mb,
+    pub peak_cached_mb: Mb,
+}
+
+/// One executor's unified memory region.
+#[derive(Debug, Clone)]
+pub struct UnifiedMemory {
+    /// Unified region size (storage + execution), MB.
+    pub m_mb: Mb,
+    /// Protected storage floor, MB (R <= M).
+    pub r_mb: Mb,
+    policy: EvictionPolicy,
+    exec_used_mb: Mb,
+    cached: BTreeMap<PartitionKey, CachedPartition>,
+    /// Incremental Σ size of `cached` — the insert/evict hot path must not
+    /// rescan the map (profiled: full Table-1 sweep was O(tasks x cached)).
+    cached_total_mb: Mb,
+    /// Per-dataset (partition count, bytes) for O(#datasets) victim checks.
+    per_dataset: BTreeMap<usize, (usize, Mb)>,
+    /// Recency index (last_access, key) so the LRU victim is O(log n)
+    /// instead of a full scan (hot under area-A cache churn). Entries may
+    /// be STALE (touch only bumps the partition's own timestamp); the
+    /// victim scan lazily repairs them — this keeps `touch`, the most
+    /// frequent operation on the fully-cached fast path, free of index
+    /// maintenance.
+    lru_index: BTreeSet<(u64, PartitionKey)>,
+    clock: u64,
+    stats: MemoryStats,
+    /// Keys evicted since the last `drain_evicted` call (the simulator
+    /// consumes these to mark partitions as needing recomputation).
+    evicted_log: Vec<PartitionKey>,
+}
+
+impl UnifiedMemory {
+    pub fn new(m_mb: Mb, r_mb: Mb, policy: EvictionPolicy) -> Self {
+        assert!(m_mb > 0.0 && (0.0..=m_mb).contains(&r_mb), "need 0 <= R <= M");
+        UnifiedMemory {
+            m_mb,
+            r_mb,
+            policy,
+            exec_used_mb: 0.0,
+            cached: BTreeMap::new(),
+            cached_total_mb: 0.0,
+            per_dataset: BTreeMap::new(),
+            lru_index: BTreeSet::new(),
+            clock: 0,
+            stats: MemoryStats::default(),
+            evicted_log: Vec::new(),
+        }
+    }
+
+    /// Take the partitions evicted since the last call.
+    pub fn drain_evicted(&mut self) -> Vec<PartitionKey> {
+        std::mem::take(&mut self.evicted_log)
+    }
+
+    /// Storage space currently available for caching: execution may claim
+    /// at most `M - R`, so storage keeps at least `R` and at most `M`.
+    pub fn storage_limit_mb(&self) -> Mb {
+        self.m_mb - self.exec_used_mb.min(self.m_mb - self.r_mb)
+    }
+
+    pub fn cached_mb(&self) -> Mb {
+        self.cached_total_mb
+    }
+
+    fn remove_key(&mut self, key: &PartitionKey) {
+        if let Some(p) = self.cached.remove(key) {
+            self.lru_index.remove(&(p.last_access, *key));
+            self.cached_total_mb -= p.size_mb;
+            if let Some(e) = self.per_dataset.get_mut(&key.dataset) {
+                e.0 -= 1;
+                e.1 -= p.size_mb;
+                if e.0 == 0 {
+                    self.per_dataset.remove(&key.dataset);
+                }
+            }
+        }
+    }
+
+    /// Any evictable partition (outside `inserting`) present? O(#datasets).
+    fn has_victim(&self, inserting: usize) -> bool {
+        self.per_dataset.keys().any(|&d| d != inserting)
+    }
+
+    pub fn exec_used_mb(&self) -> Mb {
+        self.exec_used_mb
+    }
+
+    pub fn stats(&self) -> MemoryStats {
+        let mut s = self.stats;
+        s.cached_mb = self.cached_mb();
+        s
+    }
+
+    pub fn num_cached(&self) -> usize {
+        self.cached.len()
+    }
+
+    pub fn contains(&self, key: PartitionKey) -> bool {
+        self.cached.contains_key(&key)
+    }
+
+    pub fn cached_keys(&self) -> Vec<PartitionKey> {
+        self.cached.keys().copied().collect()
+    }
+
+    /// Claim execution memory (task working set). Execution never evicts
+    /// below `R`, so its claim is clamped at `M - R` plus whatever storage
+    /// is unused beyond that — the paper's model lets execution use the
+    /// free part of the unified region.
+    pub fn claim_execution(&mut self, mb: Mb) -> Mb {
+        let granted = mb.min(self.m_mb - self.r_mb);
+        self.exec_used_mb = granted;
+        // execution pressure can force storage down to its new limit
+        self.enforce_limit();
+        granted
+    }
+
+    pub fn release_execution(&mut self) {
+        self.exec_used_mb = 0.0;
+    }
+
+    /// Record an access (cache hit path) for recency bookkeeping.
+    pub fn touch(&mut self, key: PartitionKey) -> bool {
+        self.clock += 1;
+        if let Some(p) = self.cached.get_mut(&key) {
+            // lazy: the recency index entry becomes stale and is repaired
+            // during the next victim scan (if any)
+            p.last_access = self.clock;
+            p.ref_count = p.ref_count.saturating_sub(1);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Update DAG-derived metadata for a dataset (for LRC/MRD).
+    pub fn set_dataset_refs(&mut self, dataset: usize, ref_count: usize, ref_distance: usize) {
+        for (k, p) in self.cached.iter_mut() {
+            if k.dataset == dataset {
+                p.ref_count = ref_count;
+                p.ref_distance = ref_distance;
+            }
+        }
+    }
+
+    /// Try to cache a partition; evicts per policy if needed. Returns true
+    /// if the partition ended up cached.
+    pub fn insert(
+        &mut self,
+        key: PartitionKey,
+        size_mb: Mb,
+        ref_count: usize,
+        ref_distance: usize,
+    ) -> bool {
+        self.clock += 1;
+        let limit = self.storage_limit_mb();
+        if size_mb > limit {
+            // partition alone exceeds the storage region: never cached
+            self.stats.failed_caches += 1;
+            return false;
+        }
+        if self.cached_total_mb + size_mb > limit && !self.has_victim(key.dataset) {
+            // hot path: memory full of our own dataset -> cannot evict
+            self.stats.failed_caches += 1;
+            return false;
+        }
+        while self.cached_total_mb + size_mb > limit {
+            match self.pick_victim(key.dataset) {
+                Some(victim) => {
+                    self.remove_key(&victim);
+                    self.stats.evictions += 1;
+                    self.evicted_log.push(victim);
+                }
+                None => {
+                    self.stats.failed_caches += 1;
+                    return false;
+                }
+            }
+        }
+        let prev = self.cached.insert(
+            key,
+            CachedPartition {
+                size_mb,
+                last_access: self.clock,
+                ref_count,
+                ref_distance,
+            },
+        );
+        if let Some(prev) = prev {
+            // replacing an existing partition: undo its accounting
+            self.lru_index.remove(&(prev.last_access, key));
+            self.cached_total_mb -= prev.size_mb;
+            if let Some(e) = self.per_dataset.get_mut(&key.dataset) {
+                e.0 -= 1;
+                e.1 -= prev.size_mb;
+            }
+        }
+        self.lru_index.insert((self.clock, key));
+        self.cached_total_mb += size_mb;
+        let e = self.per_dataset.entry(key.dataset).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += size_mb;
+        self.stats.peak_cached_mb = self.stats.peak_cached_mb.max(self.cached_total_mb);
+        true
+    }
+
+    /// Drop partitions until back under the storage limit (used when
+    /// execution claims memory mid-run).
+    fn enforce_limit(&mut self) {
+        let limit = self.storage_limit_mb();
+        while self.cached_total_mb > limit {
+            // under pressure any dataset is fair game
+            match self.pick_victim(usize::MAX) {
+                Some(v) => {
+                    self.remove_key(&v);
+                    self.stats.evictions += 1;
+                    self.evicted_log.push(v);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Choose a victim. Spark never evicts partitions of the dataset being
+    /// written (`inserting`), to avoid thrashing within one RDD.
+    fn pick_victim(&mut self, inserting: usize) -> Option<PartitionKey> {
+        match self.policy {
+            // LRU: walk the recency index from the front, lazily repairing
+            // stale entries and skipping (but keeping) entries of the
+            // protected dataset — amortized O(log n) per eviction
+            EvictionPolicy::Lru => {
+                let mut cursor: Option<(u64, PartitionKey)> = None;
+                loop {
+                    let next = match cursor {
+                        None => self.lru_index.iter().next().copied(),
+                        Some(c) => self
+                            .lru_index
+                            .range((
+                                std::ops::Bound::Excluded(c),
+                                std::ops::Bound::Unbounded,
+                            ))
+                            .next()
+                            .copied(),
+                    };
+                    let Some((ts, key)) = next else { return None };
+                    match self.cached.get(&key) {
+                        None => {
+                            // key evicted earlier; drop the stale entry
+                            self.lru_index.remove(&(ts, key));
+                        }
+                        Some(p) if p.last_access != ts => {
+                            // touched since indexed; re-file at current time
+                            let now = p.last_access;
+                            self.lru_index.remove(&(ts, key));
+                            self.lru_index.insert((now, key));
+                        }
+                        Some(_) if key.dataset != inserting => return Some(key),
+                        Some(_) => cursor = Some((ts, key)), // protected: skip
+                    }
+                }
+            }
+            EvictionPolicy::Lrc => self
+                .cached
+                .iter()
+                .filter(|(k, _)| k.dataset != inserting)
+                .min_by(|a, b| {
+                    (a.1.ref_count, a.1.last_access).cmp(&(b.1.ref_count, b.1.last_access))
+                })
+                .map(|(k, _)| *k),
+            EvictionPolicy::Mrd => self
+                .cached
+                .iter()
+                .filter(|(k, _)| k.dataset != inserting)
+                .max_by(|a, b| {
+                    (a.1.ref_distance, std::cmp::Reverse(a.1.last_access))
+                        .cmp(&(b.1.ref_distance, std::cmp::Reverse(b.1.last_access)))
+                })
+                .map(|(k, _)| *k),
+        }
+    }
+
+    /// Fraction of a dataset's partitions present, given its total count.
+    pub fn cached_fraction(&self, dataset: usize, total_partitions: usize) -> f64 {
+        if total_partitions == 0 {
+            return 0.0;
+        }
+        let have = self.cached.keys().filter(|k| k.dataset == dataset).count();
+        have as f64 / total_partitions as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn key(d: usize, i: usize) -> PartitionKey {
+        PartitionKey { dataset: d, index: i }
+    }
+
+    #[test]
+    fn caches_until_limit_then_evicts_lru() {
+        let mut m = UnifiedMemory::new(100.0, 50.0, EvictionPolicy::Lru);
+        for i in 0..10 {
+            assert!(m.insert(key(0, i), 10.0, 5, 1));
+        }
+        assert_eq!(m.num_cached(), 10);
+        m.touch(key(0, 0)); // partition 0 recently used
+        // a second dataset arrives: must evict from dataset 0, oldest first
+        assert!(m.insert(key(1, 0), 10.0, 5, 1));
+        assert_eq!(m.stats().evictions, 1);
+        assert!(m.contains(key(0, 0)), "recently-touched survives");
+        assert!(!m.contains(key(0, 1)), "LRU victim evicted");
+    }
+
+    #[test]
+    fn never_evicts_partitions_of_inserting_dataset() {
+        let mut m = UnifiedMemory::new(50.0, 25.0, EvictionPolicy::Lru);
+        for i in 0..5 {
+            assert!(m.insert(key(7, i), 10.0, 3, 1));
+        }
+        // 6th partition of the same dataset cannot displace its siblings
+        assert!(!m.insert(key(7, 5), 10.0, 3, 1));
+        assert_eq!(m.stats().failed_caches, 1);
+        assert_eq!(m.num_cached(), 5);
+    }
+
+    #[test]
+    fn execution_claims_shrink_storage_but_respect_r() {
+        let mut m = UnifiedMemory::new(100.0, 40.0, EvictionPolicy::Lru);
+        for i in 0..10 {
+            m.insert(key(0, i), 10.0, 2, 1);
+        }
+        assert_eq!(m.cached_mb(), 100.0);
+        let granted = m.claim_execution(80.0);
+        assert_eq!(granted, 60.0, "execution capped at M - R");
+        assert_eq!(m.storage_limit_mb(), 40.0);
+        assert!(m.cached_mb() <= 40.0, "storage forced down to R");
+        assert!(m.stats().evictions >= 6);
+        m.release_execution();
+        assert_eq!(m.storage_limit_mb(), 100.0);
+    }
+
+    #[test]
+    fn oversized_partition_is_never_cached() {
+        let mut m = UnifiedMemory::new(100.0, 50.0, EvictionPolicy::Lru);
+        assert!(!m.insert(key(0, 0), 150.0, 1, 1));
+        assert_eq!(m.num_cached(), 0);
+    }
+
+    #[test]
+    fn lrc_evicts_lowest_refcount() {
+        let mut m = UnifiedMemory::new(30.0, 15.0, EvictionPolicy::Lrc);
+        m.insert(key(0, 0), 10.0, 8, 1); // many refs left
+        m.insert(key(1, 0), 10.0, 1, 1); // one ref left
+        m.insert(key(2, 0), 10.0, 4, 1);
+        assert!(m.insert(key(3, 0), 10.0, 5, 1));
+        assert!(!m.contains(key(1, 0)), "lowest ref count evicted");
+        assert!(m.contains(key(0, 0)));
+    }
+
+    #[test]
+    fn mrd_evicts_furthest_next_use() {
+        let mut m = UnifiedMemory::new(30.0, 15.0, EvictionPolicy::Mrd);
+        m.insert(key(0, 0), 10.0, 5, 2);
+        m.insert(key(1, 0), 10.0, 5, 9); // used furthest in the future
+        m.insert(key(2, 0), 10.0, 5, 1);
+        assert!(m.insert(key(3, 0), 10.0, 5, 3));
+        assert!(!m.contains(key(1, 0)), "largest ref distance evicted");
+    }
+
+    #[test]
+    fn cached_fraction_tracks_partitions() {
+        let mut m = UnifiedMemory::new(100.0, 50.0, EvictionPolicy::Lru);
+        for i in 0..5 {
+            m.insert(key(3, i), 10.0, 2, 1);
+        }
+        assert_eq!(m.cached_fraction(3, 10), 0.5);
+        assert_eq!(m.cached_fraction(9, 10), 0.0);
+        assert_eq!(m.cached_fraction(3, 0), 0.0);
+    }
+
+    #[test]
+    fn property_cached_never_exceeds_storage_limit() {
+        prop::check(
+            &prop::Config { cases: 160, seed: 0x3e3, max_size: 48 },
+            |rng: &mut Rng, size| {
+                let m_mb = rng.range(50.0, 500.0);
+                let r_mb = rng.range(0.0, m_mb);
+                let policy = match rng.below(3) {
+                    0 => EvictionPolicy::Lru,
+                    1 => EvictionPolicy::Lrc,
+                    _ => EvictionPolicy::Mrd,
+                };
+                let ops: Vec<(usize, usize, f64, f64)> = (0..size)
+                    .map(|_| {
+                        (
+                            rng.below(4),
+                            rng.below(32),
+                            rng.range(1.0, 80.0),
+                            rng.range(0.0, m_mb * 1.2),
+                        )
+                    })
+                    .collect();
+                (m_mb, r_mb, policy, ops)
+            },
+            |(m_mb, r_mb, policy, ops)| {
+                let mut m = UnifiedMemory::new(*m_mb, *r_mb, *policy);
+                for (i, (ds, idx, sz, exec)) in ops.iter().enumerate() {
+                    if i % 5 == 4 {
+                        m.claim_execution(*exec);
+                    } else {
+                        m.insert(key(*ds, *idx), *sz, 3, 2);
+                    }
+                    let limit = m.storage_limit_mb();
+                    if m.cached_mb() > limit + 1e-9 {
+                        return Err(format!(
+                            "cached {} exceeds limit {} (M={m_mb}, R={r_mb})",
+                            m.cached_mb(),
+                            limit
+                        ));
+                    }
+                    if m.storage_limit_mb() < *r_mb - 1e-9 {
+                        return Err("storage floor R violated".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,335 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` (build time, Python) lowers every L2 function to HLO
+//! *text* under `artifacts/`; this module is the request-path half: a
+//! [`Runtime`] owns one `PjRtClient` (CPU plugin) and a cache of compiled
+//! executables keyed by artifact name, validated against
+//! `artifacts/manifest.json`. Python never runs here.
+//!
+//! The two consumers are [`crate::blink`] (batched `linfit` fits through
+//! [`PjrtFit`]) and [`crate::compute`] (workload iteration kernels for
+//! RealCompute tasks).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::blink::models::{FitBackend, FitProblem, FitResult};
+use crate::util::json::{self, Json};
+
+/// Shape info from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest entry missing shape"))?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as usize))
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| anyhow!("non-numeric shape"))?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest entry missing dtype"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+/// Parse `artifacts/manifest.json`.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+        format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+    })?;
+    let j = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+    if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
+        bail!("unsupported artifact format");
+    }
+    let entries = j
+        .get("entries")
+        .ok_or_else(|| anyhow!("manifest missing entries"))?;
+    let Json::Obj(map) = entries else { bail!("entries not an object") };
+    let mut specs = Vec::new();
+    for (name, e) in map {
+        let file = dir.join(
+            e.get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing file"))?,
+        );
+        let inputs = e
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+            .iter()
+            .map(tensor_spec)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = e
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+            .iter()
+            .map(tensor_spec)
+            .collect::<Result<Vec<_>>>()?;
+        specs.push(ArtifactSpec { name: name.clone(), file, inputs, outputs });
+    }
+    Ok(specs)
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on f32 buffers; validates shapes against the manifest.
+    /// Returns one flat `Vec<f32>` per output, in manifest order.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if data.len() != spec.elements() {
+                bail!(
+                    "{}: input {i} has {} elements, manifest says {:?}",
+                    self.spec.name,
+                    data.len(),
+                    spec.shape
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| {
+                let v = lit.to_vec::<f32>()?;
+                if v.len() != spec.elements() {
+                    bail!("{}: output size mismatch", self.spec.name);
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+}
+
+/// The PJRT runtime: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    compiled: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU-backed runtime over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let specs = load_manifest(&dir)?
+            .into_iter()
+            .map(|s| (s.name.clone(), s))
+            .collect();
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, specs, compiled: HashMap::new() })
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn from_repo_root() -> Result<Runtime> {
+        Runtime::new(repo_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Compile (once) and return an executable by artifact name.
+    pub fn get(&mut self, name: &str) -> Result<&Executable> {
+        if !self.compiled.contains_key(name) {
+            let spec = self
+                .specs
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}' in {}", self.dir.display()))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compiled.insert(spec.name.clone(), Executable { spec, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+}
+
+/// Locate `artifacts/` from the crate root (works from tests and benches).
+pub fn repo_artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when `make artifacts` has been run (integration tests skip
+/// gracefully otherwise).
+pub fn artifacts_available() -> bool {
+    repo_artifacts_dir().join("manifest.json").exists()
+}
+
+// ------------------------------------------------------------------------
+// linfit: the Blink predictor hot path through PJRT
+// ------------------------------------------------------------------------
+
+/// AOT shape contract of the `linfit` artifact (python/compile/kernels).
+pub const LINFIT_BATCH: usize = 64;
+pub const LINFIT_POINTS: usize = 16;
+pub const LINFIT_FEATURES: usize = 4;
+
+/// `FitBackend` implementation dispatching batched NNLS to the compiled
+/// Pallas kernel. Problems are padded to the artifact's fixed shapes
+/// (padding rows carry weight 0, padding features are zero columns, and
+/// surplus batch slots are zero problems) and chunked by `LINFIT_BATCH`.
+pub struct PjrtFit<'a> {
+    pub runtime: &'a mut Runtime,
+    /// Kernel dispatches performed (observability for benches).
+    pub dispatches: usize,
+}
+
+impl<'a> PjrtFit<'a> {
+    pub fn new(runtime: &'a mut Runtime) -> PjrtFit<'a> {
+        PjrtFit { runtime, dispatches: 0 }
+    }
+
+    fn fit_chunk(&mut self, chunk: &[FitProblem]) -> Result<Vec<FitResult>> {
+        assert!(chunk.len() <= LINFIT_BATCH);
+        let (b, n, k) = (LINFIT_BATCH, LINFIT_POINTS, LINFIT_FEATURES);
+        let mut x = vec![0.0f32; b * n * k];
+        let mut y = vec![0.0f32; b * n];
+        let mut w = vec![0.0f32; b * n];
+        for (pi, p) in chunk.iter().enumerate() {
+            if p.x.len() > n {
+                bail!("linfit artifact supports at most {n} points, got {}", p.x.len());
+            }
+            for (ri, row) in p.x.iter().enumerate() {
+                if row.len() > k {
+                    bail!("linfit artifact supports at most {k} features, got {}", row.len());
+                }
+                for (ci, &v) in row.iter().enumerate() {
+                    x[pi * n * k + ri * k + ci] = v as f32;
+                }
+                y[pi * n + ri] = p.y[ri] as f32;
+                w[pi * n + ri] = p.w[ri] as f32;
+            }
+        }
+        let exe = self.runtime.get("linfit")?;
+        let outs = exe.run_f32(&[&x, &y, &w])?;
+        self.dispatches += 1;
+        let theta = &outs[0]; // [B, K]
+        let rmse = &outs[1]; // [B]
+        Ok(chunk
+            .iter()
+            .enumerate()
+            .map(|(pi, p)| {
+                let kk = p.x.first().map(|r| r.len()).unwrap_or(0);
+                FitResult {
+                    theta: (0..kk).map(|ci| theta[pi * k + ci] as f64).collect(),
+                    rmse: rmse[pi] as f64,
+                }
+            })
+            .collect())
+    }
+}
+
+impl FitBackend for PjrtFit<'_> {
+    fn fit_batch(&mut self, problems: &[FitProblem]) -> Vec<FitResult> {
+        let mut out = Vec::with_capacity(problems.len());
+        for chunk in problems.chunks(LINFIT_BATCH) {
+            match self.fit_chunk(chunk) {
+                Ok(mut r) => out.append(&mut r),
+                Err(e) => panic!("PJRT linfit dispatch failed: {e:#}"),
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-linfit"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("blink-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"format\": \"other\"}").unwrap();
+        assert!(load_manifest(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_loads_when_artifacts_built() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let specs = load_manifest(&repo_artifacts_dir()).unwrap();
+        let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.contains(&"linfit"));
+        let linfit = specs.iter().find(|s| s.name == "linfit").unwrap();
+        assert_eq!(
+            linfit.inputs[0].shape,
+            vec![LINFIT_BATCH, LINFIT_POINTS, LINFIT_FEATURES]
+        );
+        assert_eq!(linfit.outputs[0].shape, vec![LINFIT_BATCH, LINFIT_FEATURES]);
+    }
+
+    // execution tests live in rust/tests/pjrt.rs (integration) so the CPU
+    // client is only spun up once per process
+}

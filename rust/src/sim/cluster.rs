@@ -1,0 +1,116 @@
+//! Cluster and machine specifications (the paper's testbed, §6).
+
+use crate::util::units::Mb;
+
+/// One machine/instance type. Defaults model the paper's two node types.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineSpec {
+    /// Task slots (paper: 4-core i5 workers / 4-thread i3 sample node).
+    pub cores: usize,
+    /// Executor JVM heap, MB.
+    pub heap_mb: Mb,
+    /// `spark.memory.fraction` — unified region share of (heap - 300 MB).
+    pub memory_fraction: f64,
+    /// `spark.memory.storageFraction` — protected storage share R/M.
+    pub storage_fraction: f64,
+    /// Sequential DFS read bandwidth, MB/s.
+    pub disk_mb_s: f64,
+    /// Per-link network bandwidth, MB/s (1 GBit/s LAN ~ 117 MB/s).
+    pub net_mb_s: f64,
+    /// Coordination overhead added per machine per job (YARN negotiation,
+    /// barrier synchronization) — the linear Area-B term.
+    pub coord_s_per_machine: f64,
+}
+
+/// Reserved JVM overhead Spark subtracts before splitting memory.
+pub const RESERVED_MB: Mb = 300.0;
+
+impl MachineSpec {
+    /// The paper's 12-node actual-run worker: i5, 16 GB RAM, 1 TB disk.
+    /// 12 GB executor heap leaves room for OS + HDFS daemons.
+    pub fn worker_node() -> MachineSpec {
+        MachineSpec {
+            cores: 4,
+            heap_mb: 12.0 * 1024.0,
+            memory_fraction: 0.6,
+            storage_fraction: 0.5,
+            disk_mb_s: 120.0,
+            net_mb_s: 117.0,
+            coord_s_per_machine: 0.12,
+        }
+    }
+
+    /// The paper's sample-run node: i3-2370M, 3.8 GB RAM, 388 GB disk.
+    pub fn sample_node() -> MachineSpec {
+        MachineSpec {
+            cores: 4,
+            heap_mb: 3.0 * 1024.0,
+            memory_fraction: 0.6,
+            storage_fraction: 0.5,
+            disk_mb_s: 90.0,
+            net_mb_s: 117.0,
+            coord_s_per_machine: 0.12,
+        }
+    }
+
+    /// Unified region M = (heap - reserved) * memory.fraction (§3.3).
+    pub fn unified_mb(&self) -> Mb {
+        (self.heap_mb - RESERVED_MB) * self.memory_fraction
+    }
+
+    /// Protected storage floor R = M * storageFraction.
+    pub fn storage_floor_mb(&self) -> Mb {
+        self.unified_mb() * self.storage_fraction
+    }
+}
+
+/// A homogeneous cluster (the paper's "instance size" axis: Blink fixes the
+/// machine type and selects only the count).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub machines: usize,
+    pub machine: MachineSpec,
+}
+
+impl ClusterSpec {
+    pub fn workers(machines: usize) -> ClusterSpec {
+        ClusterSpec { machines, machine: MachineSpec::worker_node() }
+    }
+
+    pub fn single_sample_node() -> ClusterSpec {
+        ClusterSpec { machines: 1, machine: MachineSpec::sample_node() }
+    }
+
+    /// Total caching capacity when execution uses nothing (n x M).
+    pub fn max_cache_mb(&self) -> Mb {
+        self.machines as f64 * self.machine.unified_mb()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_memory_regions() {
+        let m = MachineSpec::worker_node();
+        // (12288 - 300) * 0.6 = 7192.8, R = half of that
+        assert!((m.unified_mb() - 7192.8).abs() < 1e-9);
+        assert!((m.storage_floor_mb() - 3596.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_node_is_smaller() {
+        let s = MachineSpec::sample_node();
+        let w = MachineSpec::worker_node();
+        assert!(s.unified_mb() < w.unified_mb());
+        assert!(s.unified_mb() > 1000.0, "still fits tiny samples");
+    }
+
+    #[test]
+    fn cluster_capacity_scales_linearly() {
+        let c1 = ClusterSpec::workers(1);
+        let c12 = ClusterSpec::workers(12);
+        assert!((c12.max_cache_mb() - 12.0 * c1.max_cache_mb()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,97 @@
+//! The simulator's executable workload description.
+//!
+//! A [`WorkloadProfile`] is what one *run* of an application at one data
+//! scale looks like to the cluster: input size, task parallelism, which
+//! datasets get cached and how big they truly are (physics) vs. how big the
+//! listener reports them (measurement), iteration count and cost
+//! coefficients. [`crate::workloads`] generates profiles from per-app
+//! models; the simulator and the Blink coordinator only see this struct.
+
+use crate::util::units::Mb;
+
+/// One dataset the application marks `.cache()`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedData {
+    /// Dataset id in the application DAG.
+    pub id: usize,
+    /// Physical deserialized size — what occupies executor storage memory.
+    pub true_total_mb: Mb,
+    /// What the SparkListener reports (includes the small-sample
+    /// measurement quirks of §6.2 / Fig. 9; equals `true_total_mb` at
+    /// non-tiny scales).
+    pub measured_total_mb: Mb,
+}
+
+/// Everything the simulator needs to execute one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadProfile {
+    pub name: String,
+    /// Data scale in the paper's units: 1 = 0.1 % of original, 1000 = 100 %.
+    pub scale: f64,
+    /// Input bytes read from DFS in job 0.
+    pub input_mb: Mb,
+    /// Tasks per stage (== partitions of the cached datasets).
+    pub parallelism: usize,
+    pub cached: Vec<CachedData>,
+    /// Number of iterative actions after materialization.
+    pub iterations: usize,
+    /// Compute seconds per MB of (re)computed partition data.
+    pub compute_s_per_mb: f64,
+    /// How much faster a cached read is than recomputation (paper: ~97x).
+    pub cached_speedup: f64,
+    /// Lineage-depth multiplier for recomputation vs first computation.
+    pub recompute_factor: f64,
+    /// Serial (driver) seconds per job — the Amdahl term.
+    pub serial_s: f64,
+    /// Bytes shuffled per iteration (scales the Area-B network term).
+    pub shuffle_mb: Mb,
+    /// Total execution memory the application claims across the cluster.
+    pub exec_mem_total_mb: Mb,
+    /// Fixed per-task overhead (scheduling/dispatch), seconds.
+    pub task_overhead_s: f64,
+    /// Log-space sigma of task-duration noise (the Fig. 4 time variance).
+    pub task_time_sigma: f64,
+    /// One-off Block-s sample preparation cost, seconds (0 for Block-n).
+    pub sample_prep_s: f64,
+}
+
+impl WorkloadProfile {
+    pub fn total_cached_true_mb(&self) -> Mb {
+        self.cached.iter().map(|c| c.true_total_mb).sum()
+    }
+
+    pub fn total_cached_measured_mb(&self) -> Mb {
+        self.cached.iter().map(|c| c.measured_total_mb).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_sum_across_datasets() {
+        let p = WorkloadProfile {
+            name: "x".into(),
+            scale: 1.0,
+            input_mb: 10.0,
+            parallelism: 2,
+            cached: vec![
+                CachedData { id: 0, true_total_mb: 5.0, measured_total_mb: 5.5 },
+                CachedData { id: 1, true_total_mb: 3.0, measured_total_mb: 2.5 },
+            ],
+            iterations: 1,
+            compute_s_per_mb: 0.0,
+            cached_speedup: 97.0,
+            recompute_factor: 1.0,
+            serial_s: 0.0,
+            shuffle_mb: 0.0,
+            exec_mem_total_mb: 0.0,
+            task_overhead_s: 0.0,
+            task_time_sigma: 0.0,
+            sample_prep_s: 0.0,
+        };
+        assert_eq!(p.total_cached_true_mb(), 8.0);
+        assert_eq!(p.total_cached_measured_mb(), 8.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Criterion-like micro-benchmark runner (offline stand-in for `criterion`).
+//!
+//! Fixed-iteration-count timing with warmup, reporting mean / σ / min per
+//! iteration. `benches/*.rs` are `harness = false` binaries built on this.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Measurement {
+    pub fn mean_s(&self) -> f64 {
+        super::stats::mean(&self.samples)
+    }
+
+    pub fn std_s(&self) -> f64 {
+        super::stats::stddev(&self.samples)
+    }
+
+    pub fn min_s(&self) -> f64 {
+        super::stats::min(&self.samples)
+    }
+
+    pub fn report(&self) -> String {
+        let m = self.mean_s();
+        let unit = |s: f64| {
+            if s < 1e-6 {
+                format!("{:.1} ns", s * 1e9)
+            } else if s < 1e-3 {
+                format!("{:.2} µs", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:.2} ms", s * 1e3)
+            } else {
+                format!("{:.3} s", s)
+            }
+        };
+        format!(
+            "{:<44} mean {:>10}  σ {:>10}  min {:>10}  ({} samples)",
+            self.name,
+            unit(m),
+            unit(self.std_s()),
+            unit(self.min_s()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Benchmark runner with warmup.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub sample_count: usize,
+    pub iters_per_sample: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            sample_count: 10,
+            iters_per_sample: 1,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, sample_count: 5, iters_per_sample: 1, results: Vec::new() }
+    }
+
+    /// Time `f`, which must return a value (black-boxed to defeat DCE).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_count);
+        for _ in 0..self.sample_count {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / self.iters_per_sample as f64);
+        }
+        let m = Measurement { name: name.to_string(), samples };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::quick();
+        let m = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.mean_s() > 0.0);
+        assert_eq!(m.samples.len(), 5);
+    }
+
+    #[test]
+    fn report_formats_units() {
+        let m = Measurement { name: "x".into(), samples: vec![2e-6, 2e-6] };
+        assert!(m.report().contains("µs"));
+        let m = Measurement { name: "x".into(), samples: vec![2.0, 2.0] };
+        assert!(m.report().contains(" s"));
+    }
+}

@@ -1,0 +1,236 @@
+//! A tiny declarative command-line parser (offline stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches
+//! and auto-generated help. Only what the `blink` binary needs.
+
+use std::collections::BTreeMap;
+
+/// One `--name <value>` option (or boolean switch when `takes_value=false`).
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+impl Opt {
+    pub fn value(name: &'static str, help: &'static str) -> Self {
+        Opt { name, help, takes_value: true, default: None }
+    }
+
+    pub fn with_default(
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> Self {
+        Opt { name, help, takes_value: true, default: Some(default) }
+    }
+
+    pub fn switch(name: &'static str, help: &'static str) -> Self {
+        Opt { name, help, takes_value: false, default: None }
+    }
+}
+
+/// Parsed option values for one subcommand invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name)?.parse().ok()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// A subcommand with its option set.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+/// Application = name + subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CliError {
+    Help(String),
+    Unknown(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Help(h) => write!(f, "{h}"),
+            CliError::Unknown(m) => write!(f, "error: {m}"),
+        }
+    }
+}
+impl std::error::Error for CliError {}
+
+impl App {
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<16} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '<command> --help' for command options.\n");
+        s
+    }
+
+    fn command_help(&self, c: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, c.name, c.about);
+        for o in &c.opts {
+            let meta = if o.takes_value { " <value>" } else { "" };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{:<14} {}{}\n", o.name, meta, o.help, def));
+        }
+        s
+    }
+
+    /// Parse argv (without the program name). Returns (command, matches).
+    pub fn parse(&self, argv: &[String]) -> Result<(&Command, Matches), CliError> {
+        let Some(cmd_name) = argv.first() else {
+            return Err(CliError::Help(self.help()));
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(CliError::Help(self.help()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError::Unknown(format!("unknown command '{cmd_name}'")))?;
+
+        let mut m = Matches::default();
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                m.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::Help(self.command_help(cmd)));
+            }
+            let Some(body) = arg.strip_prefix("--") else {
+                return Err(CliError::Unknown(format!("unexpected argument '{arg}'")));
+            };
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let opt = cmd
+                .opts
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| CliError::Unknown(format!("unknown option '--{name}'")))?;
+            if opt.takes_value {
+                let v = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError::Unknown(format!("--{name} needs a value")))?
+                    }
+                };
+                m.values.insert(name.to_string(), v);
+            } else {
+                if inline.is_some() {
+                    return Err(CliError::Unknown(format!("--{name} takes no value")));
+                }
+                m.switches.push(name.to_string());
+            }
+            i += 1;
+        }
+        Ok((cmd, m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "blink",
+            about: "test",
+            commands: vec![Command {
+                name: "run",
+                about: "run stuff",
+                opts: vec![
+                    Opt::with_default("app", "application", "svm"),
+                    Opt::value("scale", "data scale"),
+                    Opt::switch("verbose", "more output"),
+                ],
+            }],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_defaults_switches() {
+        let a = app();
+        let (c, m) = a
+            .parse(&argv(&["run", "--scale=2.5", "--verbose"]))
+            .unwrap();
+        assert_eq!(c.name, "run");
+        assert_eq!(m.get("app"), Some("svm"));
+        assert_eq!(m.get_f64("scale"), Some(2.5));
+        assert!(m.has("verbose"));
+    }
+
+    #[test]
+    fn space_separated_value() {
+        let a = app();
+        let (_, m) = a.parse(&argv(&["run", "--app", "km"])).unwrap();
+        assert_eq!(m.get("app"), Some("km"));
+    }
+
+    #[test]
+    fn errors() {
+        let a = app();
+        assert!(matches!(a.parse(&argv(&[])), Err(CliError::Help(_))));
+        assert!(matches!(a.parse(&argv(&["nope"])), Err(CliError::Unknown(_))));
+        assert!(matches!(
+            a.parse(&argv(&["run", "--bogus"])),
+            Err(CliError::Unknown(_))
+        ));
+        assert!(matches!(
+            a.parse(&argv(&["run", "--scale"])),
+            Err(CliError::Unknown(_))
+        ));
+        assert!(matches!(
+            a.parse(&argv(&["run", "--help"])),
+            Err(CliError::Help(_))
+        ));
+    }
+}

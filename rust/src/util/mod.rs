@@ -1,0 +1,26 @@
+//! Offline-image substrates.
+//!
+//! This build environment resolves only the `xla` crate (and `anyhow`) from
+//! the vendored registry — no serde / rand / clap / criterion / proptest.
+//! Rather than stubbing those roles out, this module implements the small
+//! slices of them the project needs (see DESIGN.md §2, substitution table):
+//!
+//! * [`json`]  — minimal JSON value model, parser and pretty-printer, used
+//!   for listener logs, the artifacts manifest and experiment reports.
+//! * [`prng`]  — SplitMix64 / Xoshiro256** PRNGs plus the distributions the
+//!   simulator draws from (uniform, normal, log-normal, zipf).
+//! * [`stats`] — mean / variance / percentile / RMSE helpers.
+//! * [`cli`]   — a tiny declarative flag parser for the `blink` binary.
+//! * [`prop`]  — a miniature property-testing harness (seeded generators +
+//!   failure reporting) standing in for proptest on coordinator invariants.
+//! * [`bench`] — a criterion-like micro-benchmark runner (warmup, fixed
+//!   sample count, mean/σ/min reporting) used by `benches/hotpaths.rs`.
+//! * [`units`] — MB/GB/duration formatting used by every report.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod units;

@@ -1,0 +1,216 @@
+//! Deterministic PRNG + distributions (offline stand-in for `rand`).
+//!
+//! Xoshiro256** seeded through SplitMix64, plus the draws the simulator
+//! needs: uniform, normal (Box–Muller), log-normal and Zipf. Everything is
+//! reproducible from a single `u64` seed; streams can be forked per
+//! component (`fork`) so adding draws in one subsystem never perturbs
+//! another (important for the paper's "size is deterministic, time is
+//! noisy" experiments, Fig. 4).
+
+/// SplitMix64 — used for seeding and hash-like stateless randomness.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless hash of a string + salt to a unit-interval f64.
+/// Used for *deterministic* per-(app, scale) measurement quirks that must
+/// be identical across repeated runs (Fig. 4) yet vary across scales.
+pub fn hash_unit(name: &str, salt: u64) -> f64 {
+    let mut h = 0xcbf29ce484222325u64 ^ salt;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    (splitmix64(h) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Xoshiro256** — fast, high-quality, 256-bit state.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut s = [0u64; 4];
+        let mut x = seed;
+        for v in s.iter_mut() {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            *v = splitmix64(x);
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream for a named component.
+    pub fn fork(&self, label: &str) -> Rng {
+        let mut h = self.s[0] ^ self.s[2];
+        for b in label.bytes() {
+            h = splitmix64(h ^ b as u64);
+        }
+        Rng::new(h)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/σ.
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Log-normal such that the *median* is `median` and sigma is the
+    /// log-space σ — the shape of task-duration noise in data systems.
+    pub fn lognormal(&mut self, median: f64, sigma: f64) -> f64 {
+        median * (sigma * self.normal()).exp()
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` (rejection-free
+    /// inverse-CDF over precomputable harmonic weights is overkill for the
+    /// small n used here; linear scan of cumulative weights).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        let total: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        let mut u = self.f64() * total;
+        for k in 1..=n {
+            u -= (k as f64).powf(-s);
+            if u <= 0.0 {
+                return k - 1;
+            }
+        }
+        n - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forks_are_independent() {
+        let root = Rng::new(7);
+        let mut a = root.fork("tasks");
+        let mut b = root.fork("sizes");
+        let av: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let bv: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(av, bv);
+        // re-fork reproduces
+        let mut a2 = root.fork("tasks");
+        assert_eq!(av[0], a2.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let m: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.01, "{m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 40_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = Rng::new(3);
+        let n = 30_001;
+        let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(10.0, 0.5)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[n / 2];
+        assert!((med - 10.0).abs() / 10.0 < 0.05, "{med}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let mut r = Rng::new(4);
+        let mut counts = [0usize; 10];
+        for _ in 0..20_000 {
+            counts[r.zipf(10, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[4] && counts[4] > 0);
+    }
+
+    #[test]
+    fn hash_unit_is_stable_and_spread() {
+        let a = hash_unit("svm", 1);
+        assert_eq!(a, hash_unit("svm", 1));
+        assert_ne!(a, hash_unit("svm", 2));
+        assert_ne!(a, hash_unit("km", 1));
+        assert!((0.0..1.0).contains(&a));
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<usize> = (0..32).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..32).collect::<Vec<_>>());
+        assert_ne!(v, (0..32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,146 @@
+//! Miniature property-testing harness (offline stand-in for `proptest`).
+//!
+//! `forall` runs a property over `cases` seeded inputs produced by a
+//! generator closure; on failure it retries with simpler inputs produced by
+//! the generator's `shrink` hint (halving the size parameter) and reports
+//! the smallest failing seed/size it found. This is deliberately small but
+//! gives the coordinator invariants (routing, batching, memory-manager
+//! state) real randomized coverage.
+
+use super::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Upper bound of the "size" parameter handed to the generator.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xb111c, max_size: 64 }
+    }
+}
+
+/// Outcome of a failed property, with the minimal size reproduced.
+#[derive(Debug)]
+pub struct Failure {
+    pub seed: u64,
+    pub case: usize,
+    pub size: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed (case {}, seed {:#x}, size {}): {}",
+            self.case, self.seed, self.size, self.message
+        )
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs.
+///
+/// `gen(rng, size)` produces an input of roughly the given size;
+/// `prop(input)` returns `Err(msg)` to signal a violation. On failure the
+/// harness re-generates at smaller sizes from the same seed to find a
+/// simpler counterexample before reporting.
+pub fn forall<T, G, P>(cfg: &Config, mut gen: G, mut prop: P) -> Result<(), Failure>
+where
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // ramp size up over the run, proptest-style
+        let size = 1 + (cfg.max_size.saturating_sub(1)) * case / cfg.cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng, size);
+        if let Err(message) = prop(&input) {
+            // shrink: halve the size until the property passes again
+            let mut best = Failure { seed: case_seed, case, size, message };
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut rng = Rng::new(case_seed);
+                let input = gen(&mut rng, s);
+                match prop(&input) {
+                    Err(message) => {
+                        best = Failure { seed: case_seed, case, size: s, message };
+                    }
+                    Ok(()) => break,
+                }
+            }
+            return Err(best);
+        }
+    }
+    Ok(())
+}
+
+/// Assert-style wrapper that panics with the failure report (for #[test]).
+pub fn check<T, G, P>(cfg: &Config, gen: G, prop: P)
+where
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    if let Err(f) = forall(cfg, gen, prop) {
+        panic!("{f}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            &Config::default(),
+            |rng, size| (0..size).map(|_| rng.f64()).collect::<Vec<_>>(),
+            |xs| {
+                if xs.iter().all(|x| (0.0..1.0).contains(x)) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let res = forall(
+            &Config { cases: 64, seed: 9, max_size: 64 },
+            |rng, size| (0..size).map(|_| rng.below(100)).collect::<Vec<_>>(),
+            |xs: &Vec<usize>| {
+                // false claim: vectors never contain a value > 10
+                if xs.iter().all(|&x| x <= 10) {
+                    Ok(())
+                } else {
+                    Err(format!("found {:?}", xs.iter().max()))
+                }
+            },
+        );
+        let f = res.expect_err("property should fail");
+        assert!(f.size <= 64);
+        assert!(f.message.contains("found"));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            forall(
+                &Config { cases: 32, seed: 1234, max_size: 32 },
+                |rng, size| rng.below(size.max(1)),
+                |&x| if x < 30 { Ok(()) } else { Err(format!("{x}")) },
+            )
+            .err()
+            .map(|f| (f.case, f.size))
+        };
+        assert_eq!(run(), run());
+    }
+}

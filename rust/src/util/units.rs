@@ -1,0 +1,82 @@
+//! Size / time formatting and parsing used by reports and the CLI.
+
+/// Megabytes, the library's canonical size unit (the paper reports MB/GB).
+pub type Mb = f64;
+
+pub const MB_PER_GB: f64 = 1024.0;
+
+pub fn gb(v: f64) -> Mb {
+    v * MB_PER_GB
+}
+
+/// Human-readable size: "512.0 KB", "1.5 GB", ...
+pub fn fmt_mb(mb: Mb) -> String {
+    if mb < 0.0009765625 {
+        format!("{:.0} B", mb * 1024.0 * 1024.0)
+    } else if mb < 1.0 {
+        format!("{:.1} KB", mb * 1024.0)
+    } else if mb < 1024.0 {
+        format!("{mb:.1} MB")
+    } else {
+        format!("{:.1} GB", mb / 1024.0)
+    }
+}
+
+/// Human-readable duration from seconds: "45 s", "3.5 min", "2.1 h".
+pub fn fmt_secs(s: f64) -> String {
+    if s < 60.0 {
+        format!("{s:.1} s")
+    } else if s < 3600.0 {
+        format!("{:.1} min", s / 60.0)
+    } else {
+        format!("{:.2} h", s / 3600.0)
+    }
+}
+
+/// Parse "64mb", "1.5gb", "300kb" (case-insensitive) into MB.
+pub fn parse_mb(text: &str) -> Option<Mb> {
+    let t = text.trim().to_lowercase();
+    let (num, mult) = if let Some(n) = t.strip_suffix("gb") {
+        (n, 1024.0)
+    } else if let Some(n) = t.strip_suffix("mb") {
+        (n, 1.0)
+    } else if let Some(n) = t.strip_suffix("kb") {
+        (n, 1.0 / 1024.0)
+    } else {
+        (t.as_str(), 1.0)
+    };
+    num.trim().parse::<f64>().ok().map(|v| v * mult)
+}
+
+/// Percentage with one decimal: "4.6 %".
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:.1} %", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_sizes() {
+        assert_eq!(fmt_mb(0.5), "512.0 KB");
+        assert_eq!(fmt_mb(59.6 * 1024.0), "59.6 GB");
+        assert_eq!(fmt_mb(30.6), "30.6 MB");
+    }
+
+    #[test]
+    fn formats_times() {
+        assert_eq!(fmt_secs(41.0), "41.0 s");
+        assert_eq!(fmt_secs(210.0), "3.5 min");
+        assert_eq!(fmt_secs(7560.0), "2.10 h");
+    }
+
+    #[test]
+    fn parses_sizes() {
+        assert_eq!(parse_mb("64mb"), Some(64.0));
+        assert_eq!(parse_mb("1.5 GB"), Some(1536.0));
+        assert_eq!(parse_mb("512kb"), Some(0.5));
+        assert_eq!(parse_mb("128"), Some(128.0));
+        assert_eq!(parse_mb("x"), None);
+    }
+}

@@ -1,0 +1,371 @@
+//! Per-application models + registry.
+//!
+//! Numbers: `input_mb_full` / `blocks_full` copy Table 1's "Scale 100 %"
+//! rows. The cached-size and execution-memory laws are calibrated against
+//! the worker memory geometry so the minimum eviction-free cluster sizes
+//! reproduce the paper's bold picks (see module docs in `workloads`).
+//! Cost coefficients are tuned for the *shape* of Table 1's time/cost
+//! surfaces (areas A/B/C, who is worst where), not its absolute minutes.
+
+use crate::dag::{AppDag, Transform};
+use crate::util::units::{gb, Mb};
+
+/// `size(scale) = θ0 + θ1 · scale` (Eq. 1 of the paper; scale 1000 = 100 %).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SizeLaw {
+    pub theta0: Mb,
+    pub theta1: Mb,
+}
+
+impl SizeLaw {
+    pub const fn new(theta0: Mb, theta1: Mb) -> Self {
+        SizeLaw { theta0, theta1 }
+    }
+
+    pub fn at(&self, scale: f64) -> Mb {
+        self.theta0 + self.theta1 * scale
+    }
+}
+
+/// Deterministic measurement-quirk envelope: listener-reported sizes of
+/// tiny cached datasets deviate relatively by up to `amp`, decaying as the
+/// dataset grows past `half_mb` (JVM object/page quantization effects —
+/// the §6.2 explanation for GBT's poor 3-sample fit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SizeNoise {
+    pub amp: f64,
+    pub half_mb: Mb,
+    /// Systematic under-measurement share (fraction of `rel_amp`): tiny
+    /// caches report smaller than physical (headers/pages not amortized).
+    pub bias: f64,
+}
+
+impl SizeNoise {
+    pub const fn new(amp: f64, half_mb: Mb) -> Self {
+        SizeNoise { amp, half_mb, bias: 0.5 }
+    }
+
+    pub const fn with_bias(amp: f64, half_mb: Mb, bias: f64) -> Self {
+        SizeNoise { amp, half_mb, bias }
+    }
+
+    /// Relative amplitude at a given true size.
+    pub fn rel_amp(&self, size_mb: Mb) -> f64 {
+        self.amp / (1.0 + (size_mb / self.half_mb).powf(1.5))
+    }
+}
+
+/// Static model of one HiBench application.
+pub struct AppModel {
+    pub name: &'static str,
+    /// Original (100 %) input size and DFS block count (Table 1).
+    pub input_mb_full: Mb,
+    pub blocks_full: usize,
+    /// True size law per cached dataset (most apps cache exactly one).
+    pub cached_laws: Vec<SizeLaw>,
+    /// Execution-memory law (total across the cluster).
+    pub exec_law: SizeLaw,
+    pub size_noise: SizeNoise,
+    /// Iterative actions after materialization.
+    pub iterations: usize,
+    /// Compute cost per MB of partition data (s/MB).
+    pub compute_s_per_mb: f64,
+    /// Cached read vs recompute speedup (paper measures ~97x).
+    pub cached_speedup: f64,
+    /// Lineage multiplier for recomputation.
+    pub recompute_factor: f64,
+    /// Driver-side serial seconds per job: fixed part (scheduler, task
+    /// serialization) plus a per-scale part (driver-side aggregation over
+    /// results whose size grows with the data).
+    pub serial_fixed_s: f64,
+    pub serial_per_scale_s: f64,
+    /// Shuffle bytes per iteration at 100 % scale.
+    pub shuffle_mb_full: Mb,
+    pub task_overhead_s: f64,
+    pub task_time_sigma: f64,
+    /// Deserialization metadata per cached partition (MB): the reason the
+    /// measured dataset size depends on the parallelism level (§4.2's
+    /// 728.9 MB @10 tasks vs 747.8 MB @1000 tasks experiment). Blink keeps
+    /// tasks proportional to the data scale precisely so this term stays
+    /// linear in the scale.
+    pub per_partition_overhead_mb: f64,
+    /// KM coalesces iteration stages to a fixed partition count.
+    pub parallelism_cap: Option<usize>,
+    /// Force Block-s sampling regardless of block count (the paper applies
+    /// Block-s to KM because its coalesced partitioning breaks whole-block
+    /// selection).
+    pub force_block_s: bool,
+    /// The paper's enlarged evaluation scale (Table 1 bottom half).
+    pub enlarged_scale: f64,
+    pub build_dag: fn() -> AppDag,
+}
+
+/// A generic iterative-ML merged DAG: input -> features (cached) -> per-
+/// iteration branch + final action, mirroring Fig. 2's structure.
+fn iterative_dag(cached_names: &[&str], iterations: usize) -> AppDag {
+    let mut g = AppDag::new();
+    let src = g.source("input");
+    let mut prev = g.dataset("parsed", Transform::Narrow, &[src]);
+    for name in cached_names {
+        let d = g.dataset(name, Transform::Narrow, &[prev]);
+        g.cache(d);
+        prev = d;
+    }
+    for i in 0..iterations.max(1) {
+        let grad = g.dataset(&format!("iter_{i}"), Transform::Wide, &[prev]);
+        g.action(&format!("action_{i}"), grad);
+    }
+    g
+}
+
+fn als_dag() -> AppDag {
+    // ALS caches ratings; user/item factor updates alternate per iteration
+    iterative_dag(&["ratings"], 10)
+}
+fn bayes_dag() -> AppDag {
+    iterative_dag(&["tf_features"], 5)
+}
+fn gbt_dag() -> AppDag {
+    iterative_dag(&["treeInput"], 50)
+}
+fn km_dag() -> AppDag {
+    iterative_dag(&["points"], 10)
+}
+fn lr_dag() -> AppDag {
+    // the Fig. 2 example app — keep its published shape for LR
+    crate::dag::fig2_logistic_regression()
+}
+fn pca_dag() -> AppDag {
+    iterative_dag(&["rowMatrix"], 5)
+}
+fn rfc_dag() -> AppDag {
+    iterative_dag(&["bagged"], 30)
+}
+fn svm_dag() -> AppDag {
+    iterative_dag(&["trainingSet"], 100)
+}
+
+/// The registry, alphabetical like Table 1.
+pub fn all_apps() -> Vec<AppModel> {
+    vec![
+        AppModel {
+            name: "als",
+            input_mb_full: gb(5.6),
+            blocks_full: 100,
+            cached_laws: vec![SizeLaw::new(3.0, 5.197)],
+            exec_law: SizeLaw::new(100.0, 0.8),
+            size_noise: SizeNoise::new(0.22, 4.0),
+            iterations: 10,
+            compute_s_per_mb: 1.0,
+            cached_speedup: 97.0,
+            recompute_factor: 1.5,
+            serial_fixed_s: 9.0,
+            serial_per_scale_s: 0.0,
+            shuffle_mb_full: 400.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.12,
+            per_partition_overhead_mb: 0.02,
+            parallelism_cap: None,
+            force_block_s: false,
+            enlarged_scale: 10_000.0, // 10^3 %
+            build_dag: als_dag,
+        },
+        AppModel {
+            name: "bayes",
+            input_mb_full: gb(17.6),
+            blocks_full: 2000,
+            cached_laws: vec![SizeLaw::new(5.0, 40.1)],
+            exec_law: SizeLaw::new(200.0, 7.8),
+            size_noise: SizeNoise::new(0.05, 2.0),
+            iterations: 5,
+            compute_s_per_mb: 0.02,
+            cached_speedup: 97.0,
+            recompute_factor: 8.0,
+            serial_fixed_s: 4.5,
+            serial_per_scale_s: 0.0235,
+            shuffle_mb_full: 800.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.12,
+            per_partition_overhead_mb: 0.02,
+            parallelism_cap: None,
+            force_block_s: false,
+            enlarged_scale: 1_500.0, // 150 %
+            build_dag: bayes_dag,
+        },
+        AppModel {
+            name: "gbt",
+            input_mb_full: 30.6,
+            blocks_full: 100,
+            cached_laws: vec![SizeLaw::new(0.0, 0.0217)],
+            exec_law: SizeLaw::new(2.0, 0.004),
+            size_noise: SizeNoise::with_bias(1.0, 0.04, 0.8),
+            iterations: 50,
+            compute_s_per_mb: 10.0,
+            cached_speedup: 97.0,
+            recompute_factor: 2.0,
+            serial_fixed_s: 0.54,
+            serial_per_scale_s: 0.009,
+            shuffle_mb_full: 10.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.15,
+            per_partition_overhead_mb: 0.001,
+            parallelism_cap: None,
+            force_block_s: false,
+            enlarged_scale: 1_797_000.0, // 18x10^4 % (53.7 GB / 30.6 MB)
+            build_dag: gbt_dag,
+        },
+        AppModel {
+            name: "km",
+            input_mb_full: gb(21.5),
+            blocks_full: 2000,
+            cached_laws: vec![SizeLaw::new(2.0, 23.0)],
+            exec_law: SizeLaw::new(100.0, 1.4),
+            size_noise: SizeNoise::new(0.05, 2.0),
+            iterations: 10,
+            compute_s_per_mb: 0.008,
+            cached_speedup: 97.0,
+            recompute_factor: 20.0,
+            serial_fixed_s: 2.0,
+            serial_per_scale_s: 0.014,
+            shuffle_mb_full: 100.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.35,
+            per_partition_overhead_mb: 0.02,
+            parallelism_cap: Some(100),
+            force_block_s: true,
+            enlarged_scale: 2_000.0, // 200 %
+            build_dag: km_dag,
+        },
+        AppModel {
+            name: "lr",
+            input_mb_full: gb(22.4),
+            blocks_full: 2000,
+            cached_laws: vec![SizeLaw::new(8.0, 16.992)],
+            exec_law: SizeLaw::new(500.0, 17.5),
+            size_noise: SizeNoise::new(0.05, 2.0),
+            iterations: 100,
+            compute_s_per_mb: 0.02,
+            cached_speedup: 97.0,
+            recompute_factor: 2.0,
+            serial_fixed_s: 0.18,
+            serial_per_scale_s: 0.0005,
+            shuffle_mb_full: 200.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.12,
+            per_partition_overhead_mb: 0.02,
+            parallelism_cap: None,
+            force_block_s: false,
+            enlarged_scale: 2_000.0, // 200 %
+            build_dag: lr_dag,
+        },
+        AppModel {
+            name: "pca",
+            input_mb_full: gb(1.5),
+            blocks_full: 50,
+            cached_laws: vec![SizeLaw::new(2.0, 0.878)],
+            exec_law: SizeLaw::new(400.0, 0.1),
+            size_noise: SizeNoise::new(0.08, 0.3),
+            iterations: 5,
+            compute_s_per_mb: 8.0,
+            cached_speedup: 97.0,
+            recompute_factor: 1.5,
+            serial_fixed_s: 21.0,
+            serial_per_scale_s: 0.063,
+            shuffle_mb_full: 300.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.12,
+            per_partition_overhead_mb: 0.02,
+            parallelism_cap: None,
+            force_block_s: false,
+            enlarged_scale: 49_870.0, // 5x10^3 % (74.8 GB / 1.5 GB)
+            build_dag: pca_dag,
+        },
+        AppModel {
+            name: "rfc",
+            input_mb_full: gb(29.8),
+            blocks_full: 2000,
+            cached_laws: vec![SizeLaw::new(6.0, 19.994)],
+            exec_law: SizeLaw::new(300.0, 2.7),
+            size_noise: SizeNoise::new(0.05, 2.0),
+            iterations: 30,
+            compute_s_per_mb: 0.45,
+            cached_speedup: 97.0,
+            recompute_factor: 0.3,
+            serial_fixed_s: 2.3,
+            serial_per_scale_s: 0.058,
+            shuffle_mb_full: 2000.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.12,
+            per_partition_overhead_mb: 0.02,
+            parallelism_cap: None,
+            force_block_s: false,
+            enlarged_scale: 2_000.0, // 200 %
+            build_dag: rfc_dag,
+        },
+        AppModel {
+            name: "svm",
+            input_mb_full: gb(59.6),
+            blocks_full: 2000,
+            cached_laws: vec![SizeLaw::new(10.0, 40.99)],
+            exec_law: SizeLaw::new(150.0, 5.85),
+            size_noise: SizeNoise::new(0.02, 5.0),
+            iterations: 100,
+            compute_s_per_mb: 0.03,
+            cached_speedup: 97.0,
+            recompute_factor: 1.2,
+            serial_fixed_s: 0.2,
+            serial_per_scale_s: 0.00015,
+            shuffle_mb_full: 50.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.12,
+            per_partition_overhead_mb: 0.02,
+            parallelism_cap: None,
+            force_block_s: false,
+            enlarged_scale: 1_500.0, // 150 %
+            build_dag: svm_dag,
+        },
+    ]
+}
+
+pub fn app_by_name(name: &str) -> Option<AppModel> {
+    all_apps().into_iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_law_evaluates() {
+        let l = SizeLaw::new(10.0, 41.0);
+        assert_eq!(l.at(0.0), 10.0);
+        assert_eq!(l.at(1000.0), 41_010.0);
+    }
+
+    #[test]
+    fn noise_decays_with_size() {
+        let n = SizeNoise::with_bias(1.0, 0.04, 0.8);
+        assert!(n.rel_amp(0.02) > 0.3, "KB-scale wobbles hard");
+        assert!(n.rel_amp(20.0) < 0.01, "MB-scale barely wobbles");
+        assert!(n.rel_amp(0.02) > n.rel_amp(0.2));
+    }
+
+    #[test]
+    fn enlarged_scales_match_table1_sizes() {
+        // Table 1 bottom: ALS 56 GB, GBT 53.7 GB, PCA 74.8 GB, SVM 89.4 GB
+        let check = |name: &str, want_gb: f64| {
+            let a = app_by_name(name).unwrap();
+            let got = a.input_mb(a.enlarged_scale) / 1024.0;
+            assert!(
+                (got - want_gb).abs() / want_gb < 0.02,
+                "{name}: {got:.1} GB vs {want_gb} GB"
+            );
+        };
+        check("als", 56.0);
+        check("gbt", 53.7);
+        check("pca", 74.8);
+        check("svm", 89.4);
+        check("km", 43.0);
+        check("rfc", 59.6);
+    }
+}

@@ -1,0 +1,291 @@
+//! Models of the eight HiBench applications the paper evaluates (§6).
+//!
+//! Blink treats applications as black boxes; what the reproduction needs
+//! per app is (a) its merged DAG shape (which datasets are cached), (b) the
+//! *true* linear law `size(scale) = θ0 + θ1·scale` of each cached dataset
+//! (the paper validates linearity in §4.4), (c) an execution-memory law,
+//! (d) iteration counts and cost coefficients that reproduce the *shape*
+//! of Table 1 (who wins at which cluster size, where areas A/B/C fall),
+//! and (e) a small-sample measurement quirk model (§6.2: listener-reported
+//! sizes of KB-scale cached data wobble — the GBT effect of Figs. 8/9).
+//!
+//! Scale units follow the paper: `scale = 1` is 0.1 % of the original
+//! input, `scale = 1000` is the full 100 % dataset.
+//!
+//! Calibration: the `θ` values below were derived from the paper's Table 1
+//! picks and the worker-node memory geometry (M = 7192.8 MB, R = 3596.4 MB)
+//! so that the minimum eviction-free cluster size at 100 % and at the
+//! paper's enlarged scales lands on the published values (LR's enlarged
+//! scale is the one case our linear-law geometry cannot place at the
+//! paper's 12 — see EXPERIMENTS.md).
+
+pub mod apps;
+
+pub use apps::{all_apps, app_by_name, AppModel, SizeLaw, SizeNoise};
+
+use crate::dag::AppDag;
+use crate::hdfs::{DfsFile, Sampler};
+use crate::sim::{CachedData, WorkloadProfile};
+use crate::util::prng::hash_unit;
+use crate::util::units::Mb;
+
+/// Full-scale reference in paper scale units (100 % = 1000 x 0.1 %).
+pub const FULL_SCALE: f64 = 1000.0;
+
+impl AppModel {
+    /// Input bytes at a given scale.
+    pub fn input_mb(&self, scale: f64) -> Mb {
+        self.input_mb_full * scale / FULL_SCALE
+    }
+
+    /// Stage parallelism at a given scale: proportional block count,
+    /// optionally capped (KM coalesces to 100 partitions).
+    pub fn parallelism(&self, scale: f64) -> usize {
+        let blocks = (self.blocks_full as f64 * scale / FULL_SCALE).round() as usize;
+        let blocks = blocks.max(1);
+        match self.parallelism_cap {
+            Some(cap) => blocks.min(cap),
+            None => blocks,
+        }
+    }
+
+    /// True physical size of cached dataset `i` at a scale.
+    pub fn true_cached_mb(&self, i: usize, scale: f64) -> Mb {
+        self.cached_laws[i].at(scale)
+    }
+
+    /// Listener-reported size: true size distorted by the deterministic
+    /// small-sample measurement quirk. Identical across repeated runs at
+    /// the same scale (Fig. 4) but wobbling across scales when the
+    /// absolute size is tiny (Fig. 9). KB-scale caches systematically
+    /// *under*-measure (object-header/page overheads not yet amortized),
+    /// which is what drags GBT's 3-sample extrapolation down to the
+    /// paper's 13.8 MB vs 21.7 MB actual (§6.2).
+    pub fn measured_cached_mb(&self, i: usize, scale: f64) -> Mb {
+        let true_mb = self.true_cached_mb(i, scale);
+        let z = 2.0 * hash_unit(self.name, (scale * 1000.0) as u64 ^ (i as u64) << 48) - 1.0;
+        let rel = self.size_noise.rel_amp(true_mb);
+        (true_mb * (1.0 - self.size_noise.bias * rel + rel * z)).max(0.0)
+    }
+
+    /// Total execution memory (across the cluster) at a scale.
+    pub fn exec_mem_mb(&self, scale: f64) -> Mb {
+        self.exec_law.at(scale)
+    }
+
+    /// Total true cached bytes at a scale.
+    pub fn total_true_cached_mb(&self, scale: f64) -> Mb {
+        (0..self.cached_laws.len())
+            .map(|i| self.true_cached_mb(i, scale))
+            .sum()
+    }
+
+    /// The DFS file holding the original input.
+    pub fn dfs_file(&self) -> DfsFile {
+        DfsFile::ingest(
+            self.name,
+            self.input_mb_full,
+            self.input_mb_full / self.blocks_full as f64,
+        )
+    }
+
+    /// Build the executable profile for a run at `scale`.
+    ///
+    /// `sampled` carries the Block-s preparation cost for sample runs
+    /// (actual runs pass `None`).
+    pub fn profile(&self, scale: f64) -> WorkloadProfile {
+        self.profile_with_prep(scale, 0.0)
+    }
+
+    pub fn profile_with_prep(&self, scale: f64, prep_s: f64) -> WorkloadProfile {
+        self.profile_with_parallelism(scale, prep_s, self.parallelism(scale))
+    }
+
+    /// Profile with an explicit parallelism override (the §4.2 experiment
+    /// runs the same data at 10 vs 1000 tasks). Both the physical and the
+    /// measured cached sizes carry the per-partition metadata overhead, so
+    /// parallelism visibly influences the dataset size.
+    pub fn profile_with_parallelism(
+        &self,
+        scale: f64,
+        prep_s: f64,
+        parallelism: usize,
+    ) -> WorkloadProfile {
+        let overhead = self.per_partition_overhead_mb * parallelism as f64;
+        let cached = (0..self.cached_laws.len())
+            .map(|i| CachedData {
+                id: i,
+                true_total_mb: self.true_cached_mb(i, scale) + overhead,
+                measured_total_mb: self.measured_cached_mb(i, scale) + overhead,
+            })
+            .collect();
+        WorkloadProfile {
+            name: self.name.to_string(),
+            scale,
+            input_mb: self.input_mb(scale),
+            parallelism,
+            cached,
+            iterations: self.iterations,
+            compute_s_per_mb: self.compute_s_per_mb,
+            cached_speedup: self.cached_speedup,
+            recompute_factor: self.recompute_factor,
+            serial_s: self.serial_fixed_s + self.serial_per_scale_s * scale,
+            shuffle_mb: self.shuffle_mb_full * scale / FULL_SCALE,
+            exec_mem_total_mb: self.exec_mem_mb(scale),
+            task_overhead_s: self.task_overhead_s,
+            task_time_sigma: self.task_time_sigma,
+            sample_prep_s: prep_s,
+        }
+    }
+
+    /// The sampling approach used for this app (§4.2 / Table 1 row 2):
+    /// Block-n when enough whole blocks exist, Block-s otherwise or when
+    /// the app's partitioning forces it.
+    pub fn sample_approach(
+        &self,
+        sampler: &Sampler,
+        fraction: f64,
+    ) -> crate::hdfs::SampleApproach {
+        if self.force_block_s {
+            crate::hdfs::SampleApproach::BlockS
+        } else {
+            sampler.choose(&self.dfs_file(), fraction)
+        }
+    }
+
+    /// Sample-run profile at a tiny scale, paying Block-s preparation if
+    /// the sampler decides the input has too few blocks for Block-n.
+    pub fn sample_profile(&self, scale: f64, sampler: &Sampler) -> WorkloadProfile {
+        let file = self.dfs_file();
+        let fraction = scale / FULL_SCALE;
+        let approach = self.sample_approach(sampler, fraction);
+        let s = sampler.sample_with(&file, fraction, approach);
+        self.profile_with_prep(scale, s.prep_cost_s)
+    }
+
+    /// The merged transformation DAG (Fig. 2 style) for this app.
+    pub fn dag(&self) -> AppDag {
+        (self.build_dag)()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdfs::SampleApproach;
+
+    #[test]
+    fn eight_apps_registered() {
+        let apps = all_apps();
+        assert_eq!(apps.len(), 8);
+        let names: Vec<&str> = apps.iter().map(|a| a.name).collect();
+        assert_eq!(names, ["als", "bayes", "gbt", "km", "lr", "pca", "rfc", "svm"]);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(app_by_name("svm").unwrap().name, "svm");
+        assert!(app_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn size_laws_are_linear_and_positive() {
+        for app in all_apps() {
+            for i in 0..app.cached_laws.len() {
+                let s1 = app.true_cached_mb(i, 1.0);
+                let s2 = app.true_cached_mb(i, 2.0);
+                let s3 = app.true_cached_mb(i, 3.0);
+                assert!(s1 > 0.0, "{}", app.name);
+                // exact linearity of the true law
+                assert!(((s3 - s2) - (s2 - s1)).abs() < 1e-9, "{}", app.name);
+            }
+        }
+    }
+
+    #[test]
+    fn measured_sizes_deterministic_per_scale() {
+        let app = app_by_name("gbt").unwrap();
+        let a = app.measured_cached_mb(0, 2.0);
+        let b = app.measured_cached_mb(0, 2.0);
+        assert_eq!(a, b, "Fig. 4: same scale, same measured size");
+        assert_ne!(a, app.measured_cached_mb(0, 3.0));
+    }
+
+    #[test]
+    fn measurement_quirk_fades_at_large_scale() {
+        for app in all_apps() {
+            let t = app.true_cached_mb(0, FULL_SCALE);
+            let m = app.measured_cached_mb(0, FULL_SCALE);
+            assert!(
+                (m - t).abs() / t < 0.01,
+                "{}: measured {m} vs true {t} at full scale",
+                app.name
+            );
+        }
+    }
+
+    #[test]
+    fn gbt_samples_are_kilobytes() {
+        // "during the 3 sample runs, the training data is only a few KB"
+        let gbt = app_by_name("gbt").unwrap();
+        for s in [1.0, 2.0, 3.0] {
+            let mb = gbt.true_cached_mb(0, s);
+            assert!(mb < 0.1, "gbt sample cached {mb} MB at scale {s}");
+        }
+    }
+
+    #[test]
+    fn sampling_approaches_match_paper() {
+        // §6: Block-n for bayes, lr, rfc, svm; Block-s for als, gbt, km, pca
+        let sampler = Sampler::default();
+        let expect = [
+            ("als", SampleApproach::BlockS),
+            ("bayes", SampleApproach::BlockN),
+            ("gbt", SampleApproach::BlockS),
+            ("km", SampleApproach::BlockS),
+            ("lr", SampleApproach::BlockN),
+            ("pca", SampleApproach::BlockS),
+            ("rfc", SampleApproach::BlockN),
+            ("svm", SampleApproach::BlockN),
+        ];
+        for (name, want) in expect {
+            let app = app_by_name(name).unwrap();
+            let got = app.sample_approach(&sampler, 0.001);
+            assert_eq!(got, want, "{name}");
+        }
+    }
+
+    #[test]
+    fn parallelism_proportional_and_km_capped() {
+        let svm = app_by_name("svm").unwrap();
+        assert_eq!(svm.parallelism(1.0) * 2, svm.parallelism(2.0));
+        assert_eq!(svm.parallelism(FULL_SCALE), 2000);
+        let km = app_by_name("km").unwrap();
+        assert_eq!(km.parallelism(FULL_SCALE), 100, "KM coalesces to 100");
+        assert_eq!(km.parallelism(2.0 * FULL_SCALE), 100);
+    }
+
+    #[test]
+    fn profiles_carry_prep_cost_only_for_block_s() {
+        let sampler = Sampler::default();
+        let svm = app_by_name("svm").unwrap(); // Block-n
+        assert_eq!(svm.sample_profile(1.0, &sampler).sample_prep_s, 0.0);
+        let km = app_by_name("km").unwrap(); // Block-s
+        assert!(km.sample_profile(1.0, &sampler).sample_prep_s > 0.0);
+    }
+
+    #[test]
+    fn dags_are_valid_and_cache_declared_datasets() {
+        for app in all_apps() {
+            let dag = app.dag();
+            assert!(dag.is_acyclic(), "{}", app.name);
+            assert_eq!(
+                dag.cached_datasets().len(),
+                app.cached_laws.len(),
+                "{}: DAG cached sets match size laws",
+                app.name
+            );
+            assert!(!dag.actions.is_empty(), "{}", app.name);
+        }
+    }
+}

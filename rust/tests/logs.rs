@@ -1,0 +1,80 @@
+//! Integration: the listener-log contract — sample runs are analyzed from
+//! *serialized* JSON logs exactly as a real SparkListener deployment would
+//! be, and the analysis round-trips losslessly.
+
+use blink::blink::{SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
+use blink::memory::EvictionPolicy;
+use blink::metrics::{Event, EventLog, RunSummary};
+use blink::sim::{simulate, ClusterSpec, SimOptions};
+use blink::workloads::app_by_name;
+
+#[test]
+fn sample_run_logs_roundtrip_through_jsonl() {
+    let app = app_by_name("km").unwrap();
+    let profile = app.sample_profile(2.0, &blink::hdfs::Sampler::default());
+    let res = simulate(
+        &profile,
+        &ClusterSpec::single_sample_node(),
+        SimOptions {
+            policy: EvictionPolicy::Lru,
+            seed: 1,
+            compute: None,
+            detailed_log: true,
+        },
+    );
+    let text = res.log.to_jsonl();
+    assert!(text.lines().count() > 3);
+    let back = EventLog::from_jsonl(&text).unwrap();
+    assert_eq!(res.log.events, back.events);
+    assert_eq!(RunSummary::from_log(&res.log), RunSummary::from_log(&back));
+}
+
+#[test]
+fn log_carries_everything_blink_needs() {
+    let app = app_by_name("svm").unwrap();
+    let mgr = SampleRunsManager::default();
+    let SamplingOutcome::Profiled(runs) = mgr.run(&app, &DEFAULT_SCALES) else {
+        panic!("svm caches data");
+    };
+    for r in &runs {
+        assert!(r.summary.total_cached_mb() > 0.0, "cached sizes extracted");
+        assert!(r.summary.exec_memory_mb > 0.0, "exec memory extracted");
+        assert!(r.summary.duration_s > 0.0);
+        assert_eq!(r.summary.machines, 1);
+    }
+}
+
+#[test]
+fn coarse_logs_summarize_like_detailed_logs() {
+    // the aggregate BlockUpdate path must preserve size/eviction totals
+    let app = app_by_name("bayes").unwrap();
+    let profile = app.profile(100.0);
+    let run = |detailed| {
+        let res = simulate(
+            &profile,
+            &ClusterSpec::workers(3),
+            SimOptions {
+                policy: EvictionPolicy::Lru,
+                seed: 2,
+                compute: None,
+                detailed_log: detailed,
+            },
+        );
+        RunSummary::from_log(&res.log)
+    };
+    let fine = run(true);
+    let coarse = run(false);
+    assert_eq!(fine.duration_s, coarse.duration_s);
+    assert_eq!(fine.evictions, coarse.evictions);
+    assert!((fine.total_cached_mb() - coarse.total_cached_mb()).abs() < 1e-6);
+    assert!(coarse.tasks < fine.tasks, "coarse log drops task events");
+}
+
+#[test]
+fn unknown_and_malformed_lines_behave() {
+    let good = Event::AppEnd { duration_s: 1.0 }.to_json().to_string();
+    let text = format!("{{\"event\":\"NewThing\"}}\n{good}\n");
+    let log = EventLog::from_jsonl(&text).unwrap();
+    assert_eq!(log.events.len(), 1);
+    assert!(EventLog::from_jsonl("not json").is_err());
+}

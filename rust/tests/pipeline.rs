@@ -1,0 +1,144 @@
+//! Integration: the paper's claims, checked across module boundaries
+//! (sample runs -> listener logs -> predictors -> selector -> simulator).
+//! Heavier sweeps live in `cargo bench`; these stay debug-affordable.
+
+use blink::blink::{true_optimal, Blink, RustFit};
+use blink::experiments;
+use blink::memory::EvictionPolicy;
+use blink::metrics::RunSummary;
+use blink::sim::{simulate, ClusterSpec, MachineSpec, SimOptions};
+use blink::util::stats;
+use blink::workloads::{all_apps, app_by_name, FULL_SCALE};
+
+#[test]
+fn headline_100pct_picks_are_optimal_for_all_8_apps() {
+    let machine = MachineSpec::worker_node();
+    for app in all_apps() {
+        let mut b = RustFit::default();
+        // 3 standard sample runs suffice at 100 % for every app (§6.1)
+        let d = Blink::new(&mut b).decide(&app, FULL_SCALE, &machine);
+        assert_eq!(
+            d.machines,
+            true_optimal(&app, FULL_SCALE, &machine, 12),
+            "{}",
+            app.name
+        );
+    }
+}
+
+#[test]
+fn blink_pick_is_eviction_free_in_the_simulator() {
+    // the selector's promise must hold under the actual (simulated) physics
+    let machine = MachineSpec::worker_node();
+    for name in ["svm", "lr", "bayes", "rfc"] {
+        let app = app_by_name(name).unwrap();
+        let mut b = RustFit::default();
+        let d = Blink::new(&mut b).decide(&app, FULL_SCALE, &machine);
+        let res = experiments::actual_run_full(&app, FULL_SCALE, d.machines, 9);
+        let s = RunSummary::from_log(&res.log);
+        assert_eq!(s.evictions, 0, "{name} evicted at its pick");
+        assert!(
+            (res.cached_fraction_after_load - 1.0).abs() < 1e-9,
+            "{name} not fully cached at its pick"
+        );
+        // one machine fewer must NOT be eviction-free (minimality)
+        if d.machines > 1 {
+            let res = experiments::actual_run_full(&app, FULL_SCALE, d.machines - 1, 9);
+            let s2 = RunSummary::from_log(&res.log);
+            let free = s2.evictions == 0 && (res.cached_fraction_after_load - 1.0).abs() < 1e-9;
+            assert!(!free, "{name}: pick not minimal");
+        }
+    }
+}
+
+#[test]
+fn under_provisioned_run_costs_more() {
+    // area A penalty end-to-end: svm at 3 machines vs its optimal 7
+    let app = app_by_name("svm").unwrap();
+    let under = experiments::actual_run(&app, FULL_SCALE, 3, 5);
+    let optimal = experiments::actual_run(&app, FULL_SCALE, 7, 5);
+    assert!(under.cost_machine_s > 3.0 * optimal.cost_machine_s);
+}
+
+#[test]
+fn fig11_km_story_reproduces() {
+    let f = experiments::fig11(1);
+    assert_eq!(f.blink_pick, 7);
+    assert_eq!(f.true_optimal, 8);
+    assert!(f.evictions_per_machine.iter().sum::<usize>() > 0);
+    assert!(f.pick_cost > f.optimal_cost);
+}
+
+#[test]
+fn sampling_overhead_band() {
+    // paper: sample runs average 4.6 % of the optimal actual-run cost.
+    // we assert the order of magnitude: every app under 25 %, mean under 12 %
+    let rows = experiments::table1_at_100(3);
+    let overheads: Vec<f64> = rows
+        .iter()
+        .map(|r| r.sample_cost_machine_min / r.runs[r.optimal - 1].1)
+        .collect();
+    for (r, o) in rows.iter().zip(&overheads) {
+        assert!(*o < 0.25, "{}: sampling overhead {o}", r.app);
+    }
+    assert!(stats::mean(&overheads) < 0.12, "{overheads:?}");
+}
+
+#[test]
+fn fig6_cost_savings_band() {
+    let rows = experiments::fig6(&blink::experiments::Table1 {
+        at_100: experiments::table1_at_100(2),
+        enlarged: Vec::new(),
+    });
+    let (vs_avg, vs_worst) = experiments::fig6_ratios(&rows);
+    assert!(vs_avg < 0.75 && vs_avg > 0.3, "{vs_avg}");
+    assert!(vs_worst < vs_avg, "{vs_worst}");
+}
+
+#[test]
+fn fig7_gbt_is_worst_others_good() {
+    let rows = experiments::fig7();
+    let worst = rows
+        .iter()
+        .max_by(|a, b| a.error.partial_cmp(&b.error).unwrap())
+        .unwrap();
+    assert_eq!(worst.app, "gbt");
+    let others: Vec<f64> = rows.iter().filter(|r| r.app != "gbt").map(|r| r.error).collect();
+    assert!(stats::mean(&others) < 0.05);
+}
+
+#[test]
+fn eviction_policies_equivalent_on_single_dataset_apps() {
+    // §2: MRD/LRC bring no improvement when one dataset is cached
+    let app = app_by_name("svm").unwrap();
+    let mut costs = Vec::new();
+    for policy in [EvictionPolicy::Lru, EvictionPolicy::Lrc, EvictionPolicy::Mrd] {
+        let res = simulate(
+            &app.profile(200.0), // small scale for debug speed, area A on 1 machine
+            &ClusterSpec::workers(1),
+            SimOptions { policy, seed: 4, compute: None, detailed_log: false },
+        );
+        costs.push(RunSummary::from_log(&res.log).cost_machine_s);
+    }
+    let spread = (stats::max(&costs) - stats::min(&costs)) / stats::mean(&costs);
+    assert!(spread < 1e-9, "policies diverged on single-dataset app: {costs:?}");
+}
+
+#[test]
+fn scalability_models_reused_across_machine_types() {
+    // §5.4: one sampling phase serves different machine types
+    let app = app_by_name("svm").unwrap();
+    let mut b = RustFit::default();
+    let d = Blink::new(&mut b).decide(&app, FULL_SCALE, &MachineSpec::worker_node());
+    let (sizes, exec) = d.predictors.expect("models");
+    let mut big = MachineSpec::worker_node();
+    big.heap_mb *= 2.0;
+    let pick_big = blink::blink::select_cluster_size(
+        sizes.predict_total(FULL_SCALE),
+        exec.predict_total(FULL_SCALE),
+        &big,
+        64,
+    )
+    .machines;
+    assert!(pick_big < d.machines, "bigger machines, fewer of them");
+}

@@ -1,0 +1,130 @@
+//! Integration: the AOT artifacts load, execute and agree with the
+//! pure-Rust oracles (the rust half of the HLO-text interchange contract;
+//! the python half is python/tests/test_aot.py).
+//!
+//! Tests skip (with a note) when `make artifacts` has not been run.
+
+use blink::blink::models::{FitBackend, FitProblem, RustFit};
+use blink::blink::{Blink, RustFit as RustBackend};
+use blink::compute::{gen_data, RealCompute, KM_DIM, KM_K, SVM_DIM};
+use blink::runtime::{artifacts_available, PjrtFit, Runtime};
+use blink::sim::MachineSpec;
+use blink::workloads::{app_by_name, FULL_SCALE};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::from_repo_root().expect("runtime"))
+}
+
+#[test]
+fn all_artifacts_compile_and_execute() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    assert_eq!(rt.platform().to_lowercase(), "cpu");
+    let names = rt.artifact_names();
+    for n in ["linfit", "svm_step", "logreg_step", "kmeans_step"] {
+        assert!(names.iter().any(|x| x == n), "{n} in manifest");
+        rt.get(n).unwrap_or_else(|e| panic!("{n}: {e:#}"));
+    }
+}
+
+#[test]
+fn linfit_kernel_matches_rust_oracle() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // a batch of solvable problems incl. fold masks and a clamped case
+    let mut problems = Vec::new();
+    for i in 0..24 {
+        let slope = 0.5 + (i % 7) as f64;
+        let icept = (i % 3) as f64;
+        let xs: Vec<Vec<f64>> = (1..=5).map(|s| vec![1.0, s as f64]).collect();
+        let y: Vec<f64> = xs.iter().map(|r| icept + slope * r[1]).collect();
+        let mut w = vec![1.0; 5];
+        if i % 4 == 0 {
+            w[i % 5] = 0.0; // CV-fold style mask
+        }
+        problems.push(FitProblem { x: xs, y, w });
+    }
+    // decreasing data -> NNLS clamps the slope at 0
+    problems.push(FitProblem {
+        x: (1..=4).map(|s| vec![1.0, s as f64]).collect(),
+        y: vec![10.0, 8.0, 6.0, 4.0],
+        w: vec![1.0; 4],
+    });
+
+    let mut pjrt = PjrtFit::new(&mut rt);
+    let got = pjrt.fit_batch(&problems);
+    let dispatches = pjrt.dispatches;
+    let want = RustFit::default().fit_batch(&problems);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        for (a, b) in g.theta.iter().zip(&w.theta) {
+            assert!((a - b).abs() < 2e-2, "problem {i}: {:?} vs {:?}", g.theta, w.theta);
+        }
+        assert!((g.rmse - w.rmse).abs() < 2e-2, "problem {i} rmse");
+        assert!(g.theta.iter().all(|&t| t >= 0.0));
+    }
+    assert_eq!(dispatches, 1, "24+1 problems fit one 64-problem batch");
+}
+
+#[test]
+fn blink_decisions_identical_between_backends() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let machine = MachineSpec::worker_node();
+    for name in ["svm", "km", "lr", "pca"] {
+        let app = app_by_name(name).unwrap();
+        let rust_pick = {
+            let mut b = RustBackend::default();
+            Blink::new(&mut b).decide(&app, FULL_SCALE, &machine).machines
+        };
+        let pjrt_pick = {
+            let mut fit = PjrtFit::new(&mut rt);
+            Blink::new(&mut fit).decide(&app, FULL_SCALE, &machine).machines
+        };
+        assert_eq!(rust_pick, pjrt_pick, "{name}: backend-dependent pick");
+    }
+}
+
+#[test]
+fn svm_kernel_reduces_loss_over_passes() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rc = RealCompute::new(&mut rt, "svm", 3);
+    let first = rc.one_pass().unwrap();
+    let mut last = first;
+    for _ in 0..6 {
+        last = rc.one_pass().unwrap();
+    }
+    assert!(last < first, "hinge loss should fall: {first} -> {last}");
+    assert!(last.is_finite());
+}
+
+#[test]
+fn kmeans_kernel_reduces_inertia_over_passes() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rc = RealCompute::new(&mut rt, "km", 4);
+    let first = rc.one_pass().unwrap();
+    let mut last = first;
+    for _ in 0..5 {
+        last = rc.one_pass().unwrap();
+    }
+    assert!(last <= first * 1.001, "inertia monotone-ish: {first} -> {last}");
+}
+
+#[test]
+fn executable_rejects_wrong_shapes() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let exe = rt.get("svm_step").unwrap();
+    let bad = vec![0.0f32; 7];
+    assert!(exe.run_f32(&[&bad, &bad, &bad]).is_err());
+    let d = gen_data("svm", 0);
+    assert!(exe.run_f32(&[&d.x]).is_err(), "wrong arity");
+}
+
+#[test]
+fn data_generator_matches_kernel_contracts() {
+    let d = gen_data("svm", 0);
+    assert_eq!(d.x.len() % SVM_DIM, 0);
+    let k = gen_data("km", 0);
+    assert_eq!(k.centroids.len(), KM_K * KM_DIM);
+}

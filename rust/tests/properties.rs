@@ -1,0 +1,216 @@
+//! Randomized cross-module invariants (the proptest-style sweep over the
+//! coordinator state machines the guides call for).
+
+use blink::blink::{select_cluster_size, RustFit};
+use blink::blink::models::{select_model, FitBackend, FitProblem};
+use blink::memory::EvictionPolicy;
+use blink::metrics::{Event, EventLog, RunSummary};
+use blink::sim::{simulate, CachedData, ClusterSpec, MachineSpec, SimOptions, WorkloadProfile};
+use blink::util::prng::Rng;
+use blink::util::prop::{check, Config};
+use blink::util::json;
+
+fn random_profile(rng: &mut Rng, size: usize) -> WorkloadProfile {
+    let parallelism = 4 + rng.below(size.max(1) * 4 + 4);
+    WorkloadProfile {
+        name: "prop".into(),
+        scale: rng.range(1.0, 2000.0),
+        input_mb: rng.range(10.0, 20_000.0),
+        parallelism,
+        cached: (0..1 + rng.below(2))
+            .map(|i| {
+                let mb = rng.range(1.0, 30_000.0);
+                CachedData { id: i, true_total_mb: mb, measured_total_mb: mb }
+            })
+            .collect(),
+        iterations: rng.below(6),
+        compute_s_per_mb: rng.range(0.001, 0.3),
+        cached_speedup: 97.0,
+        recompute_factor: rng.range(0.2, 8.0),
+        serial_s: rng.range(0.0, 5.0),
+        shuffle_mb: rng.range(0.0, 500.0),
+        exec_mem_total_mb: rng.range(0.0, 20_000.0),
+        task_overhead_s: 0.01,
+        task_time_sigma: rng.range(0.0, 0.5),
+        sample_prep_s: rng.range(0.0, 10.0),
+    }
+}
+
+#[test]
+fn sim_invariants_hold_for_arbitrary_profiles() {
+    check(
+        &Config { cases: 48, seed: 0xabcd, max_size: 12 },
+        |rng, size| {
+            let machines = 1 + rng.below(8);
+            (random_profile(rng, size), machines, rng.next_u64())
+        },
+        |(profile, machines, seed)| {
+            let res = simulate(
+                profile,
+                &ClusterSpec::workers(*machines),
+                SimOptions {
+                    policy: EvictionPolicy::Lru,
+                    seed: *seed,
+                    compute: None,
+                    detailed_log: true,
+                },
+            );
+            let s = RunSummary::from_log(&res.log);
+            // time moves forward, cost = n x time
+            if s.duration_s < profile.sample_prep_s - 1e-9 {
+                return Err("clock went backwards".into());
+            }
+            if (s.cost_machine_s - s.duration_s * *machines as f64).abs() > 1e-6 {
+                return Err("cost != machines x time".into());
+            }
+            // every iteration job issues exactly `parallelism` tasks
+            let expected = profile.parallelism * (profile.iterations + 1);
+            if s.tasks != expected {
+                return Err(format!("tasks {} != {expected}", s.tasks));
+            }
+            // iteration tasks distribute over machines completely
+            let iter_total: usize = res.iter_tasks_per_machine.iter().sum();
+            if iter_total != profile.parallelism * profile.iterations {
+                return Err("iteration tasks lost".into());
+            }
+            // cached fraction is a fraction
+            if !(0.0..=1.0 + 1e-9).contains(&res.cached_fraction_after_load) {
+                return Err("cached fraction out of range".into());
+            }
+            // measured cached size never exceeds what the app reports
+            if s.total_cached_mb() > profile.total_cached_measured_mb() + 1e-6 {
+                return Err("cached more than the dataset".into());
+            }
+            // log roundtrip is lossless
+            let back = EventLog::from_jsonl(&res.log.to_jsonl()).map_err(|e| e.to_string())?;
+            if RunSummary::from_log(&back) != s {
+                return Err("jsonl roundtrip changed the summary".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn more_machines_never_increase_duration_much_when_cached() {
+    // monotonicity modulo coordination overhead: with zero noise and a
+    // fully-cached dataset, doubling machines never doubles the time
+    check(
+        &Config { cases: 24, seed: 0x1234, max_size: 8 },
+        |rng, size| {
+            let mut p = random_profile(rng, size);
+            p.task_time_sigma = 0.0;
+            p.cached = vec![CachedData { id: 0, true_total_mb: 100.0, measured_total_mb: 100.0 }];
+            p.exec_mem_total_mb = 0.0;
+            (p, rng.next_u64())
+        },
+        |(p, seed)| {
+            let t = |n| {
+                let res = simulate(
+                    p,
+                    &ClusterSpec::workers(n),
+                    SimOptions {
+                        policy: EvictionPolicy::Lru,
+                        seed: *seed,
+                        compute: None,
+                        detailed_log: false,
+                    },
+                );
+                RunSummary::from_log(&res.log).duration_s
+            };
+            let (t2, t4) = (t(2), t(4));
+            if t4 > t2 * 2.0 + 1.0 {
+                return Err(format!("t4={t4} explodes vs t2={t2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn selector_is_scale_monotone() {
+    // more cached data never selects fewer machines
+    check(
+        &Config { cases: 64, seed: 0x51, max_size: 32 },
+        |rng, _| {
+            let c1 = rng.range(10.0, 80_000.0);
+            let c2 = c1 + rng.range(0.0, 40_000.0);
+            let e = rng.range(0.0, 30_000.0);
+            (c1, c2, e)
+        },
+        |&(c1, c2, e)| {
+            let m = MachineSpec::worker_node();
+            let n1 = select_cluster_size(c1, e, &m, 64).machines;
+            let n2 = select_cluster_size(c2, e, &m, 64).machines;
+            if n2 < n1 {
+                return Err(format!("{c1}->{n1} but {c2}->{n2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn model_selection_interpolates_training_points() {
+    // whatever family wins, it must fit the (noiseless) training data
+    check(
+        &Config { cases: 48, seed: 0x77, max_size: 10 },
+        |rng, size| {
+            let n = 3 + rng.below(size.max(1).min(8));
+            let th0 = rng.range(0.0, 20.0);
+            let th1 = rng.range(0.01, 50.0);
+            let pts: Vec<(f64, f64)> =
+                (1..=n).map(|s| (s as f64, th0 + th1 * s as f64)).collect();
+            pts
+        },
+        |pts| {
+            let m = select_model(&mut RustFit::default(), pts);
+            for (s, y) in pts {
+                let p = m.predict(*s);
+                if (p - y).abs() > 0.02 * y.abs().max(1.0) {
+                    return Err(format!("{:?} misfits ({s}, {y}) -> {p}", m.kind));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fit_backend_rmse_consistent_with_theta() {
+    check(
+        &Config { cases: 48, seed: 0x99, max_size: 8 },
+        |rng, size| {
+            let n = 2 + rng.below(size.max(1).min(10));
+            let x: Vec<Vec<f64>> = (0..n).map(|i| vec![1.0, (i + 1) as f64]).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.range(0.0, 50.0)).collect();
+            FitProblem { x, y, w: vec![1.0; n] }
+        },
+        |p| {
+            let r = &RustFit::default().fit_batch(std::slice::from_ref(p))[0];
+            let manual = blink::linalg::residual_rmse(&p.x, &p.y, &p.w, &r.theta);
+            if (r.rmse - manual).abs() > 1e-9 {
+                return Err(format!("rmse {} vs {manual}", r.rmse));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn event_json_roundtrips_for_all_variants() {
+    let events = vec![
+        Event::AppStart { app: "x".into(), machines: 3, data_scale: 1.5 },
+        Event::TaskEnd { stage: 1, task: 2, machine: 0, duration_s: 0.25, cached_read: true },
+        Event::BlockUpdate { dataset: 0, partition: 9, size_mb: 12.5, stored: false },
+        Event::Eviction { machine: 2 },
+        Event::JobEnd { job: 4, duration_s: 9.0 },
+        Event::ExecMemory { machine: 1, peak_mb: 333.25 },
+        Event::AppEnd { duration_s: 77.5 },
+    ];
+    for e in events {
+        let j = e.to_json().to_string();
+        let parsed = json::parse(&j).unwrap();
+        assert_eq!(Event::from_json(&parsed), Some(e));
+    }
+}
