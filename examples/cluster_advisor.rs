@@ -1,21 +1,27 @@
-//! Cluster advisor: Blink recommendations for every workload, including
-//! the machines_min/machines_max bracket and headroom diagnostics — the
-//! report an operator would consult before submitting a job.
+//! Cluster advisor: Blink recommendations for every workload, then the
+//! fleet-aware planner's multi-catalog report — the paper's single-type
+//! answer side by side with the catalog-driven (type × count) search an
+//! operator would consult before submitting a job.
 //!
 //! ```bash
-//! cargo run --release --example cluster_advisor [-- <scale>]
+//! cargo run --release --example cluster_advisor [-- <scale> [app]]
 //! ```
 
-use blink::blink::{Blink, RustFit};
-use blink::sim::MachineSpec;
-use blink::util::units::{fmt_mb, fmt_secs};
-use blink::workloads::{all_apps, FULL_SCALE};
+use blink::blink::{
+    plan, Blink, ExecMemoryPredictor, PlanInput, RustFit, SampleRunsManager, SamplingOutcome,
+    SizePredictor,
+};
+use blink::cost::{PerInstanceHour, PricingModel, SpotDiscount};
+use blink::sim::{InstanceCatalog, MachineSpec};
+use blink::util::units::{fmt_mb, fmt_mb_signed, fmt_secs};
+use blink::workloads::{all_apps, app_by_name, FULL_SCALE};
 
 fn main() {
     let scale: f64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(FULL_SCALE);
+    let focus = std::env::args().nth(2).unwrap_or_else(|| "als".to_string());
     let machine = MachineSpec::worker_node();
     println!(
         "cluster advisor @ data scale {scale} — machine type: {} cores, {} heap (M={}, R={})\n",
@@ -25,7 +31,7 @@ fn main() {
         fmt_mb(machine.storage_floor_mb()),
     );
     println!(
-        "{:<7} {:>10} {:>12} {:>12} {:>5} {:>5} {:>6} {:>12} {:>12}",
+        "{:<7} {:>10} {:>12} {:>12} {:>5} {:>5} {:>6} {:>14} {:>12}",
         "app", "input", "pred cache", "pred exec", "min", "max", "PICK", "headroom", "sample cost"
     );
     for app in all_apps() {
@@ -33,13 +39,15 @@ fn main() {
         let mut blink = Blink::new(&mut backend);
         let scales = blink::experiments::sampling_scales(&app);
         let d = blink.decide_with_scales(&app, scale, &machine, &scales);
+        // headroom_mb is negative (a deficit) for saturated picks; the
+        // signed rendering keeps that visible instead of faking headroom
         let (min, max, headroom) = d
             .selection
             .as_ref()
             .map(|s| (s.machines_min, s.machines_max, s.headroom_mb))
             .unwrap_or((1, 1, 0.0));
         println!(
-            "{:<7} {:>10} {:>12} {:>12} {:>5} {:>5} {:>6} {:>12} {:>12}",
+            "{:<7} {:>10} {:>12} {:>12} {:>5} {:>5} {:>6} {:>14} {:>12}",
             app.name,
             fmt_mb(app.input_mb(scale)),
             fmt_mb(d.predicted_cached_mb),
@@ -47,9 +55,41 @@ fn main() {
             min,
             max,
             d.machines,
-            fmt_mb(headroom),
+            fmt_mb_signed(headroom),
             fmt_secs(d.sample_cost_machine_s),
         );
     }
-    println!("\n(PICK = minimal eviction-free cluster size; headroom = spare cache per machine)");
+    println!("\n(PICK = minimal eviction-free cluster size; negative headroom = cache deficit)");
+
+    // ---- fleet-aware planning: ONE sampling phase, every catalog ---------
+    // §5.4's adaptivity: the predictors are trained once from the sample
+    // runs, then re-planned across catalogs and pricing models for free.
+    let app = app_by_name(&focus).unwrap_or_else(|| {
+        eprintln!("unknown app '{focus}', falling back to als");
+        app_by_name("als").unwrap()
+    });
+    println!("\n=== fleet planner for '{}' @ scale {scale} ===", app.name);
+    let mgr = SampleRunsManager::default();
+    let scales = blink::experiments::sampling_scales(&app);
+    let (cached, exec_mb) = match mgr.run(&app, &scales) {
+        SamplingOutcome::Profiled(runs) => {
+            let mut backend = RustFit::default();
+            let sizes = SizePredictor::train(&mut backend, &runs);
+            let exec = ExecMemoryPredictor::train(&mut backend, &runs);
+            (sizes.predict_total(scale), exec.predict_total(scale))
+        }
+        SamplingOutcome::NoCachedData { .. } => (0.0, 0.0),
+    };
+    let profile = app.profile(scale);
+    let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec_mb };
+    let hourly = PerInstanceHour::hourly();
+    let spot = SpotDiscount::typical();
+    let pricings: [&dyn PricingModel; 2] = [&hourly, &spot];
+    for catalog in [InstanceCatalog::paper(), InstanceCatalog::cloud()] {
+        for pricing in pricings {
+            let p = plan(&input, &catalog, pricing, 12);
+            blink::experiments::report::print_plan(&p, &catalog, pricing.name());
+        }
+    }
+    println!("\n(one sampling phase total; the same predictors priced every catalog — §5.4's adaptivity)");
 }

@@ -18,7 +18,7 @@
 //!   3. reports the measured cached-read vs recompute asymmetry and the
 //!      cost savings vs the average cluster size.
 //!
-//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//! Results are recorded in DESIGN.md §4 (experiment index).
 
 use blink::blink::Blink;
 use blink::compute::RealCompute;

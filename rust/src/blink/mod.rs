@@ -12,22 +12,29 @@
 //!    cluster size for the actual run; [`bounds::max_scale`] answers the
 //!    inverse (Table 2) question.
 //!
+//! Beyond the paper, [`planner`] generalizes step 4 into a catalog-driven
+//! `(instance type × count)` search with pluggable pricing
+//! ([`crate::cost`]), exposed as [`Blink::advise`] / `blink advise`.
+//!
 //! Model fitting dispatches through [`models::FitBackend`]: in production
 //! the batched Pallas `linfit` executable via PJRT (`runtime::linfit`), in
 //! tests the pure-Rust oracle.
 
 pub mod bounds;
 pub mod models;
+pub mod planner;
 pub mod predictor;
 pub mod sample_runs;
 pub mod selector;
 
 pub use models::{FitBackend, RustFit};
+pub use planner::{plan, CandidateConfig, Plan, PlanInput, TypePick};
 pub use predictor::{ExecMemoryPredictor, SizePredictor};
 pub use sample_runs::{SampleRun, SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
-pub use selector::{select_cluster_size, Selection};
+pub use selector::{machine_split, select_cluster_size, Selection};
 
-use crate::sim::MachineSpec;
+use crate::cost::PricingModel;
+use crate::sim::{InstanceCatalog, MachineSpec};
 use crate::workloads::AppModel;
 
 /// Blink's end-to-end decision for one application.
@@ -104,6 +111,71 @@ impl<'a> Blink<'a> {
                     selection: Some(sel),
                 }
             }
+        }
+    }
+}
+
+/// Blink's catalog-wide answer: the planner output plus the sampling
+/// diagnostics the CLI reports.
+#[derive(Debug, Clone)]
+pub struct Advice {
+    pub plan: Plan,
+    pub predicted_cached_mb: f64,
+    pub predicted_exec_mb: f64,
+    pub sample_cost_machine_s: f64,
+}
+
+impl<'a> Blink<'a> {
+    /// Fleet-aware planning: one sampling phase, then a catalog search.
+    ///
+    /// Generalizes [`Blink::decide`] from "how many worker nodes?" to
+    /// "which instance type, how many, at what predicted cost?". The
+    /// atypical no-cached-data case flows through with zero predicted
+    /// footprint, which the planner maps to one machine of every type.
+    pub fn advise(
+        &mut self,
+        app: &AppModel,
+        target_scale: f64,
+        catalog: &InstanceCatalog,
+        pricing: &dyn PricingModel,
+    ) -> Advice {
+        self.advise_with_scales(app, target_scale, catalog, pricing, &DEFAULT_SCALES)
+    }
+
+    /// Same, with explicit sampling scales (GBT/ALS use extended sets).
+    pub fn advise_with_scales(
+        &mut self,
+        app: &AppModel,
+        target_scale: f64,
+        catalog: &InstanceCatalog,
+        pricing: &dyn PricingModel,
+        scales: &[f64],
+    ) -> Advice {
+        let (cached, exec_mb, sample_cost) = match self.manager.run(app, scales) {
+            SamplingOutcome::NoCachedData { sample_cost_machine_s } => {
+                (0.0, 0.0, sample_cost_machine_s)
+            }
+            SamplingOutcome::Profiled(runs) => {
+                let sizes = SizePredictor::train(self.backend, &runs);
+                let exec = ExecMemoryPredictor::train(self.backend, &runs);
+                (
+                    sizes.predict_total(target_scale),
+                    exec.predict_total(target_scale),
+                    SampleRunsManager::total_cost_machine_s(&runs),
+                )
+            }
+        };
+        let profile = app.profile(target_scale);
+        let input = PlanInput {
+            profile: &profile,
+            cached_total_mb: cached,
+            exec_total_mb: exec_mb,
+        };
+        Advice {
+            plan: planner::plan(&input, catalog, pricing, self.max_machines),
+            predicted_cached_mb: cached,
+            predicted_exec_mb: exec_mb,
+            sample_cost_machine_s: sample_cost,
         }
     }
 }

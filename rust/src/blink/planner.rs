@@ -1,0 +1,319 @@
+//! Fleet-aware cost planner: a catalog-driven configuration search.
+//!
+//! The §5.4 selector answers "how many identical paper-testbed nodes?".
+//! This module generalizes it, in the spirit of Crispy and of "Selecting
+//! Efficient Cluster Resources for Data Analytics" (Will et al., 2022/23):
+//! given the trained Blink predictors, search every `(instance type ×
+//! count)` candidate of an [`InstanceCatalog`] for eviction-freeness using
+//! the same memory geometry ([`machine_split`]), estimate each candidate's
+//! runtime from the workload's compute profile (observable from the sample
+//! runs), price it through a pluggable [`PricingModel`], and return
+//!
+//! * one *recommended* configuration per instance type (the minimal
+//!   eviction-free count — exactly the §5.4 rule applied to that type),
+//!   ranked across types by predicted cost;
+//! * the full evaluation grid;
+//! * the Pareto front of the (time, cost) trade-off, for operators who can
+//!   spend money to go faster.
+//!
+//! On a single-type catalog the ranked list degenerates to the classic
+//! [`select_cluster_size`] answer — the reproduction path never changes.
+
+use super::selector::{machine_split, select_cluster_size, Selection};
+use crate::cost::PricingModel;
+use crate::sim::{
+    shuffle_s, ClusterSpec, InstanceCatalog, InstanceType, MachineSpec, WorkloadProfile,
+};
+use crate::util::units::Mb;
+
+/// What the planner needs to know about one target run: the workload's
+/// compute shape (parallelism, cost coefficients — all observable from
+/// sample runs) plus the *predicted* memory quantities at the target scale.
+pub struct PlanInput<'a> {
+    pub profile: &'a WorkloadProfile,
+    /// Predicted total cached size at the target scale, MB.
+    pub cached_total_mb: Mb,
+    /// Predicted total execution memory at the target scale, MB.
+    pub exec_total_mb: Mb,
+}
+
+/// One evaluated `(instance type × count)` configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CandidateConfig {
+    /// Instance type name (from the catalog).
+    pub instance: String,
+    pub machines: usize,
+    /// Whether the predicted footprint fits eviction-free (§5.4 geometry).
+    pub eviction_free: bool,
+    /// Per-machine caching headroom; negative = deficit.
+    pub headroom_mb: Mb,
+    /// Analytic runtime estimate, seconds.
+    pub predicted_time_s: f64,
+    /// Price of that runtime under the active pricing model.
+    pub predicted_cost: f64,
+}
+
+/// The recommended configuration for one instance type, with the §5.4
+/// selector diagnostics (min/max bracket, saturation) for that type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TypePick {
+    pub candidate: CandidateConfig,
+    pub selection: Selection,
+}
+
+/// The planner's full answer.
+#[derive(Debug, Clone, Default)]
+pub struct Plan {
+    /// One pick per instance type, best (eviction-free, then cheapest)
+    /// first.
+    pub ranked: Vec<TypePick>,
+    /// Every evaluated candidate (catalog types × 1..=max_machines).
+    pub grid: Vec<CandidateConfig>,
+    /// Non-dominated (time, cost) candidates among the eviction-free grid
+    /// (the whole grid when nothing fits), sorted fastest-first.
+    pub pareto: Vec<CandidateConfig>,
+}
+
+impl Plan {
+    /// The overall recommendation, if any type produced a pick.
+    pub fn best(&self) -> Option<&TypePick> {
+        self.ranked.first()
+    }
+}
+
+/// Closed-form runtime estimate for an eviction-aware run on `machines`
+/// nodes of `machine` type: the simulator's deterministic skeleton (wave
+/// scheduling, disk-bound load, cached vs recomputed iteration tasks,
+/// serial + shuffle + coordination per job) without noise or skew.
+/// `resident_fraction` is the predicted fraction of cached partitions that
+/// stay resident (1.0 when eviction-free).
+pub fn estimate_time_s(
+    profile: &WorkloadProfile,
+    machine: &MachineSpec,
+    machines: usize,
+    cached_total_mb: Mb,
+    resident_fraction: f64,
+) -> f64 {
+    let n = machines.max(1);
+    let parts = profile.parallelism.max(1) as f64;
+    let slots = (n * machine.cores.max(1)) as f64;
+    let waves = (parts / slots).ceil();
+    let cluster = ClusterSpec { machines: n, machine: machine.clone() };
+    let per_job_s = profile.serial_s + shuffle_s(profile, &cluster);
+
+    // job 0: read the input from DFS, compute, cache
+    let input_pp = profile.input_mb / parts;
+    let t_load = input_pp / machine.disk_mb_s
+        + input_pp * profile.compute_s_per_mb
+        + profile.task_overhead_s;
+    let mut t = profile.sample_prep_s + waves * t_load + per_job_s;
+
+    // iteration jobs: cached reads where resident, lineage recomputation
+    // elsewhere (the Area-A penalty)
+    let cached_pp = cached_total_mb / parts;
+    let t_cached = cached_pp * profile.compute_s_per_mb / profile.cached_speedup
+        + profile.task_overhead_s;
+    let t_recompute = input_pp / machine.disk_mb_s
+        + input_pp * profile.compute_s_per_mb * profile.recompute_factor
+        + profile.task_overhead_s;
+    let r = resident_fraction.clamp(0.0, 1.0);
+    let t_task = r * t_cached + (1.0 - r) * t_recompute;
+    t += profile.iterations as f64 * (waves * t_task + per_job_s);
+    t
+}
+
+fn evaluate(
+    input: &PlanInput<'_>,
+    instance: &InstanceType,
+    machines: usize,
+    pricing: &dyn PricingModel,
+) -> CandidateConfig {
+    let (_, capacity) = machine_split(input.exec_total_mb, &instance.spec, machines);
+    let cached_pm = input.cached_total_mb / machines as f64;
+    let eviction_free = cached_pm < capacity;
+    let resident = if input.cached_total_mb <= 0.0 {
+        1.0
+    } else {
+        (machines as f64 * capacity / input.cached_total_mb).min(1.0)
+    };
+    let time_s = estimate_time_s(
+        input.profile,
+        &instance.spec,
+        machines,
+        input.cached_total_mb,
+        resident,
+    );
+    CandidateConfig {
+        instance: instance.name.to_string(),
+        machines,
+        eviction_free,
+        headroom_mb: capacity - cached_pm,
+        predicted_time_s: time_s,
+        predicted_cost: pricing.price(instance, machines, time_s),
+    }
+}
+
+fn dominates(a: &CandidateConfig, b: &CandidateConfig) -> bool {
+    a.predicted_time_s <= b.predicted_time_s
+        && a.predicted_cost <= b.predicted_cost
+        && (a.predicted_time_s < b.predicted_time_s || a.predicted_cost < b.predicted_cost)
+}
+
+fn pareto_front(grid: &[CandidateConfig]) -> Vec<CandidateConfig> {
+    let free: Vec<&CandidateConfig> = grid.iter().filter(|c| c.eviction_free).collect();
+    let pool: Vec<&CandidateConfig> =
+        if free.is_empty() { grid.iter().collect() } else { free };
+    let mut front: Vec<CandidateConfig> = pool
+        .iter()
+        .filter(|c| !pool.iter().any(|o| dominates(o, c)))
+        .map(|c| (*c).clone())
+        .collect();
+    front.sort_by(|a, b| {
+        a.predicted_time_s
+            .total_cmp(&b.predicted_time_s)
+            .then(a.predicted_cost.total_cmp(&b.predicted_cost))
+            .then(a.instance.cmp(&b.instance))
+    });
+    front.dedup();
+    front
+}
+
+/// Search every `(instance type × count)` configuration of `catalog`.
+pub fn plan(
+    input: &PlanInput<'_>,
+    catalog: &InstanceCatalog,
+    pricing: &dyn PricingModel,
+    max_machines: usize,
+) -> Plan {
+    assert!(max_machines >= 1);
+    let mut grid = Vec::with_capacity(catalog.instances.len() * max_machines);
+    let mut ranked = Vec::with_capacity(catalog.instances.len());
+    for instance in &catalog.instances {
+        let selection = select_cluster_size(
+            input.cached_total_mb,
+            input.exec_total_mb,
+            &instance.spec,
+            max_machines,
+        );
+        for n in 1..=max_machines {
+            let c = evaluate(input, instance, n, pricing);
+            if n == selection.machines {
+                ranked.push(TypePick { candidate: c.clone(), selection: selection.clone() });
+            }
+            grid.push(c);
+        }
+    }
+    ranked.sort_by(|a, b| {
+        b.candidate
+            .eviction_free
+            .cmp(&a.candidate.eviction_free)
+            .then(a.candidate.predicted_cost.total_cmp(&b.candidate.predicted_cost))
+            .then(a.candidate.predicted_time_s.total_cmp(&b.candidate.predicted_time_s))
+            .then(a.candidate.instance.cmp(&b.candidate.instance))
+    });
+    let pareto = pareto_front(&grid);
+    Plan { ranked, grid, pareto }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{MachineSeconds, PerInstanceHour};
+    use crate::workloads::{app_by_name, FULL_SCALE};
+
+    fn input_for(app: &str, scale: f64) -> (crate::sim::WorkloadProfile, Mb, Mb) {
+        let a = app_by_name(app).unwrap();
+        (a.profile(scale), a.total_true_cached_mb(scale), a.exec_mem_mb(scale))
+    }
+
+    #[test]
+    fn single_type_catalog_degenerates_to_selector() {
+        let (profile, cached, exec) = input_for("svm", FULL_SCALE);
+        let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+        let catalog = InstanceCatalog::single(InstanceType::paper_worker());
+        let p = plan(&input, &catalog, &MachineSeconds, 12);
+        assert_eq!(p.ranked.len(), 1);
+        let sel = select_cluster_size(cached, exec, &MachineSpec::worker_node(), 12);
+        assert_eq!(p.ranked[0].selection, sel);
+        assert_eq!(p.ranked[0].candidate.machines, sel.machines);
+        assert_eq!(p.grid.len(), 12);
+    }
+
+    #[test]
+    fn ranked_covers_every_type_and_prefers_eviction_free() {
+        let (profile, cached, exec) = input_for("als", FULL_SCALE);
+        let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+        let p = plan(&input, &InstanceCatalog::cloud(), &PerInstanceHour::hourly(), 12);
+        assert_eq!(p.ranked.len(), InstanceCatalog::cloud().instances.len());
+        // ranked order: all eviction-free picks precede saturated ones,
+        // and within the free block costs are non-decreasing
+        let mut seen_saturated = false;
+        let mut last_cost = f64::NEG_INFINITY;
+        for pick in &p.ranked {
+            if pick.candidate.eviction_free {
+                assert!(!seen_saturated, "free pick after saturated one");
+                assert!(pick.candidate.predicted_cost >= last_cost);
+                last_cost = pick.candidate.predicted_cost;
+            } else {
+                seen_saturated = true;
+            }
+            assert!(pick.candidate.predicted_cost.is_finite());
+            assert!(pick.candidate.predicted_time_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated_and_free() {
+        let (profile, cached, exec) = input_for("svm", FULL_SCALE);
+        let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+        let p = plan(&input, &InstanceCatalog::all(), &PerInstanceHour::per_second(), 12);
+        assert!(!p.pareto.is_empty());
+        for a in &p.pareto {
+            assert!(a.eviction_free, "front drawn from eviction-free candidates");
+            for b in &p.pareto {
+                assert!(!dominates(a, b) || a == b, "{a:?} dominates {b:?}");
+            }
+        }
+        // fastest-first ordering
+        for w in p.pareto.windows(2) {
+            assert!(w[0].predicted_time_s <= w[1].predicted_time_s);
+        }
+    }
+
+    #[test]
+    fn bigger_memory_types_need_fewer_machines() {
+        let (profile, cached, exec) = input_for("svm", FULL_SCALE);
+        let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+        let cloud = InstanceCatalog::cloud();
+        let p = plan(&input, &cloud, &MachineSeconds, 16);
+        let machines_of = |name: &str| {
+            p.ranked.iter().find(|t| t.candidate.instance == name).unwrap().candidate.machines
+        };
+        assert!(machines_of("mem.2xlarge") <= machines_of("gp.xlarge"));
+    }
+
+    #[test]
+    fn time_estimate_shows_area_a_and_parallel_speedup() {
+        let (profile, cached, _) = input_for("svm", FULL_SCALE);
+        let w = MachineSpec::worker_node();
+        // under-provisioned (partial residency) is slower than resident
+        let slow = estimate_time_s(&profile, &w, 3, cached, 0.4);
+        let fast = estimate_time_s(&profile, &w, 3, cached, 1.0);
+        assert!(slow > fast);
+        // more machines shrink the parallel part when fully resident
+        let t4 = estimate_time_s(&profile, &w, 4, cached, 1.0);
+        let t8 = estimate_time_s(&profile, &w, 8, cached, 1.0);
+        assert!(t8 < t4);
+    }
+
+    #[test]
+    fn nothing_cached_plans_one_machine_per_type() {
+        let (profile, _, _) = input_for("svm", 10.0);
+        let input = PlanInput { profile: &profile, cached_total_mb: 0.0, exec_total_mb: 0.0 };
+        let p = plan(&input, &InstanceCatalog::paper(), &MachineSeconds, 12);
+        for pick in &p.ranked {
+            assert_eq!(pick.candidate.machines, 1, "{}", pick.candidate.instance);
+            assert!(pick.candidate.eviction_free);
+        }
+    }
+}

@@ -24,14 +24,41 @@ pub struct Selection {
     pub machines_max: usize,
     /// Per-machine execution memory at the selected size.
     pub machine_exec_mb: Mb,
-    /// Caching headroom per machine at the selected size.
+    /// Caching headroom per machine at the selected size. Negative when
+    /// `saturated` — the per-machine cache *deficit* the cluster cannot
+    /// absorb (see [`Selection::cache_deficit_mb`]).
     pub headroom_mb: Mb,
     /// The selector hit `max_machines` without satisfying the condition —
     /// the cluster cannot run this scale eviction-free.
     pub saturated: bool,
 }
 
+impl Selection {
+    /// Per-machine cache deficit when saturated (how far the cached data
+    /// overflows each machine's capacity), 0 for an eviction-free pick.
+    /// Renderers must report this instead of a "negative headroom".
+    pub fn cache_deficit_mb(&self) -> Mb {
+        (-self.headroom_mb).max(0.0)
+    }
+}
+
+/// The §5.4 memory geometry at cluster size `n`: per-machine execution
+/// share `MachineMem_exec(n) = min(M - R, Mem_exec / n)` and the caching
+/// capacity `M - MachineMem_exec(n)` it leaves. Shared by the single-type
+/// selector below and the catalog planner ([`crate::blink::planner`]), so
+/// both evaluate candidates with identical numerics.
+pub fn machine_split(exec_total_mb: Mb, machine: &MachineSpec, n: usize) -> (Mb, Mb) {
+    let m = machine.unified_mb();
+    let r = machine.storage_floor_mb();
+    let exec_pm = (m - r).min(exec_total_mb / n as f64);
+    (exec_pm, m - exec_pm)
+}
+
 /// Select the optimal cluster size (§5.4) for a machine type.
+///
+/// This is the paper's single-type rule, now a thin wrapper over the same
+/// [`machine_split`] geometry the catalog planner searches — Table 1/2
+/// reproduction goes through this exact function and stays bit-identical.
 pub fn select_cluster_size(
     cached_total_mb: Mb,
     exec_total_mb: Mb,
@@ -46,8 +73,7 @@ pub fn select_cluster_size(
     let machines_max = (cached_total_mb / r).ceil().max(1.0) as usize;
 
     for n in 1..=max_machines {
-        let exec_pm = (m - r).min(exec_total_mb / n as f64);
-        let capacity = m - exec_pm;
+        let (exec_pm, capacity) = machine_split(exec_total_mb, machine, n);
         if cached_total_mb / (n as f64) < capacity {
             return Selection {
                 machines: n,
@@ -59,13 +85,13 @@ pub fn select_cluster_size(
             };
         }
     }
-    let exec_pm = (m - r).min(exec_total_mb / max_machines as f64);
+    let (exec_pm, capacity) = machine_split(exec_total_mb, machine, max_machines);
     Selection {
         machines: max_machines,
         machines_min,
         machines_max,
         machine_exec_mb: exec_pm,
-        headroom_mb: (m - exec_pm) - cached_total_mb / max_machines as f64,
+        headroom_mb: capacity - cached_total_mb / max_machines as f64,
         saturated: true,
     }
 }
@@ -109,6 +135,30 @@ mod tests {
         let s = select_cluster_size(200_000.0, 1000.0, &worker(), 12);
         assert!(s.saturated);
         assert_eq!(s.machines, 12);
+    }
+
+    #[test]
+    fn saturated_headroom_is_a_deficit() {
+        // regression: a saturated selection must never read as positive
+        // spare capacity — headroom <= 0 and the deficit helper flips it
+        let s = select_cluster_size(200_000.0, 1000.0, &worker(), 12);
+        assert!(s.saturated);
+        assert!(s.headroom_mb <= 0.0, "saturated headroom {}", s.headroom_mb);
+        assert!(s.cache_deficit_mb() > 0.0);
+        assert_eq!(s.cache_deficit_mb(), -s.headroom_mb);
+        // and an eviction-free pick reports no deficit
+        let free = select_cluster_size(100.0, 50.0, &worker(), 12);
+        assert!(!free.saturated);
+        assert!(free.headroom_mb > 0.0);
+        assert_eq!(free.cache_deficit_mb(), 0.0);
+    }
+
+    #[test]
+    fn machine_split_matches_selector_geometry() {
+        let m = worker();
+        let (exec_pm, capacity) = machine_split(6000.0, &m, 4);
+        assert_eq!(exec_pm, (m.unified_mb() - m.storage_floor_mb()).min(6000.0 / 4.0));
+        assert_eq!(capacity, m.unified_mb() - exec_pm);
     }
 
     #[test]

@@ -8,11 +8,12 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::blink::{Blink, BlinkDecision, FitBackend, RustFit};
+use crate::blink::{Advice, Blink, BlinkDecision, FitBackend, RustFit};
+use crate::cost::pricing_by_name;
 use crate::experiments::{self, report};
 use crate::metrics::RunSummary;
 use crate::runtime::{artifacts_available, PjrtFit, Runtime};
-use crate::sim::MachineSpec;
+use crate::sim::{InstanceCatalog, MachineSpec};
 use crate::util::units::{fmt_mb, fmt_pct, fmt_secs};
 use crate::workloads::{app_by_name, AppModel};
 
@@ -82,14 +83,22 @@ pub fn cmd_decide(app: &str, scale: f64, verbose: bool) -> Result<BlinkDecision>
         fmt_mb(d.predicted_exec_mb)
     );
     if let Some(sel) = &d.selection {
-        println!(
-            "machines_min {}  machines_max {}  headroom/machine {}",
-            sel.machines_min,
-            sel.machines_max,
-            fmt_mb(sel.headroom_mb)
-        );
         if sel.saturated {
+            // a saturated selection has no headroom — report the deficit
+            println!(
+                "machines_min {}  machines_max {}  cache deficit/machine {}",
+                sel.machines_min,
+                sel.machines_max,
+                fmt_mb(sel.cache_deficit_mb())
+            );
             println!("WARNING: cluster bound hit; run will evict");
+        } else {
+            println!(
+                "machines_min {}  machines_max {}  headroom/machine {}",
+                sel.machines_min,
+                sel.machines_max,
+                fmt_mb(sel.headroom_mb)
+            );
         }
     }
     println!(
@@ -109,6 +118,45 @@ pub fn cmd_decide(app: &str, scale: f64, verbose: bool) -> Result<BlinkDecision>
         }
     }
     Ok(d)
+}
+
+/// `blink advise`: the fleet-aware planner — search an instance catalog
+/// for `(type × count)` candidates under a pricing model.
+pub fn cmd_advise(
+    app: &str,
+    scale: f64,
+    catalog_name: &str,
+    pricing_name: &str,
+    max_machines: usize,
+) -> Result<Advice> {
+    let app = lookup(app)?;
+    let catalog = InstanceCatalog::by_name(catalog_name)
+        .ok_or_else(|| anyhow!("unknown catalog '{catalog_name}' (paper|cloud|all)"))?;
+    let pricing = pricing_by_name(pricing_name).ok_or_else(|| {
+        anyhow!("unknown pricing model '{pricing_name}' (machine-seconds|hourly|per-second|spot)")
+    })?;
+    if max_machines == 0 {
+        return Err(anyhow!("--max-machines must be at least 1"));
+    }
+    let mut backend = Backend::auto();
+    println!("fit backend: {}", backend.name());
+    let scales = experiments::sampling_scales(&app);
+    let advice = backend.with(|b| {
+        let mut blink = Blink::new(b);
+        blink.max_machines = max_machines;
+        blink.advise_with_scales(&app, scale, &catalog, pricing.as_ref(), &scales)
+    });
+    println!(
+        "app {}  scale {:.0} ({} input)  predicted cached {}  exec {}  sampling cost {}",
+        app.name,
+        scale,
+        fmt_mb(app.input_mb(scale)),
+        fmt_mb(advice.predicted_cached_mb),
+        fmt_mb(advice.predicted_exec_mb),
+        fmt_secs(advice.sample_cost_machine_s),
+    );
+    report::print_plan(&advice.plan, &catalog, pricing.name());
+    Ok(advice)
 }
 
 /// `blink run`: decide, then simulate the actual run at the pick.
@@ -230,5 +278,13 @@ mod tests {
     #[test]
     fn unknown_experiment_is_an_error() {
         assert!(cmd_experiment("fig99", 1).is_err());
+    }
+
+    #[test]
+    fn advise_rejects_bad_inputs() {
+        assert!(cmd_advise("nope", 1000.0, "cloud", "hourly", 12).is_err());
+        assert!(cmd_advise("svm", 1000.0, "bogus-catalog", "hourly", 12).is_err());
+        assert!(cmd_advise("svm", 1000.0, "cloud", "free-lunch", 12).is_err());
+        assert!(cmd_advise("svm", 1000.0, "cloud", "hourly", 0).is_err());
     }
 }

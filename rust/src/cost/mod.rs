@@ -1,0 +1,196 @@
+//! Pluggable pricing of runs (the cost layer).
+//!
+//! The paper accounts cost in *machine-seconds* (`duration × machines`);
+//! that stays the default and is what [`crate::metrics::RunSummary`]
+//! reports. Production deployments price the same run differently —
+//! per-instance-hour with a billing granularity, spot discounts — so the
+//! planner ([`crate::blink::planner`]) takes any [`PricingModel`] and
+//! prices each `(instance type × count)` candidate through it. The paper's
+//! Table 1/2 numbers always go through [`MachineSeconds`], keeping the
+//! reproduction bit-identical.
+
+use crate::metrics::RunSummary;
+use crate::sim::InstanceType;
+
+/// Prices a run of `machines` nodes of one instance type for a duration.
+pub trait PricingModel {
+    fn name(&self) -> &'static str;
+
+    /// Cost of keeping `machines` nodes of `instance` busy `duration_s`
+    /// seconds. Unit depends on the model (machine-seconds or currency).
+    fn price(&self, instance: &InstanceType, machines: usize, duration_s: f64) -> f64;
+
+    /// Price an analyzed run, assuming `instance` nodes executed it.
+    fn price_run(&self, instance: &InstanceType, summary: &RunSummary) -> f64 {
+        self.price(instance, summary.machines, summary.duration_s)
+    }
+}
+
+/// The paper's accounting: `duration_s × machines`, type-blind.
+pub struct MachineSeconds;
+
+impl MachineSeconds {
+    /// The raw accounting shared with [`crate::metrics`] (kept as a free
+    /// method so the metrics layer needs no `InstanceType`).
+    pub fn machine_seconds(&self, machines: usize, duration_s: f64) -> f64 {
+        duration_s * machines as f64
+    }
+}
+
+impl PricingModel for MachineSeconds {
+    fn name(&self) -> &'static str {
+        "machine-seconds"
+    }
+
+    fn price(&self, _instance: &InstanceType, machines: usize, duration_s: f64) -> f64 {
+        self.machine_seconds(machines, duration_s)
+    }
+}
+
+/// On-demand pricing: each instance bills `price_per_hour`, rounded up to
+/// a billing granularity (classic clouds billed whole hours; modern ones
+/// bill per second with a minimum).
+pub struct PerInstanceHour {
+    /// Billing quantum in seconds; `<= 0` means exact (no rounding).
+    pub billing_granularity_s: f64,
+}
+
+impl PerInstanceHour {
+    pub fn hourly() -> PerInstanceHour {
+        PerInstanceHour { billing_granularity_s: 3600.0 }
+    }
+
+    pub fn per_second() -> PerInstanceHour {
+        PerInstanceHour { billing_granularity_s: 1.0 }
+    }
+
+    fn billed_seconds(&self, duration_s: f64) -> f64 {
+        let d = duration_s.max(0.0);
+        if self.billing_granularity_s <= 0.0 {
+            return d;
+        }
+        (d / self.billing_granularity_s).ceil() * self.billing_granularity_s
+    }
+}
+
+impl PricingModel for PerInstanceHour {
+    fn name(&self) -> &'static str {
+        if self.billing_granularity_s >= 3600.0 {
+            "hourly"
+        } else {
+            "per-second"
+        }
+    }
+
+    fn price(&self, instance: &InstanceType, machines: usize, duration_s: f64) -> f64 {
+        self.billed_seconds(duration_s) / 3600.0 * instance.price_per_hour * machines as f64
+    }
+}
+
+/// Spot/preemptible pricing: an on-demand model discounted by a factor.
+pub struct SpotDiscount {
+    pub base: PerInstanceHour,
+    /// Fraction knocked off the on-demand price (0.7 = pay 30 %).
+    pub discount: f64,
+}
+
+impl SpotDiscount {
+    pub fn typical() -> SpotDiscount {
+        SpotDiscount { base: PerInstanceHour::per_second(), discount: 0.7 }
+    }
+}
+
+impl PricingModel for SpotDiscount {
+    fn name(&self) -> &'static str {
+        "spot"
+    }
+
+    fn price(&self, instance: &InstanceType, machines: usize, duration_s: f64) -> f64 {
+        self.base.price(instance, machines, duration_s) * (1.0 - self.discount)
+    }
+}
+
+/// Look a pricing model up by CLI name.
+pub fn pricing_by_name(name: &str) -> Option<Box<dyn PricingModel>> {
+    match name {
+        "machine-seconds" => Some(Box::new(MachineSeconds)),
+        "hourly" => Some(Box::new(PerInstanceHour::hourly())),
+        "per-second" => Some(Box::new(PerInstanceHour::per_second())),
+        "spot" => Some(Box::new(SpotDiscount::typical())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{Event, EventLog};
+
+    fn worker() -> InstanceType {
+        InstanceType::paper_worker()
+    }
+
+    #[test]
+    fn machine_seconds_matches_legacy_accounting() {
+        // the inline rule this layer replaced: duration_s * machines
+        let p = MachineSeconds;
+        assert_eq!(p.price(&worker(), 2, 90.0), 180.0);
+        assert_eq!(p.machine_seconds(12, 10.0), 120.0);
+    }
+
+    #[test]
+    fn summary_cost_field_agrees_with_pricing_model() {
+        let mut log = EventLog::new();
+        log.push(Event::AppStart { app: "svm".into(), machines: 3, data_scale: 1.0 });
+        log.push(Event::AppEnd { duration_s: 60.0 });
+        let s = RunSummary::from_log(&log);
+        assert_eq!(s.cost_machine_s, MachineSeconds.price_run(&worker(), &s));
+        assert_eq!(s.cost_machine_s, 180.0);
+    }
+
+    #[test]
+    fn hourly_rounds_up_to_billing_granularity() {
+        let p = PerInstanceHour::hourly();
+        // 10 minutes bills a whole hour per instance
+        let cost = p.price(&worker(), 4, 600.0);
+        assert!((cost - 4.0 * worker().price_per_hour).abs() < 1e-12);
+        // 61 minutes bills two hours
+        let cost = p.price(&worker(), 1, 3660.0);
+        assert!((cost - 2.0 * worker().price_per_hour).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_second_billing_is_proportional() {
+        let p = PerInstanceHour::per_second();
+        let one = p.price(&worker(), 1, 1800.0);
+        let two = p.price(&worker(), 1, 3600.0);
+        assert!((two - 2.0 * one).abs() < 1e-12);
+        assert!((two - worker().price_per_hour).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spot_discounts_on_demand() {
+        let spot = SpotDiscount::typical();
+        let od = PerInstanceHour::per_second();
+        let full = od.price(&worker(), 5, 1234.0);
+        let disc = spot.price(&worker(), 5, 1234.0);
+        assert!((disc - full * 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pricing_lookup_roundtrips_names() {
+        // the advise report prints name(); it must identify the exact model
+        for name in ["machine-seconds", "hourly", "per-second", "spot"] {
+            assert_eq!(pricing_by_name(name).unwrap().name(), name);
+        }
+        assert!(pricing_by_name("free-lunch").is_none());
+    }
+
+    #[test]
+    fn zero_duration_costs_nothing_everywhere() {
+        for name in ["machine-seconds", "hourly", "per-second", "spot"] {
+            let p = pricing_by_name(name).unwrap();
+            assert_eq!(p.price(&worker(), 8, 0.0), 0.0, "{name}");
+        }
+    }
+}

@@ -12,6 +12,7 @@ use crate::ernest::ErnestModel;
 use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
 use crate::sim::{simulate, ClusterSpec, MachineSpec, SimOptions, SimResult};
+use crate::util::par;
 use crate::util::stats;
 use crate::workloads::{all_apps, app_by_name, AppModel, FULL_SCALE};
 
@@ -88,18 +89,14 @@ pub fn table1_row(
     let mut blink = Blink::new(backend);
     let d = blink.decide_with_scales(app, scale, &MachineSpec::worker_node(), sampling);
 
-    let mut runs = Vec::new();
-    let mut optimal = MAX_MACHINES;
-    for n in 1..=MAX_MACHINES {
+    // each cluster size simulates under its own seed (`seed + n`), so the
+    // parallel sweep is bit-identical to the old serial loop
+    let runs: Vec<(f64, f64, bool)> = par::sweep_range(1, MAX_MACHINES, |n| {
         let res = actual_run_full(app, scale, n, seed + n as u64);
         let s = RunSummary::from_log(&res.log);
-        let free = eviction_free(&s, &res);
-        if free && optimal == MAX_MACHINES && runs.iter().all(|&(_, _, f): &(f64, f64, bool)| !f)
-        {
-            optimal = n;
-        }
-        runs.push((s.duration_s / 60.0, s.cost_machine_s / 60.0, free));
-    }
+        (s.duration_s / 60.0, s.cost_machine_s / 60.0, eviction_free(&s, &res))
+    });
+    let optimal = runs.iter().position(|r| r.2).map_or(MAX_MACHINES, |i| i + 1);
     Table1Row {
         app: app.name.to_string(),
         approach: app
@@ -166,19 +163,12 @@ pub struct Fig1 {
 
 pub fn fig1(seed: u64) -> Fig1 {
     let app = app_by_name("svm").unwrap();
-    let mut series = Vec::new();
-    let mut optimal = MAX_MACHINES;
-    let mut seen_free = false;
-    for n in 1..=MAX_MACHINES {
+    let series: Vec<(usize, f64, f64, bool)> = par::sweep_range(1, MAX_MACHINES, |n| {
         let res = actual_run_full(&app, FULL_SCALE, n, seed + n as u64);
         let s = RunSummary::from_log(&res.log);
-        let free = eviction_free(&s, &res);
-        if free && !seen_free {
-            optimal = n;
-            seen_free = true;
-        }
-        series.push((n, s.duration_s / 60.0, s.cost_machine_s / 60.0, free));
-    }
+        (n, s.duration_s / 60.0, s.cost_machine_s / 60.0, eviction_free(&s, &res))
+    });
+    let optimal = series.iter().position(|r| r.3).map_or(MAX_MACHINES, |i| i + 1);
     let ernest = ErnestModel::train(&app, MAX_MACHINES, seed);
     let ernest_time_min = (1..=MAX_MACHINES)
         .map(|n| ernest.predict_time_s(n) / 60.0)
@@ -209,23 +199,22 @@ pub fn fig4(seed: u64) -> Vec<Fig4Scale> {
     [12.0, 25.0, 37.0]
         .iter()
         .map(|&scale| {
-            let mut times = Vec::new();
-            let mut sizes = Vec::new();
-            for run in 0..10 {
+            let (times, sizes) = par::sweep_range(0, 9, |run| {
                 let res = simulate(
                     &app.profile(scale),
                     &ClusterSpec::workers(1),
                     SimOptions {
                         policy: EvictionPolicy::Lru,
-                        seed: seed + run,
+                        seed: seed + run as u64,
                         compute: None,
                         detailed_log: false,
                     },
                 );
                 let s = RunSummary::from_log(&res.log);
-                times.push(s.duration_s);
-                sizes.push(s.total_cached_mb());
-            }
+                (s.duration_s, s.total_cached_mb())
+            })
+            .into_iter()
+            .unzip();
             Fig4Scale { scale, times_s: times, sizes_mb: sizes }
         })
         .collect()
@@ -416,12 +405,15 @@ pub fn fig11(seed: u64) -> Fig11 {
     let res = actual_run_full(&app, scale, d.machines, seed);
     let s = RunSummary::from_log(&res.log);
 
-    // the true cost-optimum: sweep a few sizes above the pick
+    // the true cost-optimum: sweep a few sizes above the pick (fanned out,
+    // folded in ascending order so ties resolve like the serial loop)
     let mut best = (d.machines, s.cost_machine_s / 60.0);
-    for n in d.machines + 1..=MAX_MACHINES {
-        let r = actual_run(&app, scale, n, seed + n as u64);
-        if r.cost_machine_s / 60.0 < best.1 {
-            best = (n, r.cost_machine_s / 60.0);
+    let costs = par::sweep_range(d.machines + 1, MAX_MACHINES, |n| {
+        (n, actual_run(&app, scale, n, seed + n as u64).cost_machine_s / 60.0)
+    });
+    for (n, cost) in costs {
+        if cost < best.1 {
+            best = (n, cost);
         }
     }
     Fig11 {

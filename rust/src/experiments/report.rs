@@ -1,7 +1,10 @@
-//! ASCII renderers: print each experiment the way the paper lays it out.
+//! ASCII renderers: print each experiment the way the paper lays it out,
+//! plus the fleet planner's ranked/Pareto report.
 
 use super::*;
-use crate::util::units::fmt_pct;
+use crate::blink::Plan;
+use crate::sim::InstanceCatalog;
+use crate::util::units::{fmt_mb_signed, fmt_pct, fmt_secs};
 
 fn hr(width: usize) -> String {
     "-".repeat(width)
@@ -202,6 +205,65 @@ pub fn print_table2(rows: &[Table2Row]) {
             r.predicted_scale,
             r.true_boundary,
             fmt_pct(err.abs())
+        );
+    }
+}
+
+/// The `blink advise` report: ranked per-type picks, then the time/cost
+/// Pareto front over the whole (type × count) grid.
+pub fn print_plan(plan: &Plan, catalog: &InstanceCatalog, pricing: &str) {
+    println!("\nPLAN — catalog '{}' ({} types), pricing '{}'", catalog.name, catalog.instances.len(), pricing);
+    println!(
+        "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12} {:>14} {:>6}",
+        "rank", "instance", "n", "min", "max", "time", "cost", "headroom", "free"
+    );
+    for (i, pick) in plan.ranked.iter().enumerate() {
+        let c = &pick.candidate;
+        let s = &pick.selection;
+        let headroom = if s.saturated {
+            format!("-{} !", crate::util::units::fmt_mb(s.cache_deficit_mb()))
+        } else {
+            fmt_mb_signed(c.headroom_mb)
+        };
+        println!(
+            "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12.2} {:>14} {:>6}",
+            i + 1,
+            c.instance,
+            c.machines,
+            s.machines_min,
+            s.machines_max,
+            fmt_secs(c.predicted_time_s),
+            c.predicted_cost,
+            headroom,
+            if c.eviction_free { "yes" } else { "NO" },
+        );
+    }
+    if plan.pareto.iter().all(|c| c.eviction_free) {
+        println!("pareto front (time vs cost, eviction-free candidates):");
+    } else {
+        println!("pareto front (time vs cost — NO candidate fits eviction-free; full grid):");
+    }
+    for c in &plan.pareto {
+        println!(
+            "  {:<12} x{:<3} {:>10}  cost {:>10.2}",
+            c.instance,
+            c.machines,
+            fmt_secs(c.predicted_time_s),
+            c.predicted_cost
+        );
+    }
+    if let Some(best) = plan.best() {
+        println!(
+            "-> recommend {} x{} ({}, cost {:.2}){}",
+            best.candidate.instance,
+            best.candidate.machines,
+            fmt_secs(best.candidate.predicted_time_s),
+            best.candidate.predicted_cost,
+            if best.candidate.eviction_free {
+                ""
+            } else {
+                "  — WARNING: cluster bound hit on every type; run will evict"
+            }
         );
     }
 }

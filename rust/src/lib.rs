@@ -7,21 +7,23 @@
 //! * **L3 (this crate)** — the coordinator: a Spark-like in-memory cluster
 //!   substrate ([`sim`], [`memory`], [`dag`], [`hdfs`]), the Blink framework
 //!   itself ([`blink`]: sample-runs manager, size/memory predictors,
-//!   cluster-size selector), the Ernest baseline ([`ernest`]), workload
-//!   models of the eight HiBench apps ([`workloads`]), metrics/cost
-//!   accounting ([`metrics`]), and the PJRT runtime that executes the
+//!   cluster-size selector and the catalog-driven fleet planner), the
+//!   Ernest baseline ([`ernest`]), workload models of the eight HiBench
+//!   apps ([`workloads`]), metrics accounting ([`metrics`]) with pluggable
+//!   pricing ([`cost`]), and the PJRT runtime that executes the
 //!   AOT-compiled JAX artifacts ([`runtime`], [`compute`]).
 //! * **L2 (python/compile/model.py)** — jax compute graphs (workload
 //!   iteration steps + the batched predictor fit).
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (interpret=True),
 //!   lowered once by `make artifacts`; Python never runs at request time.
 //!
-//! See DESIGN.md for the system inventory and the per-table/figure
-//! experiment index, and EXPERIMENTS.md for paper-vs-measured results.
+//! See DESIGN.md for the module inventory, the per-table/figure experiment
+//! index, and the planner/pricing design notes.
 
 pub mod blink;
 pub mod compute;
 pub mod coordinator;
+pub mod cost;
 pub mod dag;
 pub mod ernest;
 pub mod experiments;

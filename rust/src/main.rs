@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! blink decide      --app svm --scale 1000        # recommend a cluster size
+//! blink advise      --app als --catalog cloud     # fleet-aware (type x count) plan
 //! blink run         --app km  --scale 2000        # decide + actual run
 //! blink bounds      --app lr  --machines 12       # Table-2 max data scale
 //! blink experiment  --id table1                   # regenerate a paper table/figure
@@ -24,6 +25,21 @@ fn app() -> App {
                     Opt::with_default("app", "workload (als|bayes|gbt|km|lr|pca|rfc|svm)", "svm"),
                     Opt::with_default("scale", "target data scale (1000 = 100 %)", "1000"),
                     Opt::switch("verbose", "print per-dataset models"),
+                ],
+            },
+            Command {
+                name: "advise",
+                about: "rank (instance type x count) candidates from a catalog under a pricing model",
+                opts: vec![
+                    Opt::with_default("app", "workload (als|bayes|gbt|km|lr|pca|rfc|svm)", "als"),
+                    Opt::with_default("scale", "target data scale (1000 = 100 %)", "1000"),
+                    Opt::with_default("catalog", "instance catalog (paper|cloud|all)", "cloud"),
+                    Opt::with_default(
+                        "pricing",
+                        "pricing model (machine-seconds|hourly|per-second|spot)",
+                        "hourly",
+                    ),
+                    Opt::with_default("max-machines", "largest candidate cluster size", "12"),
                 ],
             },
             Command {
@@ -77,10 +93,18 @@ fn main() {
             m.has("verbose"),
         )
         .map(|_| ()),
+        "advise" => coordinator::cmd_advise(
+            m.get("app").unwrap(),
+            m.get_f64("scale").unwrap_or(1000.0),
+            m.get("catalog").unwrap(),
+            m.get("pricing").unwrap(),
+            m.get_usize("max-machines").unwrap_or(12),
+        )
+        .map(|_| ()),
         "run" => coordinator::cmd_run(
             m.get("app").unwrap(),
             m.get_f64("scale").unwrap_or(1000.0),
-            m.get_usize("seed").unwrap_or(1) as u64,
+            m.get_u64("seed").unwrap_or(1),
         )
         .map(|_| ()),
         "bounds" => coordinator::cmd_bounds(
@@ -90,7 +114,7 @@ fn main() {
         .map(|_| ()),
         "experiment" => coordinator::cmd_experiment(
             m.get("id").unwrap(),
-            m.get_usize("seed").unwrap_or(1) as u64,
+            m.get_u64("seed").unwrap_or(1),
         ),
         "apps" => {
             println!("{:<7} {:>10} {:>8} {:>7} {:>12} {:>10}", "app", "input", "blocks", "iters", "cached@100%", "approach");

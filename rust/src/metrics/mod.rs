@@ -177,7 +177,9 @@ pub struct RunSummary {
     pub exec_memory_mb: Mb,
     pub tasks: usize,
     pub cached_reads: usize,
-    /// Cost = machines x time (machine-seconds).
+    /// Cost = machines x time (machine-seconds — the paper's accounting,
+    /// computed by [`crate::cost::MachineSeconds`]; other pricing models
+    /// re-price a summary via [`crate::cost::PricingModel::price_run`]).
     pub cost_machine_s: f64,
 }
 
@@ -216,7 +218,8 @@ impl RunSummary {
         }
         s.cached_sizes_mb = sizes.into_iter().collect();
         s.exec_memory_mb = exec.values().sum();
-        s.cost_machine_s = s.duration_s * s.machines as f64;
+        // the paper's accounting, delegated to the pluggable cost layer
+        s.cost_machine_s = crate::cost::MachineSeconds.machine_seconds(s.machines, s.duration_s);
         s
     }
 

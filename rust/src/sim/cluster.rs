@@ -1,4 +1,15 @@
-//! Cluster and machine specifications (the paper's testbed, §6).
+//! Cluster and machine specifications: the paper's testbed (§6) plus a
+//! named, priced instance catalog for the fleet-aware cost planner.
+//!
+//! The paper fixes one machine type and lets Blink choose only the count.
+//! [`InstanceType`] attaches a name and an hourly price to a
+//! [`MachineSpec`], and [`InstanceCatalog`] groups the types a deployment
+//! may choose from — the paper's two testbed nodes (`paper`) or a
+//! cloud-style menu of general/compute/memory/storage-optimized shapes
+//! (`cloud`). [`crate::blink::planner`] searches (type × count) over a
+//! catalog; the original constructors ([`ClusterSpec::workers`],
+//! [`ClusterSpec::single_sample_node`]) stay as thin wrappers so every
+//! paper-reproduction call site is untouched.
 
 use crate::util::units::Mb;
 
@@ -64,6 +75,127 @@ impl MachineSpec {
     }
 }
 
+/// A named, priced machine shape — one row of an [`InstanceCatalog`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceType {
+    pub name: &'static str,
+    pub spec: MachineSpec,
+    /// On-demand price per instance-hour (the paper's testbed nodes carry
+    /// an amortized hardware+power figure so both catalogs price the same
+    /// way).
+    pub price_per_hour: f64,
+}
+
+impl InstanceType {
+    /// The paper's i5 worker node, priced at amortized ownership cost.
+    pub fn paper_worker() -> InstanceType {
+        InstanceType { name: "i5-worker", spec: MachineSpec::worker_node(), price_per_hour: 0.10 }
+    }
+
+    /// The paper's i3 sample node.
+    pub fn paper_sample() -> InstanceType {
+        InstanceType { name: "i3-sample", spec: MachineSpec::sample_node(), price_per_hour: 0.05 }
+    }
+
+    /// A homogeneous cluster of `machines` nodes of this type.
+    pub fn cluster(&self, machines: usize) -> ClusterSpec {
+        ClusterSpec { machines, machine: self.spec.clone() }
+    }
+}
+
+fn cloud_spec(cores: usize, ram_gb: f64, disk_mb_s: f64, net_mb_s: f64) -> MachineSpec {
+    MachineSpec {
+        cores,
+        // cloud images keep ~25 % of RAM for OS + daemons, as the paper's
+        // worker does (12 GB executor heap out of 16 GB)
+        heap_mb: ram_gb * 0.75 * 1024.0,
+        memory_fraction: 0.6,
+        storage_fraction: 0.5,
+        disk_mb_s,
+        net_mb_s,
+        coord_s_per_machine: 0.12,
+    }
+}
+
+/// A named set of instance types the planner may choose from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceCatalog {
+    pub name: &'static str,
+    pub instances: Vec<InstanceType>,
+}
+
+impl InstanceCatalog {
+    /// The paper's testbed: the two node types of §6.
+    pub fn paper() -> InstanceCatalog {
+        InstanceCatalog {
+            name: "paper",
+            instances: vec![InstanceType::paper_worker(), InstanceType::paper_sample()],
+        }
+    }
+
+    /// A cloud-style menu: general, compute-, memory- and storage-optimized
+    /// shapes with plausible on-demand prices.
+    pub fn cloud() -> InstanceCatalog {
+        InstanceCatalog {
+            name: "cloud",
+            instances: vec![
+                InstanceType {
+                    name: "gp.xlarge", // general purpose, 4 vCPU / 16 GB
+                    spec: cloud_spec(4, 16.0, 200.0, 300.0),
+                    price_per_hour: 0.192,
+                },
+                InstanceType {
+                    name: "cpu.xlarge", // compute optimized, 4 vCPU / 8 GB
+                    spec: cloud_spec(4, 8.0, 180.0, 300.0),
+                    price_per_hour: 0.170,
+                },
+                InstanceType {
+                    name: "mem.xlarge", // memory optimized, 4 vCPU / 32 GB
+                    spec: cloud_spec(4, 32.0, 200.0, 300.0),
+                    price_per_hour: 0.252,
+                },
+                InstanceType {
+                    name: "mem.2xlarge", // memory optimized, 8 vCPU / 64 GB
+                    spec: cloud_spec(8, 64.0, 250.0, 600.0),
+                    price_per_hour: 0.504,
+                },
+                InstanceType {
+                    name: "io.xlarge", // storage optimized, 4 vCPU / 32 GB, NVMe
+                    spec: cloud_spec(4, 32.0, 450.0, 300.0),
+                    price_per_hour: 0.312,
+                },
+            ],
+        }
+    }
+
+    /// Union of every known catalog.
+    pub fn all() -> InstanceCatalog {
+        let mut instances = InstanceCatalog::paper().instances;
+        instances.extend(InstanceCatalog::cloud().instances);
+        InstanceCatalog { name: "all", instances }
+    }
+
+    /// A one-type catalog (the planner degenerates to §5.4 on it).
+    pub fn single(instance: InstanceType) -> InstanceCatalog {
+        InstanceCatalog { name: "single", instances: vec![instance] }
+    }
+
+    /// Look a catalog up by CLI name.
+    pub fn by_name(name: &str) -> Option<InstanceCatalog> {
+        match name {
+            "paper" => Some(InstanceCatalog::paper()),
+            "cloud" => Some(InstanceCatalog::cloud()),
+            "all" => Some(InstanceCatalog::all()),
+            _ => None,
+        }
+    }
+
+    /// Look an instance type up by name.
+    pub fn get(&self, name: &str) -> Option<&InstanceType> {
+        self.instances.iter().find(|i| i.name == name)
+    }
+}
+
 /// A homogeneous cluster (the paper's "instance size" axis: Blink fixes the
 /// machine type and selects only the count).
 #[derive(Debug, Clone, PartialEq)]
@@ -73,12 +205,14 @@ pub struct ClusterSpec {
 }
 
 impl ClusterSpec {
+    /// The paper's actual-run cluster: `machines` i5 worker nodes.
     pub fn workers(machines: usize) -> ClusterSpec {
-        ClusterSpec { machines, machine: MachineSpec::worker_node() }
+        InstanceType::paper_worker().cluster(machines)
     }
 
+    /// The paper's sampling setup: one i3 node.
     pub fn single_sample_node() -> ClusterSpec {
-        ClusterSpec { machines: 1, machine: MachineSpec::sample_node() }
+        InstanceType::paper_sample().cluster(1)
     }
 
     /// Total caching capacity when execution uses nothing (n x M).
@@ -112,5 +246,52 @@ mod tests {
         let c1 = ClusterSpec::workers(1);
         let c12 = ClusterSpec::workers(12);
         assert!((c12.max_cache_mb() - 12.0 * c1.max_cache_mb()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn thin_constructors_match_paper_specs() {
+        // the planner refactor must not perturb the paper testbed
+        assert_eq!(ClusterSpec::workers(12).machine, MachineSpec::worker_node());
+        let s = ClusterSpec::single_sample_node();
+        assert_eq!(s.machines, 1);
+        assert_eq!(s.machine, MachineSpec::sample_node());
+    }
+
+    #[test]
+    fn catalogs_are_named_priced_and_distinct() {
+        let paper = InstanceCatalog::paper();
+        assert_eq!(paper.instances.len(), 2);
+        let cloud = InstanceCatalog::cloud();
+        assert!(cloud.instances.len() >= 4, "cloud catalog needs >= 4 types");
+        let all = InstanceCatalog::all();
+        assert_eq!(all.instances.len(), paper.instances.len() + cloud.instances.len());
+        let mut names: Vec<&str> = all.instances.iter().map(|i| i.name).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "instance names must be unique");
+        for i in &all.instances {
+            assert!(i.price_per_hour > 0.0, "{}", i.name);
+            assert!(i.spec.unified_mb() > 0.0, "{}", i.name);
+        }
+    }
+
+    #[test]
+    fn catalog_lookup() {
+        assert_eq!(InstanceCatalog::by_name("cloud").unwrap().name, "cloud");
+        assert!(InstanceCatalog::by_name("nope").is_none());
+        let cloud = InstanceCatalog::cloud();
+        assert!(cloud.get("mem.xlarge").is_some());
+        assert!(cloud.get("i5-worker").is_none());
+        assert_eq!(InstanceCatalog::paper().get("i5-worker").unwrap().spec, MachineSpec::worker_node());
+    }
+
+    #[test]
+    fn memory_optimized_types_hold_more_cache_per_node() {
+        let cloud = InstanceCatalog::cloud();
+        let gp = cloud.get("gp.xlarge").unwrap();
+        let mem = cloud.get("mem.xlarge").unwrap();
+        assert!(mem.spec.unified_mb() > 1.9 * gp.spec.unified_mb());
+        assert!(mem.price_per_hour > gp.price_per_hour, "capacity costs money");
     }
 }

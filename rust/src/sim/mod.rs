@@ -23,7 +23,7 @@
 pub mod cluster;
 pub mod profile;
 
-pub use cluster::{ClusterSpec, MachineSpec};
+pub use cluster::{ClusterSpec, InstanceCatalog, InstanceType, MachineSpec};
 pub use profile::{CachedData, WorkloadProfile};
 
 use crate::memory::{EvictionPolicy, PartitionKey, UnifiedMemory};

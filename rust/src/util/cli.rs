@@ -52,6 +52,10 @@ impl Matches {
         self.get(name)?.parse().ok()
     }
 
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name)?.parse().ok()
+    }
+
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -206,6 +210,15 @@ mod tests {
         assert_eq!(m.get("app"), Some("svm"));
         assert_eq!(m.get_f64("scale"), Some(2.5));
         assert!(m.has("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = app();
+        let (_, m) = a.parse(&argv(&["run", "--scale", "42"])).unwrap();
+        assert_eq!(m.get_usize("scale"), Some(42));
+        assert_eq!(m.get_u64("scale"), Some(42));
+        assert_eq!(m.get_u64("app"), None, "non-numeric value");
     }
 
     #[test]

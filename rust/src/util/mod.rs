@@ -11,6 +11,8 @@
 //!   simulator draws from (uniform, normal, log-normal, zipf).
 //! * [`stats`] — mean / variance / percentile / RMSE helpers.
 //! * [`cli`]   — a tiny declarative flag parser for the `blink` binary.
+//! * [`par`]   — deterministic scoped-thread sweeps (a rayon stand-in for
+//!   the experiment drivers' per-cluster-size fan-out).
 //! * [`prop`]  — a miniature property-testing harness (seeded generators +
 //!   failure reporting) standing in for proptest on coordinator invariants.
 //! * [`bench`] — a criterion-like micro-benchmark runner (warmup, fixed
@@ -20,6 +22,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prng;
 pub mod prop;
 pub mod stats;

@@ -48,6 +48,16 @@ pub fn parse_mb(text: &str) -> Option<Mb> {
     num.trim().parse::<f64>().ok().map(|v| v * mult)
 }
 
+/// Signed human-readable size: headrooms/deficits render as "1.5 GB" or
+/// "-512.0 MB" instead of a nonsensical negative unit split.
+pub fn fmt_mb_signed(mb: Mb) -> String {
+    if mb < 0.0 {
+        format!("-{}", fmt_mb(-mb))
+    } else {
+        fmt_mb(mb)
+    }
+}
+
 /// Percentage with one decimal: "4.6 %".
 pub fn fmt_pct(frac: f64) -> String {
     format!("{:.1} %", frac * 100.0)
@@ -62,6 +72,13 @@ mod tests {
         assert_eq!(fmt_mb(0.5), "512.0 KB");
         assert_eq!(fmt_mb(59.6 * 1024.0), "59.6 GB");
         assert_eq!(fmt_mb(30.6), "30.6 MB");
+    }
+
+    #[test]
+    fn formats_signed_sizes() {
+        assert_eq!(fmt_mb_signed(30.6), "30.6 MB");
+        assert_eq!(fmt_mb_signed(-30.6), "-30.6 MB");
+        assert_eq!(fmt_mb_signed(-2048.0), "-2.0 GB");
     }
 
     #[test]

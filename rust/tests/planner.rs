@@ -1,0 +1,162 @@
+//! Integration: the fleet-aware planner and the parallel sweep engine.
+//!
+//! * the catalog search degenerates to the classic §5.4 selector on a
+//!   single-type catalog (property-tested over random footprints);
+//! * the single-type path reproduces the seed's Table-1 picks exactly;
+//! * `blink advise` over the cloud catalog ranks candidates across
+//!   instance types with per-candidate predicted costs;
+//! * the parallel experiment sweep is byte-identical to the serial path
+//!   for fixed seeds;
+//! * saturated selections surface a deficit, never positive headroom.
+
+use blink::blink::{plan, select_cluster_size, Blink, PlanInput, RustFit, DEFAULT_SCALES};
+use blink::cost::{MachineSeconds, PerInstanceHour};
+use blink::experiments;
+use blink::metrics::RunSummary;
+use blink::sim::{InstanceCatalog, InstanceType, MachineSpec};
+use blink::util::par;
+use blink::util::prng::Rng;
+use blink::util::prop::{check, Config};
+use blink::workloads::{app_by_name, FULL_SCALE};
+
+#[test]
+fn property_single_type_catalog_degenerates_to_selector() {
+    let app = app_by_name("svm").unwrap();
+    let profile = app.profile(500.0);
+    check(
+        &Config { cases: 96, seed: 0x91a77e5, max_size: 64 },
+        |rng: &mut Rng, _size| (rng.range(10.0, 150_000.0), rng.range(0.0, 60_000.0)),
+        |&(cached, exec)| {
+            let catalog = InstanceCatalog::single(InstanceType::paper_worker());
+            let input =
+                PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+            let p = plan(&input, &catalog, &MachineSeconds, 16);
+            let sel = select_cluster_size(cached, exec, &MachineSpec::worker_node(), 16);
+            if p.ranked.len() != 1 {
+                return Err(format!("expected one pick, got {}", p.ranked.len()));
+            }
+            let pick = &p.ranked[0];
+            if pick.selection != sel {
+                return Err(format!("selection diverged: {:?} vs {:?}", pick.selection, sel));
+            }
+            if pick.candidate.machines != sel.machines {
+                return Err(format!(
+                    "candidate machines {} vs selector {}",
+                    pick.candidate.machines, sel.machines
+                ));
+            }
+            if pick.candidate.eviction_free == sel.saturated {
+                return Err("eviction_free must be the negation of saturated".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn single_type_planner_reproduces_table1_picks() {
+    // the paper's bold numbers at 100 % — the wrapper path must not move
+    let expect = [
+        ("als", 1),
+        ("bayes", 7),
+        ("gbt", 1),
+        ("km", 4),
+        ("lr", 5),
+        ("pca", 1),
+        ("rfc", 4),
+        ("svm", 7),
+    ];
+    let worker_only = InstanceCatalog::single(InstanceType::paper_worker());
+    for (name, want) in expect {
+        let app = app_by_name(name).unwrap();
+        let mut b = RustFit::default();
+        let advice =
+            Blink::new(&mut b).advise(&app, FULL_SCALE, &worker_only, &MachineSeconds);
+        let best = advice.plan.best().expect("one pick");
+        assert_eq!(best.candidate.machines, want, "{name}");
+        // and it agrees with the legacy decide() pipeline
+        let mut b2 = RustFit::default();
+        let d = Blink::new(&mut b2).decide(&app, FULL_SCALE, &MachineSpec::worker_node());
+        assert_eq!(best.candidate.machines, d.machines, "{name} vs decide()");
+        assert_eq!(best.selection.machines, d.machines, "{name} selection");
+    }
+}
+
+#[test]
+fn advise_ranks_cloud_candidates_for_als() {
+    // acceptance: ALS over >= 2 instance types with per-candidate cost
+    let app = app_by_name("als").unwrap();
+    let mut b = RustFit::default();
+    let mut blink = Blink::new(&mut b);
+    let scales: Vec<f64> = (1..=5).map(|s| s as f64).collect(); // §6.4 extended sampling
+    let advice = blink.advise_with_scales(
+        &app,
+        FULL_SCALE,
+        &InstanceCatalog::cloud(),
+        &PerInstanceHour::hourly(),
+        &scales,
+    );
+    let names: std::collections::BTreeSet<&str> =
+        advice.plan.ranked.iter().map(|p| p.candidate.instance.as_str()).collect();
+    assert!(names.len() >= 2, "ranked list spans {} instance types", names.len());
+    for pick in &advice.plan.ranked {
+        assert!(
+            pick.candidate.predicted_cost > 0.0 && pick.candidate.predicted_cost.is_finite(),
+            "{}: cost {}",
+            pick.candidate.instance,
+            pick.candidate.predicted_cost
+        );
+        assert!(pick.candidate.predicted_time_s > 0.0);
+    }
+    let best = advice.plan.best().expect("cloud catalog fits als");
+    assert!(best.candidate.eviction_free, "top pick must be eviction-free");
+    assert!(!advice.plan.pareto.is_empty());
+    assert!(advice.sample_cost_machine_s > 0.0);
+    assert!(advice.predicted_cached_mb > 0.0);
+}
+
+#[test]
+fn parallel_sweep_byte_identical_to_serial() {
+    // the exact listener logs, serialized — not just aggregate equality
+    let app = app_by_name("svm").unwrap();
+    let run = |n: usize| {
+        experiments::actual_run_full(&app, 200.0, n, 40 + n as u64).log.to_jsonl()
+    };
+    let parallel = par::sweep_range(1, 8, run);
+    let serial = par::sweep_range_serial(1, 8, run);
+    assert_eq!(parallel, serial);
+}
+
+#[test]
+fn table1_row_matches_serial_reference() {
+    // the driver's internal sweep got parallelized; replay the old serial
+    // loop and demand identical rows
+    let app = app_by_name("svm").unwrap();
+    let mut b = RustFit::default();
+    let row = experiments::table1_row(&app, FULL_SCALE, &DEFAULT_SCALES, &mut b, 1);
+    let mut runs = Vec::new();
+    for n in 1..=experiments::MAX_MACHINES {
+        let res = experiments::actual_run_full(&app, FULL_SCALE, n, 1 + n as u64);
+        let s = RunSummary::from_log(&res.log);
+        let free = s.evictions == 0 && (res.cached_fraction_after_load - 1.0).abs() < 1e-9;
+        runs.push((s.duration_s / 60.0, s.cost_machine_s / 60.0, free));
+    }
+    assert_eq!(row.runs, runs);
+    let first_free = runs.iter().position(|r| r.2).map_or(experiments::MAX_MACHINES, |i| i + 1);
+    assert_eq!(row.optimal, first_free);
+}
+
+#[test]
+fn saturated_selection_never_reports_positive_headroom() {
+    // regression for the selector's saturated path, at the API the
+    // coordinator and examples consume
+    for machine in [MachineSpec::worker_node(), MachineSpec::sample_node()] {
+        let s = select_cluster_size(500_000.0, 2_000.0, &machine, 12);
+        assert!(s.saturated);
+        assert!(s.headroom_mb <= 0.0, "headroom {}", s.headroom_mb);
+        assert_eq!(s.cache_deficit_mb(), -s.headroom_mb);
+        // the renderers' signed formatting keeps the sign visible
+        let shown = blink::util::units::fmt_mb_signed(-s.cache_deficit_mb());
+        assert!(shown.starts_with('-'), "rendered as '{shown}'");
+    }
+}

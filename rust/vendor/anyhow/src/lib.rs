@@ -1,0 +1,140 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no registry access, so this path dependency provides
+//! exactly the API surface the `blink` crate uses — `Error`, `Result`,
+//! `anyhow!`, `bail!` and `Context` — with the same semantics for message
+//! construction, context chaining and `{e:#}` formatting. Replacing it with
+//! the real `anyhow = "1"` is a one-line `Cargo.toml` change; no source in
+//! the main crate references anything beyond this surface.
+
+use std::fmt;
+
+/// A message-carrying error. Like `anyhow::Error` it deliberately does NOT
+/// implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` conversion below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a higher-level context message (the `Context` entry point).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` prints the whole chain in real anyhow; the shim keeps the
+        // chain flattened into one message, so both render identically.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to results.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms_and_display() {
+        let name = "linfit";
+        let e = anyhow!("unknown artifact '{name}'");
+        assert_eq!(e.to_string(), "unknown artifact 'linfit'");
+        let e = anyhow!("{} of {}", 1, 2);
+        assert_eq!(format!("{e:#}"), "1 of 2");
+        let e = anyhow!(io_err());
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "manifest.json")).unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest.json: gone");
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        assert_eq!(r.context("load").unwrap_err().to_string(), "load: gone");
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("boom {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert_eq!(inner(true).unwrap_err().to_string(), "boom 7");
+    }
+}
