@@ -24,6 +24,7 @@ fn main() {
             &ClusterSpec::workers(7),
             SimOptions { seed: 1, detailed_log: false, ..Default::default() },
         )
+        .unwrap()
     });
     println!(
         "  -> {:.2} M simulated tasks/s",
@@ -37,8 +38,23 @@ fn main() {
             &ClusterSpec::workers(2),
             SimOptions { seed: 1, detailed_log: false, ..Default::default() },
         )
+        .unwrap()
     });
     println!("  -> {:.2} M tasks/s", tasks as f64 / m.mean_s() / 1e6);
+
+    // engine with a disturbance scenario (journal + event-queue overhead)
+    let spot_fleet =
+        blink::sim::FleetSpec::homogeneous(blink::sim::InstanceType::paper_worker(), 7).unwrap();
+    let m = b.bench("engine/svm-100pct-7-machines-spot", || {
+        blink::sim::engine::run(
+            &profile,
+            &spot_fleet,
+            &blink::sim::scenario::SpotPreemption::default(),
+            SimOptions { seed: 1, detailed_log: false, ..Default::default() },
+        )
+        .unwrap()
+    });
+    println!("  -> {:.2} M tasks/s under spot preemption", tasks as f64 / m.mean_s() / 1e6);
 
     // ---- memory manager --------------------------------------------------
     b.bench("memory/insert-evict-10k", || {
@@ -90,7 +106,8 @@ fn main() {
         &app_by_name("km").unwrap().profile(FULL_SCALE),
         &ClusterSpec::workers(4),
         SimOptions { seed: 1, ..Default::default() },
-    );
+    )
+    .unwrap();
     let text = res.log.to_jsonl();
     println!("  (log: {} events, {} KB)", res.log.events.len(), text.len() / 1024);
     b.bench("metrics/serialize-jsonl", || res.log.to_jsonl());

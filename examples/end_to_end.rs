@@ -74,7 +74,8 @@ fn main() {
             compute: Some(&mut rc),
             detailed_log: true,
         },
-    );
+    )
+    .unwrap();
     let (mut ct, mut nc, mut rt_, mut nr) = (0.0, 0usize, 0.0, 0usize);
     for e in &res.log.events {
         if let blink::metrics::Event::TaskEnd { stage, duration_s, cached_read, .. } = e {
@@ -145,7 +146,8 @@ fn run_real(runtime: &mut Runtime, name: &str, scale: f64) {
             compute: Some(&mut rc),
             detailed_log: true,
         },
-    );
+    )
+    .unwrap();
     let kernel_tasks = rc.tasks_run;
     let s = RunSummary::from_log(&res.log);
     println!(

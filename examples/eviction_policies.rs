@@ -29,7 +29,8 @@ fn main() {
             &app.profile(FULL_SCALE),
             &ClusterSpec::workers(4),
             SimOptions { policy, seed: 3, compute: None, detailed_log: false },
-        );
+        )
+        .unwrap();
         let s = RunSummary::from_log(&res.log);
         let t = s.duration_s / 60.0;
         let delta = base.map(|b: f64| (t - b) / b * 100.0).unwrap_or(0.0);
@@ -67,7 +68,8 @@ fn main() {
             &profile,
             &ClusterSpec::workers(2),
             SimOptions { policy, seed: 3, compute: None, detailed_log: false },
-        );
+        )
+        .unwrap();
         let s = RunSummary::from_log(&res.log);
         println!(
             "  {policy}: {:.1} min, {} evictions, cached at end {:.1} GB",

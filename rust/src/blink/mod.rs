@@ -14,7 +14,10 @@
 //!
 //! Beyond the paper, [`planner`] generalizes step 4 into a catalog-driven
 //! `(instance type × count)` search with pluggable pricing
-//! ([`crate::cost`]), exposed as [`Blink::advise`] / `blink advise`.
+//! ([`crate::cost`]), exposed as [`Blink::advise`] / `blink advise`; its
+//! analytic picks can be cross-validated against event-driven engine runs
+//! under a disturbance scenario ([`planner::risk_adjusted`],
+//! `blink advise --scenario spot`).
 //!
 //! Model fitting dispatches through [`models::FitBackend`]: in production
 //! the batched Pallas `linfit` executable via PJRT (`runtime::linfit`), in
@@ -28,7 +31,7 @@ pub mod sample_runs;
 pub mod selector;
 
 pub use models::{FitBackend, RustFit};
-pub use planner::{plan, CandidateConfig, Plan, PlanInput, TypePick};
+pub use planner::{plan, risk_adjusted, CandidateConfig, Plan, PlanInput, RiskAdjustedPick, TypePick};
 pub use predictor::{ExecMemoryPredictor, SizePredictor};
 pub use sample_runs::{SampleRun, SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
 pub use selector::{machine_split, select_cluster_size, Selection};

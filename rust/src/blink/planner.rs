@@ -21,8 +21,11 @@
 
 use super::selector::{machine_split, select_cluster_size, Selection};
 use crate::cost::PricingModel;
+use crate::memory::EvictionPolicy;
+use crate::metrics::RunSummary;
 use crate::sim::{
-    shuffle_s, ClusterSpec, InstanceCatalog, InstanceType, MachineSpec, WorkloadProfile,
+    engine, shuffle_s, ClusterSpec, FleetSpec, InstanceCatalog, InstanceType, MachineSpec,
+    Scenario, SimOptions, WorkloadProfile,
 };
 use crate::util::units::Mb;
 
@@ -215,10 +218,111 @@ pub fn plan(
     Plan { ranked, grid, pareto }
 }
 
+/// One analytic pick cross-validated against event-driven engine runs
+/// under a disturbance scenario.
+#[derive(Debug, Clone)]
+pub struct RiskAdjustedPick {
+    pub pick: TypePick,
+    /// Mean realized run time across the completed seeds, seconds.
+    /// Infinite when no validation run completed.
+    pub realized_time_s: f64,
+    /// Mean realized cost, priced on the per-machine uptime timeline.
+    /// Infinite when no validation run completed.
+    pub realized_cost: f64,
+    /// Mean machines lost per run under the scenario.
+    pub machines_lost: f64,
+    /// `realized_cost / predicted_cost` — how optimistic the analytic
+    /// quote was once the scenario bites (1.0 = spot-on).
+    pub cost_inflation: f64,
+    /// Engine runs that finished. 0 means the scenario collapsed every
+    /// run (e.g. it reclaimed a 1-machine fleet with no restart) — the
+    /// pick stays in the ranking with infinite realized cost so the
+    /// failure is visible, not silently dropped.
+    pub completed_runs: usize,
+}
+
+/// Cross-validate the top `top_k` ranked picks of `plan` by actually
+/// running `profile` through the event-driven engine under `scenario` for
+/// each validation seed, pricing the realized per-machine timeline, and
+/// re-ranking by mean realized cost. The engine exercises the workload's
+/// *true* physics, so no predicted footprints are consumed here — they
+/// already shaped `plan`.
+///
+/// This is what keeps the catalog search honest about dynamic conditions:
+/// the analytic ranking assumes machines never disappear, so a cheap
+/// spot-style pick can lose to a nominally pricier one once preemption
+/// recompute is priced in.
+pub fn risk_adjusted(
+    profile: &WorkloadProfile,
+    plan: &Plan,
+    catalog: &InstanceCatalog,
+    pricing: &dyn PricingModel,
+    scenario: &dyn Scenario,
+    seeds: &[u64],
+    top_k: usize,
+) -> Vec<RiskAdjustedPick> {
+    let mut out = Vec::new();
+    for pick in plan.ranked.iter().take(top_k) {
+        let Some(instance) = catalog.get(&pick.candidate.instance) else {
+            continue;
+        };
+        let Ok(fleet) = FleetSpec::homogeneous(instance.clone(), pick.candidate.machines) else {
+            continue;
+        };
+        let (mut time, mut cost, mut lost, mut runs) = (0.0, 0.0, 0.0, 0usize);
+        for &seed in seeds {
+            let opts = SimOptions {
+                policy: EvictionPolicy::Lru,
+                seed,
+                compute: None,
+                detailed_log: false,
+            };
+            let Ok(res) = engine::run(profile, &fleet, scenario, opts) else {
+                continue;
+            };
+            let s = RunSummary::from_log(&res.sim.log);
+            time += s.duration_s;
+            cost += pricing.price_timeline(&res.timeline);
+            lost += s.machines_lost as f64;
+            runs += 1;
+        }
+        if runs == 0 {
+            // every validation run collapsed: rank the pick last, loudly
+            out.push(RiskAdjustedPick {
+                pick: pick.clone(),
+                realized_time_s: f64::INFINITY,
+                realized_cost: f64::INFINITY,
+                machines_lost: pick.candidate.machines as f64,
+                cost_inflation: f64::INFINITY,
+                completed_runs: 0,
+            });
+            continue;
+        }
+        let k = runs as f64;
+        let realized_cost = cost / k;
+        out.push(RiskAdjustedPick {
+            pick: pick.clone(),
+            realized_time_s: time / k,
+            realized_cost,
+            machines_lost: lost / k,
+            cost_inflation: realized_cost / pick.candidate.predicted_cost.max(1e-12),
+            completed_runs: runs,
+        });
+    }
+    out.sort_by(|a, b| {
+        a.realized_cost
+            .total_cmp(&b.realized_cost)
+            .then(a.realized_time_s.total_cmp(&b.realized_time_s))
+            .then(a.pick.candidate.instance.cmp(&b.pick.candidate.instance))
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cost::{MachineSeconds, PerInstanceHour};
+    use crate::sim::scenario::{NoDisturbances, SpotPreemption};
     use crate::workloads::{app_by_name, FULL_SCALE};
 
     fn input_for(app: &str, scale: f64) -> (crate::sim::WorkloadProfile, Mb, Mb) {
@@ -304,6 +408,100 @@ mod tests {
         let t4 = estimate_time_s(&profile, &w, 4, cached, 1.0);
         let t8 = estimate_time_s(&profile, &w, 8, cached, 1.0);
         assert!(t8 < t4);
+    }
+
+    #[test]
+    fn risk_adjusted_under_none_tracks_the_simulator() {
+        // with no disturbances, the engine realizes roughly the analytic
+        // picture: no machines lost, finite realized cost per pick
+        let (profile, cached, exec) = input_for("svm", 300.0);
+        let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+        let p = plan(&input, &InstanceCatalog::cloud(), &MachineSeconds, 8);
+        let risks = risk_adjusted(
+            &profile,
+            &p,
+            &InstanceCatalog::cloud(),
+            &MachineSeconds,
+            &NoDisturbances,
+            &[11, 12],
+            3,
+        );
+        assert_eq!(risks.len(), 3);
+        for r in &risks {
+            assert_eq!(r.machines_lost, 0.0);
+            assert_eq!(r.completed_runs, 2);
+            assert!(r.realized_cost > 0.0 && r.realized_cost.is_finite());
+            assert!(r.realized_time_s > 0.0);
+        }
+        // sorted by realized cost
+        for w in risks.windows(2) {
+            assert!(w[0].realized_cost <= w[1].realized_cost);
+        }
+    }
+
+    #[test]
+    fn risk_adjusted_spot_costs_more_than_undisturbed() {
+        // a single-type catalog at a scale whose pick needs >= 2 machines,
+        // so the default spot scenario has a machine to reclaim
+        let (profile, cached, exec) = input_for("svm", 500.0);
+        let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+        let gp = InstanceCatalog::cloud().get("gp.xlarge").unwrap().clone();
+        let catalog = InstanceCatalog::single(gp);
+        let p = plan(&input, &catalog, &MachineSeconds, 8);
+        assert!(p.ranked[0].candidate.machines >= 2, "scale must need a real cluster");
+        let calm =
+            risk_adjusted(&profile, &p, &catalog, &MachineSeconds, &NoDisturbances, &[21], 1);
+        let spot = risk_adjusted(
+            &profile,
+            &p,
+            &catalog,
+            &MachineSeconds,
+            &SpotPreemption::default(),
+            &[21],
+            1,
+        );
+        assert_eq!(calm.len(), 1);
+        assert_eq!(spot.len(), 1);
+        assert_eq!(spot[0].completed_runs, 1);
+        assert!(spot[0].machines_lost >= 1.0);
+        assert!(
+            spot[0].realized_time_s > calm[0].realized_time_s,
+            "preemption must stretch the run: {} vs {}",
+            spot[0].realized_time_s,
+            calm[0].realized_time_s
+        );
+    }
+
+    #[test]
+    fn collapsed_picks_rank_last_instead_of_vanishing() {
+        // a scenario that reclaims machine 0 unconditionally kills every
+        // 1-machine candidate; the pick must survive in the ranking with
+        // infinite realized cost, not disappear from the risk table
+        struct KillFirst;
+        impl crate::sim::Scenario for KillFirst {
+            fn name(&self) -> &'static str {
+                "kill-first"
+            }
+            fn schedule(
+                &self,
+                _ctx: &crate::sim::scenario::ScenarioCtx<'_>,
+            ) -> Vec<crate::sim::Disturbance> {
+                vec![crate::sim::Disturbance {
+                    at_s: 0.0,
+                    kind: crate::sim::DisturbanceKind::Preempt { machine: 0 },
+                }]
+            }
+        }
+        let (profile, _, _) = input_for("svm", 10.0);
+        let input = PlanInput { profile: &profile, cached_total_mb: 0.0, exec_total_mb: 0.0 };
+        let catalog = InstanceCatalog::single(InstanceType::paper_worker());
+        let p = plan(&input, &catalog, &MachineSeconds, 4);
+        assert_eq!(p.ranked[0].candidate.machines, 1, "nothing cached -> one machine");
+        let risks = risk_adjusted(&profile, &p, &catalog, &MachineSeconds, &KillFirst, &[3], 1);
+        assert_eq!(risks.len(), 1, "the collapsed pick stays visible");
+        assert_eq!(risks[0].completed_runs, 0);
+        assert!(risks[0].realized_cost.is_infinite());
+        assert!(risks[0].realized_time_s.is_infinite());
     }
 
     #[test]

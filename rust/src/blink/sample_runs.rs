@@ -89,7 +89,8 @@ impl SampleRunsManager {
                 &profile,
                 &self.node,
                 SimOptions { policy: self.policy, seed: seed + 1000 * attempt as u64, compute: None, detailed_log: true },
-            );
+            )
+            .expect("sample node is valid");
             // the manager consumes logs the way a real deployment would:
             // serialized, then re-parsed
             let text = res.log.to_jsonl();

@@ -8,12 +8,13 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::blink::{Advice, Blink, BlinkDecision, FitBackend, RustFit};
+use crate::blink::{planner, Advice, Blink, BlinkDecision, FitBackend, RustFit};
 use crate::cost::pricing_by_name;
 use crate::experiments::{self, report};
+use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
 use crate::runtime::{artifacts_available, PjrtFit, Runtime};
-use crate::sim::{InstanceCatalog, MachineSpec};
+use crate::sim::{engine, scenario, FleetSpec, InstanceCatalog, MachineSpec, SimOptions};
 use crate::util::units::{fmt_mb, fmt_pct, fmt_secs};
 use crate::workloads::{app_by_name, AppModel};
 
@@ -121,19 +122,26 @@ pub fn cmd_decide(app: &str, scale: f64, verbose: bool) -> Result<BlinkDecision>
 }
 
 /// `blink advise`: the fleet-aware planner — search an instance catalog
-/// for `(type × count)` candidates under a pricing model.
+/// for `(type × count)` candidates under a pricing model. With a scenario
+/// other than `none`, the top analytic picks are cross-validated against
+/// event-driven engine runs under that scenario and re-ranked by realized
+/// cost.
 pub fn cmd_advise(
     app: &str,
     scale: f64,
     catalog_name: &str,
     pricing_name: &str,
     max_machines: usize,
+    scenario_name: &str,
 ) -> Result<Advice> {
     let app = lookup(app)?;
     let catalog = InstanceCatalog::by_name(catalog_name)
         .ok_or_else(|| anyhow!("unknown catalog '{catalog_name}' (paper|cloud|all)"))?;
     let pricing = pricing_by_name(pricing_name).ok_or_else(|| {
         anyhow!("unknown pricing model '{pricing_name}' (machine-seconds|hourly|per-second|spot)")
+    })?;
+    let scenario = scenario::by_name(scenario_name).ok_or_else(|| {
+        anyhow!("unknown scenario '{scenario_name}' (spot|straggler|failure|autoscale|none)")
     })?;
     if max_machines == 0 {
         return Err(anyhow!("--max-machines must be at least 1"));
@@ -156,7 +164,96 @@ pub fn cmd_advise(
         fmt_secs(advice.sample_cost_machine_s),
     );
     report::print_plan(&advice.plan, &catalog, pricing.name());
+    if scenario_name != "none" {
+        let profile = app.profile(scale);
+        let risks = planner::risk_adjusted(
+            &profile,
+            &advice.plan,
+            &catalog,
+            pricing.as_ref(),
+            scenario.as_ref(),
+            &[11, 12, 13],
+            3,
+        );
+        report::print_risk(&risks, scenario.name(), pricing.name());
+    }
     Ok(advice)
+}
+
+/// `blink simulate`: run one workload through the event-driven engine on
+/// a homogeneous fleet of a catalog instance type, under a disturbance
+/// scenario, and compare the realized per-machine cost against the naive
+/// (undisturbed) quote of the same pricing model.
+pub fn cmd_simulate(
+    app: &str,
+    scale: f64,
+    machines: usize,
+    instance_name: &str,
+    scenario_name: &str,
+    pricing_name: &str,
+    seed: u64,
+) -> Result<RunSummary> {
+    let model = lookup(app)?;
+    let catalog = InstanceCatalog::all();
+    let instance = catalog.get(instance_name).ok_or_else(|| {
+        anyhow!("unknown instance type '{instance_name}' (see the paper|cloud catalogs)")
+    })?;
+    let scenario = scenario::by_name(scenario_name).ok_or_else(|| {
+        anyhow!("unknown scenario '{scenario_name}' (spot|straggler|failure|autoscale|none)")
+    })?;
+    let pricing = pricing_by_name(pricing_name).ok_or_else(|| {
+        anyhow!("unknown pricing model '{pricing_name}' (machine-seconds|hourly|per-second|spot)")
+    })?;
+    let fleet = FleetSpec::homogeneous(instance.clone(), machines)
+        .map_err(|e| anyhow!("invalid fleet: {e}"))?;
+    let profile = model.profile(scale);
+    let opts = |seed: u64| SimOptions {
+        policy: EvictionPolicy::Lru,
+        seed,
+        compute: None,
+        detailed_log: false,
+    };
+    let baseline = engine::run(&profile, &fleet, &scenario::NoDisturbances, opts(seed))
+        .map_err(|e| anyhow!("baseline run failed: {e}"))?;
+    let disturbed = engine::run(&profile, &fleet, scenario.as_ref(), opts(seed))
+        .map_err(|e| anyhow!("scenario run failed: {e}"))?;
+    let b = RunSummary::from_log(&baseline.sim.log);
+    let s = RunSummary::from_log(&disturbed.sim.log);
+    println!(
+        "app {}  scale {:.0} ({} input)  fleet {} x {}  scenario '{}'",
+        model.name,
+        scale,
+        fmt_mb(model.input_mb(scale)),
+        machines,
+        instance.name,
+        scenario.name(),
+    );
+    println!(
+        "baseline: {} ({:.1} machine-min), evictions {}, cached after load {}",
+        fmt_secs(b.duration_s),
+        b.cost_machine_min(),
+        b.evictions,
+        fmt_pct(baseline.sim.cached_fraction_after_load),
+    );
+    println!(
+        "scenario: {} ({:+.1} %), evictions {}, machines lost {}, joined {}, cached after load {}",
+        fmt_secs(s.duration_s),
+        (s.duration_s / b.duration_s.max(1e-12) - 1.0) * 100.0,
+        s.evictions,
+        s.machines_lost,
+        s.machines_joined,
+        fmt_pct(disturbed.sim.cached_fraction_after_load),
+    );
+    let naive = pricing.price(instance, machines, b.duration_s);
+    let realized = pricing.price_timeline(&disturbed.timeline);
+    println!(
+        "{} pricing — naive quote {:.4}  realized (per-machine uptime) {:.4}  ({:+.1} %)",
+        pricing.name(),
+        naive,
+        realized,
+        (realized / naive.max(1e-12) - 1.0) * 100.0,
+    );
+    Ok(s)
 }
 
 /// `blink run`: decide, then simulate the actual run at the pick.
@@ -282,9 +379,19 @@ mod tests {
 
     #[test]
     fn advise_rejects_bad_inputs() {
-        assert!(cmd_advise("nope", 1000.0, "cloud", "hourly", 12).is_err());
-        assert!(cmd_advise("svm", 1000.0, "bogus-catalog", "hourly", 12).is_err());
-        assert!(cmd_advise("svm", 1000.0, "cloud", "free-lunch", 12).is_err());
-        assert!(cmd_advise("svm", 1000.0, "cloud", "hourly", 0).is_err());
+        assert!(cmd_advise("nope", 1000.0, "cloud", "hourly", 12, "none").is_err());
+        assert!(cmd_advise("svm", 1000.0, "bogus-catalog", "hourly", 12, "none").is_err());
+        assert!(cmd_advise("svm", 1000.0, "cloud", "free-lunch", 12, "none").is_err());
+        assert!(cmd_advise("svm", 1000.0, "cloud", "hourly", 0, "none").is_err());
+        assert!(cmd_advise("svm", 1000.0, "cloud", "hourly", 12, "meteor").is_err());
+    }
+
+    #[test]
+    fn simulate_rejects_bad_inputs() {
+        assert!(cmd_simulate("nope", 100.0, 4, "gp.xlarge", "spot", "spot", 1).is_err());
+        assert!(cmd_simulate("svm", 100.0, 4, "no-such-shape", "spot", "spot", 1).is_err());
+        assert!(cmd_simulate("svm", 100.0, 4, "gp.xlarge", "meteor", "spot", 1).is_err());
+        assert!(cmd_simulate("svm", 100.0, 4, "gp.xlarge", "spot", "free-lunch", 1).is_err());
+        assert!(cmd_simulate("svm", 100.0, 0, "gp.xlarge", "spot", "spot", 1).is_err());
     }
 }

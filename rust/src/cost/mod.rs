@@ -10,7 +10,7 @@
 //! reproduction bit-identical.
 
 use crate::metrics::RunSummary;
-use crate::sim::InstanceType;
+use crate::sim::{FleetTimeline, InstanceType};
 
 /// Prices a run of `machines` nodes of one instance type for a duration.
 pub trait PricingModel {
@@ -23,6 +23,20 @@ pub trait PricingModel {
     /// Price an analyzed run, assuming `instance` nodes executed it.
     fn price_run(&self, instance: &InstanceType, summary: &RunSummary) -> f64 {
         self.price(instance, summary.machines, summary.duration_s)
+    }
+
+    /// Price a *realized* per-machine timeline from an engine run: each
+    /// uptime segment bills its own instance type for its own span. This
+    /// is what makes disturbances cost something — a preempted spot
+    /// machine stops billing at reclaim time, but the recompute recovery
+    /// stretches every survivor's segment, so the realized total exceeds
+    /// the naive `machines × undisturbed-duration` quote.
+    fn price_timeline(&self, timeline: &FleetTimeline) -> f64 {
+        timeline
+            .entries
+            .iter()
+            .map(|e| self.price(&e.instance, 1, e.up_to_s - e.up_from_s))
+            .sum()
     }
 }
 
@@ -184,6 +198,45 @@ mod tests {
             assert_eq!(pricing_by_name(name).unwrap().name(), name);
         }
         assert!(pricing_by_name("free-lunch").is_none());
+    }
+
+    #[test]
+    fn timeline_pricing_bills_per_machine_uptime() {
+        use crate::sim::TimelineEntry;
+        let entry = |machine: usize, from: f64, to: f64| TimelineEntry {
+            machine,
+            instance: worker(),
+            up_from_s: from,
+            up_to_s: to,
+        };
+        // 2 machines for the whole 100 s, one reclaimed at 40 s
+        let timeline = FleetTimeline {
+            duration_s: 100.0,
+            entries: vec![entry(0, 0.0, 100.0), entry(1, 0.0, 100.0), entry(2, 0.0, 40.0)],
+        };
+        let ms = MachineSeconds.price_timeline(&timeline);
+        assert!((ms - 240.0).abs() < 1e-9, "{ms}");
+        assert!((timeline.machine_seconds() - 240.0).abs() < 1e-9);
+        // per-second billing is proportional to the same uptime
+        let per_s = PerInstanceHour::per_second().price_timeline(&timeline);
+        let expect = worker().price_per_hour * 240.0 / 3600.0;
+        assert!((per_s - expect).abs() < 1e-9, "{per_s} vs {expect}");
+        // an undisturbed timeline equals the classic n × duration quote
+        let flat = FleetTimeline {
+            duration_s: 100.0,
+            entries: vec![entry(0, 0.0, 100.0), entry(1, 0.0, 100.0)],
+        };
+        assert!(
+            (MachineSeconds.price_timeline(&flat) - MachineSeconds.price(&worker(), 2, 100.0))
+                .abs()
+                < 1e-9
+        );
+        // a restart splits one machine into two billed segments
+        let restarted = FleetTimeline {
+            duration_s: 100.0,
+            entries: vec![entry(0, 0.0, 30.0), entry(0, 50.0, 100.0)],
+        };
+        assert!((MachineSeconds.price_timeline(&restarted) - 80.0).abs() < 1e-9);
     }
 
     #[test]

@@ -78,7 +78,8 @@ impl ErnestModel {
                     compute: None,
                     detailed_log: false,
                 },
-            );
+            )
+            .expect("experiment-design clusters are valid");
             let s = RunSummary::from_log(&res.log);
             x.push(features(e.fraction, e.machines));
             y.push(s.duration_s);
@@ -148,7 +149,8 @@ mod tests {
                 &app.profile(FULL_SCALE),
                 &ClusterSpec::workers(1),
                 SimOptions::default(),
-            );
+            )
+            .unwrap();
             RunSummary::from_log(&res.log).duration_s
         };
         assert!(

@@ -30,6 +30,7 @@ pub fn actual_run_full(app: &AppModel, scale: f64, machines: usize, seed: u64) -
         &ClusterSpec::workers(machines),
         SimOptions { policy: EvictionPolicy::Lru, seed, compute: None, detailed_log: false },
     )
+    .expect("paper testbed clusters are valid")
 }
 
 /// Sampling scales per app for the enlarged-scale study (§6.4: GBT and ALS
@@ -209,7 +210,8 @@ pub fn fig4(seed: u64) -> Vec<Fig4Scale> {
                         compute: None,
                         detailed_log: false,
                     },
-                );
+                )
+                .expect("single-machine cluster is valid");
                 let s = RunSummary::from_log(&res.log);
                 (s.duration_s, s.total_cached_mb())
             })
@@ -485,7 +487,8 @@ fn table2_impl(seed: u64, with_probes: bool) -> Vec<Table2Row> {
                                 compute: None,
                                 detailed_log: false,
                             },
-                        );
+                        )
+                        .expect("12-worker cluster is valid");
                         let s = RunSummary::from_log(&res.log);
                         (off, eviction_free(&s, &res))
                     })
@@ -584,7 +587,8 @@ pub fn sec4_parallelism(seed: u64) -> Sec4Parallelism {
             &p,
             &ClusterSpec::workers(1),
             SimOptions { policy: EvictionPolicy::Lru, seed, compute: None, detailed_log: false },
-        );
+        )
+        .expect("single-machine cluster is valid");
         let s = RunSummary::from_log(&res.log);
         (s.duration_s, s.total_cached_mb())
     };
@@ -616,7 +620,8 @@ pub fn sec4_single_vs_cluster(seed: u64) -> Sec4Cluster {
             &profile,
             &ClusterSpec::workers(n),
             SimOptions { policy: EvictionPolicy::Lru, seed, compute: None, detailed_log: false },
-        );
+        )
+        .expect("worker cluster is valid");
         RunSummary::from_log(&res.log).cost_machine_s
     };
     Sec4Cluster { cost_single: cost(1), cost_cluster: cost(12) }

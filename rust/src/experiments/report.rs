@@ -2,7 +2,7 @@
 //! plus the fleet planner's ranked/Pareto report.
 
 use super::*;
-use crate::blink::Plan;
+use crate::blink::{Plan, RiskAdjustedPick};
 use crate::sim::InstanceCatalog;
 use crate::util::units::{fmt_mb_signed, fmt_pct, fmt_secs};
 
@@ -264,6 +264,47 @@ pub fn print_plan(plan: &Plan, catalog: &InstanceCatalog, pricing: &str) {
             } else {
                 "  — WARNING: cluster bound hit on every type; run will evict"
             }
+        );
+    }
+}
+
+/// Risk cross-validation table: the planner's analytic picks realized by
+/// event-driven engine runs under a disturbance scenario.
+pub fn print_risk(risks: &[RiskAdjustedPick], scenario: &str, pricing: &str) {
+    println!(
+        "\nRISK — top picks cross-validated by engine runs (scenario '{scenario}', pricing '{pricing}')"
+    );
+    if risks.is_empty() {
+        println!("  (no pick could be validated)");
+        return;
+    }
+    println!(
+        "{:>4} {:<12} {:>4} {:>12} {:>14} {:>10} {:>6}",
+        "rank", "instance", "n", "time", "realized", "vs quote", "lost"
+    );
+    for (i, r) in risks.iter().enumerate() {
+        if r.completed_runs == 0 {
+            println!(
+                "{:>4} {:<12} {:>4} {:>12} {:>14} {:>10} {:>6}",
+                i + 1,
+                r.pick.candidate.instance,
+                r.pick.candidate.machines,
+                "COLLAPSED",
+                "inf",
+                "-",
+                r.machines_lost,
+            );
+            continue;
+        }
+        println!(
+            "{:>4} {:<12} {:>4} {:>12} {:>14.4} {:>+9.1}% {:>6.1}",
+            i + 1,
+            r.pick.candidate.instance,
+            r.pick.candidate.machines,
+            fmt_secs(r.realized_time_s),
+            r.realized_cost,
+            (r.cost_inflation - 1.0) * 100.0,
+            r.machines_lost,
         );
     }
 }

@@ -3,6 +3,7 @@
 //! ```text
 //! blink decide      --app svm --scale 1000        # recommend a cluster size
 //! blink advise      --app als --catalog cloud     # fleet-aware (type x count) plan
+//! blink simulate    --app svm --scenario spot     # engine run under a disturbance
 //! blink run         --app km  --scale 2000        # decide + actual run
 //! blink bounds      --app lr  --machines 12       # Table-2 max data scale
 //! blink experiment  --id table1                   # regenerate a paper table/figure
@@ -40,6 +41,32 @@ fn app() -> App {
                         "hourly",
                     ),
                     Opt::with_default("max-machines", "largest candidate cluster size", "12"),
+                    Opt::with_default(
+                        "scenario",
+                        "cross-validate top picks via engine runs (spot|straggler|failure|autoscale|none)",
+                        "none",
+                    ),
+                ],
+            },
+            Command {
+                name: "simulate",
+                about: "run the event-driven engine under a disturbance scenario and price the realized timeline",
+                opts: vec![
+                    Opt::with_default("app", "workload (als|bayes|gbt|km|lr|pca|rfc|svm)", "svm"),
+                    Opt::with_default("scale", "target data scale (1000 = 100 %)", "1000"),
+                    Opt::with_default("machines", "fleet size", "8"),
+                    Opt::with_default("instance", "instance type name (e.g. i5-worker, gp.xlarge)", "gp.xlarge"),
+                    Opt::with_default(
+                        "scenario",
+                        "disturbance scenario (spot|straggler|failure|autoscale|none)",
+                        "spot",
+                    ),
+                    Opt::with_default(
+                        "pricing",
+                        "pricing model (machine-seconds|hourly|per-second|spot)",
+                        "spot",
+                    ),
+                    Opt::with_default("seed", "simulation seed", "1"),
                 ],
             },
             Command {
@@ -99,6 +126,17 @@ fn main() {
             m.get("catalog").unwrap(),
             m.get("pricing").unwrap(),
             m.get_usize("max-machines").unwrap_or(12),
+            m.get("scenario").unwrap(),
+        )
+        .map(|_| ()),
+        "simulate" => coordinator::cmd_simulate(
+            m.get("app").unwrap(),
+            m.get_f64("scale").unwrap_or(1000.0),
+            m.get_usize("machines").unwrap_or(8),
+            m.get("instance").unwrap(),
+            m.get("scenario").unwrap(),
+            m.get("pricing").unwrap(),
+            m.get_u64("seed").unwrap_or(1),
         )
         .map(|_| ()),
         "run" => coordinator::cmd_run(

@@ -110,6 +110,22 @@ impl UnifiedMemory {
         std::mem::take(&mut self.evicted_log)
     }
 
+    /// Drop every cached partition at once: the machine holding this store
+    /// left the fleet (spot reclaim, failure). Unlike eviction this is not
+    /// memory pressure — it bypasses the policy and the eviction stats/log
+    /// (the engine reports the loss as a `MachineLost` event instead) and
+    /// returns the keys that vanished so the caller can invalidate
+    /// partition locations. Execution-memory accounting is untouched.
+    pub fn release_all(&mut self) -> Vec<PartitionKey> {
+        let keys: Vec<PartitionKey> = self.cached.keys().copied().collect();
+        self.cached.clear();
+        self.lru_index.clear();
+        self.per_dataset.clear();
+        self.cached_total_mb = 0.0;
+        self.evicted_log.clear();
+        keys
+    }
+
     /// Storage space currently available for caching: execution may claim
     /// at most `M - R`, so storage keeps at least `R` and at most `M`.
     pub fn storage_limit_mb(&self) -> Mb {
@@ -437,6 +453,27 @@ mod tests {
         assert_eq!(m.cached_fraction(3, 10), 0.5);
         assert_eq!(m.cached_fraction(9, 10), 0.0);
         assert_eq!(m.cached_fraction(3, 0), 0.0);
+    }
+
+    #[test]
+    fn release_all_empties_the_store_without_counting_evictions() {
+        let mut m = UnifiedMemory::new(100.0, 50.0, EvictionPolicy::Lru);
+        for i in 0..8 {
+            assert!(m.insert(key(1, i), 10.0, 3, 1));
+        }
+        m.claim_execution(30.0);
+        let before = m.stats();
+        let mut keys = m.release_all();
+        keys.sort_unstable();
+        assert_eq!(keys, (0..8).map(|i| key(1, i)).collect::<Vec<_>>());
+        assert_eq!(m.num_cached(), 0);
+        assert_eq!(m.cached_mb(), 0.0);
+        assert_eq!(m.stats().evictions, before.evictions, "loss is not eviction");
+        assert_eq!(m.exec_used_mb(), 30.0, "execution accounting untouched");
+        assert!(m.drain_evicted().is_empty(), "no stale eviction log entries");
+        // the store keeps working after a release
+        assert!(m.insert(key(2, 0), 10.0, 3, 1));
+        assert!(m.contains(key(2, 0)));
     }
 
     #[test]

@@ -2,10 +2,17 @@
 //!
 //! While a (simulated or real-compute) run executes, an [`EventLog`]
 //! collects structured events — task ends, block updates, evictions, job
-//! boundaries — exactly the information the paper's *SparkListener* dumps
-//! to HDFS log files. Blink's sample-runs manager consumes the *serialized
-//! JSON* form of these logs (not in-process state), mirroring the paper's
-//! architecture and exercising the same parse path a real deployment would.
+//! boundaries, machine lifecycle — exactly the information the paper's
+//! *SparkListener* dumps to HDFS log files. Blink's sample-runs manager
+//! consumes the *serialized JSON* form of these logs (not in-process
+//! state), mirroring the paper's architecture and exercising the same
+//! parse path a real deployment would.
+//!
+//! Parsing is explicit about failure modes: a malformed known event is a
+//! typed [`EventDecodeError`] (hard error), while an *unknown* event kind
+//! is skipped for forward compatibility — and counted, via
+//! [`EventLog::from_jsonl_counted`], so a consumer can tell "clean log"
+//! from "log written by a newer producer".
 
 use crate::util::json::Json;
 use crate::util::units::Mb;
@@ -37,9 +44,44 @@ pub enum Event {
     JobEnd { job: usize, duration_s: f64 },
     /// Peak execution memory observed on a machine.
     ExecMemory { machine: usize, peak_mb: Mb },
+    /// A machine left the fleet (spot reclaim or failure): its cached
+    /// bytes vanished and `inflight_tasks` of the running job were rewound
+    /// onto survivors.
+    MachineLost {
+        machine: usize,
+        time_s: f64,
+        cached_mb_lost: Mb,
+        inflight_tasks: usize,
+    },
+    /// A machine (re)joined the fleet with empty memory (failure restart
+    /// or step autoscaling).
+    MachineJoined { machine: usize, time_s: f64 },
     /// Application finished.
     AppEnd { duration_s: f64 },
 }
+
+/// Typed decode failure for one serialized event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventDecodeError {
+    /// The `event` kind is not one this consumer knows. Forward-compatible
+    /// log readers skip (and count) these.
+    UnknownKind(String),
+    /// A known kind is missing a field or carries the wrong type.
+    Malformed { kind: String, field: &'static str },
+}
+
+impl std::fmt::Display for EventDecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EventDecodeError::UnknownKind(kind) => write!(f, "unknown event kind '{kind}'"),
+            EventDecodeError::Malformed { kind, field } => {
+                write!(f, "event '{kind}': missing or mistyped field '{field}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EventDecodeError {}
 
 impl Event {
     pub fn to_json(&self) -> Json {
@@ -79,6 +121,20 @@ impl Event {
                 ("machine", (*machine).into()),
                 ("peakMb", (*peak_mb).into()),
             ]),
+            Event::MachineLost { machine, time_s, cached_mb_lost, inflight_tasks } => {
+                Json::obj(vec![
+                    ("event", "MachineLost".into()),
+                    ("machine", (*machine).into()),
+                    ("timeS", (*time_s).into()),
+                    ("cachedMbLost", (*cached_mb_lost).into()),
+                    ("inflightTasks", (*inflight_tasks).into()),
+                ])
+            }
+            Event::MachineJoined { machine, time_s } => Json::obj(vec![
+                ("event", "MachineJoined".into()),
+                ("machine", (*machine).into()),
+                ("timeS", (*time_s).into()),
+            ]),
             Event::AppEnd { duration_s } => Json::obj(vec![
                 ("event", "AppEnd".into()),
                 ("durationS", (*duration_s).into()),
@@ -86,13 +142,37 @@ impl Event {
         }
     }
 
-    pub fn from_json(j: &Json) -> Option<Event> {
-        let kind = j.get("event")?.as_str()?;
-        let f = |k: &str| j.get(k).and_then(Json::as_f64);
-        let u = |k: &str| f(k).map(|v| v as usize);
-        Some(match kind {
+    /// Decode one serialized event. Unknown kinds and malformed known
+    /// kinds are distinct typed errors so callers can skip the former and
+    /// abort on the latter.
+    pub fn from_json(j: &Json) -> Result<Event, EventDecodeError> {
+        let kind = j
+            .get("event")
+            .and_then(Json::as_str)
+            .ok_or_else(|| EventDecodeError::Malformed { kind: String::new(), field: "event" })?;
+        let f = |k: &'static str| -> Result<f64, EventDecodeError> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| EventDecodeError::Malformed { kind: kind.to_string(), field: k })
+        };
+        let u = |k: &'static str| -> Result<usize, EventDecodeError> {
+            f(k).map(|v| v as usize)
+        };
+        let b = |k: &'static str| -> Result<bool, EventDecodeError> {
+            j.get(k)
+                .and_then(Json::as_bool)
+                .ok_or_else(|| EventDecodeError::Malformed { kind: kind.to_string(), field: k })
+        };
+        Ok(match kind {
             "AppStart" => Event::AppStart {
-                app: j.get("app")?.as_str()?.to_string(),
+                app: j
+                    .get("app")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| EventDecodeError::Malformed {
+                        kind: kind.to_string(),
+                        field: "app",
+                    })?
+                    .to_string(),
                 machines: u("machines")?,
                 data_scale: f("dataScale")?,
             },
@@ -101,13 +181,13 @@ impl Event {
                 task: u("task")?,
                 machine: u("machine")?,
                 duration_s: f("durationS")?,
-                cached_read: j.get("cachedRead")?.as_bool()?,
+                cached_read: b("cachedRead")?,
             },
             "BlockUpdate" => Event::BlockUpdate {
                 dataset: u("dataset")?,
                 partition: u("partition")?,
                 size_mb: f("sizeMb")?,
-                stored: j.get("stored")?.as_bool()?,
+                stored: b("stored")?,
             },
             "Eviction" => Event::Eviction { machine: u("machine")? },
             "JobEnd" => Event::JobEnd { job: u("job")?, duration_s: f("durationS")? },
@@ -115,10 +195,48 @@ impl Event {
                 machine: u("machine")?,
                 peak_mb: f("peakMb")?,
             },
+            "MachineLost" => Event::MachineLost {
+                machine: u("machine")?,
+                time_s: f("timeS")?,
+                cached_mb_lost: f("cachedMbLost")?,
+                inflight_tasks: u("inflightTasks")?,
+            },
+            "MachineJoined" => Event::MachineJoined {
+                machine: u("machine")?,
+                time_s: f("timeS")?,
+            },
             "AppEnd" => Event::AppEnd { duration_s: f("durationS")? },
-            _ => return None,
+            other => return Err(EventDecodeError::UnknownKind(other.to_string())),
         })
     }
+}
+
+/// Why a JSONL log failed to parse.
+#[derive(Debug)]
+pub enum LogParseError {
+    /// A line is not valid JSON.
+    Json(crate::util::json::ParseError),
+    /// A line is valid JSON but a malformed known event.
+    Event(EventDecodeError),
+}
+
+impl std::fmt::Display for LogParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LogParseError::Json(e) => write!(f, "{e}"),
+            LogParseError::Event(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for LogParseError {}
+
+/// A parsed log plus forward-compatibility diagnostics.
+#[derive(Debug, Clone)]
+pub struct ParsedLog {
+    pub log: EventLog,
+    /// Lines whose `event` kind this consumer does not know (skipped).
+    pub unknown_skipped: usize,
 }
 
 /// In-memory event log; serializes to JSON-lines like a listener log file.
@@ -146,19 +264,30 @@ impl EventLog {
         s
     }
 
-    /// Parse a JSON-lines log. Unknown events are skipped (forward compat).
-    pub fn from_jsonl(text: &str) -> Result<EventLog, crate::util::json::ParseError> {
+    /// Parse a JSON-lines log. Unknown event kinds are skipped (forward
+    /// compat — use [`EventLog::from_jsonl_counted`] to observe how many);
+    /// malformed lines are an error.
+    pub fn from_jsonl(text: &str) -> Result<EventLog, LogParseError> {
+        Self::from_jsonl_counted(text).map(|p| p.log)
+    }
+
+    /// Like [`EventLog::from_jsonl`], but reports how many unknown-kind
+    /// lines were skipped instead of dropping them silently.
+    pub fn from_jsonl_counted(text: &str) -> Result<ParsedLog, LogParseError> {
         let mut log = EventLog::new();
+        let mut unknown_skipped = 0usize;
         for line in text.lines() {
             if line.trim().is_empty() {
                 continue;
             }
-            let j = crate::util::json::parse(line)?;
-            if let Some(e) = Event::from_json(&j) {
-                log.push(e);
+            let j = crate::util::json::parse(line).map_err(LogParseError::Json)?;
+            match Event::from_json(&j) {
+                Ok(e) => log.push(e),
+                Err(EventDecodeError::UnknownKind(_)) => unknown_skipped += 1,
+                Err(e) => return Err(LogParseError::Event(e)),
             }
         }
-        Ok(log)
+        Ok(ParsedLog { log, unknown_skipped })
     }
 }
 
@@ -177,9 +306,15 @@ pub struct RunSummary {
     pub exec_memory_mb: Mb,
     pub tasks: usize,
     pub cached_reads: usize,
+    /// Machines lost mid-run (spot reclaim / failure).
+    pub machines_lost: usize,
+    /// Machines that (re)joined mid-run (restart / autoscaling).
+    pub machines_joined: usize,
     /// Cost = machines x time (machine-seconds — the paper's accounting,
     /// computed by [`crate::cost::MachineSeconds`]; other pricing models
-    /// re-price a summary via [`crate::cost::PricingModel::price_run`]).
+    /// re-price a summary via [`crate::cost::PricingModel::price_run`],
+    /// and disturbed engine runs price their realized per-machine uptime
+    /// via [`crate::cost::PricingModel::price_timeline`]).
     pub cost_machine_s: f64,
 }
 
@@ -212,6 +347,8 @@ impl RunSummary {
                     let e = exec.entry(*machine).or_default();
                     *e = e.max(*peak_mb);
                 }
+                Event::MachineLost { .. } => s.machines_lost += 1,
+                Event::MachineJoined { .. } => s.machines_joined += 1,
                 Event::JobEnd { .. } => {}
                 Event::AppEnd { duration_s } => s.duration_s = *duration_s,
             }
@@ -264,12 +401,49 @@ mod tests {
         log
     }
 
+    /// One of every variant, for exhaustive round-trip coverage.
+    fn one_of_each() -> Vec<Event> {
+        vec![
+            Event::AppStart { app: "x".into(), machines: 3, data_scale: 1.5 },
+            Event::TaskEnd {
+                stage: 1,
+                task: 2,
+                machine: 0,
+                duration_s: 0.25,
+                cached_read: true,
+            },
+            Event::BlockUpdate { dataset: 0, partition: 9, size_mb: 12.5, stored: false },
+            Event::Eviction { machine: 2 },
+            Event::JobEnd { job: 4, duration_s: 9.0 },
+            Event::ExecMemory { machine: 1, peak_mb: 333.25 },
+            Event::MachineLost {
+                machine: 3,
+                time_s: 42.5,
+                cached_mb_lost: 1024.0,
+                inflight_tasks: 7,
+            },
+            Event::MachineJoined { machine: 3, time_s: 60.25 },
+            Event::AppEnd { duration_s: 77.5 },
+        ]
+    }
+
     #[test]
     fn jsonl_roundtrip_preserves_events() {
         let log = sample_log();
         let text = log.to_jsonl();
         let back = EventLog::from_jsonl(&text).unwrap();
         assert_eq!(log.events, back.events);
+    }
+
+    #[test]
+    fn jsonl_roundtrip_covers_every_variant() {
+        let mut log = EventLog::new();
+        for e in one_of_each() {
+            log.push(e);
+        }
+        let parsed = EventLog::from_jsonl_counted(&log.to_jsonl()).unwrap();
+        assert_eq!(parsed.log.events, log.events);
+        assert_eq!(parsed.unknown_skipped, 0);
     }
 
     #[test]
@@ -286,6 +460,24 @@ mod tests {
         assert_eq!(s.cost_machine_s, 180.0);
         assert_eq!(s.cost_machine_min(), 3.0);
         assert_eq!(s.total_cached_mb(), 121.5);
+        assert_eq!(s.machines_lost, 0);
+        assert_eq!(s.machines_joined, 0);
+    }
+
+    #[test]
+    fn summary_counts_machine_lifecycle() {
+        let mut log = sample_log();
+        log.push(Event::MachineLost {
+            machine: 1,
+            time_s: 30.0,
+            cached_mb_lost: 60.5,
+            inflight_tasks: 2,
+        });
+        log.push(Event::MachineJoined { machine: 1, time_s: 45.0 });
+        log.push(Event::MachineJoined { machine: 2, time_s: 50.0 });
+        let s = RunSummary::from_log(&log);
+        assert_eq!(s.machines_lost, 1);
+        assert_eq!(s.machines_joined, 2);
     }
 
     #[test]
@@ -298,14 +490,49 @@ mod tests {
     }
 
     #[test]
-    fn unknown_events_skipped() {
+    fn unknown_events_skipped_and_counted() {
         let text = "{\"event\":\"FutureThing\",\"x\":1}\n{\"event\":\"AppEnd\",\"durationS\":5}\n";
         let log = EventLog::from_jsonl(text).unwrap();
         assert_eq!(log.events.len(), 1);
+        let parsed = EventLog::from_jsonl_counted(text).unwrap();
+        assert_eq!(parsed.unknown_skipped, 1);
+        assert_eq!(parsed.log.events.len(), 1);
+    }
+
+    #[test]
+    fn unknown_kind_is_a_typed_error_at_the_event_level() {
+        let j = crate::util::json::parse("{\"event\":\"FutureThing\",\"x\":1}").unwrap();
+        assert_eq!(
+            Event::from_json(&j),
+            Err(EventDecodeError::UnknownKind("FutureThing".into()))
+        );
+    }
+
+    #[test]
+    fn malformed_known_event_is_a_hard_error() {
+        // a JobEnd without its duration must not be silently dropped
+        let text = "{\"event\":\"JobEnd\",\"job\":3}\n";
+        let err = EventLog::from_jsonl(text).unwrap_err();
+        match err {
+            LogParseError::Event(EventDecodeError::Malformed { kind, field }) => {
+                assert_eq!(kind, "JobEnd");
+                assert_eq!(field, "durationS");
+            }
+            other => panic!("unexpected error {other:?}"),
+        }
+        // and a line without an `event` kind at all
+        let err = EventLog::from_jsonl("{\"x\":1}\n").unwrap_err();
+        assert!(matches!(
+            err,
+            LogParseError::Event(EventDecodeError::Malformed { field: "event", .. })
+        ));
     }
 
     #[test]
     fn bad_json_is_an_error() {
-        assert!(EventLog::from_jsonl("{nope}").is_err());
+        assert!(matches!(
+            EventLog::from_jsonl("{nope}"),
+            Err(LogParseError::Json(_))
+        ));
     }
 }

@@ -1,0 +1,1264 @@
+//! Event-driven simulation engine over heterogeneous fleets.
+//!
+//! This is the refactored core of the old monolithic `simulate()` loop:
+//! an explicit time-ordered event queue of scenario disturbances and
+//! machine-lifecycle events, drained against the scheduling frontier as
+//! per-machine [`MachineState`]s execute jobs. The legacy
+//! [`super::simulate`] is now a thin wrapper over [`run`] with
+//! [`super::scenario::NoDisturbances`], and is byte-identical (event log
+//! JSONL) to the pre-refactor serial code — property-tested in
+//! `rust/tests/engine_equivalence.rs` — so the paper reproduction never
+//! moves.
+//!
+//! What the engine adds over the legacy loop:
+//!
+//! * **heterogeneous fleets** — a [`FleetSpec`] of mixed
+//!   [`InstanceType`] groups; task durations and shuffle/coordination
+//!   overheads use the spec of the machine a task actually runs on;
+//! * **disturbances** — spot preemption (cached partitions and in-flight
+//!   tasks lost, survivors recompute via the existing Area-A lineage
+//!   path), straggler slowdown windows, machine failure with restart, and
+//!   step autoscaling; lost/joined machines emit
+//!   [`Event::MachineLost`]/[`Event::MachineJoined`];
+//! * **realized timelines** — per-machine uptime segments
+//!   ([`FleetTimeline`]) so [`crate::cost::PricingModel::price_timeline`]
+//!   can price what actually ran (a preempted spot fleet bills fewer
+//!   machine-seconds but stretches the run — the realized cost the naive
+//!   `SpotDiscount` quote ignores).
+//!
+//! ## In-flight semantics
+//!
+//! Task events are journaled per job and flushed at the job barrier.
+//! When a machine is lost at time `t`, journaled tasks of that machine
+//! whose finish time exceeds `t` are *rewound* — their events and
+//! counters are undone and their partitions re-enter the job's work
+//! queue, to be re-executed on survivors (as a recompute, since the lost
+//! machine's cache went with it); a retry never starts before the loss
+//! that caused it. Tasks that finished before `t` keep their events;
+//! their cached partitions are still dropped, so later iterations
+//! recompute them — exactly the lineage recovery a Spark driver performs
+//! after an executor loss.
+//!
+//! One deliberate approximation: within a job, tasks are assigned in
+//! partition order (the legacy greedy list scheduler — required for
+//! byte-identity with the pre-engine simulator), not in simulated-time
+//! order. Disturbances are drained against each candidate task's start
+//! time, so a disturbance can be applied "before" a lower-start task of
+//! a higher partition index is scheduled. Tasks of one job are logically
+//! concurrent, so this only shifts which in-flight tasks a loss rewinds;
+//! job barriers and all cross-job effects remain time-consistent.
+
+use std::collections::VecDeque;
+
+use super::cluster::InstanceType;
+use super::fleet::{FleetSpec, SimError};
+use super::profile::WorkloadProfile;
+use super::scenario::{DisturbanceKind, Scenario, ScenarioCtx};
+use super::{SimOptions, SimResult, TaskCompute};
+use crate::memory::{EvictionPolicy, PartitionKey, UnifiedMemory};
+use crate::metrics::{Event, EventLog};
+use crate::util::prng::Rng;
+use crate::util::units::Mb;
+
+/// One machine's live state: slot clocks, unified memory, lifecycle.
+pub struct MachineState {
+    pub spec: super::MachineSpec,
+    pub instance: InstanceType,
+    /// Index into the engine's group table (for overhead aggregation).
+    group: usize,
+    pub alive: bool,
+    /// Next-free time per core slot (seconds).
+    slots: Vec<f64>,
+    mem: UnifiedMemory,
+    tasks_run: usize,
+    iter_tasks: usize,
+    evictions: usize,
+    /// Start of the current uptime segment.
+    up_from_s: f64,
+    /// Closed uptime segments (machine losses close them).
+    segments: Vec<(f64, f64)>,
+    slow_factor: f64,
+    /// Straggler window: tasks starting in `[slow_from, slow_until)` run
+    /// `slow_factor`× slower.
+    slow_from: f64,
+    slow_until: f64,
+}
+
+impl MachineState {
+    fn slowdown_at(&self, start: f64) -> f64 {
+        if start >= self.slow_from && start < self.slow_until {
+            self.slow_factor
+        } else {
+            1.0
+        }
+    }
+}
+
+impl MachineState {
+    fn new(instance: &InstanceType, group: usize, policy: EvictionPolicy, at_s: f64) -> Self {
+        MachineState {
+            spec: instance.spec.clone(),
+            instance: instance.clone(),
+            group,
+            alive: true,
+            slots: vec![at_s; instance.spec.cores],
+            mem: UnifiedMemory::new(
+                instance.spec.unified_mb(),
+                instance.spec.storage_floor_mb(),
+                policy,
+            ),
+            tasks_run: 0,
+            iter_tasks: 0,
+            evictions: 0,
+            up_from_s: at_s,
+            segments: Vec::new(),
+            slow_factor: 1.0,
+            slow_from: f64::INFINITY,
+            slow_until: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// One machine's realized uptime interval.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineEntry {
+    pub machine: usize,
+    pub instance: InstanceType,
+    pub up_from_s: f64,
+    pub up_to_s: f64,
+}
+
+/// The realized per-machine timeline of a run — what actually got billed.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetTimeline {
+    pub duration_s: f64,
+    pub entries: Vec<TimelineEntry>,
+}
+
+impl FleetTimeline {
+    /// Total realized uptime across machines (the paper's accounting unit).
+    pub fn machine_seconds(&self) -> f64 {
+        self.entries.iter().map(|e| e.up_to_s - e.up_from_s).sum()
+    }
+}
+
+/// Outcome of an engine run: the legacy [`SimResult`] plus the realized
+/// timeline the cost layer prices.
+pub struct EngineResult {
+    pub sim: SimResult,
+    pub timeline: FleetTimeline,
+}
+
+// ---------------------------------------------------------------------
+// event queue
+// ---------------------------------------------------------------------
+
+enum QueuedKind {
+    Disturb(DisturbanceKind),
+    /// Internal: a failed machine coming back (scheduled by `Fail`).
+    Rejoin { machine: usize },
+}
+
+struct QueueItem {
+    at_s: f64,
+    seq: u64,
+    kind: QueuedKind,
+}
+
+/// Time-ordered queue of pending engine events. Sizes are tiny (a handful
+/// of disturbances per run), so a scanned `Vec` beats a heap and keeps
+/// `(at_s, seq)` ordering trivially stable.
+struct EventQueue {
+    items: Vec<QueueItem>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn new() -> Self {
+        EventQueue { items: Vec::new(), seq: 0 }
+    }
+
+    fn push(&mut self, at_s: f64, kind: QueuedKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.items.push(QueueItem { at_s, seq, kind });
+    }
+
+    /// Remove and return the earliest item due at or before `t`, if any.
+    fn pop_due(&mut self, t: f64) -> Option<QueueItem> {
+        let mut best: Option<usize> = None;
+        for (i, it) in self.items.iter().enumerate() {
+            if it.at_s > t {
+                continue;
+            }
+            best = match best {
+                None => Some(i),
+                Some(b) => {
+                    let cur = &self.items[b];
+                    if (it.at_s, it.seq) < (cur.at_s, cur.seq) {
+                        Some(i)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        best.map(|i| self.items.remove(i))
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-job journal
+// ---------------------------------------------------------------------
+
+/// Journal of a job in flight. Flushed to the log at the job barrier in
+/// assignment order (identical to the legacy push order); task entries of
+/// a lost machine can be rewound before the flush.
+enum JournalEntry {
+    Task {
+        part: usize,
+        machine: usize,
+        end_s: f64,
+        iteration: bool,
+        evictions: usize,
+        events: Vec<Event>,
+    },
+    Marker(Event),
+}
+
+fn flush_journal(log: &mut EventLog, journal: &mut Vec<JournalEntry>) {
+    for entry in journal.drain(..) {
+        match entry {
+            JournalEntry::Task { events, .. } => {
+                for e in events {
+                    log.push(e);
+                }
+            }
+            JournalEntry::Marker(e) => log.push(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// scheduling helpers (the legacy free functions, fleet-aware)
+// ---------------------------------------------------------------------
+
+/// (machine, slot) with the earliest free time among live machines; ties
+/// take the lowest index (Spark's deterministic executor ordering).
+/// `None` when every machine is gone.
+fn earliest_slot(machines: &[MachineState]) -> Option<(usize, usize)> {
+    let mut best = (0usize, 0usize, f64::INFINITY);
+    let mut found = false;
+    for (mi, m) in machines.iter().enumerate() {
+        if !m.alive {
+            continue;
+        }
+        for (si, &t) in m.slots.iter().enumerate() {
+            if t < best.2 {
+                best = (mi, si, t);
+            }
+            found = true;
+        }
+    }
+    if found {
+        Some((best.0, best.1))
+    } else {
+        None
+    }
+}
+
+fn earliest_slot_on(m: &MachineState) -> usize {
+    let mut best = (0usize, f64::INFINITY);
+    for (si, &t) in m.slots.iter().enumerate() {
+        if t < best.1 {
+            best = (si, t);
+        }
+    }
+    best.0
+}
+
+/// Advance the barrier: all live slots drain, return the max finish time.
+fn barrier(machines: &[MachineState], now: f64) -> f64 {
+    machines
+        .iter()
+        .filter(|m| m.alive)
+        .flat_map(|m| m.slots.iter().copied())
+        .fold(now, f64::max)
+}
+
+fn set_all_slots(machines: &mut [MachineState], t: f64) {
+    for m in machines.iter_mut().filter(|m| m.alive) {
+        for s in &mut m.slots {
+            *s = t;
+        }
+    }
+}
+
+/// Per-iteration shuffle + coordination cost over the live fleet: the
+/// fleet generalization of [`super::shuffle_s`]. Aggregates per group
+/// (`count × value`) so a homogeneous fleet computes bit-identical values
+/// to the legacy single-spec formula.
+fn fleet_overhead_s(
+    profile: &WorkloadProfile,
+    machines: &[MachineState],
+    groups: &[InstanceType],
+) -> f64 {
+    let mut per_group = vec![0usize; groups.len()];
+    let mut n = 0usize;
+    for m in machines {
+        if m.alive {
+            per_group[m.group] += 1;
+            n += 1;
+        }
+    }
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let mut agg_net = 0.0;
+    let mut coord = 0.0;
+    for (g, &c) in groups.iter().zip(&per_group) {
+        if c == 0 {
+            continue;
+        }
+        agg_net += g.spec.net_mb_s * c as f64;
+        coord += g.spec.coord_s_per_machine * c as f64;
+    }
+    super::shuffle_overhead_s(profile.shuffle_mb, nf, agg_net, coord)
+}
+
+fn mark_evicted(
+    location: &mut [Vec<Option<usize>>],
+    profile: &WorkloadProfile,
+    key: PartitionKey,
+) {
+    for (di, ds) in profile.cached.iter().enumerate() {
+        if ds.id == key.dataset {
+            if let Some(slot) = location[di].get_mut(key.index) {
+                *slot = None;
+            }
+        }
+    }
+}
+
+fn task_duration(
+    base_s: f64,
+    profile: &WorkloadProfile,
+    cached_read: bool,
+    rng: &mut Rng,
+    compute: &mut Option<&mut dyn TaskCompute>,
+) -> f64 {
+    if let Some(c) = compute.as_deref_mut() {
+        if let Some(measured) = c.run_task(profile, cached_read) {
+            return measured;
+        }
+    }
+    rng.lognormal(base_s, profile.task_time_sigma).max(1e-6)
+}
+
+/// Deterministic closed-form runtime anchor for the undisturbed run (no
+/// noise, no disturbances): wave scheduling over the fleet's slots with a
+/// capacity-based residency guess. Scenarios use it to place "a third of
+/// the way in" style disturbances without a pilot run; it is an anchor,
+/// not a prediction.
+pub fn horizon_s(profile: &WorkloadProfile, fleet: &FleetSpec) -> f64 {
+    let parts = profile.parallelism.max(1) as f64;
+    let n = fleet.machines().max(1) as f64;
+    let slots = fleet.slots().max(1) as f64;
+    let waves = (parts / slots).ceil();
+    let disk: f64 = fleet
+        .groups
+        .iter()
+        .map(|g| g.instance.spec.disk_mb_s * g.count as f64)
+        .sum::<f64>()
+        / n;
+    let input_pp = profile.input_mb / parts;
+    let t_load = input_pp / disk + input_pp * profile.compute_s_per_mb + profile.task_overhead_s;
+
+    let capacity: f64 = fleet
+        .groups
+        .iter()
+        .map(|g| g.instance.spec.unified_mb() * g.count as f64)
+        .sum();
+    let cached_total: f64 = profile.cached.iter().map(|d| d.true_total_mb).sum();
+    let resident = if cached_total <= 0.0 { 1.0 } else { (capacity / cached_total).min(1.0) };
+    let cached_pp = cached_total / parts;
+    let t_cached =
+        cached_pp * profile.compute_s_per_mb / profile.cached_speedup + profile.task_overhead_s;
+    let t_recompute = input_pp / disk
+        + input_pp * profile.compute_s_per_mb * profile.recompute_factor
+        + profile.task_overhead_s;
+    let t_task = resident * t_cached + (1.0 - resident) * t_recompute;
+
+    let agg_net: f64 = fleet
+        .groups
+        .iter()
+        .map(|g| g.instance.spec.net_mb_s * g.count as f64)
+        .sum();
+    let coord: f64 = fleet
+        .groups
+        .iter()
+        .map(|g| g.instance.spec.coord_s_per_machine * g.count as f64)
+        .sum();
+    let per_job = if n <= 1.0 {
+        profile.serial_s
+    } else {
+        profile.serial_s + super::shuffle_overhead_s(profile.shuffle_mb, n, agg_net, coord)
+    };
+
+    profile.sample_prep_s
+        + waves * t_load
+        + per_job
+        + profile.iterations as f64 * (waves * t_task + per_job)
+}
+
+// ---------------------------------------------------------------------
+// disturbance application
+// ---------------------------------------------------------------------
+
+/// A machine leaves at `at_s`: close its uptime segment, drop its cached
+/// store (the `memory` layer releases everything at once), clear partition
+/// locations, and rewind its in-flight journal entries back into the job's
+/// work queue.
+#[allow(clippy::too_many_arguments)]
+fn lose_machine(
+    mi: usize,
+    at_s: f64,
+    machines: &mut [MachineState],
+    location: &mut [Vec<Option<usize>>],
+    journal: &mut Vec<JournalEntry>,
+    pending: &mut VecDeque<usize>,
+    not_before: &mut [f64],
+) {
+    if !machines[mi].alive {
+        return;
+    }
+    // a loss cannot predate the machine's current uptime segment
+    let at_s = at_s.max(machines[mi].up_from_s);
+    let cached_mb_lost: Mb = {
+        let m = &mut machines[mi];
+        m.alive = false;
+        m.segments.push((m.up_from_s, at_s));
+        let lost = m.mem.cached_mb();
+        let _ = m.mem.release_all();
+        lost
+    };
+    for ds in location.iter_mut() {
+        for slot in ds.iter_mut() {
+            if *slot == Some(mi) {
+                *slot = None;
+            }
+        }
+    }
+    let mut inflight = 0usize;
+    let mut kept = Vec::with_capacity(journal.len());
+    for entry in journal.drain(..) {
+        match entry {
+            JournalEntry::Task {
+                part,
+                machine,
+                end_s,
+                iteration,
+                evictions: entry_evictions,
+                ..
+            } if machine == mi && end_s > at_s => {
+                inflight += 1;
+                let m = &mut machines[mi];
+                m.tasks_run -= 1;
+                if iteration {
+                    m.iter_tasks -= 1;
+                }
+                m.evictions -= entry_evictions;
+                // the retry cannot start before the loss that caused it
+                not_before[part] = at_s;
+                pending.push_back(part);
+            }
+            other => kept.push(other),
+        }
+    }
+    *journal = kept;
+    journal.push(JournalEntry::Marker(Event::MachineLost {
+        machine: mi,
+        time_s: at_s,
+        cached_mb_lost,
+        inflight_tasks: inflight,
+    }));
+}
+
+#[allow(clippy::too_many_arguments)]
+fn apply_item(
+    item: QueueItem,
+    machines: &mut Vec<MachineState>,
+    groups: &mut Vec<InstanceType>,
+    location: &mut [Vec<Option<usize>>],
+    journal: &mut Vec<JournalEntry>,
+    pending: &mut VecDeque<usize>,
+    not_before: &mut [f64],
+    queue: &mut EventQueue,
+    policy: EvictionPolicy,
+    exec_pm: Mb,
+    now: f64,
+) {
+    // a join can only take effect at the scheduling frontier: a machine
+    // (re)appearing during the inter-job serial window must not run tasks
+    // of the next job before that job starts
+    let join_s = item.at_s.max(now);
+    match item.kind {
+        QueuedKind::Disturb(DisturbanceKind::Preempt { machine }) => {
+            if machine < machines.len() {
+                lose_machine(machine, item.at_s, machines, location, journal, pending, not_before);
+            }
+        }
+        QueuedKind::Disturb(DisturbanceKind::Fail { machine, restart_delay_s }) => {
+            if machine < machines.len() && machines[machine].alive {
+                lose_machine(machine, item.at_s, machines, location, journal, pending, not_before);
+                queue.push(item.at_s + restart_delay_s, QueuedKind::Rejoin { machine });
+            }
+        }
+        QueuedKind::Disturb(DisturbanceKind::Slowdown { machine, factor, duration_s }) => {
+            if let Some(m) = machines.get_mut(machine) {
+                if m.alive {
+                    m.slow_factor = factor;
+                    m.slow_from = item.at_s;
+                    m.slow_until = item.at_s + duration_s;
+                }
+            }
+        }
+        QueuedKind::Disturb(DisturbanceKind::ScaleOut { instance, count }) => {
+            // degenerate instance shapes are ignored, not panicked on
+            if FleetSpec::homogeneous(instance.clone(), count.max(1)).is_err() {
+                return;
+            }
+            let group = groups.len();
+            groups.push(instance.clone());
+            for _ in 0..count {
+                let idx = machines.len();
+                let mut m = MachineState::new(&instance, group, policy, join_s);
+                if exec_pm > 0.0 {
+                    m.mem.claim_execution(exec_pm);
+                }
+                machines.push(m);
+                journal.push(JournalEntry::Marker(Event::MachineJoined {
+                    machine: idx,
+                    time_s: join_s,
+                }));
+            }
+        }
+        QueuedKind::Rejoin { machine } => {
+            let m = &mut machines[machine];
+            m.alive = true;
+            m.up_from_s = join_s;
+            m.mem = UnifiedMemory::new(m.spec.unified_mb(), m.spec.storage_floor_mb(), policy);
+            if exec_pm > 0.0 {
+                m.mem.claim_execution(exec_pm);
+            }
+            for s in &mut m.slots {
+                *s = join_s;
+            }
+            m.slow_factor = 1.0;
+            m.slow_from = f64::INFINITY;
+            m.slow_until = f64::NEG_INFINITY;
+            journal.push(JournalEntry::Marker(Event::MachineJoined {
+                machine,
+                time_s: join_s,
+            }));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the engine run
+// ---------------------------------------------------------------------
+
+/// Simulate one application run on `fleet` under `scenario`.
+///
+/// With [`super::scenario::NoDisturbances`] this produces the exact event
+/// log the legacy serial simulator produced (the legacy `simulate()` is a
+/// wrapper over this function).
+pub fn run(
+    profile: &WorkloadProfile,
+    fleet: &FleetSpec,
+    scenario: &dyn Scenario,
+    opts: SimOptions<'_>,
+) -> Result<EngineResult, SimError> {
+    fleet.validate()?;
+    let policy = opts.policy;
+    let mut rng = Rng::new(opts.seed ^ 0x5117_c0de);
+    let mut compute = opts.compute;
+    let detailed = opts.detailed_log;
+
+    let mut groups: Vec<InstanceType> = fleet.groups.iter().map(|g| g.instance.clone()).collect();
+    let mut machines: Vec<MachineState> = Vec::with_capacity(fleet.machines());
+    for (gi, g) in fleet.groups.iter().enumerate() {
+        for _ in 0..g.count {
+            machines.push(MachineState::new(&g.instance, gi, policy, 0.0));
+        }
+    }
+    let n0 = machines.len();
+
+    let mut log = EventLog::new();
+    log.push(Event::AppStart {
+        app: profile.name.clone(),
+        machines: n0,
+        data_scale: profile.scale,
+    });
+
+    let mut queue = EventQueue::new();
+    let horizon = horizon_s(profile, fleet);
+    for d in scenario.schedule(&ScenarioCtx { fleet, profile, horizon_s: horizon }) {
+        queue.push(d.at_s, QueuedKind::Disturb(d.kind));
+    }
+
+    // Block-s sample preparation happens before the app starts.
+    let mut now = profile.sample_prep_s;
+    for m in &mut machines {
+        for s in &mut m.slots {
+            *s = now;
+        }
+    }
+
+    let parts = profile.parallelism.max(1);
+    // partition -> machine currently caching it (per dataset)
+    let mut location: Vec<Vec<Option<usize>>> =
+        profile.cached.iter().map(|_| vec![None; parts]).collect();
+    // per-machine execution share of the current iteration job (0 before
+    // job 1; rejoining/scaling machines claim it on arrival)
+    let mut exec_pm: Mb = 0.0;
+    // earliest restart time per partition within the current job: a task
+    // rewound by a machine loss at time t must not re-run before t, even
+    // on a survivor whose slot idled earlier (causality of the retry)
+    let mut not_before: Vec<f64> = vec![0.0; parts];
+
+    // ---------------------------------------------------------- job 0 ----
+    // Materialize: read input, compute, cache each partition where it ran.
+    let input_per_task = profile.input_mb / parts as f64;
+    {
+        let mut pending: VecDeque<usize> = (0..parts).collect();
+        let mut journal: Vec<JournalEntry> = Vec::new();
+        loop {
+            while let Some(p) = pending.pop_front() {
+                loop {
+                    let Some((mi, si)) = earliest_slot(&machines) else {
+                        // every machine is down; fast-forward to the next
+                        // queued lifecycle event — a restart or scale-out
+                        // may revive the fleet before this is fatal
+                        match queue.pop_due(f64::INFINITY) {
+                            Some(item) => {
+                                apply_item(
+                                    item,
+                                    &mut machines,
+                                    &mut groups,
+                                    &mut location,
+                                    &mut journal,
+                                    &mut pending,
+                                    &mut not_before,
+                                    &mut queue,
+                                    policy,
+                                    exec_pm,
+                                    now,
+                                );
+                                continue;
+                            }
+                            None => return Err(SimError::AllMachinesLost { at_s: now }),
+                        }
+                    };
+                    let start = machines[mi].slots[si].max(not_before[p]);
+                    if let Some(item) = queue.pop_due(start) {
+                        apply_item(
+                            item,
+                            &mut machines,
+                            &mut groups,
+                            &mut location,
+                            &mut journal,
+                            &mut pending,
+                            &mut not_before,
+                            &mut queue,
+                            policy,
+                            exec_pm,
+                            now,
+                        );
+                        continue;
+                    }
+                    let base = input_per_task / machines[mi].spec.disk_mb_s
+                        + input_per_task * profile.compute_s_per_mb
+                        + profile.task_overhead_s;
+                    let dur = task_duration(base, profile, false, &mut rng, &mut compute)
+                        * machines[mi].slowdown_at(start);
+                    machines[mi].slots[si] = start + dur;
+                    machines[mi].tasks_run += 1;
+                    let mut events = Vec::new();
+                    let mut entry_evictions = 0usize;
+                    if detailed {
+                        events.push(Event::TaskEnd {
+                            stage: 0,
+                            task: p,
+                            machine: mi,
+                            duration_s: dur,
+                            cached_read: false,
+                        });
+                    }
+                    for (di, ds) in profile.cached.iter().enumerate() {
+                        let true_part = ds.true_total_mb / parts as f64;
+                        let measured_part = ds.measured_total_mb / parts as f64;
+                        let stored = machines[mi].mem.insert(
+                            PartitionKey { dataset: ds.id, index: p },
+                            true_part,
+                            profile.iterations + 1,
+                            1,
+                        );
+                        for key in machines[mi].mem.drain_evicted() {
+                            machines[mi].evictions += 1;
+                            entry_evictions += 1;
+                            events.push(Event::Eviction { machine: mi });
+                            mark_evicted(&mut location, profile, key);
+                        }
+                        if stored {
+                            location[di][p] = Some(mi);
+                        }
+                        if detailed {
+                            events.push(Event::BlockUpdate {
+                                dataset: ds.id,
+                                partition: p,
+                                size_mb: measured_part,
+                                stored,
+                            });
+                        }
+                    }
+                    journal.push(JournalEntry::Task {
+                        part: p,
+                        machine: mi,
+                        end_s: start + dur,
+                        iteration: false,
+                        evictions: entry_evictions,
+                        events,
+                    });
+                    break;
+                }
+            }
+            let b = barrier(&machines, now);
+            if let Some(item) = queue.pop_due(b) {
+                apply_item(
+                    item,
+                    &mut machines,
+                    &mut groups,
+                    &mut location,
+                    &mut journal,
+                    &mut pending,
+                    &mut not_before,
+                    &mut queue,
+                    policy,
+                    exec_pm,
+                    now,
+                );
+                continue;
+            }
+            now = b;
+            break;
+        }
+        flush_journal(&mut log, &mut journal);
+    }
+    now += profile.serial_s + fleet_overhead_s(profile, &machines, &groups);
+    set_all_slots(&mut machines, now);
+
+    let cached_fraction_after_load = if profile.cached.is_empty() {
+        0.0
+    } else {
+        location[0].iter().filter(|l| l.is_some()).count() as f64 / parts as f64
+    };
+
+    // ------------------------------------------------- iteration jobs ----
+    for job in 1..=profile.iterations {
+        let mut pending: VecDeque<usize> = (0..parts).collect();
+        let mut journal: Vec<JournalEntry> = Vec::new();
+        // losses/joins between jobs take effect before the exec claim
+        while let Some(item) = queue.pop_due(now) {
+            apply_item(
+                item,
+                &mut machines,
+                &mut groups,
+                &mut location,
+                &mut journal,
+                &mut pending,
+                &mut not_before,
+                &mut queue,
+                policy,
+                exec_pm,
+                now,
+            );
+        }
+        flush_journal(&mut log, &mut journal);
+        // the between-jobs drain only produces markers (the journal was
+        // empty, so nothing could rewind); start the job from a clean
+        // work list and retry-floor
+        pending = (0..parts).collect();
+        for nb in &mut not_before {
+            *nb = 0.0;
+        }
+
+        // Every machine may be down transiently (failure awaiting its
+        // restart): fast-forward through queued lifecycle events before
+        // declaring the fleet dead.
+        let mut alive_n = machines.iter().filter(|m| m.alive).count();
+        while alive_n == 0 {
+            let Some(item) = queue.pop_due(f64::INFINITY) else {
+                return Err(SimError::AllMachinesLost { at_s: now });
+            };
+            apply_item(
+                item,
+                &mut machines,
+                &mut groups,
+                &mut location,
+                &mut journal,
+                &mut pending,
+                &mut not_before,
+                &mut queue,
+                policy,
+                exec_pm,
+                now,
+            );
+            alive_n = machines.iter().filter(|m| m.alive).count();
+        }
+        flush_journal(&mut log, &mut journal);
+
+        // Execution memory is claimed at the start of each action; with a
+        // thin margin this is what evicts over-cached machines (Fig. 11).
+        exec_pm = profile.exec_mem_total_mb / alive_n as f64;
+        for (mi, m) in machines.iter_mut().enumerate() {
+            if !m.alive {
+                continue;
+            }
+            m.mem.claim_execution(exec_pm);
+            for key in m.mem.drain_evicted() {
+                m.evictions += 1;
+                log.push(Event::Eviction { machine: mi });
+                mark_evicted(&mut location, profile, key);
+            }
+        }
+
+        loop {
+            while let Some(p) = pending.pop_front() {
+                loop {
+                    // a task reads the corresponding partition of every
+                    // cached dataset; locality pins it to the machine
+                    // caching dataset 0
+                    let pinned = profile.cached.first().and_then(|_| location[0][p]);
+                    let (mi, si) = match pinned {
+                        Some(m) => (m, earliest_slot_on(&machines[m])),
+                        None => match earliest_slot(&machines) {
+                            Some(s) => s,
+                            None => {
+                                // all machines down: fast-forward to the
+                                // next lifecycle event or give up
+                                match queue.pop_due(f64::INFINITY) {
+                                    Some(item) => {
+                                        apply_item(
+                                            item,
+                                            &mut machines,
+                                            &mut groups,
+                                            &mut location,
+                                            &mut journal,
+                                            &mut pending,
+                                            &mut not_before,
+                                            &mut queue,
+                                            policy,
+                                            exec_pm,
+                                            now,
+                                        );
+                                        continue;
+                                    }
+                                    None => {
+                                        return Err(SimError::AllMachinesLost { at_s: now })
+                                    }
+                                }
+                            }
+                        },
+                    };
+                    let start = machines[mi].slots[si].max(not_before[p]);
+                    if let Some(item) = queue.pop_due(start) {
+                        apply_item(
+                            item,
+                            &mut machines,
+                            &mut groups,
+                            &mut location,
+                            &mut journal,
+                            &mut pending,
+                            &mut not_before,
+                            &mut queue,
+                            policy,
+                            exec_pm,
+                            now,
+                        );
+                        continue;
+                    }
+                    let cached_read = pinned.is_some();
+                    let part_input = profile.input_mb / parts as f64;
+                    let base = if cached_read {
+                        let part_cached: f64 = profile
+                            .cached
+                            .iter()
+                            .map(|d| d.true_total_mb / parts as f64)
+                            .sum();
+                        part_cached * profile.compute_s_per_mb / profile.cached_speedup
+                            + profile.task_overhead_s
+                    } else {
+                        // recompute the lineage: re-read input + recompute
+                        part_input / machines[mi].spec.disk_mb_s
+                            + part_input * profile.compute_s_per_mb * profile.recompute_factor
+                            + profile.task_overhead_s
+                    };
+                    let dur = task_duration(base, profile, cached_read, &mut rng, &mut compute)
+                        * machines[mi].slowdown_at(start);
+                    machines[mi].slots[si] = start + dur;
+                    machines[mi].tasks_run += 1;
+                    machines[mi].iter_tasks += 1;
+                    let mut events = Vec::new();
+                    let mut entry_evictions = 0usize;
+                    if detailed {
+                        events.push(Event::TaskEnd {
+                            stage: job,
+                            task: p,
+                            machine: mi,
+                            duration_s: dur,
+                            cached_read,
+                        });
+                    }
+                    if cached_read {
+                        for ds in &profile.cached {
+                            machines[mi].mem.touch(PartitionKey { dataset: ds.id, index: p });
+                        }
+                    } else {
+                        // Spark re-caches a recomputed partition where it ran
+                        for (di, ds) in profile.cached.iter().enumerate() {
+                            let true_part = ds.true_total_mb / parts as f64;
+                            let stored = machines[mi].mem.insert(
+                                PartitionKey { dataset: ds.id, index: p },
+                                true_part,
+                                profile.iterations - job + 1,
+                                1,
+                            );
+                            for key in machines[mi].mem.drain_evicted() {
+                                machines[mi].evictions += 1;
+                                entry_evictions += 1;
+                                events.push(Event::Eviction { machine: mi });
+                                mark_evicted(&mut location, profile, key);
+                            }
+                            if stored {
+                                location[di][p] = Some(mi);
+                            }
+                        }
+                    }
+                    journal.push(JournalEntry::Task {
+                        part: p,
+                        machine: mi,
+                        end_s: start + dur,
+                        iteration: true,
+                        evictions: entry_evictions,
+                        events,
+                    });
+                    break;
+                }
+            }
+            let b = barrier(&machines, now);
+            if let Some(item) = queue.pop_due(b) {
+                apply_item(
+                    item,
+                    &mut machines,
+                    &mut groups,
+                    &mut location,
+                    &mut journal,
+                    &mut pending,
+                    &mut not_before,
+                    &mut queue,
+                    policy,
+                    exec_pm,
+                    now,
+                );
+                continue;
+            }
+            break;
+        }
+        flush_journal(&mut log, &mut journal);
+        let job_start = now;
+        now = barrier(&machines, now);
+        now += profile.serial_s + fleet_overhead_s(profile, &machines, &groups);
+        set_all_slots(&mut machines, now);
+        log.push(Event::JobEnd { job, duration_s: now - job_start });
+    }
+
+    if !detailed {
+        // one aggregate BlockUpdate per dataset: currently-resident bytes
+        // in measured units (what a listener's final snapshot would show)
+        for (di, ds) in profile.cached.iter().enumerate() {
+            let resident = location[di].iter().filter(|l| l.is_some()).count();
+            let measured_part = ds.measured_total_mb / parts as f64;
+            log.push(Event::BlockUpdate {
+                dataset: ds.id,
+                partition: 0,
+                size_mb: measured_part * resident as f64,
+                stored: resident > 0,
+            });
+        }
+    }
+    for (mi, m) in machines.iter().enumerate() {
+        log.push(Event::ExecMemory { machine: mi, peak_mb: m.mem.exec_used_mb() });
+    }
+    log.push(Event::AppEnd { duration_s: now });
+
+    let mut timeline = FleetTimeline { duration_s: now, entries: Vec::new() };
+    for (mi, m) in machines.iter().enumerate() {
+        for &(from, to) in &m.segments {
+            timeline.entries.push(TimelineEntry {
+                machine: mi,
+                instance: m.instance.clone(),
+                up_from_s: from,
+                up_to_s: to,
+            });
+        }
+        if m.alive {
+            timeline.entries.push(TimelineEntry {
+                machine: mi,
+                instance: m.instance.clone(),
+                up_from_s: m.up_from_s,
+                up_to_s: now,
+            });
+        }
+    }
+
+    let sim = SimResult {
+        log,
+        iter_tasks_per_machine: machines.iter().map(|m| m.iter_tasks).collect(),
+        evictions_per_machine: machines.iter().map(|m| m.evictions).collect(),
+        cached_fraction_after_load,
+    };
+    Ok(EngineResult { sim, timeline })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RunSummary;
+    use crate::sim::scenario::{
+        FailureRestart, NoDisturbances, SpotPreemption, StepAutoscale, StragglerSlowdown,
+    };
+    use crate::sim::{CachedData, ClusterSpec, InstanceCatalog};
+
+    fn toy_profile(cached_mb: f64, iters: usize, parallelism: usize) -> WorkloadProfile {
+        WorkloadProfile {
+            name: "toy".into(),
+            scale: 1000.0,
+            input_mb: 1000.0,
+            parallelism,
+            cached: vec![CachedData {
+                id: 0,
+                true_total_mb: cached_mb,
+                measured_total_mb: cached_mb,
+            }],
+            iterations: iters,
+            compute_s_per_mb: 0.01,
+            cached_speedup: 97.0,
+            recompute_factor: 1.0,
+            serial_s: 1.0,
+            shuffle_mb: 100.0,
+            exec_mem_total_mb: 500.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.1,
+            sample_prep_s: 0.0,
+        }
+    }
+
+    fn worker_fleet(n: usize) -> FleetSpec {
+        FleetSpec::homogeneous(InstanceType::paper_worker(), n).unwrap()
+    }
+
+    fn opts(seed: u64) -> SimOptions<'static> {
+        SimOptions { seed, ..Default::default() }
+    }
+
+    #[test]
+    fn engine_none_matches_legacy_wrapper() {
+        let p = toy_profile(2000.0, 5, 32);
+        let via_engine = run(&p, &worker_fleet(3), &NoDisturbances, opts(7)).unwrap().sim;
+        let via_wrapper = crate::sim::simulate(&p, &ClusterSpec::workers(3), opts(7)).unwrap();
+        assert_eq!(via_engine.log.to_jsonl(), via_wrapper.log.to_jsonl());
+        assert_eq!(via_engine.iter_tasks_per_machine, via_wrapper.iter_tasks_per_machine);
+        assert_eq!(via_engine.evictions_per_machine, via_wrapper.evictions_per_machine);
+    }
+
+    #[test]
+    fn undisturbed_timeline_is_n_by_duration() {
+        let p = toy_profile(2000.0, 4, 32);
+        let res = run(&p, &worker_fleet(4), &NoDisturbances, opts(1)).unwrap();
+        let s = RunSummary::from_log(&res.sim.log);
+        assert_eq!(res.timeline.entries.len(), 4);
+        assert!((res.timeline.machine_seconds() - 4.0 * s.duration_s).abs() < 1e-9);
+        assert_eq!(res.timeline.duration_s, s.duration_s);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_runs_and_uses_all_machines() {
+        let fleet = FleetSpec::new(vec![
+            super::super::fleet::InstanceGroup {
+                instance: InstanceType::paper_worker(),
+                count: 2,
+            },
+            super::super::fleet::InstanceGroup {
+                instance: InstanceType::paper_sample(),
+                count: 2,
+            },
+        ])
+        .unwrap();
+        let p = toy_profile(3000.0, 4, 64);
+        let res = run(&p, &fleet, &NoDisturbances, opts(3)).unwrap();
+        let s = RunSummary::from_log(&res.sim.log);
+        assert_eq!(s.machines, 4);
+        assert_eq!(s.tasks, 64 * 5);
+        assert_eq!(res.sim.iter_tasks_per_machine.len(), 4);
+        assert!(res.sim.iter_tasks_per_machine.iter().all(|&t| t > 0));
+    }
+
+    #[test]
+    fn spot_preemption_loses_cache_and_stretches_the_run() {
+        // 24 GB cached just fits 4 workers; after the reclaim the 3
+        // survivors cannot hold it, so the remaining iterations pay the
+        // Area-A recompute penalty — the stretch the naive quote misses
+        let mut p = toy_profile(24_000.0, 8, 64);
+        p.recompute_factor = 5.0;
+        let fleet = worker_fleet(4);
+        let base = run(&p, &fleet, &NoDisturbances, opts(5)).unwrap();
+        let spot = run(&p, &fleet, &SpotPreemption::default(), opts(5)).unwrap();
+        let bs = RunSummary::from_log(&base.sim.log);
+        let ss = RunSummary::from_log(&spot.sim.log);
+        assert!(ss.machines_lost >= 1, "a machine must be reclaimed");
+        assert!(ss.duration_s > bs.duration_s, "losing cache costs time");
+        assert!(ss.cached_reads < bs.cached_reads, "survivors recompute");
+        let lost_event = spot.sim.log.events.iter().any(|e| {
+            matches!(e, Event::MachineLost { cached_mb_lost, .. } if *cached_mb_lost > 0.0)
+        });
+        assert!(lost_event, "the reclaimed machine held cached partitions");
+        // the realized timeline bills the lost machine only until reclaim
+        assert!(
+            spot.timeline.machine_seconds() < 4.0 * ss.duration_s,
+            "lost machine must not bill to the end"
+        );
+    }
+
+    #[test]
+    fn failure_restart_rejoins_with_empty_memory() {
+        let p = toy_profile(4000.0, 8, 64);
+        let res = run(&p, &worker_fleet(3), &FailureRestart::default(), opts(2)).unwrap();
+        let s = RunSummary::from_log(&res.sim.log);
+        assert_eq!(s.machines_lost, 1);
+        assert_eq!(s.machines_joined, 1);
+        // the restarted machine contributes two uptime segments
+        let segs_of_0 = res.timeline.entries.iter().filter(|e| e.machine == 0).count();
+        assert_eq!(segs_of_0, 2);
+    }
+
+    #[test]
+    fn failure_on_a_single_machine_fleet_waits_for_the_restart() {
+        // all machines transiently down is NOT AllMachinesLost: the engine
+        // fast-forwards to the queued restart instead of erroring
+        let p = toy_profile(1000.0, 4, 16);
+        let res = run(&p, &worker_fleet(1), &FailureRestart::default(), opts(9)).unwrap();
+        let s = RunSummary::from_log(&res.sim.log);
+        assert_eq!(s.machines_lost, 1);
+        assert_eq!(s.machines_joined, 1);
+        assert_eq!(s.tasks, 16 * 5, "the run completes after the restart");
+    }
+
+    #[test]
+    fn straggler_slows_the_run() {
+        let mut p = toy_profile(2000.0, 6, 64);
+        p.task_time_sigma = 0.0; // isolate the slowdown effect
+        let fleet = worker_fleet(2);
+        let base = run(&p, &fleet, &NoDisturbances, opts(1)).unwrap();
+        let slow = run(
+            &p,
+            &fleet,
+            &StragglerSlowdown { factor: 8.0, ..Default::default() },
+            opts(1),
+        )
+        .unwrap();
+        let bt = RunSummary::from_log(&base.sim.log).duration_s;
+        let st = RunSummary::from_log(&slow.sim.log).duration_s;
+        assert!(st > bt, "straggler {st} vs baseline {bt}");
+    }
+
+    #[test]
+    fn autoscale_joins_machines_mid_run() {
+        let p = toy_profile(2000.0, 8, 64);
+        let res = run(&p, &worker_fleet(2), &StepAutoscale::default(), opts(4)).unwrap();
+        let s = RunSummary::from_log(&res.sim.log);
+        assert_eq!(s.machines, 2, "AppStart reports the initial fleet");
+        assert_eq!(s.machines_joined, 2, "the fleet doubled");
+        assert_eq!(res.sim.iter_tasks_per_machine.len(), 4);
+        // joined machines start their timeline at the scale-out, not at 0
+        let joined: Vec<_> = res.timeline.entries.iter().filter(|e| e.machine >= 2).collect();
+        assert_eq!(joined.len(), 2);
+        assert!(joined.iter().all(|e| e.up_from_s > 0.0));
+    }
+
+    #[test]
+    fn preempting_every_machine_is_a_typed_error() {
+        let p = toy_profile(2000.0, 4, 32);
+        struct KillAll;
+        impl Scenario for KillAll {
+            fn name(&self) -> &'static str {
+                "kill-all"
+            }
+            fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<super::super::scenario::Disturbance> {
+                (0..ctx.fleet.machines())
+                    .map(|m| super::super::scenario::Disturbance {
+                        at_s: 0.0,
+                        kind: DisturbanceKind::Preempt { machine: m },
+                    })
+                    .collect()
+            }
+        }
+        let err = run(&p, &worker_fleet(2), &KillAll, opts(1)).unwrap_err();
+        assert!(matches!(err, SimError::AllMachinesLost { .. }));
+    }
+
+    #[test]
+    fn cloud_shape_spot_run_recovers_cached_reads_after_loss() {
+        // preempt 1 of 4 gp.xlarge nodes; survivors can hold the whole
+        // dataset, so after a recompute wave the cached reads resume
+        let catalog = InstanceCatalog::cloud();
+        let gp = catalog.get("gp.xlarge").unwrap().clone();
+        let fleet = FleetSpec::homogeneous(gp, 4).unwrap();
+        let p = toy_profile(9000.0, 10, 64); // fits on 3 survivors
+        let res = run(
+            &p,
+            &fleet,
+            &SpotPreemption { victims: 1, ..Default::default() },
+            opts(6),
+        )
+        .unwrap();
+        let s = RunSummary::from_log(&res.sim.log);
+        assert_eq!(s.machines_lost, 1);
+        // the last iteration job reads everything from cache again
+        let last_stage = p.iterations;
+        let (mut cached, mut total) = (0usize, 0usize);
+        for e in &res.sim.log.events {
+            if let Event::TaskEnd { stage, cached_read, .. } = e {
+                if *stage == last_stage {
+                    total += 1;
+                    if *cached_read {
+                        cached += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(total, 64);
+        assert_eq!(cached, 64, "recompute recovery must re-cache on survivors");
+    }
+
+    #[test]
+    fn horizon_is_positive_and_scales_down_with_slots() {
+        let p = toy_profile(2000.0, 10, 256);
+        let small = horizon_s(&p, &worker_fleet(2));
+        let big = horizon_s(&p, &worker_fleet(8));
+        assert!(small > 0.0 && big > 0.0);
+        assert!(big < small, "more slots, shorter horizon anchor");
+    }
+}

@@ -1,0 +1,220 @@
+//! Fleet specifications and typed simulation errors.
+//!
+//! The paper's testbed is homogeneous — [`super::ClusterSpec`] is "n copies
+//! of one `MachineSpec`". A [`FleetSpec`] generalizes that to a list of
+//! [`InstanceGroup`]s, each a count of one named [`InstanceType`] — the
+//! shape a cloud deployment actually provisions (e.g. 4 on-demand
+//! `gp.xlarge` + 8 spot `cpu.xlarge`). The event-driven engine
+//! ([`super::engine`]) schedules over whatever mix a fleet declares, and
+//! the per-machine realized timeline it emits is priced per instance type
+//! by [`crate::cost::PricingModel::price_timeline`].
+//!
+//! Validation happens at construction: zero-count, zero-core, zero-memory
+//! or zero-bandwidth groups are a typed [`SimError`], not a mid-run panic.
+
+use super::cluster::{ClusterSpec, InstanceType};
+
+/// Typed error for simulator entry points (replaces the historical
+/// `assert!(machines > 0)` panic).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimError {
+    /// The fleet declares no machines at all.
+    EmptyFleet,
+    /// An instance group with `count == 0`.
+    ZeroCount { instance: String },
+    /// An instance type with no task slots.
+    ZeroCores { instance: String },
+    /// An instance type whose unified memory region is empty.
+    NoMemory { instance: String },
+    /// `storage_fraction` places the protected floor outside `[0, M]`.
+    BadStorageFloor { instance: String },
+    /// Disk or network bandwidth is not positive (task durations and
+    /// shuffle costs divide by them).
+    NoBandwidth { instance: String },
+    /// A disturbance scenario removed every machine mid-run.
+    AllMachinesLost { at_s: f64 },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::EmptyFleet => write!(f, "fleet declares no machines"),
+            SimError::ZeroCount { instance } => {
+                write!(f, "instance group '{instance}' has count 0")
+            }
+            SimError::ZeroCores { instance } => {
+                write!(f, "instance type '{instance}' has no cores")
+            }
+            SimError::NoMemory { instance } => {
+                write!(f, "instance type '{instance}' has an empty unified memory region")
+            }
+            SimError::BadStorageFloor { instance } => {
+                write!(f, "instance type '{instance}' has a storage floor outside [0, M]")
+            }
+            SimError::NoBandwidth { instance } => {
+                write!(f, "instance type '{instance}' has non-positive disk/net bandwidth")
+            }
+            SimError::AllMachinesLost { at_s } => {
+                write!(f, "scenario removed every machine by t={at_s:.1}s")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// `count` machines of one instance type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceGroup {
+    pub instance: InstanceType,
+    pub count: usize,
+}
+
+/// A (possibly heterogeneous) set of machines: the generalization of
+/// [`ClusterSpec`] the engine runs on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub groups: Vec<InstanceGroup>,
+}
+
+impl FleetSpec {
+    /// Build a validated fleet.
+    pub fn new(groups: Vec<InstanceGroup>) -> Result<FleetSpec, SimError> {
+        let fleet = FleetSpec { groups };
+        fleet.validate()?;
+        Ok(fleet)
+    }
+
+    /// A single-type fleet (`count` × `instance`).
+    pub fn homogeneous(instance: InstanceType, count: usize) -> Result<FleetSpec, SimError> {
+        FleetSpec::new(vec![InstanceGroup { instance, count }])
+    }
+
+    /// The legacy path: a [`ClusterSpec`] as an unpriced single-type fleet.
+    /// `price_per_hour` is 0 because a bare `MachineSpec` carries no price;
+    /// the paper reproduction prices in machine-seconds, which never reads
+    /// it.
+    pub fn from_cluster(cluster: &ClusterSpec) -> Result<FleetSpec, SimError> {
+        FleetSpec::homogeneous(
+            InstanceType {
+                name: "cluster",
+                spec: cluster.machine.clone(),
+                price_per_hour: 0.0,
+            },
+            cluster.machines,
+        )
+    }
+
+    /// Total machine count across groups.
+    pub fn machines(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// Total task slots across groups.
+    pub fn slots(&self) -> usize {
+        self.groups.iter().map(|g| g.count * g.instance.spec.cores).sum()
+    }
+
+    /// Check every group for the degeneracies that used to panic mid-run.
+    pub fn validate(&self) -> Result<(), SimError> {
+        if self.machines() == 0 {
+            return Err(SimError::EmptyFleet);
+        }
+        for g in &self.groups {
+            let name = g.instance.name.to_string();
+            if g.count == 0 {
+                return Err(SimError::ZeroCount { instance: name });
+            }
+            let spec = &g.instance.spec;
+            if spec.cores == 0 {
+                return Err(SimError::ZeroCores { instance: name });
+            }
+            let m = spec.unified_mb();
+            if m <= 0.0 {
+                return Err(SimError::NoMemory { instance: name });
+            }
+            let r = spec.storage_floor_mb();
+            if !(0.0..=m).contains(&r) {
+                return Err(SimError::BadStorageFloor { instance: name });
+            }
+            if spec.disk_mb_s <= 0.0 || spec.net_mb_s <= 0.0 {
+                return Err(SimError::NoBandwidth { instance: name });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MachineSpec;
+
+    #[test]
+    fn valid_fleets_pass() {
+        let f = FleetSpec::homogeneous(InstanceType::paper_worker(), 4).unwrap();
+        assert_eq!(f.machines(), 4);
+        assert_eq!(f.slots(), 16);
+        let mixed = FleetSpec::new(vec![
+            InstanceGroup { instance: InstanceType::paper_worker(), count: 2 },
+            InstanceGroup { instance: InstanceType::paper_sample(), count: 3 },
+        ])
+        .unwrap();
+        assert_eq!(mixed.machines(), 5);
+    }
+
+    #[test]
+    fn empty_and_zero_count_fleets_rejected() {
+        assert_eq!(FleetSpec::new(vec![]).unwrap_err(), SimError::EmptyFleet);
+        let e = FleetSpec::homogeneous(InstanceType::paper_worker(), 0).unwrap_err();
+        assert!(matches!(e, SimError::ZeroCount { .. }));
+    }
+
+    #[test]
+    fn degenerate_instance_types_rejected_at_construction() {
+        let mut zero_cores = InstanceType::paper_worker();
+        zero_cores.spec.cores = 0;
+        assert!(matches!(
+            FleetSpec::homogeneous(zero_cores, 2).unwrap_err(),
+            SimError::ZeroCores { .. }
+        ));
+
+        let mut no_mem = InstanceType::paper_worker();
+        no_mem.spec.heap_mb = 100.0; // below the 300 MB reserved overhead
+        assert!(matches!(
+            FleetSpec::homogeneous(no_mem, 2).unwrap_err(),
+            SimError::NoMemory { .. }
+        ));
+
+        let mut bad_floor = InstanceType::paper_worker();
+        bad_floor.spec.storage_fraction = 1.5;
+        assert!(matches!(
+            FleetSpec::homogeneous(bad_floor, 2).unwrap_err(),
+            SimError::BadStorageFloor { .. }
+        ));
+
+        let mut no_disk = InstanceType::paper_worker();
+        no_disk.spec.disk_mb_s = 0.0;
+        assert!(matches!(
+            FleetSpec::homogeneous(no_disk, 2).unwrap_err(),
+            SimError::NoBandwidth { .. }
+        ));
+    }
+
+    #[test]
+    fn from_cluster_preserves_spec_and_count() {
+        let c = ClusterSpec::workers(7);
+        let f = FleetSpec::from_cluster(&c).unwrap();
+        assert_eq!(f.machines(), 7);
+        assert_eq!(f.groups[0].instance.spec, MachineSpec::worker_node());
+        assert!(FleetSpec::from_cluster(&ClusterSpec::workers(0)).is_err());
+    }
+
+    #[test]
+    fn errors_display_the_offending_instance() {
+        let mut z = InstanceType::paper_worker();
+        z.spec.cores = 0;
+        let e = FleetSpec::homogeneous(z, 1).unwrap_err();
+        assert!(e.to_string().contains("i5-worker"), "{e}");
+    }
+}

@@ -19,16 +19,29 @@
 //!
 //! The simulator emits a [`crate::metrics::EventLog`] — the same interface
 //! a SparkListener gives the real Blink.
+//!
+//! The execution core lives in [`engine`]: an event-driven scheduler over
+//! heterogeneous [`FleetSpec`]s with pluggable disturbance [`scenario`]s
+//! (spot preemption, stragglers, failure + restart, step autoscaling).
+//! [`simulate`] is the legacy single-type entry point — a thin wrapper
+//! over the engine with [`scenario::NoDisturbances`], byte-identical to
+//! the pre-engine serial code (property-tested), so every paper experiment
+//! is untouched.
 
 pub mod cluster;
+pub mod engine;
+pub mod fleet;
 pub mod profile;
+pub mod scenario;
 
 pub use cluster::{ClusterSpec, InstanceCatalog, InstanceType, MachineSpec};
+pub use engine::{EngineResult, FleetTimeline, TimelineEntry};
+pub use fleet::{FleetSpec, InstanceGroup, SimError};
 pub use profile::{CachedData, WorkloadProfile};
+pub use scenario::{Disturbance, DisturbanceKind, Scenario};
 
-use crate::memory::{EvictionPolicy, PartitionKey, UnifiedMemory};
-use crate::metrics::{Event, EventLog};
-use crate::util::prng::Rng;
+use crate::memory::EvictionPolicy;
+use crate::metrics::EventLog;
 
 /// Pluggable task-body executor. The analytic model is the default; the
 /// RealCompute bridge (examples/end_to_end.rs) substitutes wall-clock
@@ -66,15 +79,6 @@ impl Default for SimOptions<'_> {
     }
 }
 
-/// Per-machine simulation state.
-struct Machine {
-    /// Next-free time per core slot (seconds).
-    slots: Vec<f64>,
-    mem: UnifiedMemory,
-    tasks_run: usize,
-    evictions: usize,
-}
-
 /// Outcome of a simulated run: the listener log plus placement diagnostics
 /// used by Fig. 11.
 pub struct SimResult {
@@ -87,301 +91,35 @@ pub struct SimResult {
     pub cached_fraction_after_load: f64,
 }
 
-/// Simulate one application run.
+/// Simulate one application run on a homogeneous cluster (the legacy
+/// paper-reproduction entry point).
 ///
 /// Jobs are sequential: job 0 materializes (and caches) the datasets from
 /// DFS input; jobs `1..=iterations` are the iterative actions, each reading
 /// every partition of the cached dataset(s) — from cache where resident,
 /// by recomputation otherwise (recomputed partitions try to re-cache).
+///
+/// This is a thin wrapper over [`engine::run`] with
+/// [`scenario::NoDisturbances`]; the event log is byte-identical to the
+/// pre-engine serial simulator. Degenerate clusters (zero machines) are a
+/// typed [`SimError`], not a panic.
 pub fn simulate(
     profile: &WorkloadProfile,
     cluster: &ClusterSpec,
     opts: SimOptions<'_>,
-) -> SimResult {
-    let n = cluster.machines;
-    assert!(n > 0, "cluster needs at least one machine");
-    let mut rng = Rng::new(opts.seed ^ 0x5117_c0de);
-    let mut compute = opts.compute;
-    let detailed = opts.detailed_log;
-    let mut cached_reads_total = 0usize;
-    let mut tasks_total = 0usize;
-    let mut log = EventLog::new();
-    log.push(Event::AppStart {
-        app: profile.name.clone(),
-        machines: n,
-        data_scale: profile.scale,
-    });
-
-    let mut machines: Vec<Machine> = (0..n)
-        .map(|_| Machine {
-            slots: vec![0.0; cluster.machine.cores],
-            mem: UnifiedMemory::new(
-                cluster.machine.unified_mb(),
-                cluster.machine.storage_floor_mb(),
-                opts.policy,
-            ),
-            tasks_run: 0,
-            evictions: 0,
-        })
-        .collect();
-
-    // Block-s sample preparation happens before the app starts.
-    let mut now = profile.sample_prep_s;
-    for m in &mut machines {
-        for s in &mut m.slots {
-            *s = now;
-        }
-    }
-
-    let parts = profile.parallelism.max(1);
-    // partition -> machine currently caching it (per dataset)
-    let mut location: Vec<Vec<Option<usize>>> =
-        profile.cached.iter().map(|_| vec![None; parts]).collect();
-
-    let exec_per_machine = profile.exec_mem_total_mb / n as f64;
-
-    // ---------------------------------------------------------- job 0 ----
-    // Materialize: read input, compute, cache each partition where it ran.
-    let input_per_task = profile.input_mb / parts as f64;
-    for p in 0..parts {
-        let (mi, si) = earliest_slot(&machines);
-        let base = input_per_task / cluster.machine.disk_mb_s
-            + input_per_task * profile.compute_s_per_mb
-            + profile.task_overhead_s;
-        let dur = task_duration(base, profile, false, &mut rng, &mut compute);
-        let start = machines[mi].slots[si];
-        machines[mi].slots[si] = start + dur;
-        machines[mi].tasks_run += 1;
-        tasks_total += 1;
-        if detailed {
-            log.push(Event::TaskEnd {
-                stage: 0,
-                task: p,
-                machine: mi,
-                duration_s: dur,
-                cached_read: false,
-            });
-        }
-        for (di, ds) in profile.cached.iter().enumerate() {
-            let true_part = ds.true_total_mb / parts as f64;
-            let measured_part = ds.measured_total_mb / parts as f64;
-            let stored = machines[mi].mem.insert(
-                PartitionKey { dataset: ds.id, index: p },
-                true_part,
-                profile.iterations + 1,
-                1,
-            );
-            for key in machines[mi].mem.drain_evicted() {
-                machines[mi].evictions += 1;
-                log.push(Event::Eviction { machine: mi });
-                mark_evicted(&mut location, profile, key);
-            }
-            if stored {
-                location[di][p] = Some(mi);
-            }
-            if detailed {
-                log.push(Event::BlockUpdate {
-                    dataset: ds.id,
-                    partition: p,
-                    size_mb: measured_part,
-                    stored,
-                });
-            }
-        }
-    }
-    now = barrier(&mut machines, now);
-    now += profile.serial_s + shuffle_s(profile, cluster);
-    set_all_slots(&mut machines, now);
-
-    let cached_fraction_after_load = if profile.cached.is_empty() {
-        0.0
-    } else {
-        location[0].iter().filter(|l| l.is_some()).count() as f64 / parts as f64
-    };
-
-    // ------------------------------------------------- iteration jobs ----
-    let mut iter_tasks = vec![0usize; n];
-    for job in 1..=profile.iterations {
-        // Execution memory is claimed at the start of each action; with a
-        // thin margin this is what evicts over-cached machines (Fig. 11).
-        for (mi, m) in machines.iter_mut().enumerate() {
-            m.mem.claim_execution(exec_per_machine);
-            for key in m.mem.drain_evicted() {
-                m.evictions += 1;
-                log.push(Event::Eviction { machine: mi });
-                mark_evicted(&mut location, profile, key);
-            }
-        }
-
-        for p in 0..parts {
-            // a task reads the corresponding partition of every cached
-            // dataset; locality pins it to the machine caching dataset 0
-            let pinned = profile.cached.first().and_then(|_| location[0][p]);
-            let (mi, si) = match pinned {
-                Some(m) => (m, earliest_slot_on(&machines[m])),
-                None => earliest_slot(&machines),
-            };
-            let cached_read = pinned.is_some();
-            let part_input = profile.input_mb / parts as f64;
-            let base = if cached_read {
-                let part_cached: f64 = profile
-                    .cached
-                    .iter()
-                    .map(|d| d.true_total_mb / parts as f64)
-                    .sum();
-                part_cached * profile.compute_s_per_mb / profile.cached_speedup
-                    + profile.task_overhead_s
-            } else {
-                // recompute the lineage: re-read input + recompute
-                part_input / cluster.machine.disk_mb_s
-                    + part_input * profile.compute_s_per_mb * profile.recompute_factor
-                    + profile.task_overhead_s
-            };
-            let dur = task_duration(base, profile, cached_read, &mut rng, &mut compute);
-            let start = machines[mi].slots[si];
-            machines[mi].slots[si] = start + dur;
-            machines[mi].tasks_run += 1;
-            iter_tasks[mi] += 1;
-            tasks_total += 1;
-            if cached_read {
-                cached_reads_total += 1;
-            }
-            if detailed {
-                log.push(Event::TaskEnd {
-                    stage: job,
-                    task: p,
-                    machine: mi,
-                    duration_s: dur,
-                    cached_read,
-                });
-            }
-            if cached_read {
-                for ds in &profile.cached {
-                    machines[mi].mem.touch(PartitionKey { dataset: ds.id, index: p });
-                }
-            } else {
-                // Spark re-caches a recomputed partition where it ran
-                for (di, ds) in profile.cached.iter().enumerate() {
-                    let true_part = ds.true_total_mb / parts as f64;
-                    let stored = machines[mi].mem.insert(
-                        PartitionKey { dataset: ds.id, index: p },
-                        true_part,
-                        profile.iterations - job + 1,
-                        1,
-                    );
-                    for key in machines[mi].mem.drain_evicted() {
-                        machines[mi].evictions += 1;
-                        log.push(Event::Eviction { machine: mi });
-                        mark_evicted(&mut location, profile, key);
-                    }
-                    if stored {
-                        location[di][p] = Some(mi);
-                    }
-                }
-            }
-        }
-        let job_start = now;
-        now = barrier(&mut machines, now);
-        now += profile.serial_s + shuffle_s(profile, cluster);
-        set_all_slots(&mut machines, now);
-        log.push(Event::JobEnd { job, duration_s: now - job_start });
-    }
-
-    if !detailed {
-        // one aggregate BlockUpdate per dataset: currently-resident bytes
-        // in measured units (what a listener's final snapshot would show)
-        for (di, ds) in profile.cached.iter().enumerate() {
-            let resident = location[di].iter().filter(|l| l.is_some()).count();
-            let measured_part = ds.measured_total_mb / parts as f64;
-            log.push(Event::BlockUpdate {
-                dataset: ds.id,
-                partition: 0,
-                size_mb: measured_part * resident as f64,
-                stored: resident > 0,
-            });
-        }
-    }
-    for (mi, m) in machines.iter().enumerate() {
-        log.push(Event::ExecMemory { machine: mi, peak_mb: m.mem.exec_used_mb() });
-    }
-    let _ = (tasks_total, cached_reads_total);
-    log.push(Event::AppEnd { duration_s: now });
-
-    SimResult {
-        log,
-        iter_tasks_per_machine: iter_tasks,
-        evictions_per_machine: machines.iter().map(|m| m.evictions).collect(),
-        cached_fraction_after_load,
-    }
+) -> Result<SimResult, SimError> {
+    let fleet = FleetSpec::from_cluster(cluster)?;
+    engine::run(profile, &fleet, &scenario::NoDisturbances, opts).map(|r| r.sim)
 }
 
-fn mark_evicted(
-    location: &mut [Vec<Option<usize>>],
-    profile: &WorkloadProfile,
-    key: PartitionKey,
-) {
-    for (di, ds) in profile.cached.iter().enumerate() {
-        if ds.id == key.dataset {
-            if let Some(slot) = location[di].get_mut(key.index) {
-                *slot = None;
-            }
-        }
-    }
-}
-
-fn task_duration(
-    base_s: f64,
-    profile: &WorkloadProfile,
-    cached_read: bool,
-    rng: &mut Rng,
-    compute: &mut Option<&mut dyn TaskCompute>,
-) -> f64 {
-    if let Some(c) = compute.as_deref_mut() {
-        if let Some(measured) = c.run_task(profile, cached_read) {
-            return measured;
-        }
-    }
-    rng.lognormal(base_s, profile.task_time_sigma).max(1e-6)
-}
-
-/// (machine, slot) with the earliest free time; ties take the lowest index,
-/// which matches Spark's deterministic executor ordering.
-fn earliest_slot(machines: &[Machine]) -> (usize, usize) {
-    let mut best = (0usize, 0usize, f64::INFINITY);
-    for (mi, m) in machines.iter().enumerate() {
-        for (si, &t) in m.slots.iter().enumerate() {
-            if t < best.2 {
-                best = (mi, si, t);
-            }
-        }
-    }
-    (best.0, best.1)
-}
-
-fn earliest_slot_on(m: &Machine) -> usize {
-    let mut best = (0usize, f64::INFINITY);
-    for (si, &t) in m.slots.iter().enumerate() {
-        if t < best.1 {
-            best = (si, t);
-        }
-    }
-    best.0
-}
-
-/// Advance the barrier: all slots drain, return the max finish time.
-fn barrier(machines: &mut [Machine], now: f64) -> f64 {
-    machines
-        .iter()
-        .flat_map(|m| m.slots.iter().copied())
-        .fold(now, f64::max)
-}
-
-fn set_all_slots(machines: &mut [Machine], t: f64) {
-    for m in machines {
-        for s in &mut m.slots {
-            *s = t;
-        }
-    }
+/// The Area-B overhead formula shared by every caller (the single-type
+/// [`shuffle_s`], the engine's fleet aggregation, and the horizon anchor):
+/// `(n-1)/n` of the shuffle volume over the aggregate network bandwidth,
+/// plus the summed coordination overhead. One definition, so a model tweak
+/// cannot silently diverge between the analytic and executed paths.
+pub(crate) fn shuffle_overhead_s(shuffle_mb: f64, n: f64, agg_net_mb_s: f64, coord_s: f64) -> f64 {
+    let net = shuffle_mb * (n - 1.0) / n / agg_net_mb_s;
+    net + coord_s
 }
 
 /// Per-iteration shuffle + coordination cost (the Area-B terms): each
@@ -393,8 +131,12 @@ pub fn shuffle_s(profile: &WorkloadProfile, cluster: &ClusterSpec) -> f64 {
     if cluster.machines == 1 {
         return 0.0;
     }
-    let net = profile.shuffle_mb * (n - 1.0) / n / (cluster.machine.net_mb_s * n);
-    net + cluster.machine.coord_s_per_machine * n
+    shuffle_overhead_s(
+        profile.shuffle_mb,
+        n,
+        cluster.machine.net_mb_s * n,
+        cluster.machine.coord_s_per_machine * n,
+    )
 }
 
 #[cfg(test)]
@@ -433,7 +175,7 @@ mod tests {
     #[test]
     fn fully_cached_run_has_no_evictions_and_fast_iterations() {
         let p = tiny_profile(2000.0, 5, 32);
-        let res = simulate(&p, &cluster(2), SimOptions::default());
+        let res = simulate(&p, &cluster(2), SimOptions::default()).unwrap();
         let s = RunSummary::from_log(&res.log);
         assert_eq!(s.evictions, 0);
         assert!((res.cached_fraction_after_load - 1.0).abs() < 1e-9);
@@ -445,14 +187,21 @@ mod tests {
     fn under_provisioned_cluster_recomputes() {
         // one worker stores ~6.9 GB; ask for 30 GB of cache
         let p = tiny_profile(30_000.0, 3, 64);
-        let res = simulate(&p, &cluster(1), SimOptions::default());
+        let res = simulate(&p, &cluster(1), SimOptions::default()).unwrap();
         let s = RunSummary::from_log(&res.log);
         assert!(res.cached_fraction_after_load < 0.5);
         assert!(s.cached_reads < 3 * 64);
         // and it is slower than a fully-provisioned cluster per unit work
-        let res_big = simulate(&p, &cluster(8), SimOptions::default());
+        let res_big = simulate(&p, &cluster(8), SimOptions::default()).unwrap();
         let s_big = RunSummary::from_log(&res_big.log);
         assert!(s.duration_s > s_big.duration_s * 2.0);
+    }
+
+    #[test]
+    fn zero_machine_cluster_is_a_typed_error_not_a_panic() {
+        let p = tiny_profile(100.0, 1, 4);
+        let err = simulate(&p, &cluster(0), SimOptions::default()).unwrap_err();
+        assert!(matches!(err, SimError::ZeroCount { .. }), "{err}");
     }
 
     #[test]
@@ -464,7 +213,7 @@ mod tests {
         p.recompute_factor = 5.0;
         let costs: Vec<f64> = (1..=10)
             .map(|n| {
-                let r = simulate(&p, &cluster(n), SimOptions::default());
+                let r = simulate(&p, &cluster(n), SimOptions::default()).unwrap();
                 RunSummary::from_log(&r.log).cost_machine_s
             })
             .collect();
@@ -480,19 +229,21 @@ mod tests {
         // compute-heavy enough that parallelism beats coordination overhead
         let mut p = tiny_profile(3000.0, 5, 96);
         p.compute_s_per_mb = 0.2;
-        let t2 = RunSummary::from_log(&simulate(&p, &cluster(2), SimOptions::default()).log)
-            .duration_s;
-        let t8 = RunSummary::from_log(&simulate(&p, &cluster(8), SimOptions::default()).log)
-            .duration_s;
+        let t2 =
+            RunSummary::from_log(&simulate(&p, &cluster(2), SimOptions::default()).unwrap().log)
+                .duration_s;
+        let t8 =
+            RunSummary::from_log(&simulate(&p, &cluster(8), SimOptions::default()).unwrap().log)
+                .duration_s;
         assert!(t8 < t2, "t8={t8} t2={t2}");
     }
 
     #[test]
     fn deterministic_given_seed_and_sizes_stable_across_seeds() {
         let p = tiny_profile(2000.0, 4, 32);
-        let a = simulate(&p, &cluster(2), SimOptions { seed: 1, ..Default::default() });
-        let b = simulate(&p, &cluster(2), SimOptions { seed: 1, ..Default::default() });
-        let c = simulate(&p, &cluster(2), SimOptions { seed: 2, ..Default::default() });
+        let a = simulate(&p, &cluster(2), SimOptions { seed: 1, ..Default::default() }).unwrap();
+        let b = simulate(&p, &cluster(2), SimOptions { seed: 1, ..Default::default() }).unwrap();
+        let c = simulate(&p, &cluster(2), SimOptions { seed: 2, ..Default::default() }).unwrap();
         let (sa, sb, sc) = (
             RunSummary::from_log(&a.log),
             RunSummary::from_log(&b.log),
@@ -507,11 +258,13 @@ mod tests {
     #[test]
     fn sample_prep_cost_shifts_clock() {
         let mut p = tiny_profile(100.0, 1, 4);
-        let base = RunSummary::from_log(&simulate(&p, &cluster(1), SimOptions::default()).log)
-            .duration_s;
+        let base =
+            RunSummary::from_log(&simulate(&p, &cluster(1), SimOptions::default()).unwrap().log)
+                .duration_s;
         p.sample_prep_s = 42.0;
-        let with = RunSummary::from_log(&simulate(&p, &cluster(1), SimOptions::default()).log)
-            .duration_s;
+        let with =
+            RunSummary::from_log(&simulate(&p, &cluster(1), SimOptions::default()).unwrap().log)
+                .duration_s;
         assert!((with - base - 42.0).abs() < 1e-9);
     }
 
@@ -525,7 +278,7 @@ mod tests {
         let mut p = tiny_profile(46_000.0, 6, 100); // partition = 460 MB
         p.task_time_sigma = 0.4;
         p.exec_mem_total_mb = 7.0 * 492.8;
-        let res = simulate(&p, &cluster(7), SimOptions { seed: 3, ..Default::default() });
+        let res = simulate(&p, &cluster(7), SimOptions { seed: 3, ..Default::default() }).unwrap();
         let total_evictions: usize = res.evictions_per_machine.iter().sum();
         assert!(total_evictions > 0, "thin margin + skew must evict");
         let max_tasks = *res.iter_tasks_per_machine.iter().max().unwrap();
@@ -537,7 +290,7 @@ mod tests {
     fn no_cached_dataset_runs_without_block_updates() {
         let mut p = tiny_profile(0.0, 2, 8);
         p.cached.clear();
-        let res = simulate(&p, &cluster(1), SimOptions::default());
+        let res = simulate(&p, &cluster(1), SimOptions::default()).unwrap();
         let s = RunSummary::from_log(&res.log);
         assert_eq!(s.total_cached_mb(), 0.0);
         assert_eq!(s.evictions, 0);

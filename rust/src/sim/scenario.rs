@@ -1,0 +1,310 @@
+//! Pluggable mid-run disturbance scenarios for the event-driven engine.
+//!
+//! A [`Scenario`] injects time-stamped [`Disturbance`]s into the engine's
+//! event queue before the run starts: spot preemptions (the machine leaves
+//! for good, its cached partitions and in-flight tasks are lost and
+//! survivors recompute), stragglers (a machine slows down for a window),
+//! machine failures with restart (leave + rejoin empty), and step
+//! autoscaling (new machines join). Disturbance times are anchored to a
+//! deterministic closed-form runtime estimate (`horizon_s` in
+//! [`ScenarioCtx`]) so "preempt a third of the way in" lands mid-run for
+//! any workload/fleet combination without a pilot run.
+//!
+//! [`NoDisturbances`] is the no-op scenario: the engine under it is
+//! byte-identical to the pre-engine serial simulator (property-tested in
+//! `rust/tests/engine_equivalence.rs`), which is what keeps the paper's
+//! Table 1/2 and figure reproduction untouched.
+
+use super::cluster::InstanceType;
+use super::fleet::FleetSpec;
+use super::profile::WorkloadProfile;
+
+/// What a scenario sees when scheduling its disturbances.
+pub struct ScenarioCtx<'a> {
+    pub fleet: &'a FleetSpec,
+    pub profile: &'a WorkloadProfile,
+    /// Deterministic closed-form runtime anchor for the undisturbed run
+    /// (no noise, no disturbances) — computed by `engine::horizon_s`.
+    pub horizon_s: f64,
+}
+
+/// One scheduled disturbance.
+#[derive(Debug, Clone)]
+pub struct Disturbance {
+    /// Simulated time at which the disturbance takes effect.
+    pub at_s: f64,
+    pub kind: DisturbanceKind,
+}
+
+#[derive(Debug, Clone)]
+pub enum DisturbanceKind {
+    /// Spot reclaim: the machine leaves permanently. Its cached partitions
+    /// and in-flight tasks are lost; survivors recompute.
+    Preempt { machine: usize },
+    /// Crash + restart: leaves like [`DisturbanceKind::Preempt`], rejoins
+    /// with empty memory after the delay.
+    Fail { machine: usize, restart_delay_s: f64 },
+    /// Straggler: tasks starting on the machine within
+    /// `[at_s, at_s + duration_s)` run `factor`× slower.
+    Slowdown { machine: usize, factor: f64, duration_s: f64 },
+    /// Step autoscaling: `count` new machines of `instance` join.
+    ScaleOut { instance: InstanceType, count: usize },
+}
+
+/// A disturbance scenario. Implementations are stateless (`&self`) so one
+/// scenario value can drive many engine runs (the planner's risk
+/// cross-validation reuses it across seeds and candidate fleets).
+pub trait Scenario {
+    fn name(&self) -> &'static str;
+    /// The disturbances to inject for this fleet/workload.
+    fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance>;
+}
+
+/// The no-op scenario (`--scenario none`): the legacy `simulate()` path.
+pub struct NoDisturbances;
+
+/// Convenience constructor mirroring `Scenario::none()` in prose.
+pub fn none() -> NoDisturbances {
+    NoDisturbances
+}
+
+impl Scenario for NoDisturbances {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn schedule(&self, _ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+        Vec::new()
+    }
+}
+
+/// Spot reclaim of the highest-indexed machines, staggered around a
+/// fraction of the horizon. Deterministic: same fleet + workload → same
+/// preemptions (the task-time noise still varies by seed).
+pub struct SpotPreemption {
+    /// How many machines to reclaim; 0 = auto (a quarter of the fleet,
+    /// at least one). Always capped so at least one machine survives.
+    pub victims: usize,
+    /// First reclaim as a fraction of the horizon.
+    pub at_frac: f64,
+    /// Gap between successive reclaims, as a fraction of the horizon.
+    pub stagger_frac: f64,
+}
+
+impl Default for SpotPreemption {
+    fn default() -> Self {
+        SpotPreemption { victims: 0, at_frac: 0.35, stagger_frac: 0.08 }
+    }
+}
+
+impl Scenario for SpotPreemption {
+    fn name(&self) -> &'static str {
+        "spot"
+    }
+
+    fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+        let n = ctx.fleet.machines();
+        if n <= 1 {
+            return Vec::new(); // never reclaim the only machine
+        }
+        let auto = (n / 4).max(1);
+        let victims = if self.victims > 0 { self.victims } else { auto }.min(n - 1);
+        (0..victims)
+            .map(|i| Disturbance {
+                at_s: ctx.horizon_s * (self.at_frac + self.stagger_frac * i as f64),
+                kind: DisturbanceKind::Preempt { machine: n - 1 - i },
+            })
+            .collect()
+    }
+}
+
+/// One machine runs `factor`× slower for a window of the run.
+pub struct StragglerSlowdown {
+    pub machine: usize,
+    pub factor: f64,
+    pub at_frac: f64,
+    pub duration_frac: f64,
+}
+
+impl Default for StragglerSlowdown {
+    fn default() -> Self {
+        StragglerSlowdown { machine: 0, factor: 4.0, at_frac: 0.1, duration_frac: 0.6 }
+    }
+}
+
+impl Scenario for StragglerSlowdown {
+    fn name(&self) -> &'static str {
+        "straggler"
+    }
+
+    fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+        if self.machine >= ctx.fleet.machines() {
+            return Vec::new();
+        }
+        vec![Disturbance {
+            at_s: ctx.horizon_s * self.at_frac,
+            kind: DisturbanceKind::Slowdown {
+                machine: self.machine,
+                factor: self.factor,
+                duration_s: ctx.horizon_s * self.duration_frac,
+            },
+        }]
+    }
+}
+
+/// One machine crashes and rejoins with empty memory after a delay.
+pub struct FailureRestart {
+    pub machine: usize,
+    pub at_frac: f64,
+    /// Restart delay as a fraction of the horizon.
+    pub restart_frac: f64,
+}
+
+impl Default for FailureRestart {
+    fn default() -> Self {
+        FailureRestart { machine: 0, at_frac: 0.3, restart_frac: 0.15 }
+    }
+}
+
+impl Scenario for FailureRestart {
+    fn name(&self) -> &'static str {
+        "failure"
+    }
+
+    fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+        if self.machine >= ctx.fleet.machines() {
+            return Vec::new();
+        }
+        vec![Disturbance {
+            at_s: ctx.horizon_s * self.at_frac,
+            kind: DisturbanceKind::Fail {
+                machine: self.machine,
+                restart_delay_s: ctx.horizon_s * self.restart_frac,
+            },
+        }]
+    }
+}
+
+/// Step autoscaling: more machines of the fleet's first instance type join
+/// partway through the run.
+pub struct StepAutoscale {
+    pub at_frac: f64,
+    /// How many machines join; 0 = auto (double the fleet).
+    pub add: usize,
+}
+
+impl Default for StepAutoscale {
+    fn default() -> Self {
+        StepAutoscale { at_frac: 0.3, add: 0 }
+    }
+}
+
+impl Scenario for StepAutoscale {
+    fn name(&self) -> &'static str {
+        "autoscale"
+    }
+
+    fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+        let count = if self.add > 0 { self.add } else { ctx.fleet.machines() };
+        vec![Disturbance {
+            at_s: ctx.horizon_s * self.at_frac,
+            kind: DisturbanceKind::ScaleOut {
+                instance: ctx.fleet.groups[0].instance.clone(),
+                count,
+            },
+        }]
+    }
+}
+
+/// Look a scenario up by CLI name (`blink simulate --scenario ...`).
+pub fn by_name(name: &str) -> Option<Box<dyn Scenario>> {
+    match name {
+        "none" => Some(Box::new(NoDisturbances)),
+        "spot" => Some(Box::new(SpotPreemption::default())),
+        "straggler" => Some(Box::new(StragglerSlowdown::default())),
+        "failure" => Some(Box::new(FailureRestart::default())),
+        "autoscale" => Some(Box::new(StepAutoscale::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{CachedData, InstanceType};
+
+    fn ctx_fixture(machines: usize) -> (FleetSpec, WorkloadProfile) {
+        let fleet = FleetSpec::homogeneous(InstanceType::paper_worker(), machines).unwrap();
+        let profile = WorkloadProfile {
+            name: "toy".into(),
+            scale: 1000.0,
+            input_mb: 1000.0,
+            parallelism: 32,
+            cached: vec![CachedData { id: 0, true_total_mb: 500.0, measured_total_mb: 500.0 }],
+            iterations: 5,
+            compute_s_per_mb: 0.01,
+            cached_speedup: 97.0,
+            recompute_factor: 1.0,
+            serial_s: 1.0,
+            shuffle_mb: 100.0,
+            exec_mem_total_mb: 500.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.1,
+            sample_prep_s: 0.0,
+        };
+        (fleet, profile)
+    }
+
+    #[test]
+    fn lookup_covers_every_cli_name() {
+        for name in ["none", "spot", "straggler", "failure", "autoscale"] {
+            assert_eq!(by_name(name).unwrap().name(), name);
+        }
+        assert!(by_name("meteor").is_none());
+    }
+
+    #[test]
+    fn spot_preempts_a_quarter_and_spares_one_machine() {
+        let (fleet, profile) = ctx_fixture(8);
+        let ctx = ScenarioCtx { fleet: &fleet, profile: &profile, horizon_s: 100.0 };
+        let ds = SpotPreemption::default().schedule(&ctx);
+        assert_eq!(ds.len(), 2, "8 machines -> 2 victims");
+        for d in &ds {
+            assert!(d.at_s > 0.0 && d.at_s < 100.0);
+            assert!(matches!(d.kind, DisturbanceKind::Preempt { machine } if machine >= 6));
+        }
+        // a single machine is never reclaimed
+        let (solo, profile) = ctx_fixture(1);
+        let ctx = ScenarioCtx { fleet: &solo, profile: &profile, horizon_s: 100.0 };
+        assert!(SpotPreemption::default().schedule(&ctx).is_empty());
+        // explicit victim counts are capped at n-1
+        let (fleet, profile) = ctx_fixture(3);
+        let ctx = ScenarioCtx { fleet: &fleet, profile: &profile, horizon_s: 100.0 };
+        let many = SpotPreemption { victims: 99, ..Default::default() }.schedule(&ctx);
+        assert_eq!(many.len(), 2);
+    }
+
+    #[test]
+    fn none_schedules_nothing() {
+        let (fleet, profile) = ctx_fixture(4);
+        let ctx = ScenarioCtx { fleet: &fleet, profile: &profile, horizon_s: 50.0 };
+        assert!(none().schedule(&ctx).is_empty());
+    }
+
+    #[test]
+    fn autoscale_doubles_by_default() {
+        let (fleet, profile) = ctx_fixture(4);
+        let ctx = ScenarioCtx { fleet: &fleet, profile: &profile, horizon_s: 50.0 };
+        let ds = StepAutoscale::default().schedule(&ctx);
+        assert_eq!(ds.len(), 1);
+        assert!(matches!(ds[0].kind, DisturbanceKind::ScaleOut { count: 4, .. }));
+    }
+
+    #[test]
+    fn out_of_range_machines_schedule_nothing() {
+        let (fleet, profile) = ctx_fixture(2);
+        let ctx = ScenarioCtx { fleet: &fleet, profile: &profile, horizon_s: 50.0 };
+        assert!(StragglerSlowdown { machine: 9, ..Default::default() }.schedule(&ctx).is_empty());
+        assert!(FailureRestart { machine: 9, ..Default::default() }.schedule(&ctx).is_empty());
+    }
+}

@@ -1,0 +1,434 @@
+//! Legacy-path equivalence: the event-driven engine with the no-op
+//! scenario must be **byte-identical** (event-log JSONL) to the
+//! pre-refactor serial simulator, across apps, seeds and the paper's
+//! cluster range — so Table 1/2 and every figure reproduction is
+//! untouched by the engine refactor.
+//!
+//! The `reference` module below is a frozen copy of the monolithic
+//! `simulate()` loop as it existed before the engine landed (analytic
+//! durations only — these tests pass no `TaskCompute` override, and the
+//! RNG draw sequence is unchanged). The tests drive both implementations
+//! over the same inputs and demand identical serialized logs and
+//! placement diagnostics.
+
+use blink::memory::EvictionPolicy;
+use blink::sim::{simulate, CachedData, ClusterSpec, SimOptions, WorkloadProfile};
+use blink::util::prng::Rng;
+use blink::util::prop::{check, Config};
+use blink::workloads::all_apps;
+
+/// The pre-refactor serial simulator, frozen for regression.
+mod reference {
+    use blink::memory::{EvictionPolicy, PartitionKey, UnifiedMemory};
+    use blink::metrics::{Event, EventLog};
+    use blink::sim::{shuffle_s, ClusterSpec, WorkloadProfile};
+    use blink::util::prng::Rng;
+
+    struct Machine {
+        slots: Vec<f64>,
+        mem: UnifiedMemory,
+        evictions: usize,
+    }
+
+    pub struct RefResult {
+        pub log: EventLog,
+        pub iter_tasks_per_machine: Vec<usize>,
+        pub evictions_per_machine: Vec<usize>,
+        pub cached_fraction_after_load: f64,
+    }
+
+    pub fn simulate(
+        profile: &WorkloadProfile,
+        cluster: &ClusterSpec,
+        policy: EvictionPolicy,
+        seed: u64,
+        detailed: bool,
+    ) -> RefResult {
+        let n = cluster.machines;
+        assert!(n > 0, "cluster needs at least one machine");
+        let mut rng = Rng::new(seed ^ 0x5117_c0de);
+        let mut log = EventLog::new();
+        log.push(Event::AppStart {
+            app: profile.name.clone(),
+            machines: n,
+            data_scale: profile.scale,
+        });
+
+        let mut machines: Vec<Machine> = (0..n)
+            .map(|_| Machine {
+                slots: vec![0.0; cluster.machine.cores],
+                mem: UnifiedMemory::new(
+                    cluster.machine.unified_mb(),
+                    cluster.machine.storage_floor_mb(),
+                    policy,
+                ),
+                evictions: 0,
+            })
+            .collect();
+
+        let mut now = profile.sample_prep_s;
+        for m in &mut machines {
+            for s in &mut m.slots {
+                *s = now;
+            }
+        }
+
+        let parts = profile.parallelism.max(1);
+        let mut location: Vec<Vec<Option<usize>>> =
+            profile.cached.iter().map(|_| vec![None; parts]).collect();
+
+        let exec_per_machine = profile.exec_mem_total_mb / n as f64;
+
+        // -------------------------------------------------- job 0 ----
+        let input_per_task = profile.input_mb / parts as f64;
+        for p in 0..parts {
+            let (mi, si) = earliest_slot(&machines);
+            let base = input_per_task / cluster.machine.disk_mb_s
+                + input_per_task * profile.compute_s_per_mb
+                + profile.task_overhead_s;
+            let dur = task_duration(base, profile, &mut rng);
+            let start = machines[mi].slots[si];
+            machines[mi].slots[si] = start + dur;
+            if detailed {
+                log.push(Event::TaskEnd {
+                    stage: 0,
+                    task: p,
+                    machine: mi,
+                    duration_s: dur,
+                    cached_read: false,
+                });
+            }
+            for (di, ds) in profile.cached.iter().enumerate() {
+                let true_part = ds.true_total_mb / parts as f64;
+                let measured_part = ds.measured_total_mb / parts as f64;
+                let stored = machines[mi].mem.insert(
+                    PartitionKey { dataset: ds.id, index: p },
+                    true_part,
+                    profile.iterations + 1,
+                    1,
+                );
+                for key in machines[mi].mem.drain_evicted() {
+                    machines[mi].evictions += 1;
+                    log.push(Event::Eviction { machine: mi });
+                    mark_evicted(&mut location, profile, key);
+                }
+                if stored {
+                    location[di][p] = Some(mi);
+                }
+                if detailed {
+                    log.push(Event::BlockUpdate {
+                        dataset: ds.id,
+                        partition: p,
+                        size_mb: measured_part,
+                        stored,
+                    });
+                }
+            }
+        }
+        now = barrier(&machines, now);
+        now += profile.serial_s + shuffle_s(profile, cluster);
+        set_all_slots(&mut machines, now);
+
+        let cached_fraction_after_load = if profile.cached.is_empty() {
+            0.0
+        } else {
+            location[0].iter().filter(|l| l.is_some()).count() as f64 / parts as f64
+        };
+
+        // ----------------------------------------- iteration jobs ----
+        let mut iter_tasks = vec![0usize; n];
+        for job in 1..=profile.iterations {
+            for (mi, m) in machines.iter_mut().enumerate() {
+                m.mem.claim_execution(exec_per_machine);
+                for key in m.mem.drain_evicted() {
+                    m.evictions += 1;
+                    log.push(Event::Eviction { machine: mi });
+                    mark_evicted(&mut location, profile, key);
+                }
+            }
+
+            for p in 0..parts {
+                let pinned = profile.cached.first().and_then(|_| location[0][p]);
+                let (mi, si) = match pinned {
+                    Some(m) => (m, earliest_slot_on(&machines[m])),
+                    None => earliest_slot(&machines),
+                };
+                let cached_read = pinned.is_some();
+                let part_input = profile.input_mb / parts as f64;
+                let base = if cached_read {
+                    let part_cached: f64 = profile
+                        .cached
+                        .iter()
+                        .map(|d| d.true_total_mb / parts as f64)
+                        .sum();
+                    part_cached * profile.compute_s_per_mb / profile.cached_speedup
+                        + profile.task_overhead_s
+                } else {
+                    part_input / cluster.machine.disk_mb_s
+                        + part_input * profile.compute_s_per_mb * profile.recompute_factor
+                        + profile.task_overhead_s
+                };
+                let dur = task_duration(base, profile, &mut rng);
+                let start = machines[mi].slots[si];
+                machines[mi].slots[si] = start + dur;
+                iter_tasks[mi] += 1;
+                if detailed {
+                    log.push(Event::TaskEnd {
+                        stage: job,
+                        task: p,
+                        machine: mi,
+                        duration_s: dur,
+                        cached_read,
+                    });
+                }
+                if cached_read {
+                    for ds in &profile.cached {
+                        machines[mi].mem.touch(PartitionKey { dataset: ds.id, index: p });
+                    }
+                } else {
+                    for (di, ds) in profile.cached.iter().enumerate() {
+                        let true_part = ds.true_total_mb / parts as f64;
+                        let stored = machines[mi].mem.insert(
+                            PartitionKey { dataset: ds.id, index: p },
+                            true_part,
+                            profile.iterations - job + 1,
+                            1,
+                        );
+                        for key in machines[mi].mem.drain_evicted() {
+                            machines[mi].evictions += 1;
+                            log.push(Event::Eviction { machine: mi });
+                            mark_evicted(&mut location, profile, key);
+                        }
+                        if stored {
+                            location[di][p] = Some(mi);
+                        }
+                    }
+                }
+            }
+            let job_start = now;
+            now = barrier(&machines, now);
+            now += profile.serial_s + shuffle_s(profile, cluster);
+            set_all_slots(&mut machines, now);
+            log.push(Event::JobEnd { job, duration_s: now - job_start });
+        }
+
+        if !detailed {
+            for (di, ds) in profile.cached.iter().enumerate() {
+                let resident = location[di].iter().filter(|l| l.is_some()).count();
+                let measured_part = ds.measured_total_mb / parts as f64;
+                log.push(Event::BlockUpdate {
+                    dataset: ds.id,
+                    partition: 0,
+                    size_mb: measured_part * resident as f64,
+                    stored: resident > 0,
+                });
+            }
+        }
+        for (mi, m) in machines.iter().enumerate() {
+            log.push(Event::ExecMemory { machine: mi, peak_mb: m.mem.exec_used_mb() });
+        }
+        log.push(Event::AppEnd { duration_s: now });
+
+        RefResult {
+            log,
+            iter_tasks_per_machine: iter_tasks,
+            evictions_per_machine: machines.iter().map(|m| m.evictions).collect(),
+            cached_fraction_after_load,
+        }
+    }
+
+    fn mark_evicted(
+        location: &mut [Vec<Option<usize>>],
+        profile: &WorkloadProfile,
+        key: PartitionKey,
+    ) {
+        for (di, ds) in profile.cached.iter().enumerate() {
+            if ds.id == key.dataset {
+                if let Some(slot) = location[di].get_mut(key.index) {
+                    *slot = None;
+                }
+            }
+        }
+    }
+
+    fn task_duration(base_s: f64, profile: &WorkloadProfile, rng: &mut Rng) -> f64 {
+        rng.lognormal(base_s, profile.task_time_sigma).max(1e-6)
+    }
+
+    fn earliest_slot(machines: &[Machine]) -> (usize, usize) {
+        let mut best = (0usize, 0usize, f64::INFINITY);
+        for (mi, m) in machines.iter().enumerate() {
+            for (si, &t) in m.slots.iter().enumerate() {
+                if t < best.2 {
+                    best = (mi, si, t);
+                }
+            }
+        }
+        (best.0, best.1)
+    }
+
+    fn earliest_slot_on(m: &Machine) -> usize {
+        let mut best = (0usize, f64::INFINITY);
+        for (si, &t) in m.slots.iter().enumerate() {
+            if t < best.1 {
+                best = (si, t);
+            }
+        }
+        best.0
+    }
+
+    fn barrier(machines: &[Machine], now: f64) -> f64 {
+        machines
+            .iter()
+            .flat_map(|m| m.slots.iter().copied())
+            .fold(now, f64::max)
+    }
+
+    fn set_all_slots(machines: &mut [Machine], t: f64) {
+        for m in machines {
+            for s in &mut m.slots {
+                *s = t;
+            }
+        }
+    }
+}
+
+fn assert_identical(
+    profile: &WorkloadProfile,
+    machines: usize,
+    seed: u64,
+    detailed: bool,
+    label: &str,
+) {
+    let cluster = ClusterSpec::workers(machines);
+    let new = simulate(
+        profile,
+        &cluster,
+        SimOptions { policy: EvictionPolicy::Lru, seed, compute: None, detailed_log: detailed },
+    )
+    .unwrap();
+    let old = reference::simulate(profile, &cluster, EvictionPolicy::Lru, seed, detailed);
+    assert_eq!(
+        new.log.to_jsonl(),
+        old.log.to_jsonl(),
+        "{label}: serialized logs diverged (machines={machines}, seed={seed}, detailed={detailed})"
+    );
+    assert_eq!(new.iter_tasks_per_machine, old.iter_tasks_per_machine, "{label}: iter tasks");
+    assert_eq!(new.evictions_per_machine, old.evictions_per_machine, "{label}: evictions");
+    assert_eq!(
+        new.cached_fraction_after_load, old.cached_fraction_after_load,
+        "{label}: cached fraction"
+    );
+}
+
+#[test]
+fn every_app_is_byte_identical_across_the_paper_machine_range() {
+    // all 8 workloads over the paper's 4–24 machine span (plus both log
+    // granularities at the boundary sizes)
+    for app in all_apps() {
+        let profile = app.profile(30.0);
+        for machines in [4usize, 7, 12, 16, 24] {
+            assert_identical(&profile, machines, 1000 + machines as u64, true, app.name);
+        }
+        assert_identical(&profile, 4, 77, false, app.name);
+        assert_identical(&profile, 24, 78, false, app.name);
+    }
+}
+
+#[test]
+fn under_provisioned_runs_are_byte_identical_too() {
+    // area-A heavy path (eviction churn + recompute) at a scale a small
+    // cluster cannot hold
+    let app = all_apps().into_iter().find(|a| a.name == "svm").unwrap();
+    let profile = app.profile(300.0);
+    for machines in [1usize, 2, 4] {
+        assert_identical(&profile, machines, 5, true, "svm-underprovisioned");
+    }
+}
+
+#[test]
+fn property_random_profiles_are_byte_identical() {
+    fn random_profile(rng: &mut Rng, size: usize) -> WorkloadProfile {
+        let parallelism = 4 + rng.below(size.max(1) * 4 + 4);
+        WorkloadProfile {
+            name: "prop".into(),
+            scale: rng.range(1.0, 2000.0),
+            input_mb: rng.range(10.0, 20_000.0),
+            parallelism,
+            cached: (0..1 + rng.below(2))
+                .map(|i| {
+                    let mb = rng.range(1.0, 30_000.0);
+                    CachedData { id: i, true_total_mb: mb, measured_total_mb: mb }
+                })
+                .collect(),
+            iterations: rng.below(6),
+            compute_s_per_mb: rng.range(0.001, 0.3),
+            cached_speedup: 97.0,
+            recompute_factor: rng.range(0.2, 8.0),
+            serial_s: rng.range(0.0, 5.0),
+            shuffle_mb: rng.range(0.0, 500.0),
+            exec_mem_total_mb: rng.range(0.0, 20_000.0),
+            task_overhead_s: 0.01,
+            task_time_sigma: rng.range(0.0, 0.5),
+            sample_prep_s: rng.range(0.0, 10.0),
+        }
+    }
+
+    check(
+        &Config { cases: 48, seed: 0xe9_1dea, max_size: 12 },
+        |rng, size| {
+            let machines = 1 + rng.below(24);
+            let detailed = rng.below(2) == 0;
+            (random_profile(rng, size), machines, rng.next_u64(), detailed)
+        },
+        |(profile, machines, seed, detailed)| {
+            let cluster = ClusterSpec::workers(*machines);
+            let new = simulate(
+                profile,
+                &cluster,
+                SimOptions {
+                    policy: EvictionPolicy::Lru,
+                    seed: *seed,
+                    compute: None,
+                    detailed_log: *detailed,
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            let old =
+                reference::simulate(profile, &cluster, EvictionPolicy::Lru, *seed, *detailed);
+            if new.log.to_jsonl() != old.log.to_jsonl() {
+                return Err(format!(
+                    "logs diverged at machines={machines}, seed={seed}, detailed={detailed}"
+                ));
+            }
+            if new.iter_tasks_per_machine != old.iter_tasks_per_machine {
+                return Err("iter task placement diverged".into());
+            }
+            if new.evictions_per_machine != old.evictions_per_machine {
+                return Err("eviction counts diverged".into());
+            }
+            if new.cached_fraction_after_load != old.cached_fraction_after_load {
+                return Err("cached fraction diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn eviction_policies_also_match_the_reference() {
+    // the LRC/MRD paths run through the same engine core
+    let app = all_apps().into_iter().find(|a| a.name == "km").unwrap();
+    let profile = app.profile(60.0);
+    for policy in [EvictionPolicy::Lru, EvictionPolicy::Lrc, EvictionPolicy::Mrd] {
+        let cluster = ClusterSpec::workers(3);
+        let new = simulate(
+            &profile,
+            &cluster,
+            SimOptions { policy, seed: 9, compute: None, detailed_log: true },
+        )
+        .unwrap();
+        let old = reference::simulate(&profile, &cluster, policy, 9, true);
+        assert_eq!(new.log.to_jsonl(), old.log.to_jsonl(), "{policy}");
+    }
+}

@@ -21,7 +21,8 @@ fn sample_run_logs_roundtrip_through_jsonl() {
             compute: None,
             detailed_log: true,
         },
-    );
+    )
+    .unwrap();
     let text = res.log.to_jsonl();
     assert!(text.lines().count() > 3);
     let back = EventLog::from_jsonl(&text).unwrap();
@@ -59,7 +60,8 @@ fn coarse_logs_summarize_like_detailed_logs() {
                 compute: None,
                 detailed_log: detailed,
             },
-        );
+        )
+        .unwrap();
         RunSummary::from_log(&res.log)
     };
     let fine = run(true);

@@ -117,7 +117,8 @@ fn eviction_policies_equivalent_on_single_dataset_apps() {
             &app.profile(200.0), // small scale for debug speed, area A on 1 machine
             &ClusterSpec::workers(1),
             SimOptions { policy, seed: 4, compute: None, detailed_log: false },
-        );
+        )
+        .unwrap();
         costs.push(RunSummary::from_log(&res.log).cost_machine_s);
     }
     let spread = (stats::max(&costs) - stats::min(&costs)) / stats::mean(&costs);

@@ -54,7 +54,8 @@ fn sim_invariants_hold_for_arbitrary_profiles() {
                     compute: None,
                     detailed_log: true,
                 },
-            );
+            )
+            .map_err(|e| e.to_string())?;
             let s = RunSummary::from_log(&res.log);
             // time moves forward, cost = n x time
             if s.duration_s < profile.sample_prep_s - 1e-9 {
@@ -115,7 +116,8 @@ fn more_machines_never_increase_duration_much_when_cached() {
                         compute: None,
                         detailed_log: false,
                     },
-                );
+                )
+                .expect("worker cluster is valid");
                 RunSummary::from_log(&res.log).duration_s
             };
             let (t2, t4) = (t(2), t(4));
@@ -206,11 +208,13 @@ fn event_json_roundtrips_for_all_variants() {
         Event::Eviction { machine: 2 },
         Event::JobEnd { job: 4, duration_s: 9.0 },
         Event::ExecMemory { machine: 1, peak_mb: 333.25 },
+        Event::MachineLost { machine: 2, time_s: 12.25, cached_mb_lost: 640.5, inflight_tasks: 3 },
+        Event::MachineJoined { machine: 4, time_s: 15.75 },
         Event::AppEnd { duration_s: 77.5 },
     ];
     for e in events {
         let j = e.to_json().to_string();
         let parsed = json::parse(&j).unwrap();
-        assert_eq!(Event::from_json(&parsed), Some(e));
+        assert_eq!(Event::from_json(&parsed), Ok(e));
     }
 }

@@ -1,0 +1,207 @@
+//! Integration: disturbance scenarios end-to-end — the acceptance story
+//! of the engine refactor.
+//!
+//! * a spot-preemption engine run on a cloud catalog shape shows
+//!   cached-partition loss, recompute recovery, and a realized cost
+//!   strictly above the naive `SpotDiscount` quote;
+//! * the same story is surfaced through the CLI layer
+//!   (`blink simulate --scenario spot` → `coordinator::cmd_simulate`);
+//! * failure-with-restart and autoscaling thread machine lifecycle events
+//!   through the serialized listener-log round trip.
+
+use blink::coordinator;
+use blink::cost::{PricingModel, SpotDiscount};
+use blink::memory::EvictionPolicy;
+use blink::metrics::{Event, EventLog, RunSummary};
+use blink::sim::{engine, scenario, FleetSpec, InstanceCatalog, SimOptions};
+use blink::workloads::app_by_name;
+
+fn opts(seed: u64, detailed: bool) -> SimOptions<'static> {
+    SimOptions { policy: EvictionPolicy::Lru, seed, compute: None, detailed_log: detailed }
+}
+
+fn cloud_fleet(instance: &str, machines: usize) -> FleetSpec {
+    let catalog = InstanceCatalog::cloud();
+    FleetSpec::homogeneous(catalog.get(instance).unwrap().clone(), machines).unwrap()
+}
+
+#[test]
+fn spot_preemption_at_the_minimal_pick_realizes_above_the_naive_quote() {
+    // svm at 40 % scale on 3 gp.xlarge — the planner's minimal
+    // eviction-free count for this shape, i.e. no slack. The naive
+    // SpotDiscount quote prices zero interruption risk; reclaiming one
+    // machine pushes the survivors below the eviction-free boundary, so
+    // every remaining iteration pays the Area-A recompute penalty and the
+    // realized per-machine cost blows past the quote.
+    let app = app_by_name("svm").unwrap();
+    let profile = app.profile(400.0);
+    let fleet = cloud_fleet("gp.xlarge", 3);
+    let instance = InstanceCatalog::cloud().get("gp.xlarge").unwrap().clone();
+
+    let base = engine::run(&profile, &fleet, &scenario::NoDisturbances, opts(3, true)).unwrap();
+    let bs = RunSummary::from_log(&base.sim.log);
+    assert_eq!(bs.evictions, 0, "baseline fits eviction-free");
+    assert_eq!(bs.machines_lost, 0);
+
+    let spot = engine::run(
+        &profile,
+        &fleet,
+        &scenario::SpotPreemption { victims: 1, ..Default::default() },
+        opts(3, true),
+    )
+    .unwrap();
+    let ss = RunSummary::from_log(&spot.sim.log);
+    assert_eq!(ss.machines_lost, 1);
+
+    // cached-partition loss is visible in the log
+    let lost_mb: f64 = spot
+        .sim
+        .log
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::MachineLost { cached_mb_lost, .. } => Some(*cached_mb_lost),
+            _ => None,
+        })
+        .sum();
+    assert!(lost_mb > 0.0, "the reclaimed machine held cached partitions");
+
+    // survivors recompute the lost partitions via the lineage path
+    let recompute_tasks = spot
+        .sim
+        .log
+        .events
+        .iter()
+        .filter(|e| {
+            matches!(e, Event::TaskEnd { stage, cached_read, .. } if *stage > 0 && !*cached_read)
+        })
+        .count();
+    assert!(recompute_tasks > 0, "survivors must recompute the lost partitions");
+    assert!(ss.duration_s > bs.duration_s, "the loss stretches the run");
+
+    // realized cost strictly above the naive SpotDiscount quote
+    let pricing = SpotDiscount::typical();
+    let naive_quote = pricing.price(&instance, 3, bs.duration_s);
+    let realized = pricing.price_timeline(&spot.timeline);
+    assert!(
+        realized > naive_quote,
+        "realized {realized} must exceed the naive quote {naive_quote}"
+    );
+    // and the realized timeline stops billing the reclaimed machine early
+    assert!(spot.timeline.machine_seconds() < 3.0 * ss.duration_s);
+}
+
+#[test]
+fn spot_preemption_with_slack_recovers_full_caching() {
+    // the same workload on 6 gp.xlarge has headroom: after the reclaim the
+    // survivors re-cache the recomputed partitions, and by the final job
+    // every read is served from cache again
+    let app = app_by_name("svm").unwrap();
+    let profile = app.profile(400.0);
+    let fleet = cloud_fleet("gp.xlarge", 6);
+    let spot = engine::run(
+        &profile,
+        &fleet,
+        &scenario::SpotPreemption { victims: 1, ..Default::default() },
+        opts(3, true),
+    )
+    .unwrap();
+    let ss = RunSummary::from_log(&spot.sim.log);
+    assert_eq!(ss.machines_lost, 1);
+    let (mut recompute_tasks, mut last_total, mut last_cached) = (0usize, 0usize, 0usize);
+    for e in &spot.sim.log.events {
+        if let Event::TaskEnd { stage, cached_read, .. } = e {
+            if *stage == 0 {
+                continue;
+            }
+            if !*cached_read {
+                recompute_tasks += 1;
+            }
+            if *stage == profile.iterations {
+                last_total += 1;
+                if *cached_read {
+                    last_cached += 1;
+                }
+            }
+        }
+    }
+    assert!(recompute_tasks > 0, "the loss forces a recompute wave");
+    assert_eq!(last_total, profile.parallelism);
+    assert_eq!(last_cached, last_total, "recovery: the final job reads cache only");
+}
+
+#[test]
+fn cmd_simulate_surfaces_the_spot_story() {
+    // the CLI path: blink simulate --app svm --scenario spot
+    let s = coordinator::cmd_simulate("svm", 400.0, 3, "gp.xlarge", "spot", "spot", 3).unwrap();
+    assert!(s.machines_lost >= 1, "spot scenario must reclaim a machine");
+    assert!(s.duration_s > 0.0);
+    // none is also valid and loses nothing
+    let calm =
+        coordinator::cmd_simulate("svm", 100.0, 4, "i5-worker", "none", "machine-seconds", 1)
+            .unwrap();
+    assert_eq!(calm.machines_lost, 0);
+    assert_eq!(calm.machines_joined, 0);
+}
+
+#[test]
+fn machine_lifecycle_events_roundtrip_through_jsonl() {
+    let app = app_by_name("svm").unwrap();
+    let profile = app.profile(200.0);
+    let fleet = cloud_fleet("gp.xlarge", 4);
+    let res =
+        engine::run(&profile, &fleet, &scenario::FailureRestart::default(), opts(7, true))
+            .unwrap();
+    let text = res.sim.log.to_jsonl();
+    let back = EventLog::from_jsonl(&text).unwrap();
+    assert_eq!(res.sim.log.events, back.events);
+    let s = RunSummary::from_log(&back);
+    assert_eq!(s.machines_lost, 1, "failure loses the machine once");
+    assert_eq!(s.machines_joined, 1, "and the restart brings it back");
+    assert!(
+        RunSummary::from_log(&res.sim.log) == s,
+        "summary identical through the serialized round trip"
+    );
+}
+
+#[test]
+fn autoscale_and_straggler_scenarios_complete_with_consistent_logs() {
+    let app = app_by_name("km").unwrap();
+    let profile = app.profile(100.0);
+    let fleet = cloud_fleet("cpu.xlarge", 3);
+    let scaled =
+        engine::run(&profile, &fleet, &scenario::StepAutoscale::default(), opts(2, false))
+            .unwrap();
+    let ss = RunSummary::from_log(&scaled.sim.log);
+    assert_eq!(ss.machines_joined, 3, "default autoscale doubles the fleet");
+    assert_eq!(ss.machines_lost, 0);
+    assert_eq!(scaled.timeline.entries.len(), 6);
+
+    let base = engine::run(&profile, &fleet, &scenario::NoDisturbances, opts(2, false)).unwrap();
+    let slow = engine::run(
+        &profile,
+        &fleet,
+        &scenario::StragglerSlowdown { factor: 6.0, ..Default::default() },
+        opts(2, false),
+    )
+    .unwrap();
+    let bt = RunSummary::from_log(&base.sim.log).duration_s;
+    let st = RunSummary::from_log(&slow.sim.log).duration_s;
+    assert!(st > bt, "straggler must slow the run: {st} vs {bt}");
+}
+
+#[test]
+fn blink_table1_picks_survive_the_engine_refactor() {
+    // the legacy path (simulate -> engine + none) still lands the paper's
+    // bold numbers; redundant with blink's own tests, but cheap insurance
+    // at the integration boundary
+    use blink::blink::{Blink, RustFit};
+    use blink::sim::MachineSpec;
+    use blink::workloads::FULL_SCALE;
+    for (name, want) in [("svm", 7usize), ("km", 4), ("gbt", 1)] {
+        let app = app_by_name(name).unwrap();
+        let mut b = RustFit::default();
+        let d = Blink::new(&mut b).decide(&app, FULL_SCALE, &MachineSpec::worker_node());
+        assert_eq!(d.machines, want, "{name}");
+    }
+}
