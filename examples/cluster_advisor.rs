@@ -3,14 +3,15 @@
 //! answer side by side with the catalog-driven (type × count) search an
 //! operator would consult before submitting a job.
 //!
+//! One long-lived `Advisor` session serves the whole report: each app is
+//! profiled exactly once, and the focus app's single `TrainedProfile`
+//! answers every catalog × pricing plan — §5.4's adaptivity as API shape.
+//!
 //! ```bash
 //! cargo run --release --example cluster_advisor [-- <scale> [app]]
 //! ```
 
-use blink::blink::{
-    plan, Blink, ExecMemoryPredictor, PlanInput, RustFit, SampleRunsManager, SamplingOutcome,
-    SizePredictor,
-};
+use blink::blink::{Advisor, RustFit};
 use blink::cost::{PerInstanceHour, PricingModel, SpotDiscount};
 use blink::sim::{InstanceCatalog, MachineSpec};
 use blink::util::units::{fmt_mb, fmt_mb_signed, fmt_secs};
@@ -30,15 +31,17 @@ fn main() {
         fmt_mb(machine.unified_mb()),
         fmt_mb(machine.storage_floor_mb()),
     );
+
+    // one session for the whole report; profiles are cached per app
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().max_machines(12).build(&mut backend);
+
     println!(
         "{:<7} {:>10} {:>12} {:>12} {:>5} {:>5} {:>6} {:>14} {:>12}",
         "app", "input", "pred cache", "pred exec", "min", "max", "PICK", "headroom", "sample cost"
     );
     for app in all_apps() {
-        let mut backend = RustFit::default();
-        let mut blink = Blink::new(&mut backend);
-        let scales = blink::experiments::sampling_scales(&app);
-        let d = blink.decide_with_scales(&app, scale, &machine, &scales);
+        let d = advisor.profile(&app).recommend(scale, &machine);
         // headroom_mb is negative (a deficit) for saturated picks; the
         // signed rendering keeps that visible instead of faking headroom
         let (min, max, headroom) = d
@@ -62,34 +65,25 @@ fn main() {
     println!("\n(PICK = minimal eviction-free cluster size; negative headroom = cache deficit)");
 
     // ---- fleet-aware planning: ONE sampling phase, every catalog ---------
-    // §5.4's adaptivity: the predictors are trained once from the sample
-    // runs, then re-planned across catalogs and pricing models for free.
+    // §5.4's adaptivity: the profile is trained once from the sample runs
+    // (a cache hit here — the table above already profiled it), then
+    // re-planned across catalogs and pricing models for free.
     let app = app_by_name(&focus).unwrap_or_else(|| {
         eprintln!("unknown app '{focus}', falling back to als");
         app_by_name("als").unwrap()
     });
     println!("\n=== fleet planner for '{}' @ scale {scale} ===", app.name);
-    let mgr = SampleRunsManager::default();
-    let scales = blink::experiments::sampling_scales(&app);
-    let (cached, exec_mb) = match mgr.run(&app, &scales) {
-        SamplingOutcome::Profiled(runs) => {
-            let mut backend = RustFit::default();
-            let sizes = SizePredictor::train(&mut backend, &runs);
-            let exec = ExecMemoryPredictor::train(&mut backend, &runs);
-            (sizes.predict_total(scale), exec.predict_total(scale))
-        }
-        SamplingOutcome::NoCachedData { .. } => (0.0, 0.0),
-    };
-    let profile = app.profile(scale);
-    let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec_mb };
+    let phases_before = advisor.sampling_phases();
+    let profile = advisor.profile(&app);
     let hourly = PerInstanceHour::hourly();
     let spot = SpotDiscount::typical();
     let pricings: [&dyn PricingModel; 2] = [&hourly, &spot];
     for catalog in [InstanceCatalog::paper(), InstanceCatalog::cloud()] {
         for pricing in pricings {
-            let p = plan(&input, &catalog, pricing, 12);
-            blink::experiments::report::print_plan(&p, &catalog, pricing.name());
+            let advice = profile.plan(scale, &catalog, pricing);
+            blink::experiments::report::print_plan(&advice.plan, &catalog, pricing.name());
         }
     }
-    println!("\n(one sampling phase total; the same predictors priced every catalog — §5.4's adaptivity)");
+    assert_eq!(advisor.sampling_phases(), phases_before, "plans must not re-sample");
+    println!("\n(one sampling phase; the same profile priced every catalog — §5.4's adaptivity)");
 }

@@ -18,9 +18,9 @@
 //!   3. reports the measured cached-read vs recompute asymmetry and the
 //!      cost savings vs the average cluster size.
 //!
-//! Results are recorded in DESIGN.md §4 (experiment index).
+//! Results are recorded in DESIGN.md §5 (experiment index).
 
-use blink::blink::Blink;
+use blink::blink::Advisor;
 use blink::compute::RealCompute;
 use blink::memory::EvictionPolicy;
 use blink::metrics::RunSummary;
@@ -115,14 +115,12 @@ fn run_real(runtime: &mut Runtime, name: &str, scale: f64) {
     let t0 = std::time::Instant::now();
     let (decision, dispatches) = {
         let mut fit = PjrtFit::new(runtime);
-        let mut blink = Blink::new(&mut fit);
-        let d = blink.decide(&app, scale, &machine);
-        let n = blink.backend.name();
-        assert_eq!(n, "pjrt-linfit");
-        // blink borrows fit; read the dispatch count after
-        drop(blink);
-        let disp = fit.dispatches;
-        (d, disp)
+        let mut advisor = Advisor::builder().build(&mut fit);
+        assert_eq!(advisor.backend_name(), "pjrt-linfit");
+        let d = advisor.profile(&app).recommend(scale, &machine);
+        // the advisor borrows fit; read the dispatch count after
+        drop(advisor);
+        (d, fit.dispatches)
     };
     println!(
         "decision: {} machines (predicted cache {}, {} PJRT linfit dispatches, {:.1} ms)",

@@ -10,6 +10,9 @@
 //! This example verifies that on svm (single cached dataset, area A) and
 //! then constructs a TWO-dataset workload with different reference
 //! patterns where the policies do diverge.
+//!
+//! (Blink's answer to eviction is upstream of any policy: the advisor API
+//! — see `examples/quickstart.rs` — sizes the cluster so nothing evicts.)
 
 use blink::memory::EvictionPolicy;
 use blink::metrics::RunSummary;

@@ -1,15 +1,18 @@
-//! Quickstart: the full Blink pipeline on one application.
+//! Quickstart: the session-oriented Blink API on one application.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Runs three tiny sample runs of SVM (0.1–0.3 % of a 59.6 GB input) on a
-//! simulated single sample node, fits the size/memory models, selects the
-//! optimal cluster size, then executes the actual run at that size and
-//! compares its cost against every other cluster size.
+//! Builds an `Advisor`, profiles SVM **once** (three tiny sample runs of
+//! 0.1–0.3 % of a 59.6 GB input on a simulated single sample node, model
+//! fitting included), then answers two queries from the same trained
+//! profile — the §5.4 cluster-size recommendation and the Table-2
+//! max-scale bound — before executing the actual run at the pick and
+//! comparing its cost against every other cluster size.
 
-use blink::blink::{Blink, RustFit};
+use blink::blink::report::RecommendReport;
+use blink::blink::{Advisor, Report, RustFit};
 use blink::experiments::actual_run;
 use blink::sim::MachineSpec;
 use blink::util::units::{fmt_mb, fmt_pct, fmt_secs};
@@ -19,19 +22,30 @@ fn main() {
     let app = app_by_name("svm").expect("svm registered");
     println!("== BLINK quickstart: {} ({} input) ==\n", app.name, fmt_mb(app.input_mb_full));
 
-    // 1. sample + predict + select
+    // 1. profile once: sample + fit (the only expensive step)
     let mut backend = RustFit::default();
-    let mut blink = Blink::new(&mut backend);
+    let mut advisor = Advisor::builder().max_machines(12).build(&mut backend);
+    let profile = advisor.profile(&app);
     let machine = MachineSpec::worker_node();
-    let decision = blink.decide(&app, FULL_SCALE, &machine);
 
+    // 2. query many: recommendation + bound from the same trained state
+    let decision = profile.recommend(FULL_SCALE, &machine);
     println!("sample runs cost      : {}", fmt_secs(decision.sample_cost_machine_s));
     println!("predicted cached size : {}", fmt_mb(decision.predicted_cached_mb));
     println!("actual cached size    : {}", fmt_mb(app.total_true_cached_mb(FULL_SCALE)));
     println!("predicted exec memory : {}", fmt_mb(decision.predicted_exec_mb));
-    println!("recommended cluster   : {} machines\n", decision.machines);
+    println!("recommended cluster   : {} machines", decision.machines);
+    println!(
+        "max scale on 12 nodes : {:.0} (no new sample runs)",
+        profile.max_scale(&machine, 12)
+    );
+    assert_eq!(advisor.sampling_phases(), 1, "both queries reused one profile");
 
-    // 2. the actual run at the recommendation, vs all other sizes
+    // every query result also renders as JSON for services:
+    let report = RecommendReport::new("rust-nnls", &profile, FULL_SCALE, &machine, false);
+    println!("\nas JSON: {}\n", report.to_json());
+
+    // 3. the actual run at the recommendation, vs all other sizes
     println!("{:>4} {:>12} {:>16} {:>8}", "n", "time", "cost (m-min)", "");
     let mut costs = Vec::new();
     for n in 1..=12 {

@@ -1,32 +1,26 @@
-//! Scalability & model reuse (§5.4 / §6.4): the predictors are trained
-//! ONCE from tiny sample runs, then re-queried for other data scales and
-//! other machine types without any new sampling.
+//! Scalability & model reuse (§5.4 / §6.4): one `TrainedProfile` is built
+//! from tiny sample runs, then re-queried for other data scales and other
+//! machine types without any new sampling — profile once, query many.
 //!
 //! ```bash
 //! cargo run --release --example scalability
 //! ```
 
-use blink::blink::{
-    bounds, select_cluster_size, ExecMemoryPredictor, RustFit, SampleRunsManager,
-    SamplingOutcome, SizePredictor,
-};
+use blink::blink::{Advisor, RustFit};
 use blink::sim::MachineSpec;
 use blink::util::units::fmt_mb;
 use blink::workloads::{app_by_name, FULL_SCALE};
 
 fn main() {
     let app = app_by_name("svm").unwrap();
-    println!("training predictors from 3 sample runs (0.1–0.3 % of {})...\n",
+    println!("training a profile from 3 sample runs (0.1–0.3 % of {})...\n",
         fmt_mb(app.input_mb_full));
 
-    let mgr = SampleRunsManager::default();
-    let runs = match mgr.run(&app, &[1.0, 2.0, 3.0]) {
-        SamplingOutcome::Profiled(r) => r,
-        _ => unreachable!("svm caches data"),
-    };
     let mut backend = RustFit::default();
-    let sizes = SizePredictor::train(&mut backend, &runs);
-    let exec = ExecMemoryPredictor::train(&mut backend, &runs);
+    // 64 machines: let the queries roam beyond the paper's 12-node testbed
+    let mut advisor =
+        Advisor::builder().max_machines(64).scales(&[1.0, 2.0, 3.0]).build(&mut backend);
+    let profile = advisor.profile(&app);
 
     // ---- same machine type, growing data scale --------------------------
     let worker = MachineSpec::worker_node();
@@ -34,46 +28,44 @@ fn main() {
     println!("{:>8} {:>12} {:>12} {:>6}", "scale", "input", "pred cache", "PICK");
     for mult in [0.25, 0.5, 1.0, 1.5, 2.0, 3.0] {
         let scale = FULL_SCALE * mult;
-        let cached = sizes.predict_total(scale);
-        let sel = select_cluster_size(cached, exec.predict_total(scale), &worker, 64);
+        let d = profile.recommend(scale, &worker);
         println!(
             "{:>7.0}% {:>12} {:>12} {:>6}",
             mult * 100.0,
             fmt_mb(app.input_mb(scale)),
-            fmt_mb(cached),
-            sel.machines
+            fmt_mb(d.predicted_cached_mb),
+            d.machines
         );
     }
 
     // ---- same scale, different machine types ----------------------------
-    println!("\ncluster size vs machine type @ 100 % (same models):");
+    println!("\ncluster size vs machine type @ 100 % (same profile):");
     let mut big = MachineSpec::worker_node();
     big.heap_mb *= 2.0; // a hypothetical 32 GB instance type
     let mut small = MachineSpec::sample_node();
     small.heap_mb = 6.0 * 1024.0;
     for (name, m) in [("sample-node 6G", &small), ("worker 12G", &worker), ("worker 24G", &big)] {
-        let sel = select_cluster_size(
-            sizes.predict_total(FULL_SCALE),
-            exec.predict_total(FULL_SCALE),
-            m,
-            64,
-        );
+        let d = profile.recommend(FULL_SCALE, m);
         println!(
             "  {:<16} M={:>9} -> {:>3} machines",
             name,
             fmt_mb(m.unified_mb()),
-            sel.machines
+            d.machines
         );
     }
 
     // ---- cluster bounds (Table 2's question) -----------------------------
     println!("\nmax eviction-free data scale on a fixed cluster (worker nodes):");
     for n in [4, 8, 12] {
-        let s = bounds::max_scale(&sizes, &exec, &worker, n, 1e-5);
+        let s = profile.max_scale(&worker, n);
         println!(
             "  {n:>2} machines: scale {:>7.0} ({} of input)",
             s,
             fmt_mb(app.input_mb(s))
         );
     }
+    println!(
+        "\n(total sampling phases this session: {} — every answer above reused it)",
+        advisor.sampling_phases()
+    );
 }

@@ -12,7 +12,8 @@
 //! reclaim dropping cached partitions, the survivors paying the Area-A
 //! recompute penalty, and the realized per-machine-uptime cost landing
 //! above the quote — the gap the planner's risk cross-validation
-//! (`blink advise --scenario spot`) is built to expose.
+//! (`blink advise --scenario spot`, i.e. `TrainedProfile::validate` in
+//! the session API) is built to expose.
 
 use blink::cost::{PerInstanceHour, PricingModel, SpotDiscount};
 use blink::memory::EvictionPolicy;

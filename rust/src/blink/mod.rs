@@ -14,10 +14,19 @@
 //!
 //! Beyond the paper, [`planner`] generalizes step 4 into a catalog-driven
 //! `(instance type × count)` search with pluggable pricing
-//! ([`crate::cost`]), exposed as [`Blink::advise`] / `blink advise`; its
-//! analytic picks can be cross-validated against event-driven engine runs
-//! under a disturbance scenario ([`planner::risk_adjusted`],
+//! ([`crate::cost`]), exposed as [`TrainedProfile::plan`] / `blink advise`;
+//! its analytic picks can be cross-validated against event-driven engine
+//! runs under a disturbance scenario ([`planner::risk_adjusted`],
 //! `blink advise --scenario spot`).
+//!
+//! The public entry point is the **session API** ([`session`]): build an
+//! [`Advisor`] once, [`Advisor::profile`] an application once, then answer
+//! any number of [`TrainedProfile::recommend`] / [`TrainedProfile::plan`] /
+//! [`TrainedProfile::max_scale`] / [`TrainedProfile::validate`] queries
+//! from the cached trained state — profile once, query many. Each query's
+//! answer has a typed report ([`report`]) with text and JSON renderers.
+//! The original [`Blink`] facade survives as a thin wrapper over the
+//! advisor (equivalence-tested in `rust/tests/session.rs`).
 //!
 //! Model fitting dispatches through [`models::FitBackend`]: in production
 //! the batched Pallas `linfit` executable via PJRT (`runtime::linfit`), in
@@ -27,14 +36,18 @@ pub mod bounds;
 pub mod models;
 pub mod planner;
 pub mod predictor;
+pub mod report;
 pub mod sample_runs;
 pub mod selector;
+pub mod session;
 
 pub use models::{FitBackend, RustFit};
 pub use planner::{plan, risk_adjusted, CandidateConfig, Plan, PlanInput, RiskAdjustedPick, TypePick};
 pub use predictor::{ExecMemoryPredictor, SizePredictor};
+pub use report::{OutputFormat, Report};
 pub use sample_runs::{SampleRun, SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
 pub use selector::{machine_split, select_cluster_size, Selection};
+pub use session::{Advisor, AdvisorBuilder, Recommendation, Scales, TrainedProfile, ValidationSpec};
 
 use crate::cost::PricingModel;
 use crate::sim::{InstanceCatalog, MachineSpec};
@@ -57,7 +70,10 @@ pub struct BlinkDecision {
     pub selection: Option<Selection>,
 }
 
-/// The Blink framework: sampling configuration + fit backend.
+/// The original Blink facade, kept for the reproduction tests and as a
+/// one-shot convenience. It is a thin wrapper over the session API: each
+/// call builds a throwaway [`Advisor`], so **every call re-samples** —
+/// long-lived callers should hold an [`Advisor`] and profile once.
 pub struct Blink<'a> {
     pub manager: SampleRunsManager,
     pub backend: &'a mut dyn FitBackend,
@@ -68,6 +84,15 @@ pub struct Blink<'a> {
 impl<'a> Blink<'a> {
     pub fn new(backend: &'a mut dyn FitBackend) -> Blink<'a> {
         Blink { manager: SampleRunsManager::default(), backend, max_machines: 12 }
+    }
+
+    /// One advisor session configured like this facade, sampling `scales`.
+    fn session(&mut self, scales: &[f64]) -> Advisor<'_> {
+        Advisor::builder()
+            .max_machines(self.max_machines)
+            .scales(scales)
+            .manager(self.manager.clone())
+            .build(&mut *self.backend)
     }
 
     /// Run the full pipeline of Fig. 5 for `app`, recommending a cluster
@@ -89,31 +114,15 @@ impl<'a> Blink<'a> {
         machine: &MachineSpec,
         scales: &[f64],
     ) -> BlinkDecision {
-        match self.manager.run(app, scales) {
-            SamplingOutcome::NoCachedData { sample_cost_machine_s } => BlinkDecision {
-                // atypical case 1: cheapest possible actual run
-                machines: 1,
-                predicted_cached_mb: 0.0,
-                predicted_exec_mb: 0.0,
-                sample_cost_machine_s,
-                predictors: None,
-                selection: None,
-            },
-            SamplingOutcome::Profiled(runs) => {
-                let sizes = SizePredictor::train(self.backend, &runs);
-                let exec = ExecMemoryPredictor::train(self.backend, &runs);
-                let cached = sizes.predict_total(target_scale);
-                let exec_mb = exec.predict_total(target_scale);
-                let sel = select_cluster_size(cached, exec_mb, machine, self.max_machines);
-                BlinkDecision {
-                    machines: sel.machines,
-                    predicted_cached_mb: cached,
-                    predicted_exec_mb: exec_mb,
-                    sample_cost_machine_s: SampleRunsManager::total_cost_machine_s(&runs),
-                    predictors: Some((sizes, exec)),
-                    selection: Some(sel),
-                }
-            }
+        let profile = self.session(scales).profile(app);
+        let r = profile.recommend(target_scale, machine);
+        BlinkDecision {
+            machines: r.machines,
+            predicted_cached_mb: r.predicted_cached_mb,
+            predicted_exec_mb: r.predicted_exec_mb,
+            sample_cost_machine_s: r.sample_cost_machine_s,
+            predictors: profile.models,
+            selection: r.selection,
         }
     }
 }
@@ -154,32 +163,7 @@ impl<'a> Blink<'a> {
         pricing: &dyn PricingModel,
         scales: &[f64],
     ) -> Advice {
-        let (cached, exec_mb, sample_cost) = match self.manager.run(app, scales) {
-            SamplingOutcome::NoCachedData { sample_cost_machine_s } => {
-                (0.0, 0.0, sample_cost_machine_s)
-            }
-            SamplingOutcome::Profiled(runs) => {
-                let sizes = SizePredictor::train(self.backend, &runs);
-                let exec = ExecMemoryPredictor::train(self.backend, &runs);
-                (
-                    sizes.predict_total(target_scale),
-                    exec.predict_total(target_scale),
-                    SampleRunsManager::total_cost_machine_s(&runs),
-                )
-            }
-        };
-        let profile = app.profile(target_scale);
-        let input = PlanInput {
-            profile: &profile,
-            cached_total_mb: cached,
-            exec_total_mb: exec_mb,
-        };
-        Advice {
-            plan: planner::plan(&input, catalog, pricing, self.max_machines),
-            predicted_cached_mb: cached,
-            predicted_exec_mb: exec_mb,
-            sample_cost_machine_s: sample_cost,
-        }
+        self.session(scales).profile(app).plan(target_scale, catalog, pricing)
     }
 }
 

@@ -1,0 +1,805 @@
+//! Typed reports for every advisor query: one struct per CLI answer,
+//! each with a text renderer (the `blink` CLI's human output) and a
+//! `to_json` encoding via [`crate::util::json`] so other services can
+//! consume the same answers machine-readably (`blink … --format json`).
+//!
+//! The coordinator's `cmd_*` functions are thin parse → query → render
+//! shims over these types: compute paths never print, renderers never
+//! compute.
+
+use std::fmt::Write as _;
+
+use super::planner::{CandidateConfig, Plan, RiskAdjustedPick, TypePick};
+use super::selector::Selection;
+use super::session::TrainedProfile;
+use super::Recommendation;
+use crate::sim::MachineSpec;
+use crate::util::json::Json;
+use crate::util::units::{fmt_mb, fmt_mb_signed, fmt_pct, fmt_secs};
+
+/// How the CLI renders a report (the global `--format` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutputFormat {
+    Text,
+    Json,
+}
+
+impl OutputFormat {
+    pub fn by_name(name: &str) -> Option<OutputFormat> {
+        match name {
+            "text" => Some(OutputFormat::Text),
+            "json" => Some(OutputFormat::Json),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OutputFormat::Text => "text",
+            OutputFormat::Json => "json",
+        }
+    }
+}
+
+/// A renderable query answer: text for humans, JSON for machines.
+pub trait Report {
+    /// The human rendering (no trailing newline; the CLI adds it).
+    fn render_text(&self) -> String;
+    /// The machine rendering; must re-parse with [`crate::util::json`].
+    fn to_json(&self) -> Json;
+
+    fn render(&self, format: OutputFormat) -> String {
+        match format {
+            OutputFormat::Text => self.render_text(),
+            OutputFormat::Json => self.to_json().pretty(),
+        }
+    }
+}
+
+/// Drop the final newline a `writeln!`-built buffer carries, so the
+/// caller's `println!` does not double it.
+fn finish(mut out: String) -> String {
+    out.pop();
+    out
+}
+
+// ======================================================================
+// JSON encodings of the shared query-result types
+// ======================================================================
+
+pub fn selection_json(s: &Selection) -> Json {
+    Json::obj(vec![
+        ("machines", s.machines.into()),
+        ("machines_min", s.machines_min.into()),
+        ("machines_max", s.machines_max.into()),
+        ("machine_exec_mb", s.machine_exec_mb.into()),
+        ("headroom_mb", s.headroom_mb.into()),
+        ("cache_deficit_mb", s.cache_deficit_mb().into()),
+        ("saturated", s.saturated.into()),
+    ])
+}
+
+pub fn candidate_json(c: &CandidateConfig) -> Json {
+    Json::obj(vec![
+        ("instance", c.instance.as_str().into()),
+        ("machines", c.machines.into()),
+        ("eviction_free", c.eviction_free.into()),
+        ("headroom_mb", c.headroom_mb.into()),
+        ("predicted_time_s", c.predicted_time_s.into()),
+        ("predicted_cost", c.predicted_cost.into()),
+    ])
+}
+
+pub fn type_pick_json(p: &TypePick) -> Json {
+    Json::obj(vec![
+        ("candidate", candidate_json(&p.candidate)),
+        ("selection", selection_json(&p.selection)),
+    ])
+}
+
+pub fn plan_json(p: &Plan) -> Json {
+    Json::obj(vec![
+        ("ranked", Json::Arr(p.ranked.iter().map(type_pick_json).collect())),
+        ("pareto", Json::Arr(p.pareto.iter().map(candidate_json).collect())),
+        ("best", p.best().map_or(Json::Null, type_pick_json)),
+    ])
+}
+
+/// Infinite realized costs (collapsed validation runs) encode as `null`.
+pub fn risk_pick_json(r: &RiskAdjustedPick) -> Json {
+    Json::obj(vec![
+        ("instance", r.pick.candidate.instance.as_str().into()),
+        ("machines", r.pick.candidate.machines.into()),
+        ("predicted_cost", r.pick.candidate.predicted_cost.into()),
+        ("realized_time_s", r.realized_time_s.into()),
+        ("realized_cost", r.realized_cost.into()),
+        ("machines_lost", r.machines_lost.into()),
+        ("cost_inflation", r.cost_inflation.into()),
+        ("completed_runs", r.completed_runs.into()),
+        ("collapsed", (r.completed_runs == 0).into()),
+    ])
+}
+
+// ======================================================================
+// Shared text renderers (also reused by `experiments::report`)
+// ======================================================================
+
+/// The `blink advise` plan table: ranked per-type picks, then the
+/// time/cost Pareto front over the whole (type × count) grid.
+pub fn render_plan_text(
+    plan: &Plan,
+    catalog_name: &str,
+    catalog_types: usize,
+    pricing: &str,
+) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "\nPLAN — catalog '{catalog_name}' ({catalog_types} types), pricing '{pricing}'"
+    );
+    let _ = writeln!(
+        out,
+        "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12} {:>14} {:>6}",
+        "rank", "instance", "n", "min", "max", "time", "cost", "headroom", "free"
+    );
+    for (i, pick) in plan.ranked.iter().enumerate() {
+        let c = &pick.candidate;
+        let s = &pick.selection;
+        let headroom = if s.saturated {
+            format!("-{} !", fmt_mb(s.cache_deficit_mb()))
+        } else {
+            fmt_mb_signed(c.headroom_mb)
+        };
+        let _ = writeln!(
+            out,
+            "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12.2} {:>14} {:>6}",
+            i + 1,
+            c.instance,
+            c.machines,
+            s.machines_min,
+            s.machines_max,
+            fmt_secs(c.predicted_time_s),
+            c.predicted_cost,
+            headroom,
+            if c.eviction_free { "yes" } else { "NO" },
+        );
+    }
+    if plan.pareto.iter().all(|c| c.eviction_free) {
+        let _ = writeln!(out, "pareto front (time vs cost, eviction-free candidates):");
+    } else {
+        let _ = writeln!(
+            out,
+            "pareto front (time vs cost — NO candidate fits eviction-free; full grid):"
+        );
+    }
+    for c in &plan.pareto {
+        let _ = writeln!(
+            out,
+            "  {:<12} x{:<3} {:>10}  cost {:>10.2}",
+            c.instance,
+            c.machines,
+            fmt_secs(c.predicted_time_s),
+            c.predicted_cost
+        );
+    }
+    if let Some(best) = plan.best() {
+        let _ = writeln!(
+            out,
+            "-> recommend {} x{} ({}, cost {:.2}){}",
+            best.candidate.instance,
+            best.candidate.machines,
+            fmt_secs(best.candidate.predicted_time_s),
+            best.candidate.predicted_cost,
+            if best.candidate.eviction_free {
+                ""
+            } else {
+                "  — WARNING: cluster bound hit on every type; run will evict"
+            }
+        );
+    }
+    finish(out)
+}
+
+/// Risk cross-validation table: the planner's analytic picks realized by
+/// event-driven engine runs under a disturbance scenario.
+pub fn render_risk_text(risks: &[RiskAdjustedPick], scenario: &str, pricing: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "\nRISK — top picks cross-validated by engine runs (scenario '{scenario}', pricing '{pricing}')"
+    );
+    if risks.is_empty() {
+        let _ = writeln!(out, "  (no pick could be validated)");
+        return finish(out);
+    }
+    let _ = writeln!(
+        out,
+        "{:>4} {:<12} {:>4} {:>12} {:>14} {:>10} {:>6}",
+        "rank", "instance", "n", "time", "realized", "vs quote", "lost"
+    );
+    for (i, r) in risks.iter().enumerate() {
+        if r.completed_runs == 0 {
+            let _ = writeln!(
+                out,
+                "{:>4} {:<12} {:>4} {:>12} {:>14} {:>10} {:>6}",
+                i + 1,
+                r.pick.candidate.instance,
+                r.pick.candidate.machines,
+                "COLLAPSED",
+                "inf",
+                "-",
+                r.machines_lost,
+            );
+            continue;
+        }
+        let _ = writeln!(
+            out,
+            "{:>4} {:<12} {:>4} {:>12} {:>14.4} {:>+9.1}% {:>6.1}",
+            i + 1,
+            r.pick.candidate.instance,
+            r.pick.candidate.machines,
+            fmt_secs(r.realized_time_s),
+            r.realized_cost,
+            (r.cost_inflation - 1.0) * 100.0,
+            r.machines_lost,
+        );
+    }
+    finish(out)
+}
+
+// ======================================================================
+// blink decide
+// ======================================================================
+
+/// Per-dataset model diagnostics (the `--verbose` lines).
+#[derive(Debug, Clone)]
+pub struct ModelDiag {
+    pub dataset: usize,
+    pub kind: &'static str,
+    pub cv_rel_err: f64,
+}
+
+/// `blink decide`: the §5.4 recommendation for one app/scale.
+#[derive(Debug, Clone)]
+pub struct RecommendReport {
+    pub backend: String,
+    pub app: String,
+    pub scale: f64,
+    pub input_mb: f64,
+    pub recommendation: Recommendation,
+    pub no_cached_data: bool,
+    pub models: Vec<ModelDiag>,
+    /// Include the per-dataset model lines in the text rendering.
+    pub verbose: bool,
+}
+
+impl RecommendReport {
+    pub fn new(
+        backend: &str,
+        profile: &TrainedProfile,
+        scale: f64,
+        machine: &MachineSpec,
+        verbose: bool,
+    ) -> RecommendReport {
+        let models = profile.models.as_ref().map_or_else(Vec::new, |(sizes, _)| {
+            sizes
+                .models
+                .iter()
+                .map(|(ds, m)| ModelDiag {
+                    dataset: *ds,
+                    kind: m.kind.name(),
+                    cv_rel_err: m.cv_rel_err,
+                })
+                .collect()
+        });
+        RecommendReport {
+            backend: backend.to_string(),
+            app: profile.app.name.to_string(),
+            scale,
+            input_mb: profile.app.input_mb(scale),
+            recommendation: profile.recommend(scale, machine),
+            no_cached_data: profile.no_cached_data(),
+            models,
+            verbose,
+        }
+    }
+}
+
+impl Report for RecommendReport {
+    fn render_text(&self) -> String {
+        let mut out = String::new();
+        let d = &self.recommendation;
+        let _ = writeln!(out, "fit backend: {}", self.backend);
+        let _ = writeln!(
+            out,
+            "app {}  scale {:.0} ({} input)",
+            self.app,
+            self.scale,
+            fmt_mb(self.input_mb)
+        );
+        let _ = writeln!(
+            out,
+            "predicted cached {}  exec memory {}",
+            fmt_mb(d.predicted_cached_mb),
+            fmt_mb(d.predicted_exec_mb)
+        );
+        if let Some(sel) = &d.selection {
+            if sel.saturated {
+                // a saturated selection has no headroom — report the deficit
+                let _ = writeln!(
+                    out,
+                    "machines_min {}  machines_max {}  cache deficit/machine {}",
+                    sel.machines_min,
+                    sel.machines_max,
+                    fmt_mb(sel.cache_deficit_mb())
+                );
+                let _ = writeln!(out, "WARNING: cluster bound hit; run will evict");
+            } else {
+                let _ = writeln!(
+                    out,
+                    "machines_min {}  machines_max {}  headroom/machine {}",
+                    sel.machines_min,
+                    sel.machines_max,
+                    fmt_mb(sel.headroom_mb)
+                );
+            }
+        }
+        let _ = writeln!(
+            out,
+            "-> recommended cluster size: {} machines (sampling cost {})",
+            d.machines,
+            fmt_secs(d.sample_cost_machine_s)
+        );
+        if self.verbose {
+            for m in &self.models {
+                let _ = writeln!(
+                    out,
+                    "  dataset {}: {} model, cv err {}",
+                    m.dataset,
+                    m.kind,
+                    fmt_pct(m.cv_rel_err)
+                );
+            }
+        }
+        finish(out)
+    }
+
+    fn to_json(&self) -> Json {
+        let d = &self.recommendation;
+        Json::obj(vec![
+            ("query", "recommend".into()),
+            ("backend", self.backend.as_str().into()),
+            ("app", self.app.as_str().into()),
+            ("scale", self.scale.into()),
+            ("input_mb", self.input_mb.into()),
+            ("machines", d.machines.into()),
+            ("predicted_cached_mb", d.predicted_cached_mb.into()),
+            ("predicted_exec_mb", d.predicted_exec_mb.into()),
+            ("sample_cost_machine_s", d.sample_cost_machine_s.into()),
+            ("no_cached_data", self.no_cached_data.into()),
+            ("selection", d.selection.as_ref().map_or(Json::Null, selection_json)),
+            (
+                "models",
+                Json::Arr(
+                    self.models
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("dataset", m.dataset.into()),
+                                ("kind", m.kind.into()),
+                                ("cv_rel_err", m.cv_rel_err.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ======================================================================
+// blink advise
+// ======================================================================
+
+/// The risk table attached to a plan when a scenario was requested.
+#[derive(Debug, Clone)]
+pub struct RiskSection {
+    pub scenario: String,
+    pub picks: Vec<RiskAdjustedPick>,
+}
+
+/// `blink advise`: the catalog-wide plan plus sampling diagnostics.
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub backend: String,
+    pub app: String,
+    pub scale: f64,
+    pub input_mb: f64,
+    pub predicted_cached_mb: f64,
+    pub predicted_exec_mb: f64,
+    pub sample_cost_machine_s: f64,
+    pub plan: Plan,
+    pub catalog_name: String,
+    pub catalog_types: usize,
+    pub pricing: String,
+    pub risk: Option<RiskSection>,
+}
+
+impl Report for PlanReport {
+    fn render_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "fit backend: {}", self.backend);
+        let _ = writeln!(
+            out,
+            "app {}  scale {:.0} ({} input)  predicted cached {}  exec {}  sampling cost {}",
+            self.app,
+            self.scale,
+            fmt_mb(self.input_mb),
+            fmt_mb(self.predicted_cached_mb),
+            fmt_mb(self.predicted_exec_mb),
+            fmt_secs(self.sample_cost_machine_s),
+        );
+        let _ = writeln!(
+            out,
+            "{}",
+            render_plan_text(&self.plan, &self.catalog_name, self.catalog_types, &self.pricing)
+        );
+        if let Some(risk) = &self.risk {
+            let _ = writeln!(
+                out,
+                "{}",
+                render_risk_text(&risk.picks, &risk.scenario, &self.pricing)
+            );
+        }
+        finish(out)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("query", "plan".into()),
+            ("backend", self.backend.as_str().into()),
+            ("app", self.app.as_str().into()),
+            ("scale", self.scale.into()),
+            ("input_mb", self.input_mb.into()),
+            ("predicted_cached_mb", self.predicted_cached_mb.into()),
+            ("predicted_exec_mb", self.predicted_exec_mb.into()),
+            ("sample_cost_machine_s", self.sample_cost_machine_s.into()),
+            ("catalog", self.catalog_name.as_str().into()),
+            ("catalog_types", self.catalog_types.into()),
+            ("pricing", self.pricing.as_str().into()),
+            ("plan", plan_json(&self.plan)),
+            (
+                "risk",
+                self.risk.as_ref().map_or(Json::Null, |r| {
+                    Json::obj(vec![
+                        ("scenario", r.scenario.as_str().into()),
+                        ("picks", Json::Arr(r.picks.iter().map(risk_pick_json).collect())),
+                    ])
+                }),
+            ),
+        ])
+    }
+}
+
+// ======================================================================
+// blink bounds
+// ======================================================================
+
+/// `blink bounds`: the Table-2 max-scale answer for a fixed cluster.
+#[derive(Debug, Clone)]
+pub struct BoundsReport {
+    pub app: String,
+    pub machines: usize,
+    /// Infinite when the app caches nothing (any scale fits).
+    pub max_scale: f64,
+    /// Input size at the boundary scale (0 when unbounded).
+    pub input_mb_at_max: f64,
+}
+
+impl BoundsReport {
+    pub fn unbounded(&self) -> bool {
+        self.max_scale.is_infinite()
+    }
+}
+
+impl Report for BoundsReport {
+    fn render_text(&self) -> String {
+        if self.unbounded() {
+            format!("{} caches nothing; any scale fits", self.app)
+        } else {
+            format!(
+                "{}: max eviction-free data scale on {} machines ~ {:.1} ({} input)",
+                self.app,
+                self.machines,
+                self.max_scale,
+                fmt_mb(self.input_mb_at_max)
+            )
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("query", "max_scale".into()),
+            ("app", self.app.as_str().into()),
+            ("machines", self.machines.into()),
+            // infinity encodes as null; `unbounded` carries the meaning
+            ("max_scale", self.max_scale.into()),
+            ("unbounded", self.unbounded().into()),
+            (
+                "input_mb_at_max",
+                if self.unbounded() { Json::Null } else { self.input_mb_at_max.into() },
+            ),
+        ])
+    }
+}
+
+// ======================================================================
+// blink simulate
+// ======================================================================
+
+/// One engine run's headline numbers (baseline or disturbed).
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub duration_s: f64,
+    pub cost_machine_min: f64,
+    pub evictions: usize,
+    pub machines_lost: usize,
+    pub machines_joined: usize,
+    pub cached_fraction_after_load: f64,
+}
+
+impl RunStats {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("duration_s", self.duration_s.into()),
+            ("cost_machine_min", self.cost_machine_min.into()),
+            ("evictions", self.evictions.into()),
+            ("machines_lost", self.machines_lost.into()),
+            ("machines_joined", self.machines_joined.into()),
+            ("cached_fraction_after_load", self.cached_fraction_after_load.into()),
+        ])
+    }
+}
+
+/// `blink simulate`: realized vs naive cost under a disturbance scenario.
+#[derive(Debug, Clone)]
+pub struct SimulateReport {
+    pub app: String,
+    pub scale: f64,
+    pub input_mb: f64,
+    pub machines: usize,
+    pub instance: String,
+    pub scenario: String,
+    pub pricing: String,
+    pub baseline: RunStats,
+    pub disturbed: RunStats,
+    pub naive_quote: f64,
+    pub realized_cost: f64,
+}
+
+impl Report for SimulateReport {
+    fn render_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "app {}  scale {:.0} ({} input)  fleet {} x {}  scenario '{}'",
+            self.app,
+            self.scale,
+            fmt_mb(self.input_mb),
+            self.machines,
+            self.instance,
+            self.scenario,
+        );
+        let _ = writeln!(
+            out,
+            "baseline: {} ({:.1} machine-min), evictions {}, cached after load {}",
+            fmt_secs(self.baseline.duration_s),
+            self.baseline.cost_machine_min,
+            self.baseline.evictions,
+            fmt_pct(self.baseline.cached_fraction_after_load),
+        );
+        let _ = writeln!(
+            out,
+            "scenario: {} ({:+.1} %), evictions {}, machines lost {}, joined {}, cached after load {}",
+            fmt_secs(self.disturbed.duration_s),
+            (self.disturbed.duration_s / self.baseline.duration_s.max(1e-12) - 1.0) * 100.0,
+            self.disturbed.evictions,
+            self.disturbed.machines_lost,
+            self.disturbed.machines_joined,
+            fmt_pct(self.disturbed.cached_fraction_after_load),
+        );
+        let _ = writeln!(
+            out,
+            "{} pricing — naive quote {:.4}  realized (per-machine uptime) {:.4}  ({:+.1} %)",
+            self.pricing,
+            self.naive_quote,
+            self.realized_cost,
+            (self.realized_cost / self.naive_quote.max(1e-12) - 1.0) * 100.0,
+        );
+        finish(out)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("query", "simulate".into()),
+            ("app", self.app.as_str().into()),
+            ("scale", self.scale.into()),
+            ("input_mb", self.input_mb.into()),
+            ("machines", self.machines.into()),
+            ("instance", self.instance.as_str().into()),
+            ("scenario", self.scenario.as_str().into()),
+            ("pricing", self.pricing.as_str().into()),
+            ("baseline", self.baseline.to_json()),
+            ("disturbed", self.disturbed.to_json()),
+            ("naive_quote", self.naive_quote.into()),
+            ("realized_cost", self.realized_cost.into()),
+        ])
+    }
+}
+
+// ======================================================================
+// blink run
+// ======================================================================
+
+/// `blink run`: the recommendation plus the actual run at the pick.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub decide: RecommendReport,
+    pub seed: u64,
+    pub duration_s: f64,
+    pub cost_machine_min: f64,
+    pub cost_machine_s: f64,
+    pub evictions: usize,
+}
+
+impl RunReport {
+    /// Sampling + actual run, machine-seconds.
+    pub fn total_cost_machine_s(&self) -> f64 {
+        self.decide.recommendation.sample_cost_machine_s + self.cost_machine_s
+    }
+
+    /// Sampling cost as a fraction of the actual-run cost.
+    pub fn sampling_overhead(&self) -> f64 {
+        self.decide.recommendation.sample_cost_machine_s / self.cost_machine_s.max(1e-9)
+    }
+}
+
+impl Report for RunReport {
+    fn render_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.decide.render_text());
+        let _ = writeln!(
+            out,
+            "actual run: {} on {} machines -> {} ({:.1} machine-min, {} evictions)",
+            self.decide.app,
+            self.decide.recommendation.machines,
+            fmt_secs(self.duration_s),
+            self.cost_machine_min,
+            self.evictions
+        );
+        let _ = writeln!(
+            out,
+            "total cost incl. sampling: {:.1} machine-min (sampling {})",
+            self.total_cost_machine_s() / 60.0,
+            fmt_pct(self.sampling_overhead())
+        );
+        finish(out)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("query", "run".into()),
+            ("recommendation", self.decide.to_json()),
+            // as a string: JSON numbers are f64 and would round a u64
+            // seed above 2^53, breaking reproducibility
+            ("seed", self.seed.to_string().into()),
+            (
+                "actual",
+                Json::obj(vec![
+                    ("duration_s", self.duration_s.into()),
+                    ("cost_machine_min", self.cost_machine_min.into()),
+                    ("evictions", self.evictions.into()),
+                ]),
+            ),
+            ("total_cost_machine_min", (self.total_cost_machine_s() / 60.0).into()),
+            ("sampling_overhead", self.sampling_overhead().into()),
+        ])
+    }
+}
+
+// ======================================================================
+// blink apps
+// ======================================================================
+
+/// One row of the workload-model listing.
+#[derive(Debug, Clone)]
+pub struct AppRow {
+    pub name: String,
+    pub input_mb: f64,
+    pub blocks: usize,
+    pub iterations: usize,
+    pub cached_mb_at_100: f64,
+    pub approach: String,
+}
+
+/// `blink apps`: the registered workload models.
+#[derive(Debug, Clone)]
+pub struct AppsReport {
+    pub rows: Vec<AppRow>,
+}
+
+impl Report for AppsReport {
+    fn render_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<7} {:>10} {:>8} {:>7} {:>12} {:>10}",
+            "app", "input", "blocks", "iters", "cached@100%", "approach"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{:<7} {:>10} {:>8} {:>7} {:>12} {:>10}",
+                r.name,
+                fmt_mb(r.input_mb),
+                r.blocks,
+                r.iterations,
+                fmt_mb(r.cached_mb_at_100),
+                r.approach,
+            );
+        }
+        finish(out)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("query", "apps".into()),
+            (
+                "apps",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", r.name.as_str().into()),
+                                ("input_mb", r.input_mb.into()),
+                                ("blocks", r.blocks.into()),
+                                ("iterations", r.iterations.into()),
+                                ("cached_mb_at_100", r.cached_mb_at_100.into()),
+                                ("approach", r.approach.as_str().into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_format_names_round_trip() {
+        for f in [OutputFormat::Text, OutputFormat::Json] {
+            assert_eq!(OutputFormat::by_name(f.name()), Some(f));
+        }
+        assert_eq!(OutputFormat::by_name("yaml"), None);
+    }
+
+    #[test]
+    fn bounds_report_handles_the_unbounded_case() {
+        let r = BoundsReport {
+            app: "pca".into(),
+            machines: 12,
+            max_scale: f64::INFINITY,
+            input_mb_at_max: 0.0,
+        };
+        assert!(r.unbounded());
+        assert_eq!(r.render_text(), "pca caches nothing; any scale fits");
+        let j = crate::util::json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("max_scale"), Some(&Json::Null));
+        assert_eq!(j.get("unbounded").and_then(Json::as_bool), Some(true));
+    }
+}

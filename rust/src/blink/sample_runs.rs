@@ -38,6 +38,7 @@ pub struct SampleRun {
 }
 
 /// Configuration of the sampling phase.
+#[derive(Debug, Clone)]
 pub struct SampleRunsManager {
     pub sampler: Sampler,
     /// The single machine the samples run on (the paper's i3 node).

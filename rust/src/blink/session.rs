@@ -1,0 +1,466 @@
+//! Session-oriented advisor API: profile once, query many.
+//!
+//! Blink's economics rest on one cheap sampling phase amortizing across
+//! every downstream decision (§5, Fig. 5). This module makes that shape
+//! the public API:
+//!
+//! * [`Advisor`] — a long-lived, builder-configured session around a fit
+//!   backend. [`Advisor::profile`] runs the sampling phase for an
+//!   application **once** and caches the result keyed by
+//!   `(app, sampling scales)`, so repeated CLI or service calls hit
+//!   trained state instead of re-sampling.
+//! * [`TrainedProfile`] — the product of that one phase: the fitted
+//!   [`SizePredictor`]/[`ExecMemoryPredictor`] plus sampling diagnostics
+//!   (per-run summaries, total cost, the no-cached-data atypical case).
+//!   Every query hangs off it and **never re-samples or re-trains**:
+//!   [`TrainedProfile::recommend`] (§5.4 cluster size),
+//!   [`TrainedProfile::plan`] (catalog-wide `(type × count)` search),
+//!   [`TrainedProfile::max_scale`] (the Table-2 inverse question) and
+//!   [`TrainedProfile::validate`] (risk cross-validation under a
+//!   disturbance scenario).
+//!
+//! The legacy [`super::Blink`] facade is a thin wrapper over this module,
+//! equivalence-tested in `rust/tests/session.rs`.
+
+use std::collections::BTreeMap;
+
+use super::bounds;
+use super::models::FitBackend;
+use super::planner::{self, Plan, PlanInput, RiskAdjustedPick};
+use super::predictor::{ExecMemoryPredictor, SizePredictor};
+use super::sample_runs::{SampleRun, SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
+use super::selector::{select_cluster_size, Selection};
+use super::Advice;
+use crate::cost::PricingModel;
+use crate::sim::{InstanceCatalog, MachineSpec, Scenario};
+use crate::workloads::AppModel;
+
+/// Which sampling scales the advisor uses when profiling an application.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scales {
+    /// The paper's defaults: three runs at 0.1–0.3 % of the input, with
+    /// the §6.4 exception (GBT samples 10 scales, ALS 5).
+    Paper,
+    /// A fixed explicit set for every application (Fig. 8-style studies).
+    Fixed(Vec<f64>),
+}
+
+impl Scales {
+    /// Resolve the sampling scales for one application.
+    pub fn for_app(&self, app: &AppModel) -> Vec<f64> {
+        match self {
+            Scales::Fixed(s) => s.clone(),
+            Scales::Paper => match app.name {
+                "gbt" => (1..=10).map(|s| s as f64).collect(),
+                "als" => (1..=5).map(|s| s as f64).collect(),
+                _ => DEFAULT_SCALES.to_vec(),
+            },
+        }
+    }
+}
+
+/// Configures and builds an [`Advisor`] — the only way to make one.
+pub struct AdvisorBuilder {
+    max_machines: usize,
+    scales: Scales,
+    manager: SampleRunsManager,
+}
+
+impl Default for AdvisorBuilder {
+    fn default() -> Self {
+        AdvisorBuilder {
+            max_machines: 12,
+            scales: Scales::Paper,
+            manager: SampleRunsManager::default(),
+        }
+    }
+}
+
+impl AdvisorBuilder {
+    /// Largest cluster any query may recommend (default 12, the paper's
+    /// testbed bound).
+    pub fn max_machines(mut self, n: usize) -> Self {
+        assert!(n >= 1, "max_machines must be at least 1");
+        self.max_machines = n;
+        self
+    }
+
+    /// Use a fixed sampling-scale set for every application instead of
+    /// the per-app paper policy ([`Scales::Paper`]).
+    pub fn scales(mut self, scales: &[f64]) -> Self {
+        self.scales = Scales::Fixed(scales.to_vec());
+        self
+    }
+
+    /// Full control over the scales policy.
+    pub fn scales_policy(mut self, scales: Scales) -> Self {
+        self.scales = scales;
+        self
+    }
+
+    /// Replace the sampling-phase configuration (sample node, eviction
+    /// policy, seed, retry budget).
+    pub fn manager(mut self, manager: SampleRunsManager) -> Self {
+        self.manager = manager;
+        self
+    }
+
+    /// Bind the configuration to a fit backend.
+    pub fn build(self, backend: &mut dyn FitBackend) -> Advisor<'_> {
+        Advisor {
+            backend,
+            manager: self.manager,
+            max_machines: self.max_machines,
+            scales: self.scales,
+            cache: BTreeMap::new(),
+            sampling_phases: 0,
+        }
+    }
+}
+
+/// Cache key: application name + a fingerprint of the model laws that
+/// drive sampling + the exact sampling scales (all f64s as bit patterns,
+/// so `1.0` and `1.0 + ε` never collide). The fingerprint keeps two
+/// same-named but differently-parameterized [`AppModel`]s (e.g. an ad-hoc
+/// variant with its cached laws edited) from sharing a trained profile.
+type ProfileKey = (String, Vec<u64>, Vec<u64>);
+
+/// Every scalar model parameter that can influence what a sampling phase
+/// measures or costs — two same-named models differing in ANY of these
+/// must not share a cached profile.
+fn app_fingerprint(app: &AppModel) -> Vec<u64> {
+    let mut bits: Vec<u64> = Vec::with_capacity(2 * app.cached_laws.len() + 16);
+    for law in &app.cached_laws {
+        bits.push(law.theta0.to_bits());
+        bits.push(law.theta1.to_bits());
+    }
+    bits.push(app.exec_law.theta0.to_bits());
+    bits.push(app.exec_law.theta1.to_bits());
+    bits.push(app.input_mb_full.to_bits());
+    bits.push(app.blocks_full as u64);
+    bits.push(app.size_noise.amp.to_bits());
+    bits.push(app.size_noise.half_mb.to_bits());
+    bits.push(app.size_noise.bias.to_bits());
+    bits.push(app.iterations as u64);
+    bits.push(app.compute_s_per_mb.to_bits());
+    bits.push(app.cached_speedup.to_bits());
+    bits.push(app.recompute_factor.to_bits());
+    bits.push(app.serial_fixed_s.to_bits());
+    bits.push(app.serial_per_scale_s.to_bits());
+    bits.push(app.shuffle_mb_full.to_bits());
+    bits.push(app.task_overhead_s.to_bits());
+    bits.push(app.task_time_sigma.to_bits());
+    bits.push(app.per_partition_overhead_mb.to_bits());
+    bits.push(app.parallelism_cap.map_or(u64::MAX, |c| c as u64));
+    bits.push(app.force_block_s as u64);
+    bits
+}
+
+/// A long-lived Blink session: one fit backend, one sampling
+/// configuration, and a cache of trained profiles.
+pub struct Advisor<'a> {
+    backend: &'a mut dyn FitBackend,
+    manager: SampleRunsManager,
+    max_machines: usize,
+    scales: Scales,
+    cache: BTreeMap<ProfileKey, TrainedProfile>,
+    sampling_phases: usize,
+}
+
+impl<'a> Advisor<'a> {
+    /// Start configuring an advisor.
+    pub fn builder() -> AdvisorBuilder {
+        AdvisorBuilder::default()
+    }
+
+    /// Profile `app`: run the sampling phase and fit the predictors —
+    /// or return the cached [`TrainedProfile`] if this session already
+    /// profiled `(app, scales)`. The returned profile is an owned
+    /// snapshot; all queries on it are backend-free.
+    pub fn profile(&mut self, app: &AppModel) -> TrainedProfile {
+        let scales = self.scales.for_app(app);
+        let key: ProfileKey = (
+            app.name.to_string(),
+            app_fingerprint(app),
+            scales.iter().map(|s| s.to_bits()).collect(),
+        );
+        match self.cache.entry(key) {
+            std::collections::btree_map::Entry::Occupied(hit) => hit.get().clone(),
+            std::collections::btree_map::Entry::Vacant(miss) => {
+                self.sampling_phases += 1;
+                miss.insert(TrainedProfile::train(
+                    self.backend,
+                    &self.manager,
+                    app,
+                    &scales,
+                    self.max_machines,
+                ))
+                .clone()
+            }
+        }
+    }
+
+    /// How many sampling phases this session has actually paid for
+    /// (cache hits do not count — the point of the session API).
+    pub fn sampling_phases(&self) -> usize {
+        self.sampling_phases
+    }
+
+    /// Name of the fit backend this session trains with.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+/// The §5.4 answer for one `(scale, machine type)` query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recommendation {
+    /// Recommended cluster size for the actual run.
+    pub machines: usize,
+    /// Predicted total cached size at the target scale (MB).
+    pub predicted_cached_mb: f64,
+    /// Predicted total execution memory at the target scale (MB).
+    pub predicted_exec_mb: f64,
+    /// Cost of the sampling phase that trained the profile (machine-s).
+    pub sample_cost_machine_s: f64,
+    /// Selector diagnostics, absent for the no-cached-data atypical case.
+    pub selection: Option<Selection>,
+}
+
+/// How a risk cross-validation should be run (see
+/// [`TrainedProfile::validate`]).
+pub struct ValidationSpec<'s> {
+    pub scenario: &'s dyn Scenario,
+    /// Engine seeds; each pick is realized once per seed.
+    pub seeds: &'s [u64],
+    /// How many of the plan's top ranked picks to validate.
+    pub top_k: usize,
+}
+
+/// The product of one sampling phase: fitted predictors + diagnostics.
+/// Built by [`Advisor::profile`]; every query reuses the trained state.
+#[derive(Debug, Clone)]
+pub struct TrainedProfile {
+    /// The profiled application model.
+    pub app: AppModel,
+    /// The sampling scales that were actually run.
+    pub scales: Vec<f64>,
+    /// Largest cluster queries may recommend (from the advisor config).
+    pub max_machines: usize,
+    /// Total cost of the sampling phase, machine-seconds.
+    pub sample_cost_machine_s: f64,
+    /// Per-run diagnostics (empty for the no-cached-data atypical case).
+    pub runs: Vec<SampleRun>,
+    /// Fitted predictors; `None` when the app caches nothing (atypical
+    /// case 1 — the cheapest actual run is a single machine).
+    pub models: Option<(SizePredictor, ExecMemoryPredictor)>,
+}
+
+impl TrainedProfile {
+    fn train(
+        backend: &mut dyn FitBackend,
+        manager: &SampleRunsManager,
+        app: &AppModel,
+        scales: &[f64],
+        max_machines: usize,
+    ) -> TrainedProfile {
+        match manager.run(app, scales) {
+            SamplingOutcome::NoCachedData { sample_cost_machine_s } => TrainedProfile {
+                app: app.clone(),
+                scales: scales.to_vec(),
+                max_machines,
+                sample_cost_machine_s,
+                runs: Vec::new(),
+                models: None,
+            },
+            SamplingOutcome::Profiled(runs) => {
+                let sizes = SizePredictor::train(backend, &runs);
+                let exec = ExecMemoryPredictor::train(backend, &runs);
+                TrainedProfile {
+                    app: app.clone(),
+                    scales: scales.to_vec(),
+                    max_machines,
+                    sample_cost_machine_s: SampleRunsManager::total_cost_machine_s(&runs),
+                    runs,
+                    models: Some((sizes, exec)),
+                }
+            }
+        }
+    }
+
+    /// Atypical case 1: the application caches nothing.
+    pub fn no_cached_data(&self) -> bool {
+        self.models.is_none()
+    }
+
+    /// Predicted total cached size at `scale` (0 when nothing is cached).
+    pub fn predicted_cached_mb(&self, scale: f64) -> f64 {
+        self.models.as_ref().map_or(0.0, |(s, _)| s.predict_total(scale))
+    }
+
+    /// Predicted total execution memory at `scale`.
+    pub fn predicted_exec_mb(&self, scale: f64) -> f64 {
+        self.models.as_ref().map_or(0.0, |(_, e)| e.predict_total(scale))
+    }
+
+    /// The §5.4 query: minimal eviction-free cluster size for an actual
+    /// run at `scale` on `machine`-type nodes. No re-sampling.
+    pub fn recommend(&self, scale: f64, machine: &MachineSpec) -> Recommendation {
+        match &self.models {
+            None => Recommendation {
+                // atypical case 1: cheapest possible actual run
+                machines: 1,
+                predicted_cached_mb: 0.0,
+                predicted_exec_mb: 0.0,
+                sample_cost_machine_s: self.sample_cost_machine_s,
+                selection: None,
+            },
+            Some((sizes, exec)) => {
+                let cached = sizes.predict_total(scale);
+                let exec_mb = exec.predict_total(scale);
+                let sel = select_cluster_size(cached, exec_mb, machine, self.max_machines);
+                Recommendation {
+                    machines: sel.machines,
+                    predicted_cached_mb: cached,
+                    predicted_exec_mb: exec_mb,
+                    sample_cost_machine_s: self.sample_cost_machine_s,
+                    selection: Some(sel),
+                }
+            }
+        }
+    }
+
+    /// The fleet-aware query: search every `(instance type × count)`
+    /// candidate of `catalog` under `pricing`. Same trained state; the
+    /// no-cached-data case flows through with zero predicted footprint.
+    pub fn plan(
+        &self,
+        scale: f64,
+        catalog: &InstanceCatalog,
+        pricing: &dyn PricingModel,
+    ) -> Advice {
+        let cached = self.predicted_cached_mb(scale);
+        let exec_mb = self.predicted_exec_mb(scale);
+        let profile = self.app.profile(scale);
+        let input = PlanInput {
+            profile: &profile,
+            cached_total_mb: cached,
+            exec_total_mb: exec_mb,
+        };
+        Advice {
+            plan: planner::plan(&input, catalog, pricing, self.max_machines),
+            predicted_cached_mb: cached,
+            predicted_exec_mb: exec_mb,
+            sample_cost_machine_s: self.sample_cost_machine_s,
+        }
+    }
+
+    /// The Table-2 inverse query: the maximum data scale that still runs
+    /// eviction-free on a fixed cluster of `machines` nodes of `machine`
+    /// type. Infinite when the app caches nothing.
+    pub fn max_scale(&self, machine: &MachineSpec, machines: usize) -> f64 {
+        match &self.models {
+            None => f64::INFINITY,
+            Some((sizes, exec)) => bounds::max_scale(sizes, exec, machine, machines, 1e-5),
+        }
+    }
+
+    /// Risk query: realize the top picks of `plan` with event-driven
+    /// engine runs under a disturbance scenario and re-rank by realized
+    /// cost ([`planner::risk_adjusted`]).
+    pub fn validate(
+        &self,
+        scale: f64,
+        plan: &Plan,
+        catalog: &InstanceCatalog,
+        pricing: &dyn PricingModel,
+        spec: &ValidationSpec<'_>,
+    ) -> Vec<RiskAdjustedPick> {
+        let profile = self.app.profile(scale);
+        planner::risk_adjusted(
+            &profile,
+            plan,
+            catalog,
+            pricing,
+            spec.scenario,
+            spec.seeds,
+            spec.top_k,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blink::models::RustFit;
+    use crate::cost::MachineSeconds;
+    use crate::workloads::{app_by_name, FULL_SCALE};
+
+    #[test]
+    fn profile_is_cached_per_app_and_scales() {
+        let app = app_by_name("svm").unwrap();
+        let mut b = RustFit::default();
+        let mut advisor = Advisor::builder().build(&mut b);
+        let p1 = advisor.profile(&app);
+        let p2 = advisor.profile(&app);
+        assert_eq!(advisor.sampling_phases(), 1, "second call must hit the cache");
+        assert_eq!(p1.sample_cost_machine_s, p2.sample_cost_machine_s);
+        // a different scale set is a different profile
+        let mut b2 = RustFit::default();
+        let mut advisor2 = Advisor::builder().scales(&[1.0, 2.0]).build(&mut b2);
+        advisor2.profile(&app);
+        let p3 = advisor2.profile(&app);
+        assert_eq!(advisor2.sampling_phases(), 1);
+        assert_eq!(p3.scales, vec![1.0, 2.0]);
+        // a same-named app with different laws must not share the profile
+        let mut variant = app.clone();
+        variant.cached_laws[0].theta1 *= 2.0;
+        advisor2.profile(&variant);
+        assert_eq!(advisor2.sampling_phases(), 2, "law change invalidates the cache");
+    }
+
+    #[test]
+    fn paper_scales_policy_matches_section_6_4() {
+        let gbt = app_by_name("gbt").unwrap();
+        let als = app_by_name("als").unwrap();
+        let svm = app_by_name("svm").unwrap();
+        assert_eq!(Scales::Paper.for_app(&gbt).len(), 10);
+        assert_eq!(Scales::Paper.for_app(&als).len(), 5);
+        assert_eq!(Scales::Paper.for_app(&svm), DEFAULT_SCALES.to_vec());
+        assert_eq!(Scales::Fixed(vec![4.0]).for_app(&gbt), vec![4.0]);
+    }
+
+    #[test]
+    fn one_profile_answers_recommend_plan_and_bounds() {
+        let app = app_by_name("svm").unwrap();
+        let mut b = RustFit::default();
+        let mut advisor = Advisor::builder().scales(&DEFAULT_SCALES).build(&mut b);
+        let profile = advisor.profile(&app);
+        let machine = MachineSpec::worker_node();
+        let rec = profile.recommend(FULL_SCALE, &machine);
+        // single-type catalog: the plan must degenerate to the §5.4 pick
+        let worker_only = InstanceCatalog::single(crate::sim::InstanceType::paper_worker());
+        let advice = profile.plan(FULL_SCALE, &worker_only, &MachineSeconds);
+        let bound = profile.max_scale(&machine, 12);
+        assert_eq!(advisor.sampling_phases(), 1, "three queries, one sampling phase");
+        assert_eq!(rec.machines, 7, "the Table 1 svm pick");
+        assert_eq!(advice.plan.best().unwrap().candidate.machines, rec.machines);
+        assert!(bound > FULL_SCALE, "svm fits 12 machines beyond 100 %");
+    }
+
+    #[test]
+    fn no_cached_data_profile_degenerates_gracefully() {
+        // a synthetic app that caches nothing exercises atypical case 1
+        let mut app = app_by_name("svm").unwrap();
+        app.cached_laws = Vec::new();
+        let mut b = RustFit::default();
+        let mut advisor = Advisor::builder().build(&mut b);
+        let profile = advisor.profile(&app);
+        assert!(profile.no_cached_data());
+        assert!(profile.sample_cost_machine_s > 0.0);
+        let rec = profile.recommend(FULL_SCALE, &MachineSpec::worker_node());
+        assert_eq!(rec.machines, 1);
+        assert!(rec.selection.is_none());
+        assert_eq!(profile.max_scale(&MachineSpec::worker_node(), 12), f64::INFINITY);
+    }
+}

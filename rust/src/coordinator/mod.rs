@@ -2,21 +2,29 @@
 //! experiment drivers together behind the `blink` CLI.
 //!
 //! The coordinator chooses the fit backend at startup (PJRT `linfit` when
-//! `artifacts/` is present, pure-Rust fallback otherwise), orchestrates
-//! the sample-runs -> predict -> select -> actual-run pipeline, and
-//! exposes each paper experiment as a subcommand.
+//! `artifacts/` is present, pure-Rust fallback otherwise) and exposes each
+//! query as a subcommand. Every `cmd_*` function is a thin
+//! parse → query → render shim: it resolves names to domain objects,
+//! asks a [`Advisor`] session (or the engine/experiment drivers) for a
+//! typed report, prints that report exactly once in the requested
+//! [`OutputFormat`], and returns it. Compute paths never print.
 
 use anyhow::{anyhow, Result};
 
-use crate::blink::{planner, Advice, Blink, BlinkDecision, FitBackend, RustFit};
+use crate::blink::report::{
+    AppRow, AppsReport, BoundsReport, PlanReport, RecommendReport, RiskSection, RunReport,
+    RunStats, SimulateReport,
+};
+use crate::blink::{Advisor, OutputFormat, Report, RustFit, ValidationSpec};
 use crate::cost::pricing_by_name;
 use crate::experiments::{self, report};
+use crate::hdfs::Sampler;
 use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
 use crate::runtime::{artifacts_available, PjrtFit, Runtime};
 use crate::sim::{engine, scenario, FleetSpec, InstanceCatalog, MachineSpec, SimOptions};
-use crate::util::units::{fmt_mb, fmt_pct, fmt_secs};
-use crate::workloads::{app_by_name, AppModel};
+use crate::util::json::Json;
+use crate::workloads::{all_apps, app_by_name, AppModel};
 
 /// Which fit backend the coordinator is using.
 pub enum Backend {
@@ -43,82 +51,55 @@ impl Backend {
         }
     }
 
-    /// Run a closure with the backend as a `&mut dyn FitBackend`.
-    pub fn with<R>(&mut self, f: impl FnOnce(&mut dyn FitBackend) -> R) -> R {
+    /// Run a closure with a default-configured advisor session bound to
+    /// this backend.
+    pub fn with_advisor<R>(&mut self, f: impl FnOnce(&mut Advisor<'_>) -> R) -> R {
+        self.with_advisor_built(Advisor::builder(), f)
+    }
+
+    /// Same, with a pre-configured builder.
+    pub fn with_advisor_built<R>(
+        &mut self,
+        builder: crate::blink::AdvisorBuilder,
+        f: impl FnOnce(&mut Advisor<'_>) -> R,
+    ) -> R {
         match self {
             Backend::Pjrt(rt) => {
                 let mut fit = PjrtFit::new(rt);
-                f(&mut fit)
+                let mut advisor = builder.build(&mut fit);
+                f(&mut advisor)
             }
-            Backend::Rust(fit) => f(fit),
+            Backend::Rust(fit) => {
+                let mut advisor = builder.build(fit);
+                f(&mut advisor)
+            }
         }
     }
 }
 
 fn lookup(app: &str) -> Result<AppModel> {
     app_by_name(app).ok_or_else(|| {
-        anyhow!("unknown app '{app}' (choose from als bayes gbt km lr pca rfc svm)")
+        let names: Vec<&str> = all_apps().iter().map(|a| a.name).collect();
+        anyhow!("unknown app '{app}' (choose from {})", names.join(" "))
     })
 }
 
-/// `blink decide`: the full pipeline for one app/scale.
-pub fn cmd_decide(app: &str, scale: f64, verbose: bool) -> Result<BlinkDecision> {
+/// `blink decide`: the §5.4 recommendation for one app/scale.
+pub fn cmd_decide(
+    app: &str,
+    scale: f64,
+    verbose: bool,
+    format: OutputFormat,
+) -> Result<RecommendReport> {
     let app = lookup(app)?;
     let mut backend = Backend::auto();
-    println!("fit backend: {}", backend.name());
-    let machine = MachineSpec::worker_node();
-    let scales = experiments::sampling_scales(&app);
-    let d = backend.with(|b| {
-        let mut blink = Blink::new(b);
-        blink.decide_with_scales(&app, scale, &machine, &scales)
+    let backend_name = backend.name();
+    let report = backend.with_advisor(|advisor| {
+        let profile = advisor.profile(&app);
+        RecommendReport::new(backend_name, &profile, scale, &MachineSpec::worker_node(), verbose)
     });
-    println!(
-        "app {}  scale {:.0} ({} input)",
-        app.name,
-        scale,
-        fmt_mb(app.input_mb(scale))
-    );
-    println!(
-        "predicted cached {}  exec memory {}",
-        fmt_mb(d.predicted_cached_mb),
-        fmt_mb(d.predicted_exec_mb)
-    );
-    if let Some(sel) = &d.selection {
-        if sel.saturated {
-            // a saturated selection has no headroom — report the deficit
-            println!(
-                "machines_min {}  machines_max {}  cache deficit/machine {}",
-                sel.machines_min,
-                sel.machines_max,
-                fmt_mb(sel.cache_deficit_mb())
-            );
-            println!("WARNING: cluster bound hit; run will evict");
-        } else {
-            println!(
-                "machines_min {}  machines_max {}  headroom/machine {}",
-                sel.machines_min,
-                sel.machines_max,
-                fmt_mb(sel.headroom_mb)
-            );
-        }
-    }
-    println!(
-        "-> recommended cluster size: {} machines (sampling cost {})",
-        d.machines,
-        fmt_secs(d.sample_cost_machine_s)
-    );
-    if verbose {
-        if let Some((sizes, _)) = &d.predictors {
-            for (ds, m) in &sizes.models {
-                println!(
-                    "  dataset {ds}: {} model, cv err {}",
-                    m.kind.name(),
-                    fmt_pct(m.cv_rel_err)
-                );
-            }
-        }
-    }
-    Ok(d)
+    println!("{}", report.render(format));
+    Ok(report)
 }
 
 /// `blink advise`: the fleet-aware planner — search an instance catalog
@@ -133,7 +114,8 @@ pub fn cmd_advise(
     pricing_name: &str,
     max_machines: usize,
     scenario_name: &str,
-) -> Result<Advice> {
+    format: OutputFormat,
+) -> Result<PlanReport> {
     let app = lookup(app)?;
     let catalog = InstanceCatalog::by_name(catalog_name)
         .ok_or_else(|| anyhow!("unknown catalog '{catalog_name}' (paper|cloud|all)"))?;
@@ -147,176 +129,202 @@ pub fn cmd_advise(
         return Err(anyhow!("--max-machines must be at least 1"));
     }
     let mut backend = Backend::auto();
-    println!("fit backend: {}", backend.name());
-    let scales = experiments::sampling_scales(&app);
-    let advice = backend.with(|b| {
-        let mut blink = Blink::new(b);
-        blink.max_machines = max_machines;
-        blink.advise_with_scales(&app, scale, &catalog, pricing.as_ref(), &scales)
-    });
-    println!(
-        "app {}  scale {:.0} ({} input)  predicted cached {}  exec {}  sampling cost {}",
-        app.name,
-        scale,
-        fmt_mb(app.input_mb(scale)),
-        fmt_mb(advice.predicted_cached_mb),
-        fmt_mb(advice.predicted_exec_mb),
-        fmt_secs(advice.sample_cost_machine_s),
+    let backend_name = backend.name();
+    let report = backend.with_advisor_built(
+        Advisor::builder().max_machines(max_machines),
+        |advisor| {
+            let profile = advisor.profile(&app);
+            let advice = profile.plan(scale, &catalog, pricing.as_ref());
+            let spec =
+                ValidationSpec { scenario: scenario.as_ref(), seeds: &[11, 12, 13], top_k: 3 };
+            let risk = (scenario_name != "none").then(|| RiskSection {
+                scenario: scenario.name().to_string(),
+                picks: profile.validate(scale, &advice.plan, &catalog, pricing.as_ref(), &spec),
+            });
+            PlanReport {
+                backend: backend_name.to_string(),
+                app: app.name.to_string(),
+                scale,
+                input_mb: app.input_mb(scale),
+                predicted_cached_mb: advice.predicted_cached_mb,
+                predicted_exec_mb: advice.predicted_exec_mb,
+                sample_cost_machine_s: advice.sample_cost_machine_s,
+                plan: advice.plan,
+                catalog_name: catalog.name.to_string(),
+                catalog_types: catalog.instances.len(),
+                pricing: pricing.name().to_string(),
+                risk,
+            }
+        },
     );
-    report::print_plan(&advice.plan, &catalog, pricing.name());
-    if scenario_name != "none" {
-        let profile = app.profile(scale);
-        let risks = planner::risk_adjusted(
-            &profile,
-            &advice.plan,
-            &catalog,
-            pricing.as_ref(),
-            scenario.as_ref(),
-            &[11, 12, 13],
-            3,
-        );
-        report::print_risk(&risks, scenario.name(), pricing.name());
-    }
-    Ok(advice)
+    println!("{}", report.render(format));
+    Ok(report)
+}
+
+/// Parsed-name inputs of `blink simulate` (bundled so the shim stays a
+/// readable signature).
+pub struct SimulateQuery<'a> {
+    pub app: &'a str,
+    pub scale: f64,
+    pub machines: usize,
+    pub instance: &'a str,
+    pub scenario: &'a str,
+    pub pricing: &'a str,
+    pub seed: u64,
 }
 
 /// `blink simulate`: run one workload through the event-driven engine on
 /// a homogeneous fleet of a catalog instance type, under a disturbance
 /// scenario, and compare the realized per-machine cost against the naive
 /// (undisturbed) quote of the same pricing model.
-pub fn cmd_simulate(
-    app: &str,
-    scale: f64,
-    machines: usize,
-    instance_name: &str,
-    scenario_name: &str,
-    pricing_name: &str,
-    seed: u64,
-) -> Result<RunSummary> {
-    let model = lookup(app)?;
+pub fn cmd_simulate(q: &SimulateQuery<'_>, format: OutputFormat) -> Result<SimulateReport> {
+    let model = lookup(q.app)?;
     let catalog = InstanceCatalog::all();
-    let instance = catalog.get(instance_name).ok_or_else(|| {
-        anyhow!("unknown instance type '{instance_name}' (see the paper|cloud catalogs)")
+    let instance = catalog.get(q.instance).ok_or_else(|| {
+        anyhow!("unknown instance type '{}' (see the paper|cloud catalogs)", q.instance)
     })?;
-    let scenario = scenario::by_name(scenario_name).ok_or_else(|| {
-        anyhow!("unknown scenario '{scenario_name}' (spot|straggler|failure|autoscale|none)")
+    let scenario = scenario::by_name(q.scenario).ok_or_else(|| {
+        anyhow!("unknown scenario '{}' (spot|straggler|failure|autoscale|none)", q.scenario)
     })?;
-    let pricing = pricing_by_name(pricing_name).ok_or_else(|| {
-        anyhow!("unknown pricing model '{pricing_name}' (machine-seconds|hourly|per-second|spot)")
+    let pricing = pricing_by_name(q.pricing).ok_or_else(|| {
+        anyhow!("unknown pricing model '{}' (machine-seconds|hourly|per-second|spot)", q.pricing)
     })?;
-    let fleet = FleetSpec::homogeneous(instance.clone(), machines)
+    let fleet = FleetSpec::homogeneous(instance.clone(), q.machines)
         .map_err(|e| anyhow!("invalid fleet: {e}"))?;
-    let profile = model.profile(scale);
+    let profile = model.profile(q.scale);
     let opts = |seed: u64| SimOptions {
         policy: EvictionPolicy::Lru,
         seed,
         compute: None,
         detailed_log: false,
     };
-    let baseline = engine::run(&profile, &fleet, &scenario::NoDisturbances, opts(seed))
+    let baseline = engine::run(&profile, &fleet, &scenario::NoDisturbances, opts(q.seed))
         .map_err(|e| anyhow!("baseline run failed: {e}"))?;
-    let disturbed = engine::run(&profile, &fleet, scenario.as_ref(), opts(seed))
+    let disturbed = engine::run(&profile, &fleet, scenario.as_ref(), opts(q.seed))
         .map_err(|e| anyhow!("scenario run failed: {e}"))?;
+    let stats = |s: &RunSummary, cached_fraction: f64| RunStats {
+        duration_s: s.duration_s,
+        cost_machine_min: s.cost_machine_min(),
+        evictions: s.evictions,
+        machines_lost: s.machines_lost,
+        machines_joined: s.machines_joined,
+        cached_fraction_after_load: cached_fraction,
+    };
     let b = RunSummary::from_log(&baseline.sim.log);
     let s = RunSummary::from_log(&disturbed.sim.log);
-    println!(
-        "app {}  scale {:.0} ({} input)  fleet {} x {}  scenario '{}'",
-        model.name,
-        scale,
-        fmt_mb(model.input_mb(scale)),
-        machines,
-        instance.name,
-        scenario.name(),
-    );
-    println!(
-        "baseline: {} ({:.1} machine-min), evictions {}, cached after load {}",
-        fmt_secs(b.duration_s),
-        b.cost_machine_min(),
-        b.evictions,
-        fmt_pct(baseline.sim.cached_fraction_after_load),
-    );
-    println!(
-        "scenario: {} ({:+.1} %), evictions {}, machines lost {}, joined {}, cached after load {}",
-        fmt_secs(s.duration_s),
-        (s.duration_s / b.duration_s.max(1e-12) - 1.0) * 100.0,
-        s.evictions,
-        s.machines_lost,
-        s.machines_joined,
-        fmt_pct(disturbed.sim.cached_fraction_after_load),
-    );
-    let naive = pricing.price(instance, machines, b.duration_s);
-    let realized = pricing.price_timeline(&disturbed.timeline);
-    println!(
-        "{} pricing — naive quote {:.4}  realized (per-machine uptime) {:.4}  ({:+.1} %)",
-        pricing.name(),
-        naive,
-        realized,
-        (realized / naive.max(1e-12) - 1.0) * 100.0,
-    );
-    Ok(s)
+    let report = SimulateReport {
+        app: model.name.to_string(),
+        scale: q.scale,
+        input_mb: model.input_mb(q.scale),
+        machines: q.machines,
+        instance: instance.name.to_string(),
+        scenario: scenario.name().to_string(),
+        pricing: pricing.name().to_string(),
+        naive_quote: pricing.price(instance, q.machines, b.duration_s),
+        realized_cost: pricing.price_timeline(&disturbed.timeline),
+        baseline: stats(&b, baseline.sim.cached_fraction_after_load),
+        disturbed: stats(&s, disturbed.sim.cached_fraction_after_load),
+    };
+    println!("{}", report.render(format));
+    Ok(report)
 }
 
-/// `blink run`: decide, then simulate the actual run at the pick.
-pub fn cmd_run(app: &str, scale: f64, seed: u64) -> Result<RunSummary> {
-    let model = lookup(app)?;
-    let d = cmd_decide(app, scale, false)?;
-    let s = experiments::actual_run(&model, scale, d.machines, seed);
-    println!(
-        "actual run: {} on {} machines -> {} ({:.1} machine-min, {} evictions)",
-        app,
-        d.machines,
-        fmt_secs(s.duration_s),
-        s.cost_machine_min(),
-        s.evictions
-    );
-    let total = d.sample_cost_machine_s + s.cost_machine_s;
-    println!(
-        "total cost incl. sampling: {:.1} machine-min (sampling {})",
-        total / 60.0,
-        fmt_pct(d.sample_cost_machine_s / s.cost_machine_s.max(1e-9))
-    );
-    Ok(s)
-}
-
-/// `blink bounds`: Table-2 style max-scale prediction for one app.
-pub fn cmd_bounds(app: &str, machines: usize) -> Result<f64> {
+/// `blink run`: recommend, then simulate the actual run at the pick —
+/// one advisor query plus one engine run, rendered as a single report.
+pub fn cmd_run(app: &str, scale: f64, seed: u64, format: OutputFormat) -> Result<RunReport> {
     let model = lookup(app)?;
     let mut backend = Backend::auto();
-    let mgr = crate::blink::SampleRunsManager::default();
-    let runs = match mgr.run(&model, &experiments::sampling_scales(&model)) {
-        crate::blink::SamplingOutcome::Profiled(r) => r,
-        crate::blink::SamplingOutcome::NoCachedData { .. } => {
-            println!("{app} caches nothing; any scale fits");
-            return Ok(f64::INFINITY);
-        }
-    };
-    let (sp, ep) = backend.with(|b| {
-        (
-            crate::blink::SizePredictor::train(b, &runs),
-            crate::blink::ExecMemoryPredictor::train(b, &runs),
-        )
+    let backend_name = backend.name();
+    let decide = backend.with_advisor(|advisor| {
+        let profile = advisor.profile(&model);
+        RecommendReport::new(backend_name, &profile, scale, &MachineSpec::worker_node(), false)
     });
-    let machine = MachineSpec::worker_node();
-    let s = crate::blink::bounds::max_scale(&sp, &ep, &machine, machines, 1e-5);
-    println!(
-        "{app}: max eviction-free data scale on {machines} machines ~ {s:.1} ({} input)",
-        fmt_mb(model.input_mb(s))
-    );
-    Ok(s)
+    let s = experiments::actual_run(&model, scale, decide.recommendation.machines, seed);
+    let report = RunReport {
+        decide,
+        seed,
+        duration_s: s.duration_s,
+        cost_machine_min: s.cost_machine_min(),
+        cost_machine_s: s.cost_machine_s,
+        evictions: s.evictions,
+    };
+    println!("{}", report.render(format));
+    Ok(report)
+}
+
+/// `blink bounds`: Table-2 style max-scale prediction for one app. The
+/// whole pipeline lives in [`TrainedProfile::max_scale`] — the
+/// coordinator only resolves names and renders.
+///
+/// [`TrainedProfile::max_scale`]: crate::blink::TrainedProfile::max_scale
+pub fn cmd_bounds(app: &str, machines: usize, format: OutputFormat) -> Result<BoundsReport> {
+    let model = lookup(app)?;
+    if machines == 0 {
+        return Err(anyhow!("--machines must be at least 1"));
+    }
+    let mut backend = Backend::auto();
+    let report = backend.with_advisor(|advisor| {
+        let profile = advisor.profile(&model);
+        let s = profile.max_scale(&MachineSpec::worker_node(), machines);
+        BoundsReport {
+            app: model.name.to_string(),
+            machines,
+            max_scale: s,
+            input_mb_at_max: if s.is_finite() { model.input_mb(s) } else { 0.0 },
+        }
+    });
+    println!("{}", report.render(format));
+    Ok(report)
+}
+
+/// `blink apps`: list the registered workload models.
+pub fn cmd_apps(format: OutputFormat) -> AppsReport {
+    let sampler = Sampler::default();
+    let report = AppsReport {
+        rows: all_apps()
+            .iter()
+            .map(|a| AppRow {
+                name: a.name.to_string(),
+                input_mb: a.input_mb_full,
+                blocks: a.blocks_full,
+                iterations: a.iterations,
+                cached_mb_at_100: a.total_true_cached_mb(1000.0),
+                approach: a.sample_approach(&sampler, 0.001).to_string(),
+            })
+            .collect(),
+    };
+    println!("{}", report.render(format));
+    report
 }
 
 /// `blink experiment --id <id>`: regenerate a paper table/figure.
-pub fn cmd_experiment(id: &str, seed: u64) -> Result<()> {
+pub fn cmd_experiment(id: &str, seed: u64, format: OutputFormat) -> Result<()> {
+    match format {
+        OutputFormat::Text => cmd_experiment_text(id, seed),
+        OutputFormat::Json => {
+            let j = experiment_json(id, seed)?;
+            println!("{}", Json::obj(vec![("experiment", id.into()), ("data", j)]).pretty());
+            Ok(())
+        }
+    }
+}
+
+/// Figure 2's data: computed-times per dataset of the merged LR DAG.
+fn fig2_counts() -> Vec<(String, usize)> {
+    let dag = crate::dag::fig2_logistic_regression();
+    let counts = dag.compute_counts_uncached();
+    dag.datasets.iter().map(|d| (d.name.clone(), counts[d.id])).collect()
+}
+
+fn cmd_experiment_text(id: &str, seed: u64) -> Result<()> {
     match id {
         "table1" => report::print_table1(&experiments::table1(seed)),
         "table2" => report::print_table2(&experiments::table2(seed)),
         "fig1" => report::print_fig1(&experiments::fig1(seed)),
         "fig2" => {
-            let dag = crate::dag::fig2_logistic_regression();
-            let counts = dag.compute_counts_uncached();
             println!("FIGURE 2 — merged LR DAG (computed-times without caching)");
-            for d in &dag.datasets {
-                println!("  {:<5} computed {}x", d.name, counts[d.id]);
+            for (name, count) in fig2_counts() {
+                println!("  {name:<5} computed {count}x");
             }
         }
         "fig4" => report::print_fig4(&experiments::fig4(seed)),
@@ -341,7 +349,7 @@ pub fn cmd_experiment(id: &str, seed: u64) -> Result<()> {
                 "fig1", "fig2", "fig4", "fig7", "fig8", "fig9", "fig11", "sec4", "table1",
                 "table2",
             ] {
-                cmd_experiment(id, seed)?;
+                cmd_experiment_text(id, seed)?;
                 println!();
             }
             // fig6/fig10 derive from table1; print them from one run
@@ -355,43 +363,112 @@ pub fn cmd_experiment(id: &str, seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// The machine rendering of one experiment (same drivers as the text
+/// path; `util::json`-parsable by construction).
+fn experiment_json(id: &str, seed: u64) -> Result<Json> {
+    Ok(match id {
+        "table1" => report::json_table1(&experiments::table1(seed)),
+        "table2" => report::json_table2(&experiments::table2(seed)),
+        "fig1" => report::json_fig1(&experiments::fig1(seed)),
+        "fig2" => Json::obj(vec![(
+            "datasets",
+            Json::Arr(
+                fig2_counts()
+                    .into_iter()
+                    .map(|(name, count)| {
+                        Json::obj(vec![("name", name.into()), ("computed", count.into())])
+                    })
+                    .collect(),
+            ),
+        )]),
+        "fig4" => report::json_fig4(&experiments::fig4(seed)),
+        "fig6" => report::json_fig6(&experiments::fig6(&experiments::table1(seed))),
+        "fig7" => report::json_fig7(&experiments::fig7()),
+        "fig8" => report::json_fig8(&experiments::fig8()),
+        "fig9" => report::json_fig9(&experiments::fig9_sizes()),
+        "fig10" => {
+            let t = experiments::table1(seed);
+            report::json_fig10(&experiments::fig10(&t, seed))
+        }
+        "fig11" => report::json_fig11(&experiments::fig11(seed)),
+        "sec4" => report::json_sec4(
+            &experiments::sec4_parallelism(seed),
+            &experiments::sec4_single_vs_cluster(seed),
+        ),
+        "all" => {
+            let mut entries: Vec<(&str, Json)> = Vec::new();
+            for id in ["fig1", "fig2", "fig4", "fig7", "fig8", "fig9", "fig11", "sec4"] {
+                entries.push((id, experiment_json(id, seed)?));
+            }
+            // table1 and its derived figures share one run, as in text mode
+            let t = experiments::table1(seed);
+            entries.push(("table1", report::json_table1(&t)));
+            entries.push(("table2", report::json_table2(&experiments::table2(seed))));
+            entries.push(("fig6", report::json_fig6(&experiments::fig6(&t))));
+            entries.push(("fig10", report::json_fig10(&experiments::fig10(&t, seed))));
+            Json::obj(entries)
+        }
+        other => return Err(anyhow!("unknown experiment '{other}'")),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    const F: OutputFormat = OutputFormat::Text;
+
     #[test]
     fn backend_auto_never_panics() {
         let mut b = Backend::auto();
-        let name = b.with(|f| f.name());
+        let name = b.with_advisor(|a| a.backend_name());
         assert!(name == "pjrt-linfit" || name == "rust-nnls");
     }
 
     #[test]
-    fn lookup_rejects_unknown() {
-        assert!(lookup("nope").is_err());
+    fn lookup_rejects_unknown_and_lists_all_registered_apps() {
         assert!(lookup("svm").is_ok());
+        let err = lookup("nope").unwrap_err().to_string();
+        for app in all_apps() {
+            assert!(err.contains(app.name), "error must list '{}': {err}", app.name);
+        }
     }
 
     #[test]
-    fn unknown_experiment_is_an_error() {
-        assert!(cmd_experiment("fig99", 1).is_err());
+    fn unknown_experiment_is_an_error_in_both_formats() {
+        assert!(cmd_experiment("fig99", 1, OutputFormat::Text).is_err());
+        assert!(cmd_experiment("fig99", 1, OutputFormat::Json).is_err());
     }
 
     #[test]
     fn advise_rejects_bad_inputs() {
-        assert!(cmd_advise("nope", 1000.0, "cloud", "hourly", 12, "none").is_err());
-        assert!(cmd_advise("svm", 1000.0, "bogus-catalog", "hourly", 12, "none").is_err());
-        assert!(cmd_advise("svm", 1000.0, "cloud", "free-lunch", 12, "none").is_err());
-        assert!(cmd_advise("svm", 1000.0, "cloud", "hourly", 0, "none").is_err());
-        assert!(cmd_advise("svm", 1000.0, "cloud", "hourly", 12, "meteor").is_err());
+        assert!(cmd_advise("nope", 1000.0, "cloud", "hourly", 12, "none", F).is_err());
+        assert!(cmd_advise("svm", 1000.0, "bogus-catalog", "hourly", 12, "none", F).is_err());
+        assert!(cmd_advise("svm", 1000.0, "cloud", "free-lunch", 12, "none", F).is_err());
+        assert!(cmd_advise("svm", 1000.0, "cloud", "hourly", 0, "none", F).is_err());
+        assert!(cmd_advise("svm", 1000.0, "cloud", "hourly", 12, "meteor", F).is_err());
     }
 
     #[test]
     fn simulate_rejects_bad_inputs() {
-        assert!(cmd_simulate("nope", 100.0, 4, "gp.xlarge", "spot", "spot", 1).is_err());
-        assert!(cmd_simulate("svm", 100.0, 4, "no-such-shape", "spot", "spot", 1).is_err());
-        assert!(cmd_simulate("svm", 100.0, 4, "gp.xlarge", "meteor", "spot", 1).is_err());
-        assert!(cmd_simulate("svm", 100.0, 4, "gp.xlarge", "spot", "free-lunch", 1).is_err());
-        assert!(cmd_simulate("svm", 100.0, 0, "gp.xlarge", "spot", "spot", 1).is_err());
+        let q = |app, machines, instance, scenario, pricing| SimulateQuery {
+            app,
+            scale: 100.0,
+            machines,
+            instance,
+            scenario,
+            pricing,
+            seed: 1,
+        };
+        assert!(cmd_simulate(&q("nope", 4, "gp.xlarge", "spot", "spot"), F).is_err());
+        assert!(cmd_simulate(&q("svm", 4, "no-such-shape", "spot", "spot"), F).is_err());
+        assert!(cmd_simulate(&q("svm", 4, "gp.xlarge", "meteor", "spot"), F).is_err());
+        assert!(cmd_simulate(&q("svm", 4, "gp.xlarge", "spot", "free-lunch"), F).is_err());
+        assert!(cmd_simulate(&q("svm", 0, "gp.xlarge", "spot", "spot"), F).is_err());
+    }
+
+    #[test]
+    fn bounds_rejects_zero_machines() {
+        assert!(cmd_bounds("svm", 0, F).is_err());
     }
 }

@@ -7,7 +7,7 @@
 
 pub mod report;
 
-use crate::blink::{Blink, FitBackend, RustFit, SamplingOutcome, DEFAULT_SCALES};
+use crate::blink::{Advisor, FitBackend, RustFit, Scales, DEFAULT_SCALES};
 use crate::ernest::ErnestModel;
 use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
@@ -34,13 +34,9 @@ pub fn actual_run_full(app: &AppModel, scale: f64, machines: usize, seed: u64) -
 }
 
 /// Sampling scales per app for the enlarged-scale study (§6.4: GBT and ALS
-/// get extended sampling).
+/// get extended sampling) — the advisor's [`Scales::Paper`] policy.
 pub fn sampling_scales(app: &AppModel) -> Vec<f64> {
-    match app.name {
-        "gbt" => (1..=10).map(|s| s as f64).collect(),
-        "als" => (1..=5).map(|s| s as f64).collect(),
-        _ => DEFAULT_SCALES.to_vec(),
-    }
+    Scales::Paper.for_app(app)
 }
 
 // ======================================================================
@@ -87,8 +83,8 @@ pub fn table1_row(
     backend: &mut dyn FitBackend,
     seed: u64,
 ) -> Table1Row {
-    let mut blink = Blink::new(backend);
-    let d = blink.decide_with_scales(app, scale, &MachineSpec::worker_node(), sampling);
+    let mut advisor = Advisor::builder().scales(sampling).build(backend);
+    let d = advisor.profile(app).recommend(scale, &MachineSpec::worker_node());
 
     // each cluster size simulates under its own seed (`seed + n`), so the
     // parallel sweep is bit-identical to the old serial loop
@@ -275,8 +271,8 @@ pub fn fig7() -> Vec<Fig7Row> {
         .iter()
         .map(|app| {
             let mut backend = RustFit::default();
-            let mut blink = Blink::new(&mut backend);
-            let d = blink.decide(app, FULL_SCALE, &MachineSpec::worker_node());
+            let mut advisor = Advisor::builder().scales(&DEFAULT_SCALES).build(&mut backend);
+            let d = advisor.profile(app).recommend(FULL_SCALE, &MachineSpec::worker_node());
             let actual = app.total_true_cached_mb(FULL_SCALE);
             Fig7Row {
                 app: app.name.to_string(),
@@ -308,15 +304,11 @@ pub fn fig8() -> Vec<Fig8Point> {
         .map(|k| {
             let scales: Vec<f64> = (1..=k).map(|s| s as f64).collect();
             let mut backend = RustFit::default();
-            let mut blink = Blink::new(&mut backend);
-            let d = blink.decide_with_scales(
-                &app,
-                FULL_SCALE,
-                &MachineSpec::worker_node(),
-                &scales,
-            );
-            let cv = d
-                .predictors
+            let mut advisor = Advisor::builder().scales(&scales).build(&mut backend);
+            let profile = advisor.profile(&app);
+            let d = profile.recommend(FULL_SCALE, &MachineSpec::worker_node());
+            let cv = profile
+                .models
                 .as_ref()
                 .map(|(s, _)| s.worst_cv_rel_err())
                 .unwrap_or(0.0);
@@ -401,8 +393,8 @@ pub fn fig11(seed: u64) -> Fig11 {
     let app = app_by_name("km").unwrap();
     let scale = app.enlarged_scale; // 200 %
     let mut backend = RustFit::default();
-    let mut blink = Blink::new(&mut backend);
-    let d = blink.decide(&app, scale, &MachineSpec::worker_node());
+    let mut advisor = Advisor::builder().scales(&DEFAULT_SCALES).build(&mut backend);
+    let d = advisor.profile(&app).recommend(scale, &MachineSpec::worker_node());
 
     let res = actual_run_full(&app, scale, d.machines, seed);
     let s = RunSummary::from_log(&res.log);
@@ -457,15 +449,13 @@ fn table2_impl(seed: u64, with_probes: bool) -> Vec<Table2Row> {
         .iter()
         .filter(|a| a.name != "km") // excluded per §6.5 (see Fig. 11)
         .map(|app| {
-            let mgr = crate::blink::SampleRunsManager::default();
-            let runs = match mgr.run(app, &sampling_scales(app)) {
-                SamplingOutcome::Profiled(r) => r,
-                _ => panic!("{} caches data", app.name),
-            };
+            // one trained profile answers the Table-2 inverse query — the
+            // same pipeline `blink bounds` uses, no hand-rolled training
             let mut b = RustFit::default();
-            let sp = crate::blink::SizePredictor::train(&mut b, &runs);
-            let ep = crate::blink::ExecMemoryPredictor::train(&mut b, &runs);
-            let predicted = crate::blink::bounds::max_scale(&sp, &ep, &machine, 12, 1e-5);
+            let mut advisor = Advisor::builder().build(&mut b);
+            let profile = advisor.profile(app);
+            assert!(!profile.no_cached_data(), "{} caches data", app.name);
+            let predicted = profile.max_scale(&machine, 12);
 
             let offsets = [-0.05, -0.04, -0.03, -0.02, -0.01, 0.0, 0.01, 0.02, 0.03, 0.04, 0.05];
             let probes = if with_probes {

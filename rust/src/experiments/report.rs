@@ -1,10 +1,13 @@
-//! ASCII renderers: print each experiment the way the paper lays it out,
-//! plus the fleet planner's ranked/Pareto report.
+//! Experiment renderers: the text printers lay each table/figure out the
+//! way the paper does; the `json_*` companions encode the same driver
+//! structs via [`crate::util::json`] for `blink experiment --format json`.
 
 use super::*;
+use crate::blink::report::{render_plan_text, render_risk_text};
 use crate::blink::{Plan, RiskAdjustedPick};
 use crate::sim::InstanceCatalog;
-use crate::util::units::{fmt_mb_signed, fmt_pct, fmt_secs};
+use crate::util::json::Json;
+use crate::util::units::fmt_pct;
 
 fn hr(width: usize) -> String {
     "-".repeat(width)
@@ -210,103 +213,245 @@ pub fn print_table2(rows: &[Table2Row]) {
 }
 
 /// The `blink advise` report: ranked per-type picks, then the time/cost
-/// Pareto front over the whole (type × count) grid.
+/// Pareto front over the whole (type × count) grid. Thin wrapper over
+/// [`render_plan_text`] for callers that print straight to stdout.
 pub fn print_plan(plan: &Plan, catalog: &InstanceCatalog, pricing: &str) {
-    println!("\nPLAN — catalog '{}' ({} types), pricing '{}'", catalog.name, catalog.instances.len(), pricing);
-    println!(
-        "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12} {:>14} {:>6}",
-        "rank", "instance", "n", "min", "max", "time", "cost", "headroom", "free"
-    );
-    for (i, pick) in plan.ranked.iter().enumerate() {
-        let c = &pick.candidate;
-        let s = &pick.selection;
-        let headroom = if s.saturated {
-            format!("-{} !", crate::util::units::fmt_mb(s.cache_deficit_mb()))
-        } else {
-            fmt_mb_signed(c.headroom_mb)
-        };
-        println!(
-            "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12.2} {:>14} {:>6}",
-            i + 1,
-            c.instance,
-            c.machines,
-            s.machines_min,
-            s.machines_max,
-            fmt_secs(c.predicted_time_s),
-            c.predicted_cost,
-            headroom,
-            if c.eviction_free { "yes" } else { "NO" },
-        );
-    }
-    if plan.pareto.iter().all(|c| c.eviction_free) {
-        println!("pareto front (time vs cost, eviction-free candidates):");
-    } else {
-        println!("pareto front (time vs cost — NO candidate fits eviction-free; full grid):");
-    }
-    for c in &plan.pareto {
-        println!(
-            "  {:<12} x{:<3} {:>10}  cost {:>10.2}",
-            c.instance,
-            c.machines,
-            fmt_secs(c.predicted_time_s),
-            c.predicted_cost
-        );
-    }
-    if let Some(best) = plan.best() {
-        println!(
-            "-> recommend {} x{} ({}, cost {:.2}){}",
-            best.candidate.instance,
-            best.candidate.machines,
-            fmt_secs(best.candidate.predicted_time_s),
-            best.candidate.predicted_cost,
-            if best.candidate.eviction_free {
-                ""
-            } else {
-                "  — WARNING: cluster bound hit on every type; run will evict"
-            }
-        );
-    }
+    println!("{}", render_plan_text(plan, catalog.name, catalog.instances.len(), pricing));
 }
 
 /// Risk cross-validation table: the planner's analytic picks realized by
-/// event-driven engine runs under a disturbance scenario.
+/// event-driven engine runs under a disturbance scenario. Thin wrapper
+/// over [`render_risk_text`].
 pub fn print_risk(risks: &[RiskAdjustedPick], scenario: &str, pricing: &str) {
-    println!(
-        "\nRISK — top picks cross-validated by engine runs (scenario '{scenario}', pricing '{pricing}')"
-    );
-    if risks.is_empty() {
-        println!("  (no pick could be validated)");
-        return;
-    }
-    println!(
-        "{:>4} {:<12} {:>4} {:>12} {:>14} {:>10} {:>6}",
-        "rank", "instance", "n", "time", "realized", "vs quote", "lost"
-    );
-    for (i, r) in risks.iter().enumerate() {
-        if r.completed_runs == 0 {
-            println!(
-                "{:>4} {:<12} {:>4} {:>12} {:>14} {:>10} {:>6}",
-                i + 1,
-                r.pick.candidate.instance,
-                r.pick.candidate.machines,
-                "COLLAPSED",
-                "inf",
-                "-",
-                r.machines_lost,
-            );
-            continue;
-        }
-        println!(
-            "{:>4} {:<12} {:>4} {:>12} {:>14.4} {:>+9.1}% {:>6.1}",
-            i + 1,
-            r.pick.candidate.instance,
-            r.pick.candidate.machines,
-            fmt_secs(r.realized_time_s),
-            r.realized_cost,
-            (r.cost_inflation - 1.0) * 100.0,
-            r.machines_lost,
-        );
-    }
+    println!("{}", render_risk_text(risks, scenario, pricing));
+}
+
+// ======================================================================
+// JSON encodings (blink experiment --format json)
+// ======================================================================
+
+fn json_table1_row(r: &Table1Row) -> Json {
+    Json::obj(vec![
+        ("app", r.app.as_str().into()),
+        ("approach", r.approach.as_str().into()),
+        ("input_gb", r.input_gb.into()),
+        ("blocks", r.blocks.into()),
+        ("sample_cost_machine_min", r.sample_cost_machine_min.into()),
+        (
+            "runs",
+            Json::Arr(
+                r.runs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (time, cost, free))| {
+                        Json::obj(vec![
+                            ("machines", (i + 1).into()),
+                            ("time_min", (*time).into()),
+                            ("cost_machine_min", (*cost).into()),
+                            ("eviction_free", (*free).into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("blink_pick", r.blink_pick.into()),
+        ("first_eviction_free", r.optimal.into()),
+    ])
+}
+
+pub fn json_table1(t: &Table1) -> Json {
+    Json::obj(vec![
+        ("at_100", Json::Arr(t.at_100.iter().map(json_table1_row).collect())),
+        ("enlarged", Json::Arr(t.enlarged.iter().map(json_table1_row).collect())),
+    ])
+}
+
+pub fn json_table2(rows: &[Table2Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("app", r.app.as_str().into()),
+                    ("predicted_scale", r.predicted_scale.into()),
+                    ("true_boundary", r.true_boundary.into()),
+                    (
+                        "probes",
+                        Json::Arr(
+                            r.probes
+                                .iter()
+                                .map(|(off, free)| {
+                                    Json::obj(vec![
+                                        ("offset", (*off).into()),
+                                        ("eviction_free", (*free).into()),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn json_fig1(f: &Fig1) -> Json {
+    Json::obj(vec![
+        (
+            "series",
+            Json::Arr(
+                f.series
+                    .iter()
+                    .zip(&f.ernest_time_min)
+                    .map(|((n, time, cost, free), ernest)| {
+                        Json::obj(vec![
+                            ("machines", (*n).into()),
+                            ("time_min", (*time).into()),
+                            ("cost_machine_min", (*cost).into()),
+                            ("eviction_free", (*free).into()),
+                            ("ernest_time_min", (*ernest).into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("ernest_pick", f.ernest_pick.into()),
+        ("optimal", f.optimal.into()),
+    ])
+}
+
+pub fn json_fig4(scales: &[Fig4Scale]) -> Json {
+    Json::Arr(
+        scales
+            .iter()
+            .map(|sc| {
+                Json::obj(vec![
+                    ("scale", sc.scale.into()),
+                    ("times_s", sc.times_s.clone().into()),
+                    ("sizes_mb", sc.sizes_mb.clone().into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn json_fig6(rows: &[Fig6Row]) -> Json {
+    let (vs_avg, vs_worst) = fig6_ratios(rows);
+    Json::obj(vec![
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("app", r.app.as_str().into()),
+                            ("blink_cost", r.blink_cost.into()),
+                            ("avg_cost", r.avg_cost.into()),
+                            ("worst_cost", r.worst_cost.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("mean_vs_avg", vs_avg.into()),
+        ("mean_vs_worst", vs_worst.into()),
+    ])
+}
+
+pub fn json_fig7(rows: &[Fig7Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("app", r.app.as_str().into()),
+                    ("predicted_mb", r.predicted_mb.into()),
+                    ("actual_mb", r.actual_mb.into()),
+                    ("error", r.error.into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn json_fig8(points: &[Fig8Point]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("num_samples", p.num_samples.into()),
+                    ("sample_cost_machine_min", p.sample_cost_machine_min.into()),
+                    ("accuracy", p.accuracy.into()),
+                    ("cv_rel_err", p.cv_rel_err.into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn json_fig9(sizes: &[(f64, f64)]) -> Json {
+    Json::Arr(
+        sizes
+            .iter()
+            .map(|(s, mb)| {
+                Json::obj(vec![("scale", (*s).into()), ("cached_mb", (*mb).into())])
+            })
+            .collect(),
+    )
+}
+
+pub fn json_fig10(f: &Fig10) -> Json {
+    Json::obj(vec![
+        (
+            "rows",
+            Json::Arr(
+                f.rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("app", r.app.as_str().into()),
+                            ("approach", r.approach.as_str().into()),
+                            ("overhead", r.overhead.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("ernest_over_blink", f.ernest_over_blink.into()),
+    ])
+}
+
+pub fn json_fig11(f: &Fig11) -> Json {
+    Json::obj(vec![
+        ("tasks_per_machine", f.tasks_per_machine.clone().into()),
+        ("evictions_per_machine", f.evictions_per_machine.clone().into()),
+        ("blink_pick", f.blink_pick.into()),
+        ("true_optimal", f.true_optimal.into()),
+        ("pick_cost", f.pick_cost.into()),
+        ("optimal_cost", f.optimal_cost.into()),
+    ])
+}
+
+pub fn json_sec4(p: &Sec4Parallelism, c: &Sec4Cluster) -> Json {
+    Json::obj(vec![
+        (
+            "parallelism",
+            Json::obj(vec![
+                ("tasks_low", p.tasks_low.into()),
+                ("tasks_high", p.tasks_high.into()),
+                ("time_low_s", p.time_low_s.into()),
+                ("time_high_s", p.time_high_s.into()),
+                ("size_low_mb", p.size_low_mb.into()),
+                ("size_high_mb", p.size_high_mb.into()),
+            ]),
+        ),
+        (
+            "single_vs_cluster",
+            Json::obj(vec![
+                ("cost_single", c.cost_single.into()),
+                ("cost_cluster", c.cost_cluster.into()),
+            ]),
+        ),
+    ])
 }
 
 pub fn print_sec4(p: &Sec4Parallelism, c: &Sec4Cluster) {

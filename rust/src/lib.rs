@@ -6,8 +6,10 @@
 //!
 //! * **L3 (this crate)** — the coordinator: a Spark-like in-memory cluster
 //!   substrate ([`sim`], [`memory`], [`dag`], [`hdfs`]), the Blink framework
-//!   itself ([`blink`]: sample-runs manager, size/memory predictors,
-//!   cluster-size selector and the catalog-driven fleet planner), the
+//!   itself ([`blink`]: the session-oriented `Advisor`/`TrainedProfile` API
+//!   — profile once, query many — over the sample-runs manager, size/memory
+//!   predictors, cluster-size selector and the catalog-driven fleet
+//!   planner, with typed text/JSON reports per query), the
 //!   Ernest baseline ([`ernest`]), workload models of the eight HiBench
 //!   apps ([`workloads`]), metrics accounting ([`metrics`]) with pluggable
 //!   pricing ([`cost`]), and the PJRT runtime that executes the

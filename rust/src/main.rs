@@ -1,18 +1,24 @@
 //! `blink` — CLI entrypoint of the L3 coordinator.
 //!
+//! Every subcommand is a query against the session-oriented advisor API
+//! (`blink::blink::Advisor` — profile once, query many) or an experiment
+//! driver, and every answer is a typed report that renders as text or as
+//! a single JSON document via the global `--format` flag:
+//!
 //! ```text
 //! blink decide      --app svm --scale 1000        # recommend a cluster size
 //! blink advise      --app als --catalog cloud     # fleet-aware (type x count) plan
 //! blink simulate    --app svm --scenario spot     # engine run under a disturbance
-//! blink run         --app km  --scale 2000        # decide + actual run
+//! blink run         --app km  --scale 2000        # recommend + actual run
 //! blink bounds      --app lr  --machines 12       # Table-2 max data scale
 //! blink experiment  --id table1                   # regenerate a paper table/figure
 //! blink apps                                      # list workload models
+//! blink decide --app svm --format json            # machine-readable answer
 //! ```
 
-use blink::coordinator;
-use blink::util::cli::{App, CliError, Command, Opt};
-use blink::workloads::all_apps;
+use blink::blink::OutputFormat;
+use blink::coordinator::{self, SimulateQuery};
+use blink::util::cli::{App, CliError, Command, Matches, Opt};
 
 fn app() -> App {
     App {
@@ -71,7 +77,7 @@ fn app() -> App {
             },
             Command {
                 name: "run",
-                about: "decide, then simulate the actual run at the recommendation",
+                about: "recommend, then simulate the actual run at the recommendation",
                 opts: vec![
                     Opt::with_default("app", "workload", "svm"),
                     Opt::with_default("scale", "target data scale", "1000"),
@@ -96,6 +102,65 @@ fn app() -> App {
             },
             Command { name: "apps", about: "list the workload models", opts: vec![] },
         ],
+        globals: vec![Opt::with_default("format", "output format (text|json)", "text")],
+    }
+}
+
+fn dispatch(cmd: &Command, m: &Matches, format: OutputFormat) -> anyhow::Result<()> {
+    match cmd.name {
+        "decide" => coordinator::cmd_decide(
+            m.get("app").unwrap(),
+            m.get_f64("scale").unwrap_or(1000.0),
+            m.has("verbose"),
+            format,
+        )
+        .map(|_| ()),
+        "advise" => coordinator::cmd_advise(
+            m.get("app").unwrap(),
+            m.get_f64("scale").unwrap_or(1000.0),
+            m.get("catalog").unwrap(),
+            m.get("pricing").unwrap(),
+            m.get_usize("max-machines").unwrap_or(12),
+            m.get("scenario").unwrap(),
+            format,
+        )
+        .map(|_| ()),
+        "simulate" => coordinator::cmd_simulate(
+            &SimulateQuery {
+                app: m.get("app").unwrap(),
+                scale: m.get_f64("scale").unwrap_or(1000.0),
+                machines: m.get_usize("machines").unwrap_or(8),
+                instance: m.get("instance").unwrap(),
+                scenario: m.get("scenario").unwrap(),
+                pricing: m.get("pricing").unwrap(),
+                seed: m.get_u64("seed").unwrap_or(1),
+            },
+            format,
+        )
+        .map(|_| ()),
+        "run" => coordinator::cmd_run(
+            m.get("app").unwrap(),
+            m.get_f64("scale").unwrap_or(1000.0),
+            m.get_u64("seed").unwrap_or(1),
+            format,
+        )
+        .map(|_| ()),
+        "bounds" => coordinator::cmd_bounds(
+            m.get("app").unwrap(),
+            m.get_usize("machines").unwrap_or(12),
+            format,
+        )
+        .map(|_| ()),
+        "experiment" => coordinator::cmd_experiment(
+            m.get("id").unwrap(),
+            m.get_u64("seed").unwrap_or(1),
+            format,
+        ),
+        "apps" => {
+            coordinator::cmd_apps(format);
+            Ok(())
+        }
+        _ => unreachable!(),
     }
 }
 
@@ -113,65 +178,12 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let result = match cmd.name {
-        "decide" => coordinator::cmd_decide(
-            m.get("app").unwrap(),
-            m.get_f64("scale").unwrap_or(1000.0),
-            m.has("verbose"),
-        )
-        .map(|_| ()),
-        "advise" => coordinator::cmd_advise(
-            m.get("app").unwrap(),
-            m.get_f64("scale").unwrap_or(1000.0),
-            m.get("catalog").unwrap(),
-            m.get("pricing").unwrap(),
-            m.get_usize("max-machines").unwrap_or(12),
-            m.get("scenario").unwrap(),
-        )
-        .map(|_| ()),
-        "simulate" => coordinator::cmd_simulate(
-            m.get("app").unwrap(),
-            m.get_f64("scale").unwrap_or(1000.0),
-            m.get_usize("machines").unwrap_or(8),
-            m.get("instance").unwrap(),
-            m.get("scenario").unwrap(),
-            m.get("pricing").unwrap(),
-            m.get_u64("seed").unwrap_or(1),
-        )
-        .map(|_| ()),
-        "run" => coordinator::cmd_run(
-            m.get("app").unwrap(),
-            m.get_f64("scale").unwrap_or(1000.0),
-            m.get_u64("seed").unwrap_or(1),
-        )
-        .map(|_| ()),
-        "bounds" => coordinator::cmd_bounds(
-            m.get("app").unwrap(),
-            m.get_usize("machines").unwrap_or(12),
-        )
-        .map(|_| ()),
-        "experiment" => coordinator::cmd_experiment(
-            m.get("id").unwrap(),
-            m.get_u64("seed").unwrap_or(1),
-        ),
-        "apps" => {
-            println!("{:<7} {:>10} {:>8} {:>7} {:>12} {:>10}", "app", "input", "blocks", "iters", "cached@100%", "approach");
-            for a in all_apps() {
-                println!(
-                    "{:<7} {:>10} {:>8} {:>7} {:>12} {:>10}",
-                    a.name,
-                    blink::util::units::fmt_mb(a.input_mb_full),
-                    a.blocks_full,
-                    a.iterations,
-                    blink::util::units::fmt_mb(a.total_true_cached_mb(1000.0)),
-                    a.sample_approach(&blink::hdfs::Sampler::default(), 0.001),
-                );
-            }
-            Ok(())
-        }
-        _ => unreachable!(),
+    let format_name = m.get("format").unwrap();
+    let Some(format) = OutputFormat::by_name(format_name) else {
+        eprintln!("error: unknown output format '{format_name}' (text|json)");
+        std::process::exit(2);
     };
-    if let Err(e) = result {
+    if let Err(e) = dispatch(cmd, &m, format) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }

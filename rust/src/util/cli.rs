@@ -68,11 +68,13 @@ pub struct Command {
     pub opts: Vec<Opt>,
 }
 
-/// Application = name + subcommands.
+/// Application = name + subcommands + options every subcommand accepts.
 pub struct App {
     pub name: &'static str,
     pub about: &'static str,
     pub commands: Vec<Command>,
+    /// Global options (e.g. `--format`), valid after any subcommand.
+    pub globals: Vec<Opt>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -98,19 +100,29 @@ impl App {
         for c in &self.commands {
             s.push_str(&format!("  {:<16} {}\n", c.name, c.about));
         }
+        if !self.globals.is_empty() {
+            s.push_str("\nGLOBAL OPTIONS (any command):\n");
+            for o in &self.globals {
+                Self::opt_help(&mut s, o);
+            }
+        }
         s.push_str("\nRun '<command> --help' for command options.\n");
         s
     }
 
+    fn opt_help(s: &mut String, o: &Opt) {
+        let meta = if o.takes_value { " <value>" } else { "" };
+        let def = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{:<14} {}{}\n", o.name, meta, o.help, def));
+    }
+
     fn command_help(&self, c: &Command) -> String {
         let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, c.name, c.about);
-        for o in &c.opts {
-            let meta = if o.takes_value { " <value>" } else { "" };
-            let def = o
-                .default
-                .map(|d| format!(" [default: {d}]"))
-                .unwrap_or_default();
-            s.push_str(&format!("  --{}{:<14} {}{}\n", o.name, meta, o.help, def));
+        for o in c.opts.iter().chain(&self.globals) {
+            Self::opt_help(&mut s, o);
         }
         s
     }
@@ -130,7 +142,7 @@ impl App {
             .ok_or_else(|| CliError::Unknown(format!("unknown command '{cmd_name}'")))?;
 
         let mut m = Matches::default();
-        for o in &cmd.opts {
+        for o in cmd.opts.iter().chain(&self.globals) {
             if let Some(d) = o.default {
                 m.values.insert(o.name.to_string(), d.to_string());
             }
@@ -151,6 +163,7 @@ impl App {
             let opt = cmd
                 .opts
                 .iter()
+                .chain(&self.globals)
                 .find(|o| o.name == name)
                 .ok_or_else(|| CliError::Unknown(format!("unknown option '--{name}'")))?;
             if opt.takes_value {
@@ -193,6 +206,7 @@ mod tests {
                     Opt::switch("verbose", "more output"),
                 ],
             }],
+            globals: vec![Opt::with_default("format", "output format", "text")],
         }
     }
 
@@ -226,6 +240,25 @@ mod tests {
         let a = app();
         let (_, m) = a.parse(&argv(&["run", "--app", "km"])).unwrap();
         assert_eq!(m.get("app"), Some("km"));
+    }
+
+    #[test]
+    fn global_options_work_on_every_command() {
+        let a = app();
+        // default applies without mention
+        let (_, m) = a.parse(&argv(&["run"])).unwrap();
+        assert_eq!(m.get("format"), Some("text"));
+        // explicit value in both syntaxes
+        let (_, m) = a.parse(&argv(&["run", "--format", "json"])).unwrap();
+        assert_eq!(m.get("format"), Some("json"));
+        let (_, m) = a.parse(&argv(&["run", "--format=json", "--app", "km"])).unwrap();
+        assert_eq!(m.get("format"), Some("json"));
+        assert_eq!(m.get("app"), Some("km"));
+        // globals are listed in both help texts
+        let Err(CliError::Help(h)) = a.parse(&argv(&["run", "--help"])) else { panic!() };
+        assert!(h.contains("--format"));
+        let Err(CliError::Help(h)) = a.parse(&argv(&[])) else { panic!() };
+        assert!(h.contains("--format"));
     }
 
     #[test]

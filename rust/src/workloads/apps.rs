@@ -56,6 +56,7 @@ impl SizeNoise {
 }
 
 /// Static model of one HiBench application.
+#[derive(Clone)]
 pub struct AppModel {
     pub name: &'static str,
     /// Original (100 %) input size and DFS block count (Table 1).

@@ -17,7 +17,7 @@
 //! so that the minimum eviction-free cluster size at 100 % and at the
 //! paper's enlarged scales lands on the published values (LR's enlarged
 //! scale is the one case our linear-law geometry cannot place at the
-//! paper's 12 — see DESIGN.md §4).
+//! paper's 12 — see DESIGN.md §5).
 
 pub mod apps;
 

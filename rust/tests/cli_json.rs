@@ -1,0 +1,96 @@
+//! CLI contract: every subcommand under `--format json` emits exactly one
+//! valid JSON document on stdout (parsed with the crate's own
+//! `util::json`), so other services can shell out to `blink` and consume
+//! the answers without scraping text.
+
+use std::process::Command;
+
+use blink::util::json::{parse, Json};
+
+/// Run the real `blink` binary and return its stdout.
+fn blink_cli(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_blink"))
+        .args(args)
+        .output()
+        .expect("spawn blink binary");
+    assert!(
+        out.status.success(),
+        "blink {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf8 stdout")
+}
+
+/// Run a subcommand with `--format json` appended; stdout must be one doc.
+fn query_json(args: &[&str]) -> Json {
+    let mut full = args.to_vec();
+    full.extend_from_slice(&["--format", "json"]);
+    let stdout = blink_cli(&full);
+    parse(&stdout)
+        .unwrap_or_else(|e| panic!("blink {full:?}: not a single JSON doc: {e}\n{stdout}"))
+}
+
+fn marker(j: &Json, key: &str) -> String {
+    j.get(key).and_then(Json::as_str).unwrap_or_default().to_string()
+}
+
+#[test]
+fn every_subcommand_emits_one_json_document() {
+    // small scales keep the debug-mode runs fast; each call must produce
+    // a single parseable document carrying its query/experiment marker
+    let j = query_json(&["decide", "--app", "svm", "--scale", "200"]);
+    assert_eq!(marker(&j, "query"), "recommend");
+
+    let j = query_json(&[
+        "advise", "--app", "svm", "--scale", "200", "--catalog", "paper", "--pricing",
+        "machine-seconds",
+    ]);
+    assert_eq!(marker(&j, "query"), "plan");
+
+    let j = query_json(&[
+        "simulate", "--app", "svm", "--scale", "50", "--machines", "2", "--instance",
+        "gp.xlarge", "--scenario", "none", "--pricing", "hourly",
+    ]);
+    assert_eq!(marker(&j, "query"), "simulate");
+
+    let j = query_json(&["run", "--app", "svm", "--scale", "50"]);
+    assert_eq!(marker(&j, "query"), "run");
+
+    let j = query_json(&["bounds", "--app", "svm", "--machines", "12"]);
+    assert_eq!(marker(&j, "query"), "max_scale");
+
+    let j = query_json(&["experiment", "--id", "fig9"]);
+    assert_eq!(marker(&j, "experiment"), "fig9");
+
+    let j = query_json(&["apps"]);
+    assert_eq!(marker(&j, "query"), "apps");
+}
+
+#[test]
+fn format_flag_accepts_equals_syntax_and_rejects_unknown() {
+    let stdout = blink_cli(&["apps", "--format=json"]);
+    let j = parse(&stdout).expect("one JSON doc");
+    assert!(j.get("apps").is_some());
+    let out = Command::new(env!("CARGO_BIN_EXE_blink"))
+        .args(["apps", "--format", "yaml"])
+        .output()
+        .expect("spawn blink binary");
+    assert!(!out.status.success(), "unknown format must fail");
+}
+
+#[test]
+fn experiment_json_nests_the_figure_data() {
+    let j = query_json(&["experiment", "--id", "fig9"]);
+    let points = j.path(&["data"]).and_then(Json::as_arr).expect("data array");
+    assert_eq!(points.len(), 10, "fig9 has 10 sample scales");
+    for p in points {
+        assert!(p.path(&["cached_mb"]).and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn text_mode_is_unchanged_and_not_json() {
+    let stdout = blink_cli(&["bounds", "--app", "svm", "--machines", "12"]);
+    assert!(stdout.contains("max eviction-free data scale on 12 machines"));
+    assert!(parse(&stdout).is_err(), "text output must not be JSON");
+}

@@ -133,15 +133,24 @@ fn spot_preemption_with_slack_recovers_full_caching() {
 #[test]
 fn cmd_simulate_surfaces_the_spot_story() {
     // the CLI path: blink simulate --app svm --scenario spot
-    let s = coordinator::cmd_simulate("svm", 400.0, 3, "gp.xlarge", "spot", "spot", 3).unwrap();
-    assert!(s.machines_lost >= 1, "spot scenario must reclaim a machine");
-    assert!(s.duration_s > 0.0);
+    let q = |app, scale, machines, instance, scenario, pricing, seed| {
+        coordinator::SimulateQuery { app, scale, machines, instance, scenario, pricing, seed }
+    };
+    let s = coordinator::cmd_simulate(
+        &q("svm", 400.0, 3, "gp.xlarge", "spot", "spot", 3),
+        blink::blink::OutputFormat::Text,
+    )
+    .unwrap();
+    assert!(s.disturbed.machines_lost >= 1, "spot scenario must reclaim a machine");
+    assert!(s.disturbed.duration_s > 0.0);
     // none is also valid and loses nothing
-    let calm =
-        coordinator::cmd_simulate("svm", 100.0, 4, "i5-worker", "none", "machine-seconds", 1)
-            .unwrap();
-    assert_eq!(calm.machines_lost, 0);
-    assert_eq!(calm.machines_joined, 0);
+    let calm = coordinator::cmd_simulate(
+        &q("svm", 100.0, 4, "i5-worker", "none", "machine-seconds", 1),
+        blink::blink::OutputFormat::Text,
+    )
+    .unwrap();
+    assert_eq!(calm.disturbed.machines_lost, 0);
+    assert_eq!(calm.disturbed.machines_joined, 0);
 }
 
 #[test]

@@ -1,0 +1,351 @@
+//! Integration: the session-oriented advisor API.
+//!
+//! * equivalence — the legacy `Blink` facade and the `Advisor` path give
+//!   byte-identical Table 1/2 answers (picks, predictions, selections);
+//! * amortization — one `TrainedProfile` serves recommend + plan +
+//!   max_scale with exactly one sampling phase, and the sample cost is
+//!   counted once, not per query;
+//! * reports — every report type's `to_json` output re-parses with
+//!   `util::json` and field-checks against the source struct.
+
+use blink::blink::report::{AppsReport, BoundsReport, PlanReport, RecommendReport, RiskSection};
+use blink::blink::{
+    bounds, Advisor, Blink, ExecMemoryPredictor, OutputFormat, Report, RustFit,
+    SampleRunsManager, SamplingOutcome, SizePredictor, ValidationSpec, DEFAULT_SCALES,
+};
+use blink::coordinator::{self, SimulateQuery};
+use blink::cost::MachineSeconds;
+use blink::experiments::sampling_scales;
+use blink::sim::{scenario::NoDisturbances, InstanceCatalog, MachineSpec};
+use blink::util::json::{parse, Json};
+use blink::workloads::{all_apps, app_by_name, FULL_SCALE};
+
+// ======================================================================
+// Equivalence: the legacy facade vs the session API
+// ======================================================================
+
+#[test]
+fn advisor_recommendations_match_legacy_facade_bit_for_bit() {
+    // Table 1, both halves: every app, paper scales, 100 % and enlarged
+    let machine = MachineSpec::worker_node();
+    for app in all_apps() {
+        for scale in [FULL_SCALE, app.enlarged_scale] {
+            let scales = sampling_scales(&app);
+            let mut b1 = RustFit::default();
+            let legacy = Blink::new(&mut b1).decide_with_scales(&app, scale, &machine, &scales);
+            let mut b2 = RustFit::default();
+            let mut advisor = Advisor::builder().scales(&scales).build(&mut b2);
+            let d = advisor.profile(&app).recommend(scale, &machine);
+            assert_eq!(d.machines, legacy.machines, "{} @ {scale}", app.name);
+            assert_eq!(
+                d.predicted_cached_mb.to_bits(),
+                legacy.predicted_cached_mb.to_bits(),
+                "{} @ {scale}: cached prediction",
+                app.name
+            );
+            assert_eq!(
+                d.predicted_exec_mb.to_bits(),
+                legacy.predicted_exec_mb.to_bits(),
+                "{} @ {scale}: exec prediction",
+                app.name
+            );
+            assert_eq!(
+                d.sample_cost_machine_s.to_bits(),
+                legacy.sample_cost_machine_s.to_bits(),
+                "{} @ {scale}: sample cost",
+                app.name
+            );
+            assert_eq!(d.selection, legacy.selection, "{} @ {scale}", app.name);
+        }
+    }
+}
+
+#[test]
+fn advisor_table1_picks_at_100pct() {
+    // the paper's bold numbers, straight through the session API
+    let expect = [
+        ("als", 1),
+        ("bayes", 7),
+        ("gbt", 1),
+        ("km", 4),
+        ("lr", 5),
+        ("pca", 1),
+        ("rfc", 4),
+        ("svm", 7),
+    ];
+    let machine = MachineSpec::worker_node();
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().scales(&DEFAULT_SCALES).build(&mut backend);
+    for (name, want) in expect {
+        let app = app_by_name(name).unwrap();
+        let d = advisor.profile(&app).recommend(FULL_SCALE, &machine);
+        assert_eq!(d.machines, want, "{name}");
+    }
+    assert_eq!(advisor.sampling_phases(), 8, "one phase per app, none repeated");
+}
+
+#[test]
+fn advisor_plan_matches_legacy_advise() {
+    let app = app_by_name("als").unwrap();
+    let catalog = InstanceCatalog::cloud();
+    let mut b1 = RustFit::default();
+    let legacy = Blink::new(&mut b1).advise_with_scales(
+        &app,
+        FULL_SCALE,
+        &catalog,
+        &MachineSeconds,
+        &sampling_scales(&app),
+    );
+    let mut b2 = RustFit::default();
+    let mut advisor = Advisor::builder().build(&mut b2);
+    let advice = advisor.profile(&app).plan(FULL_SCALE, &catalog, &MachineSeconds);
+    assert_eq!(advice.plan.ranked, legacy.plan.ranked);
+    assert_eq!(advice.plan.grid, legacy.plan.grid);
+    assert_eq!(advice.plan.pareto, legacy.plan.pareto);
+    assert_eq!(
+        advice.sample_cost_machine_s.to_bits(),
+        legacy.sample_cost_machine_s.to_bits()
+    );
+}
+
+#[test]
+fn advisor_bounds_match_the_hand_rolled_pipeline() {
+    // what cmd_bounds used to do by hand must equal TrainedProfile::max_scale
+    let app = app_by_name("svm").unwrap();
+    let machine = MachineSpec::worker_node();
+    let mgr = SampleRunsManager::default();
+    let runs = match mgr.run(&app, &sampling_scales(&app)) {
+        SamplingOutcome::Profiled(r) => r,
+        _ => panic!("svm caches data"),
+    };
+    let mut b = RustFit::default();
+    let sp = SizePredictor::train(&mut b, &runs);
+    let ep = ExecMemoryPredictor::train(&mut b, &runs);
+    let legacy = bounds::max_scale(&sp, &ep, &machine, 12, 1e-5);
+
+    let mut b2 = RustFit::default();
+    let mut advisor = Advisor::builder().build(&mut b2);
+    let via_profile = advisor.profile(&app).max_scale(&machine, 12);
+    assert_eq!(via_profile.to_bits(), legacy.to_bits());
+}
+
+// ======================================================================
+// Amortization: one sampling phase, many queries
+// ======================================================================
+
+#[test]
+fn one_sampling_phase_serves_recommend_plan_bounds_and_validate() {
+    let app = app_by_name("svm").unwrap();
+    let machine = MachineSpec::worker_node();
+    let catalog = InstanceCatalog::paper();
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().build(&mut backend);
+
+    let profile = advisor.profile(&app);
+    let rec = profile.recommend(FULL_SCALE, &machine);
+    let advice = profile.plan(FULL_SCALE, &catalog, &MachineSeconds);
+    let bound = profile.max_scale(&machine, 12);
+    let risks = profile.validate(
+        300.0,
+        &advice.plan,
+        &catalog,
+        &MachineSeconds,
+        &ValidationSpec { scenario: &NoDisturbances, seeds: &[11], top_k: 1 },
+    );
+    // a second profile() for the same app is a cache hit
+    let again = advisor.profile(&app);
+
+    assert_eq!(advisor.sampling_phases(), 1, "five uses, one sampling phase");
+    // the sample cost is the SAME phase reported everywhere, not re-spent
+    assert!(rec.sample_cost_machine_s > 0.0);
+    assert_eq!(rec.sample_cost_machine_s.to_bits(), advice.sample_cost_machine_s.to_bits());
+    assert_eq!(rec.sample_cost_machine_s.to_bits(), profile.sample_cost_machine_s.to_bits());
+    assert_eq!(rec.sample_cost_machine_s.to_bits(), again.sample_cost_machine_s.to_bits());
+    assert!(bound > 0.0);
+    assert_eq!(risks.len(), 1);
+}
+
+#[test]
+fn repeated_recommendations_do_not_drift() {
+    // querying the same profile twice is deterministic and free
+    let app = app_by_name("lr").unwrap();
+    let machine = MachineSpec::worker_node();
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().build(&mut backend);
+    let profile = advisor.profile(&app);
+    let a = profile.recommend(FULL_SCALE, &machine);
+    let b = profile.recommend(FULL_SCALE, &machine);
+    assert_eq!(a, b);
+}
+
+// ======================================================================
+// Reports: golden JSON round trips for every type
+// ======================================================================
+
+fn reparse(r: &dyn Report) -> Json {
+    // compact and pretty renderings must both re-parse to the same value
+    let compact = parse(&r.to_json().to_string()).expect("compact json parses");
+    let pretty = parse(&r.render(OutputFormat::Json)).expect("pretty json parses");
+    assert_eq!(compact, pretty);
+    compact
+}
+
+fn num(j: &Json, path: &[&str]) -> f64 {
+    j.path(path).and_then(Json::as_f64).unwrap_or_else(|| panic!("missing {path:?}"))
+}
+
+#[test]
+fn recommend_report_round_trips() {
+    let app = app_by_name("svm").unwrap();
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().build(&mut backend);
+    let profile = advisor.profile(&app);
+    let machine = MachineSpec::worker_node();
+    let report = RecommendReport::new("rust-nnls", &profile, FULL_SCALE, &machine, true);
+    let j = reparse(&report);
+    assert_eq!(j.path(&["query"]).unwrap().as_str(), Some("recommend"));
+    assert_eq!(j.path(&["app"]).unwrap().as_str(), Some("svm"));
+    assert_eq!(num(&j, &["machines"]) as usize, report.recommendation.machines);
+    assert_eq!(num(&j, &["predicted_cached_mb"]), report.recommendation.predicted_cached_mb);
+    assert_eq!(
+        num(&j, &["selection", "machines"]) as usize,
+        report.recommendation.selection.as_ref().unwrap().machines
+    );
+    assert_eq!(
+        j.path(&["models"]).unwrap().as_arr().unwrap().len(),
+        report.models.len()
+    );
+    // the text rendering carries the same headline numbers
+    let text = report.render(OutputFormat::Text);
+    assert!(text.contains("fit backend: rust-nnls"));
+    assert!(text.contains(&format!(
+        "recommended cluster size: {} machines",
+        report.recommendation.machines
+    )));
+}
+
+#[test]
+fn plan_report_round_trips_including_risk() {
+    let app = app_by_name("svm").unwrap();
+    let catalog = InstanceCatalog::paper();
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().build(&mut backend);
+    let profile = advisor.profile(&app);
+    let advice = profile.plan(300.0, &catalog, &MachineSeconds);
+    let picks = profile.validate(
+        300.0,
+        &advice.plan,
+        &catalog,
+        &MachineSeconds,
+        &ValidationSpec { scenario: &NoDisturbances, seeds: &[11], top_k: 1 },
+    );
+    let report = PlanReport {
+        backend: "rust-nnls".into(),
+        app: app.name.into(),
+        scale: 300.0,
+        input_mb: app.input_mb(300.0),
+        predicted_cached_mb: advice.predicted_cached_mb,
+        predicted_exec_mb: advice.predicted_exec_mb,
+        sample_cost_machine_s: advice.sample_cost_machine_s,
+        plan: advice.plan.clone(),
+        catalog_name: catalog.name.into(),
+        catalog_types: catalog.instances.len(),
+        pricing: "machine-seconds".into(),
+        risk: Some(RiskSection { scenario: "none".into(), picks }),
+    };
+    let j = reparse(&report);
+    assert_eq!(j.path(&["query"]).unwrap().as_str(), Some("plan"));
+    let ranked = j.path(&["plan", "ranked"]).unwrap().as_arr().unwrap();
+    assert_eq!(ranked.len(), report.plan.ranked.len());
+    assert_eq!(
+        ranked[0].path(&["candidate", "instance"]).unwrap().as_str(),
+        Some(report.plan.ranked[0].candidate.instance.as_str())
+    );
+    assert_eq!(
+        num(&j, &["plan", "best", "candidate", "machines"]) as usize,
+        report.plan.best().unwrap().candidate.machines
+    );
+    let risk_picks = j.path(&["risk", "picks"]).unwrap().as_arr().unwrap();
+    assert_eq!(risk_picks.len(), 1);
+    assert_eq!(
+        risk_picks[0].path(&["collapsed"]).unwrap().as_bool(),
+        Some(false)
+    );
+    let text = report.render(OutputFormat::Text);
+    assert!(text.contains("PLAN — catalog 'paper'"));
+    assert!(text.contains("RISK — top picks"));
+}
+
+#[test]
+fn bounds_report_round_trips() {
+    let app = app_by_name("svm").unwrap();
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().build(&mut backend);
+    let profile = advisor.profile(&app);
+    let machine = MachineSpec::worker_node();
+    let s = profile.max_scale(&machine, 12);
+    let report = BoundsReport {
+        app: "svm".into(),
+        machines: 12,
+        max_scale: s,
+        input_mb_at_max: app.input_mb(s),
+    };
+    let j = reparse(&report);
+    assert_eq!(j.path(&["query"]).unwrap().as_str(), Some("max_scale"));
+    assert_eq!(num(&j, &["max_scale"]), s);
+    assert_eq!(j.path(&["unbounded"]).unwrap().as_bool(), Some(false));
+    assert!(report.render(OutputFormat::Text).contains("max eviction-free data scale"));
+}
+
+#[test]
+fn simulate_report_round_trips() {
+    let q = SimulateQuery {
+        app: "svm",
+        scale: 50.0,
+        machines: 2,
+        instance: "gp.xlarge",
+        scenario: "none",
+        pricing: "hourly",
+        seed: 1,
+    };
+    let report = coordinator::cmd_simulate(&q, OutputFormat::Text).unwrap();
+    let j = reparse(&report);
+    assert_eq!(j.path(&["query"]).unwrap().as_str(), Some("simulate"));
+    assert_eq!(num(&j, &["baseline", "duration_s"]), report.baseline.duration_s);
+    assert_eq!(num(&j, &["disturbed", "machines_lost"]) as usize, 0);
+    assert_eq!(num(&j, &["naive_quote"]), report.naive_quote);
+}
+
+#[test]
+fn run_report_round_trips() {
+    let report = coordinator::cmd_run("svm", 50.0, 1, OutputFormat::Text).unwrap();
+    let j = reparse(&report);
+    assert_eq!(j.path(&["query"]).unwrap().as_str(), Some("run"));
+    assert_eq!(
+        j.path(&["recommendation", "query"]).unwrap().as_str(),
+        Some("recommend")
+    );
+    assert_eq!(num(&j, &["actual", "duration_s"]), report.duration_s);
+    assert_eq!(num(&j, &["sampling_overhead"]), report.sampling_overhead());
+    assert!(report.render(OutputFormat::Text).contains("total cost incl. sampling"));
+}
+
+#[test]
+fn apps_report_round_trips() {
+    let report: AppsReport = coordinator::cmd_apps(OutputFormat::Text);
+    let j = reparse(&report);
+    let rows = j.path(&["apps"]).unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), all_apps().len());
+    for (row, app) in rows.iter().zip(all_apps()) {
+        assert_eq!(row.path(&["name"]).unwrap().as_str(), Some(app.name));
+        assert_eq!(num(row, &["input_mb"]), app.input_mb_full);
+    }
+}
+
+#[test]
+fn decide_and_run_reports_share_the_recommendation() {
+    // cmd_run must route through the advisor, not re-derive its own pick
+    let d = coordinator::cmd_decide("svm", 50.0, false, OutputFormat::Text).unwrap();
+    let r = coordinator::cmd_run("svm", 50.0, 1, OutputFormat::Text).unwrap();
+    assert_eq!(d.recommendation, r.decide.recommendation);
+}
