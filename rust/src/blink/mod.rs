@@ -221,7 +221,7 @@ mod tests {
         for app in all_apps() {
             let mut backend = RustFit::default();
             let mut blink = Blink::new(&mut backend);
-            let scales: Vec<f64> = match app.name {
+            let scales: Vec<f64> = match app.name.as_str() {
                 "gbt" => (1..=10).map(|s| s as f64).collect(),
                 "als" => (1..=5).map(|s| s as f64).collect(),
                 _ => DEFAULT_SCALES.to_vec(),

@@ -776,6 +776,151 @@ impl Report for AppsReport {
     }
 }
 
+// ======================================================================
+// blink synth
+// ======================================================================
+
+/// One generated workload's advisor answers (`blink synth`).
+#[derive(Debug, Clone)]
+pub struct SynthRow {
+    pub name: String,
+    /// Generator seed — reproduces the workload exactly.
+    pub seed: u64,
+    pub datasets: usize,
+    pub input_mb: f64,
+    pub predicted_cached_mb: f64,
+    pub predicted_exec_mb: f64,
+    pub sample_cost_machine_s: f64,
+    /// The §5.4 worker-node pick.
+    pub machines: usize,
+    /// The catalog planner's best pick (instance, count, cost).
+    pub best_instance: String,
+    pub best_machines: usize,
+    pub best_cost: f64,
+    pub eviction_free: bool,
+    pub no_cached_data: bool,
+}
+
+/// `blink synth`: advisor answers over a batch of generated workloads,
+/// optionally cross-checked against the testkit's analytic invariants.
+#[derive(Debug, Clone)]
+pub struct SynthReport {
+    pub backend: String,
+    pub preset: String,
+    pub first_seed: u64,
+    pub scale: f64,
+    pub catalog_name: String,
+    pub catalog_types: usize,
+    pub pricing: String,
+    pub rows: Vec<SynthRow>,
+    /// Invariant checks run (`--check`); 0 when checking was off.
+    pub checks: usize,
+    /// Rendered testkit violations (each carries its reproduction seed).
+    pub violations: Vec<String>,
+}
+
+impl Report for SynthReport {
+    fn render_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "SYNTH — preset '{}', {} workloads from seed {}, scale {:.0}, catalog '{}' ({} types), pricing '{}'",
+            self.preset,
+            self.rows.len(),
+            self.first_seed,
+            self.scale,
+            self.catalog_name,
+            self.catalog_types,
+            self.pricing,
+        );
+        let _ = writeln!(out, "fit backend: {}", self.backend);
+        let _ = writeln!(
+            out,
+            "{:<22} {:>3} {:>10} {:>10} {:>5} {:<16} {:>10} {:>5}",
+            "workload", "ds", "cached", "exec", "pick", "best", "cost", "free"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{:<22} {:>3} {:>10} {:>10} {:>5} {:<16} {:>10.3} {:>5}",
+                r.name,
+                r.datasets,
+                fmt_mb(r.predicted_cached_mb),
+                fmt_mb(r.predicted_exec_mb),
+                r.machines,
+                format!("{} x{}", r.best_instance, r.best_machines),
+                r.best_cost,
+                if r.eviction_free { "yes" } else { "NO" },
+            );
+        }
+        let free = self.rows.iter().filter(|r| r.eviction_free).count();
+        let mean_sample = self.rows.iter().map(|r| r.sample_cost_machine_s).sum::<f64>()
+            / self.rows.len().max(1) as f64;
+        let _ = writeln!(
+            out,
+            "eviction-free best picks: {free}/{}   mean sampling cost {}",
+            self.rows.len(),
+            fmt_secs(mean_sample),
+        );
+        if self.checks > 0 {
+            let _ = writeln!(
+                out,
+                "invariants: {} checks, {} violations",
+                self.checks,
+                self.violations.len()
+            );
+            for v in &self.violations {
+                let _ = writeln!(out, "  VIOLATION {v}");
+            }
+        }
+        finish(out)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("query", "synth".into()),
+            ("backend", self.backend.as_str().into()),
+            ("preset", self.preset.as_str().into()),
+            // string: u64 seeds above 2^53 would round as JSON numbers
+            ("first_seed", self.first_seed.to_string().into()),
+            ("scale", self.scale.into()),
+            ("catalog", self.catalog_name.as_str().into()),
+            ("catalog_types", self.catalog_types.into()),
+            ("pricing", self.pricing.as_str().into()),
+            (
+                "workloads",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", r.name.as_str().into()),
+                                ("seed", r.seed.to_string().into()),
+                                ("datasets", r.datasets.into()),
+                                ("input_mb", r.input_mb.into()),
+                                ("predicted_cached_mb", r.predicted_cached_mb.into()),
+                                ("predicted_exec_mb", r.predicted_exec_mb.into()),
+                                ("sample_cost_machine_s", r.sample_cost_machine_s.into()),
+                                ("machines", r.machines.into()),
+                                ("best_instance", r.best_instance.as_str().into()),
+                                ("best_machines", r.best_machines.into()),
+                                ("best_cost", r.best_cost.into()),
+                                ("eviction_free", r.eviction_free.into()),
+                                ("no_cached_data", r.no_cached_data.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("checks", self.checks.into()),
+            (
+                "violations",
+                Json::Arr(self.violations.iter().map(|v| v.as_str().into()).collect()),
+            ),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -786,6 +931,48 @@ mod tests {
             assert_eq!(OutputFormat::by_name(f.name()), Some(f));
         }
         assert_eq!(OutputFormat::by_name("yaml"), None);
+    }
+
+    #[test]
+    fn synth_report_renders_and_roundtrips_json() {
+        let report = SynthReport {
+            backend: "rust-nnls".into(),
+            preset: "smoke".into(),
+            first_seed: u64::MAX, // must survive JSON (encoded as string)
+            scale: 1000.0,
+            catalog_name: "paper".into(),
+            catalog_types: 2,
+            pricing: "machine-seconds".into(),
+            rows: vec![SynthRow {
+                name: "synth-smoke-ffff".into(),
+                seed: u64::MAX,
+                datasets: 2,
+                input_mb: 1234.0,
+                predicted_cached_mb: 500.0,
+                predicted_exec_mb: 100.0,
+                sample_cost_machine_s: 9.5,
+                machines: 2,
+                best_instance: "i5-worker".into(),
+                best_machines: 2,
+                best_cost: 77.0,
+                eviction_free: true,
+                no_cached_data: false,
+            }],
+            checks: 12,
+            violations: vec!["[demo] workload x (generator seed 3): boom".into()],
+        };
+        let text = report.render_text();
+        assert!(text.contains("preset 'smoke'"));
+        assert!(text.contains("VIOLATION"));
+        let j = crate::util::json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(j.get("query").and_then(Json::as_str), Some("synth"));
+        assert_eq!(
+            j.path(&["workloads"]).unwrap().as_arr().unwrap()[0]
+                .get("seed")
+                .and_then(Json::as_str),
+            Some(u64::MAX.to_string().as_str())
+        );
+        assert_eq!(j.get("checks").and_then(Json::as_f64), Some(12.0));
     }
 
     #[test]

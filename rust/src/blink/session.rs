@@ -50,7 +50,7 @@ impl Scales {
     pub fn for_app(&self, app: &AppModel) -> Vec<f64> {
         match self {
             Scales::Fixed(s) => s.clone(),
-            Scales::Paper => match app.name {
+            Scales::Paper => match app.name.as_str() {
                 "gbt" => (1..=10).map(|s| s as f64).collect(),
                 "als" => (1..=5).map(|s| s as f64).collect(),
                 _ => DEFAULT_SCALES.to_vec(),
@@ -129,13 +129,15 @@ type ProfileKey = (String, Vec<u64>, Vec<u64>);
 /// measures or costs — two same-named models differing in ANY of these
 /// must not share a cached profile.
 fn app_fingerprint(app: &AppModel) -> Vec<u64> {
-    let mut bits: Vec<u64> = Vec::with_capacity(2 * app.cached_laws.len() + 16);
+    let mut bits: Vec<u64> = Vec::with_capacity(3 * app.cached_laws.len() + 16);
     for law in &app.cached_laws {
         bits.push(law.theta0.to_bits());
         bits.push(law.theta1.to_bits());
+        bits.push(law.gamma.to_bits());
     }
     bits.push(app.exec_law.theta0.to_bits());
     bits.push(app.exec_law.theta1.to_bits());
+    bits.push(app.exec_law.gamma.to_bits());
     bits.push(app.input_mb_full.to_bits());
     bits.push(app.blocks_full as u64);
     bits.push(app.size_noise.amp.to_bits());

@@ -13,7 +13,7 @@ use anyhow::{anyhow, Result};
 
 use crate::blink::report::{
     AppRow, AppsReport, BoundsReport, PlanReport, RecommendReport, RiskSection, RunReport,
-    RunStats, SimulateReport,
+    RunStats, SimulateReport, SynthReport, SynthRow,
 };
 use crate::blink::{Advisor, OutputFormat, Report, RustFit, ValidationSpec};
 use crate::cost::pricing_by_name;
@@ -23,8 +23,9 @@ use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
 use crate::runtime::{artifacts_available, PjrtFit, Runtime};
 use crate::sim::{engine, scenario, FleetSpec, InstanceCatalog, MachineSpec, SimOptions};
+use crate::testkit;
 use crate::util::json::Json;
-use crate::workloads::{all_apps, app_by_name, AppModel};
+use crate::workloads::{all_apps, app_by_name, AppModel, SynthConfig};
 
 /// Which fit backend the coordinator is using.
 pub enum Backend {
@@ -79,7 +80,7 @@ impl Backend {
 
 fn lookup(app: &str) -> Result<AppModel> {
     app_by_name(app).ok_or_else(|| {
-        let names: Vec<&str> = all_apps().iter().map(|a| a.name).collect();
+        let names: Vec<String> = all_apps().into_iter().map(|a| a.name).collect();
         anyhow!("unknown app '{app}' (choose from {})", names.join(" "))
     })
 }
@@ -297,6 +298,96 @@ pub fn cmd_apps(format: OutputFormat) -> AppsReport {
     report
 }
 
+/// Parsed-name inputs of `blink synth`.
+pub struct SynthQuery<'a> {
+    pub preset: &'a str,
+    pub seed: u64,
+    pub count: usize,
+    pub scale: f64,
+    pub catalog: &'a str,
+    pub pricing: &'a str,
+    pub max_machines: usize,
+    /// Cross-check every workload against the testkit's analytic
+    /// invariants and report violations (with reproduction seeds).
+    pub check: bool,
+}
+
+/// `blink synth`: generate seeded synthetic workloads from a preset and
+/// run each through the full advisor pipeline — profile (one sampling
+/// phase per workload), the §5.4 worker-node recommendation and the
+/// catalog planner — optionally asserting the testkit invariants.
+pub fn cmd_synth(q: &SynthQuery<'_>, format: OutputFormat) -> Result<SynthReport> {
+    let cfg = SynthConfig::by_name(q.preset).ok_or_else(|| {
+        anyhow!("unknown preset '{}' (choose from {})", q.preset, SynthConfig::names().join(" "))
+    })?;
+    let catalog = InstanceCatalog::by_name(q.catalog)
+        .ok_or_else(|| anyhow!("unknown catalog '{}' (paper|cloud|all)", q.catalog))?;
+    let pricing = pricing_by_name(q.pricing).ok_or_else(|| {
+        anyhow!("unknown pricing model '{}' (machine-seconds|hourly|per-second|spot)", q.pricing)
+    })?;
+    if q.count == 0 {
+        return Err(anyhow!("--count must be at least 1"));
+    }
+    if q.max_machines == 0 {
+        return Err(anyhow!("--max-machines must be at least 1"));
+    }
+    let mut backend = Backend::auto();
+    let backend_name = backend.name();
+    let report = backend.with_advisor_built(
+        Advisor::builder().max_machines(q.max_machines),
+        |advisor| {
+            let spec =
+                testkit::MatrixSpec { max_machines: q.max_machines, ..Default::default() };
+            let mut rows = Vec::with_capacity(q.count);
+            let mut checks = 0usize;
+            let mut violations = Vec::new();
+            for (seed, app) in cfg.generate_many(q.seed, q.count) {
+                let profile = advisor.profile(&app);
+                let rec = profile.recommend(q.scale, &MachineSpec::worker_node());
+                let advice = profile.plan(q.scale, &catalog, pricing.as_ref());
+                if q.check {
+                    // both halves of the invariant catalog, so any CI
+                    // violation (analytic or engine-level) reproduces here
+                    let (c1, v1) = testkit::check_profile(&app, seed, &profile, &spec);
+                    let (c2, v2) = testkit::check_engine(&app, seed, &profile, &spec);
+                    checks += c1 + c2;
+                    violations.extend(v1.iter().chain(&v2).map(|v| v.to_string()));
+                }
+                let best = advice.plan.best().expect("catalogs are non-empty");
+                rows.push(SynthRow {
+                    name: app.name.clone(),
+                    seed,
+                    datasets: app.cached_laws.len(),
+                    input_mb: app.input_mb(q.scale),
+                    predicted_cached_mb: advice.predicted_cached_mb,
+                    predicted_exec_mb: advice.predicted_exec_mb,
+                    sample_cost_machine_s: advice.sample_cost_machine_s,
+                    machines: rec.machines,
+                    best_instance: best.candidate.instance.clone(),
+                    best_machines: best.candidate.machines,
+                    best_cost: best.candidate.predicted_cost,
+                    eviction_free: best.candidate.eviction_free,
+                    no_cached_data: profile.no_cached_data(),
+                });
+            }
+            SynthReport {
+                backend: backend_name.to_string(),
+                preset: q.preset.to_string(),
+                first_seed: q.seed,
+                scale: q.scale,
+                catalog_name: catalog.name.to_string(),
+                catalog_types: catalog.instances.len(),
+                pricing: pricing.name().to_string(),
+                rows,
+                checks,
+                violations,
+            }
+        },
+    );
+    println!("{}", report.render(format));
+    Ok(report)
+}
+
 /// `blink experiment --id <id>`: regenerate a paper table/figure.
 pub fn cmd_experiment(id: &str, seed: u64, format: OutputFormat) -> Result<()> {
     match format {
@@ -430,7 +521,7 @@ mod tests {
         assert!(lookup("svm").is_ok());
         let err = lookup("nope").unwrap_err().to_string();
         for app in all_apps() {
-            assert!(err.contains(app.name), "error must list '{}': {err}", app.name);
+            assert!(err.contains(&app.name), "error must list '{}': {err}", app.name);
         }
     }
 
@@ -470,5 +561,29 @@ mod tests {
     #[test]
     fn bounds_rejects_zero_machines() {
         assert!(cmd_bounds("svm", 0, F).is_err());
+    }
+
+    #[test]
+    fn synth_rejects_bad_inputs() {
+        let q = |preset, count, catalog, pricing, max_machines| SynthQuery {
+            preset,
+            seed: 1,
+            count,
+            scale: 100.0,
+            catalog,
+            pricing,
+            max_machines,
+            check: false,
+        };
+        assert!(cmd_synth(&q("meteor", 2, "paper", "hourly", 12), F).is_err());
+        assert!(cmd_synth(&q("smoke", 0, "paper", "hourly", 12), F).is_err());
+        assert!(cmd_synth(&q("smoke", 2, "bogus-catalog", "hourly", 12), F).is_err());
+        assert!(cmd_synth(&q("smoke", 2, "paper", "free-lunch", 12), F).is_err());
+        assert!(cmd_synth(&q("smoke", 2, "paper", "hourly", 0), F).is_err());
+        // the preset error lists every valid preset name
+        let err = cmd_synth(&q("meteor", 2, "paper", "hourly", 12), F).unwrap_err().to_string();
+        for name in SynthConfig::names() {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
     }
 }

@@ -2,6 +2,8 @@
 //! way the paper does; the `json_*` companions encode the same driver
 //! structs via [`crate::util::json`] for `blink experiment --format json`.
 
+use std::fmt::Write as _;
+
 use super::*;
 use crate::blink::report::{render_plan_text, render_risk_text};
 use crate::blink::{Plan, RiskAdjustedPick};
@@ -13,33 +15,37 @@ fn hr(width: usize) -> String {
     "-".repeat(width)
 }
 
-pub fn print_table1(t: &Table1) {
-    println!("TABLE 1 — overview of evaluated applications");
+/// Table 1 as a string — byte-identical to what [`print_table1`] emits
+/// (including the trailing newline). The golden-snapshot tests freeze
+/// this rendering so refactors cannot silently drift the reproduction.
+pub fn render_table1(t: &Table1) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "TABLE 1 — overview of evaluated applications");
     for (title, rows) in [("100 % data scale", &t.at_100), ("enlarged data scale", &t.enlarged)] {
-        println!("\n[{title}]");
-        print!("{:<22}", "#Machines");
+        let _ = writeln!(out, "\n[{title}]");
+        let _ = write!(out, "{:<22}", "#Machines");
         for r in rows {
-            print!("{:>14}", r.app.to_uppercase());
+            let _ = write!(out, "{:>14}", r.app.to_uppercase());
         }
-        println!();
-        print!("{:<22}", "sample cost (m-min)");
+        let _ = writeln!(out);
+        let _ = write!(out, "{:<22}", "sample cost (m-min)");
         for r in rows {
-            print!("{:>14.1}", r.sample_cost_machine_min);
+            let _ = write!(out, "{:>14.1}", r.sample_cost_machine_min);
         }
-        println!();
-        print!("{:<22}", "approach");
+        let _ = writeln!(out);
+        let _ = write!(out, "{:<22}", "approach");
         for r in rows {
-            print!("{:>14}", r.approach);
+            let _ = write!(out, "{:>14}", r.approach);
         }
-        println!();
-        print!("{:<22}", "input size (GB)");
+        let _ = writeln!(out);
+        let _ = write!(out, "{:<22}", "input size (GB)");
         for r in rows {
-            print!("{:>14.2}", r.input_gb);
+            let _ = write!(out, "{:>14.2}", r.input_gb);
         }
-        println!();
-        println!("{}", hr(22 + rows.len() * 14));
+        let _ = writeln!(out);
+        let _ = writeln!(out, "{}", hr(22 + rows.len() * 14));
         for n in 1..=MAX_MACHINES {
-            print!("{:<22}", format!("n={n}  time|cost"));
+            let _ = write!(out, "{:<22}", format!("n={n}  time|cost"));
             for r in rows {
                 let (time, cost, free) = r.runs[n - 1];
                 let mark = if r.blink_pick == n {
@@ -49,21 +55,26 @@ pub fn print_table1(t: &Table1) {
                 } else {
                     " "
                 };
-                print!("{:>13}{}", format!("{time:.1}|{cost:.1}"), mark);
+                let _ = write!(out, "{:>13}{}", format!("{time:.1}|{cost:.1}"), mark);
             }
-            println!();
+            let _ = writeln!(out);
         }
-        print!("{:<22}", "BLINK pick");
+        let _ = write!(out, "{:<22}", "BLINK pick");
         for r in rows {
-            print!("{:>14}", r.blink_pick);
+            let _ = write!(out, "{:>14}", r.blink_pick);
         }
-        println!();
-        print!("{:<22}", "first eviction-free");
+        let _ = writeln!(out);
+        let _ = write!(out, "{:<22}", "first eviction-free");
         for r in rows {
-            print!("{:>14}", r.optimal);
+            let _ = write!(out, "{:>14}", r.optimal);
         }
-        println!("\n  (* = BLINK's pick, + = eviction-free cell)");
+        let _ = writeln!(out, "\n  (* = BLINK's pick, + = eviction-free cell)");
     }
+    out
+}
+
+pub fn print_table1(t: &Table1) {
+    print!("{}", render_table1(t));
 }
 
 pub fn print_fig1(f: &Fig1) {
@@ -180,13 +191,16 @@ pub fn print_fig11(f: &Fig11) {
     );
 }
 
-pub fn print_table2(rows: &[Table2Row]) {
-    println!("TABLE 2 — cluster bounds at 12 machines (✓ = eviction-free)");
-    print!("{:<12}", "scale\\app");
+/// Table 2 as a string — byte-identical to what [`print_table2`] emits
+/// (frozen by the golden-snapshot tests, like [`render_table1`]).
+pub fn render_table2(rows: &[Table2Row]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "TABLE 2 — cluster bounds at 12 machines (✓ = eviction-free)");
+    let _ = write!(out, "{:<12}", "scale\\app");
     for r in rows {
-        print!("{:>7}", r.app.to_uppercase());
+        let _ = write!(out, "{:>7}", r.app.to_uppercase());
     }
-    println!();
+    let _ = writeln!(out);
     let offsets = [-0.05, -0.04, -0.03, -0.02, -0.01, 0.0, 0.01, 0.02, 0.03, 0.04, 0.05];
     for (oi, off) in offsets.iter().enumerate() {
         let label = if *off == 0.0 {
@@ -194,15 +208,16 @@ pub fn print_table2(rows: &[Table2Row]) {
         } else {
             format!("{:+.0} %", off * 100.0)
         };
-        print!("{label:<12}");
+        let _ = write!(out, "{label:<12}");
         for r in rows {
-            print!("{:>7}", if r.probes[oi].1 { "✓" } else { "x" });
+            let _ = write!(out, "{:>7}", if r.probes[oi].1 { "✓" } else { "x" });
         }
-        println!();
+        let _ = writeln!(out);
     }
     for r in rows {
         let err = (r.predicted_scale - r.true_boundary) / r.true_boundary;
-        println!(
+        let _ = writeln!(
+            out,
             "{:>6}: predicted max scale {:>9.1} vs true boundary {:>9.1} ({} error)",
             r.app,
             r.predicted_scale,
@@ -210,6 +225,11 @@ pub fn print_table2(rows: &[Table2Row]) {
             fmt_pct(err.abs())
         );
     }
+    out
+}
+
+pub fn print_table2(rows: &[Table2Row]) {
+    print!("{}", render_table2(rows));
 }
 
 /// The `blink advise` report: ranked per-type picks, then the time/cost

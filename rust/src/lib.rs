@@ -11,7 +11,10 @@
 //!   predictors, cluster-size selector and the catalog-driven fleet
 //!   planner, with typed text/JSON reports per query), the
 //!   Ernest baseline ([`ernest`]), workload models of the eight HiBench
-//!   apps ([`workloads`]), metrics accounting ([`metrics`]) with pluggable
+//!   apps plus a seeded synthetic-workload generator
+//!   ([`workloads`], [`workloads::synth`]), a differential test harness
+//!   asserting cross-layer invariants over that unbounded workload space
+//!   ([`testkit`]), metrics accounting ([`metrics`]) with pluggable
 //!   pricing ([`cost`]), and the PJRT runtime that executes the
 //!   AOT-compiled JAX artifacts ([`runtime`], [`compute`]).
 //! * **L2 (python/compile/model.py)** — jax compute graphs (workload
@@ -35,5 +38,6 @@ pub mod memory;
 pub mod metrics;
 pub mod runtime;
 pub mod sim;
+pub mod testkit;
 pub mod util;
 pub mod workloads;

@@ -13,11 +13,12 @@
 //! blink bounds      --app lr  --machines 12       # Table-2 max data scale
 //! blink experiment  --id table1                   # regenerate a paper table/figure
 //! blink apps                                      # list workload models
+//! blink synth --preset mixed --count 8 --check    # seeded synthetic workloads
 //! blink decide --app svm --format json            # machine-readable answer
 //! ```
 
 use blink::blink::OutputFormat;
-use blink::coordinator::{self, SimulateQuery};
+use blink::coordinator::{self, SimulateQuery, SynthQuery};
 use blink::util::cli::{App, CliError, Command, Matches, Opt};
 
 fn app() -> App {
@@ -101,6 +102,28 @@ fn app() -> App {
                 ],
             },
             Command { name: "apps", about: "list the workload models", opts: vec![] },
+            Command {
+                name: "synth",
+                about: "generate seeded synthetic workloads and run each through the advisor",
+                opts: vec![
+                    Opt::with_default(
+                        "preset",
+                        "generator preset (mixed|linear|sublinear|superlinear|noisy|contended|uncached|smoke)",
+                        "mixed",
+                    ),
+                    Opt::with_default("seed", "first generator seed", "1"),
+                    Opt::with_default("count", "number of workloads (consecutive seeds)", "8"),
+                    Opt::with_default("scale", "target data scale (1000 = 100 %)", "1000"),
+                    Opt::with_default("catalog", "instance catalog (paper|cloud|all)", "cloud"),
+                    Opt::with_default(
+                        "pricing",
+                        "pricing model (machine-seconds|hourly|per-second|spot)",
+                        "hourly",
+                    ),
+                    Opt::with_default("max-machines", "largest candidate cluster size", "12"),
+                    Opt::switch("check", "assert the testkit invariants on every workload"),
+                ],
+            },
         ],
         globals: vec![Opt::with_default("format", "output format (text|json)", "text")],
     }
@@ -160,6 +183,20 @@ fn dispatch(cmd: &Command, m: &Matches, format: OutputFormat) -> anyhow::Result<
             coordinator::cmd_apps(format);
             Ok(())
         }
+        "synth" => coordinator::cmd_synth(
+            &SynthQuery {
+                preset: m.get("preset").unwrap(),
+                seed: m.get_u64("seed").unwrap_or(1),
+                count: m.get_usize("count").unwrap_or(8),
+                scale: m.get_f64("scale").unwrap_or(1000.0),
+                catalog: m.get("catalog").unwrap(),
+                pricing: m.get("pricing").unwrap(),
+                max_machines: m.get_usize("max-machines").unwrap_or(12),
+                check: m.has("check"),
+            },
+            format,
+        )
+        .map(|_| ()),
         _ => unreachable!(),
     }
 }

@@ -1,0 +1,537 @@
+//! Differential test harness over the synthetic workload space.
+//!
+//! The paper reproduction pins 16 hand-measured rows; this module turns
+//! the repo into a property-tested framework over *unbounded* app shapes:
+//! for each [`crate::workloads::synth`] workload it asserts cross-layer
+//! invariants across a scenario × catalog × pricing matrix:
+//!
+//! * **recommend = exhaustive search** — the §5.4 analytic pick equals a
+//!   brute-force scan of the eviction-free condition over every count;
+//! * **planner degeneracy** — on a single-type catalog the catalog search
+//!   collapses to `select_cluster_size`, and ranked picks stay ordered
+//!   (eviction-free first, then cheapest);
+//! * **deficit monotonicity** — the per-machine cache deficit never
+//!   shrinks as the data scale grows (fixed cluster);
+//! * **max-scale inversion** — just below `TrainedProfile::max_scale` the
+//!   workload fits the cluster, just above it does not;
+//! * **calm engine = analytic quote** — under `NoDisturbances` the priced
+//!   realized timeline equals the naive `machines × duration` quote for
+//!   every pricing model;
+//! * **scenario signatures** — every `sim::scenario::by_name` scenario
+//!   leaves its fingerprint on the realized run (machines lost/joined,
+//!   stretched runtime).
+//!
+//! Every [`Violation`] carries the workload's generation seed, so any
+//! counterexample found in CI reproduces from the log
+//! (`blink synth --preset <p> --seed <s> --check`).
+
+use std::fmt;
+
+use crate::blink::{machine_split, select_cluster_size, Advisor, RustFit, TrainedProfile};
+use crate::cost::pricing_by_name;
+use crate::memory::EvictionPolicy;
+use crate::metrics::RunSummary;
+use crate::sim::{engine, scenario, FleetSpec, InstanceCatalog, MachineSpec, SimOptions};
+use crate::workloads::{AppModel, SynthConfig};
+
+/// One failed invariant, with everything needed to reproduce it.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub workload: String,
+    /// The generator seed of the workload (`blink synth --seed <s>`).
+    pub seed: u64,
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}] workload {} (generator seed {}): {}",
+            self.invariant, self.workload, self.seed, self.detail
+        )
+    }
+}
+
+/// The differential matrix: which scales, scenarios, catalogs and pricing
+/// models every workload is checked against.
+#[derive(Debug, Clone)]
+pub struct MatrixSpec {
+    /// Probe scales for the analytic invariants (paper units).
+    pub scales: Vec<f64>,
+    /// The scale engine-level invariants run at.
+    pub engine_scale: f64,
+    /// Scenarios resolved via [`scenario::by_name`].
+    pub scenario_names: Vec<&'static str>,
+    /// Catalogs resolved via [`InstanceCatalog::by_name`].
+    pub catalog_names: Vec<&'static str>,
+    /// Pricing models resolved via [`pricing_by_name`].
+    pub pricing_names: Vec<&'static str>,
+    pub max_machines: usize,
+    /// Seed of the engine runs (task-duration noise stream).
+    pub engine_seed: u64,
+}
+
+impl Default for MatrixSpec {
+    fn default() -> Self {
+        MatrixSpec {
+            scales: vec![100.0, 400.0, 1000.0, 2000.0],
+            engine_scale: 300.0,
+            scenario_names: vec!["none", "spot", "straggler", "failure", "autoscale"],
+            catalog_names: vec!["paper", "cloud"],
+            pricing_names: vec!["machine-seconds", "hourly"],
+            max_machines: 12,
+            engine_seed: 11,
+        }
+    }
+}
+
+/// Outcome of a matrix run.
+#[derive(Debug, Clone, Default)]
+pub struct MatrixReport {
+    pub workloads: usize,
+    pub checks: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl MatrixReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Panic with every violation (and its reproduction seed) when any
+    /// invariant failed — the test-facing entry point.
+    pub fn assert_ok(&self) {
+        if !self.ok() {
+            let lines: Vec<String> = self.violations.iter().map(|v| v.to_string()).collect();
+            panic!(
+                "differential matrix: {} of {} checks failed over {} workloads:\n{}",
+                self.violations.len(),
+                self.checks,
+                self.workloads,
+                lines.join("\n")
+            );
+        }
+    }
+}
+
+fn violation(app: &AppModel, seed: u64, invariant: &'static str, detail: String) -> Violation {
+    Violation { workload: app.name.clone(), seed, invariant, detail }
+}
+
+/// Brute-force §5.4: the minimal count satisfying the eviction-free
+/// condition on predicted footprints, or `None` when no count ≤ max does.
+fn exhaustive_pick(
+    cached: f64,
+    exec: f64,
+    machine: &MachineSpec,
+    max_machines: usize,
+) -> Option<usize> {
+    (1..=max_machines).find(|&n| {
+        let (_, capacity) = machine_split(exec, machine, n);
+        cached / n as f64 < capacity
+    })
+}
+
+/// Analytic invariants: recommend vs exhaustive search, planner
+/// degeneracy + ranking, deficit monotonicity, max-scale inversion.
+/// Returns `(checks_run, violations)`.
+pub fn check_profile(
+    app: &AppModel,
+    seed: u64,
+    profile: &TrainedProfile,
+    spec: &MatrixSpec,
+) -> (usize, Vec<Violation>) {
+    let mut checks = 0usize;
+    let mut out = Vec::new();
+    let worker = MachineSpec::worker_node();
+
+    // recommend = exhaustive search, at every probe scale
+    for &scale in &spec.scales {
+        checks += 1;
+        let rec = profile.recommend(scale, &worker);
+        if profile.no_cached_data() {
+            if rec.machines != 1 {
+                out.push(violation(
+                    app,
+                    seed,
+                    "recommend-uncached",
+                    format!("no cached data but pick = {} at scale {scale}", rec.machines),
+                ));
+            }
+            continue;
+        }
+        let cached = profile.predicted_cached_mb(scale);
+        let exec = profile.predicted_exec_mb(scale);
+        let want = exhaustive_pick(cached, exec, &worker, spec.max_machines);
+        let sel = rec.selection.as_ref().expect("cached data implies a selection");
+        match want {
+            Some(n) if !sel.saturated && n == rec.machines => {}
+            None if sel.saturated && rec.machines == spec.max_machines => {}
+            _ => out.push(violation(
+                app,
+                seed,
+                "recommend-exhaustive",
+                format!(
+                    "scale {scale}: pick {} (saturated {}) vs exhaustive {want:?}",
+                    rec.machines, sel.saturated
+                ),
+            )),
+        }
+    }
+
+    // planner degeneracy + ranked ordering, per catalog and pricing
+    for catalog_name in &spec.catalog_names {
+        let catalog = InstanceCatalog::by_name(catalog_name).expect("matrix catalog exists");
+        for pricing_name in &spec.pricing_names {
+            let pricing = pricing_by_name(pricing_name).expect("matrix pricing exists");
+            let scale = spec.engine_scale;
+            checks += 1;
+            let advice = profile.plan(scale, &catalog, pricing.as_ref());
+            let plan = &advice.plan;
+            if plan.ranked.len() != catalog.instances.len() {
+                out.push(violation(
+                    app,
+                    seed,
+                    "plan-coverage",
+                    format!(
+                        "catalog '{catalog_name}': {} picks for {} types",
+                        plan.ranked.len(),
+                        catalog.instances.len()
+                    ),
+                ));
+            }
+            if plan.grid.len() != catalog.instances.len() * spec.max_machines {
+                out.push(violation(
+                    app,
+                    seed,
+                    "plan-grid",
+                    format!("catalog '{catalog_name}': grid size {}", plan.grid.len()),
+                ));
+            }
+            // free picks precede saturated ones; free block sorted by cost
+            let mut seen_saturated = false;
+            let mut last_cost = f64::NEG_INFINITY;
+            for pick in &plan.ranked {
+                if pick.candidate.eviction_free {
+                    if seen_saturated || pick.candidate.predicted_cost < last_cost {
+                        out.push(violation(
+                            app,
+                            seed,
+                            "plan-ranking",
+                            format!(
+                                "catalog '{catalog_name}' pricing '{pricing_name}': ranked order broken at {}",
+                                pick.candidate.instance
+                            ),
+                        ));
+                        break;
+                    }
+                    last_cost = pick.candidate.predicted_cost;
+                } else {
+                    seen_saturated = true;
+                }
+            }
+        }
+        // degeneracy: each type alone reproduces the §5.4 pick. The pick
+        // is pricing-independent, so one pricing model suffices.
+        let pricing = pricing_by_name(spec.pricing_names[0]).expect("matrix pricing exists");
+        let scale = spec.engine_scale;
+        for instance in &catalog.instances {
+            checks += 1;
+            let single = InstanceCatalog::single(instance.clone());
+            let one = profile.plan(scale, &single, pricing.as_ref());
+            let sel = select_cluster_size(
+                profile.predicted_cached_mb(scale),
+                profile.predicted_exec_mb(scale),
+                &instance.spec,
+                spec.max_machines,
+            );
+            match one.plan.best() {
+                Some(best) if best.candidate.machines == sel.machines => {}
+                other => out.push(violation(
+                    app,
+                    seed,
+                    "plan-degeneracy",
+                    format!(
+                        "single-type '{}': plan {:?} vs selector {}",
+                        instance.name,
+                        other.map(|p| p.candidate.machines),
+                        sel.machines
+                    ),
+                )),
+            }
+        }
+    }
+
+    // cache deficit is monotone in scale on a fixed cluster
+    if !profile.no_cached_data() {
+        checks += 1;
+        let n = 4usize;
+        let mut scales = spec.scales.clone();
+        scales.sort_by(f64::total_cmp);
+        let deficit = |scale: f64| {
+            let (_, capacity) = machine_split(profile.predicted_exec_mb(scale), &worker, n);
+            (profile.predicted_cached_mb(scale) / n as f64 - capacity).max(0.0)
+        };
+        let mut last = f64::NEG_INFINITY;
+        for &scale in &scales {
+            let d = deficit(scale);
+            if d + 1e-6 < last {
+                out.push(violation(
+                    app,
+                    seed,
+                    "deficit-monotone",
+                    format!("deficit shrank to {d} MB at scale {scale} (was {last})"),
+                ));
+                break;
+            }
+            last = d;
+        }
+    }
+
+    // max-scale inversion: just below the bound fits, just above does not
+    for n in [4usize, spec.max_machines] {
+        checks += 1;
+        let bound = profile.max_scale(&worker, n);
+        if !bound.is_finite() {
+            if !profile.no_cached_data() {
+                out.push(violation(
+                    app,
+                    seed,
+                    "max-scale-finite",
+                    format!("cached data but max_scale({n}) is infinite"),
+                ));
+            }
+            continue;
+        }
+        if bound > 1e9 {
+            // a ~zero fitted slope makes the bound effectively unbounded
+            // (bounds::max_scale bails after its bracket guard) — there is
+            // no boundary to invert
+            continue;
+        }
+        let fits = |scale: f64| {
+            let (_, capacity) = machine_split(profile.predicted_exec_mb(scale), &worker, n);
+            profile.predicted_cached_mb(scale) / n as f64 < capacity
+        };
+        if !fits(bound * 0.995) {
+            out.push(violation(
+                app,
+                seed,
+                "max-scale-inverse",
+                format!("scale {:.2} (0.995 × bound) does not fit {n} machines", bound * 0.995),
+            ));
+        }
+        if fits(bound * 1.05) {
+            out.push(violation(
+                app,
+                seed,
+                "max-scale-inverse",
+                format!("scale {:.2} (1.05 × bound) still fits {n} machines", bound * 1.05),
+            ));
+        }
+    }
+
+    (checks, out)
+}
+
+/// Engine-level invariants: calm realized price equals the analytic quote
+/// for every pricing model, and every scenario leaves its signature on the
+/// realized run. Returns `(checks_run, violations)`.
+pub fn check_engine(
+    app: &AppModel,
+    seed: u64,
+    profile: &TrainedProfile,
+    spec: &MatrixSpec,
+) -> (usize, Vec<Violation>) {
+    let mut checks = 0usize;
+    let mut out = Vec::new();
+    let scale = spec.engine_scale;
+    let wp = app.profile(scale);
+    let opts = || SimOptions {
+        policy: EvictionPolicy::Lru,
+        seed: spec.engine_seed,
+        compute: None,
+        detailed_log: false,
+    };
+
+    // calm engine run == naive quote, on each catalog's best pick
+    for catalog_name in &spec.catalog_names {
+        let catalog = InstanceCatalog::by_name(catalog_name).expect("matrix catalog exists");
+        let pricing0 = pricing_by_name(spec.pricing_names[0]).expect("matrix pricing exists");
+        let advice = profile.plan(scale, &catalog, pricing0.as_ref());
+        let Some(best) = advice.plan.best() else { continue };
+        let Some(instance) = catalog.get(&best.candidate.instance) else { continue };
+        let machines = best.candidate.machines;
+        let fleet = match FleetSpec::homogeneous(instance.clone(), machines) {
+            Ok(f) => f,
+            Err(e) => {
+                out.push(violation(
+                    app,
+                    seed,
+                    "calm-quote",
+                    format!("pick {} x{machines} is not a valid fleet: {e}", instance.name),
+                ));
+                continue;
+            }
+        };
+        checks += 1;
+        let calm = match engine::run(&wp, &fleet, &scenario::NoDisturbances, opts()) {
+            Ok(r) => r,
+            Err(e) => {
+                out.push(violation(app, seed, "calm-quote", format!("engine failed: {e}")));
+                continue;
+            }
+        };
+        let s = RunSummary::from_log(&calm.sim.log);
+        if s.machines_lost != 0 || s.machines_joined != 0 {
+            out.push(violation(
+                app,
+                seed,
+                "calm-quote",
+                format!("NoDisturbances lost {} / joined {}", s.machines_lost, s.machines_joined),
+            ));
+        }
+        for pricing_name in &spec.pricing_names {
+            checks += 1;
+            let pricing = pricing_by_name(pricing_name).expect("matrix pricing exists");
+            let quote = pricing.price(instance, machines, s.duration_s);
+            let realized = pricing.price_timeline(&calm.timeline);
+            if (realized - quote).abs() > 1e-6 * quote.max(1.0) {
+                out.push(violation(
+                    app,
+                    seed,
+                    "calm-quote",
+                    format!(
+                        "'{pricing_name}' on {} x{machines}: realized {realized} vs quote {quote}",
+                        instance.name
+                    ),
+                ));
+            }
+        }
+    }
+
+    // scenario signatures on a fixed 4-worker fleet
+    let fleet = FleetSpec::homogeneous(crate::sim::InstanceType::paper_worker(), 4)
+        .expect("4 workers is a valid fleet");
+    let base = match engine::run(&wp, &fleet, &scenario::NoDisturbances, opts()) {
+        Ok(r) => RunSummary::from_log(&r.sim.log),
+        Err(e) => {
+            out.push(violation(app, seed, "scenario-baseline", format!("engine failed: {e}")));
+            return (checks + 1, out);
+        }
+    };
+    for name in &spec.scenario_names {
+        checks += 1;
+        let sc = scenario::by_name(name).expect("matrix scenario exists");
+        let run = match engine::run(&wp, &fleet, sc.as_ref(), opts()) {
+            Ok(r) => r,
+            Err(e) => {
+                out.push(violation(
+                    app,
+                    seed,
+                    "scenario-signature",
+                    format!("'{name}' engine failed: {e}"),
+                ));
+                continue;
+            }
+        };
+        let s = RunSummary::from_log(&run.sim.log);
+        let fail = |what: &str| {
+            format!(
+                "'{name}' (engine seed {}): {what} (lost {}, joined {}, {:.1}s vs calm {:.1}s)",
+                spec.engine_seed, s.machines_lost, s.machines_joined, s.duration_s, base.duration_s
+            )
+        };
+        let bad: Option<String> = match *name {
+            "none" => (s.duration_s != base.duration_s
+                || s.machines_lost != 0
+                || s.machines_joined != 0)
+                .then(|| fail("must replay the baseline exactly")),
+            "spot" => (s.machines_lost < 1).then(|| fail("must reclaim a machine")),
+            "straggler" => {
+                (s.duration_s <= base.duration_s).then(|| fail("must stretch the run"))
+            }
+            "failure" => (s.machines_lost < 1 || s.machines_joined < 1)
+                .then(|| fail("must lose and restart a machine")),
+            "autoscale" => (s.machines_joined < 1).then(|| fail("must add machines")),
+            other => Some(format!("unknown scenario '{other}' in the matrix spec")),
+        };
+        if let Some(detail) = bad {
+            out.push(violation(app, seed, "scenario-signature", detail));
+        }
+    }
+
+    (checks, out)
+}
+
+/// Run the full differential matrix over `count` workloads generated from
+/// consecutive seeds `first_seed..first_seed+count`. One advisor session
+/// profiles everything (each workload pays exactly one sampling phase).
+pub fn run_matrix(
+    cfg: &SynthConfig,
+    first_seed: u64,
+    count: usize,
+    spec: &MatrixSpec,
+) -> MatrixReport {
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().max_machines(spec.max_machines).build(&mut backend);
+    let mut report = MatrixReport { workloads: count, ..Default::default() };
+    for (seed, app) in cfg.generate_many(first_seed, count) {
+        let profile = advisor.profile(&app);
+        let (c1, v1) = check_profile(&app, seed, &profile, spec);
+        let (c2, v2) = check_engine(&app, seed, &profile, spec);
+        report.checks += c1 + c2;
+        report.violations.extend(v1);
+        report.violations.extend(v2);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::app_by_name;
+
+    #[test]
+    fn violations_print_the_reproduction_seed() {
+        let app = SynthConfig::smoke().generate(99);
+        let v = violation(&app, 99, "demo", "detail".into());
+        let text = v.to_string();
+        assert!(text.contains("seed 99"), "{text}");
+        assert!(text.contains(&app.name), "{text}");
+        assert!(text.contains("[demo]"), "{text}");
+    }
+
+    #[test]
+    fn exhaustive_pick_matches_selector_on_paper_apps() {
+        let worker = MachineSpec::worker_node();
+        for app in crate::workloads::all_apps() {
+            let cached = app.total_true_cached_mb(1000.0);
+            let exec = app.exec_mem_mb(1000.0);
+            let sel = select_cluster_size(cached, exec, &worker, 12);
+            match exhaustive_pick(cached, exec, &worker, 12) {
+                Some(n) => {
+                    assert!(!sel.saturated, "{}", app.name);
+                    assert_eq!(n, sel.machines, "{}", app.name);
+                }
+                None => assert!(sel.saturated, "{}", app.name),
+            }
+        }
+    }
+
+    #[test]
+    fn paper_fixture_passes_the_analytic_invariants() {
+        // the harness is not synthetic-only: the paper's svm model
+        // satisfies every analytic invariant too
+        let app = app_by_name("svm").unwrap();
+        let spec = MatrixSpec::default();
+        let mut b = RustFit::default();
+        let mut advisor = Advisor::builder().max_machines(spec.max_machines).build(&mut b);
+        let profile = advisor.profile(&app);
+        let (checks, violations) = check_profile(&app, 0, &profile, &spec);
+        assert!(checks > 10);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+}

@@ -206,8 +206,14 @@ impl fmt::Display for ParseError {
 }
 impl std::error::Error for ParseError {}
 
+/// Maximum container nesting the parser accepts. The parser is recursive,
+/// so without a bound an adversarial `[[[[…` document overflows the stack
+/// (an abort, not an `Err`). 128 levels is far beyond any listener log or
+/// experiment report while keeping worst-case stack use trivial.
+pub const MAX_DEPTH: usize = 128;
+
 pub fn parse(input: &str) -> Result<Json, ParseError> {
-    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -220,6 +226,8 @@ pub fn parse(input: &str) -> Result<Json, ParseError> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting, bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -353,12 +361,22 @@ impl<'a> Parser<'a> {
             .map_err(|_| self.err("invalid number"))
     }
 
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, ParseError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -367,7 +385,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(items)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(items));
+                }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
@@ -375,10 +396,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, ParseError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -392,7 +415,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(map)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(map));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
@@ -442,6 +468,40 @@ mod tests {
         for src in ["", "{", "[1,", "{\"a\" 1}", "tru", "1.2.3", "\"\\q\""] {
             assert!(parse(src).is_err(), "{src}");
         }
+    }
+
+    #[test]
+    fn truncated_and_malformed_docs_error_cleanly() {
+        let full = r#"{"a": [1, 2.5, {"b": "x\ny", "c": [true, null]}], "d": -1e3}"#;
+        assert!(parse(full).is_ok());
+        // every strict prefix must be a clean Err, never a panic
+        for end in 0..full.len() {
+            if !full.is_char_boundary(end) {
+                continue;
+            }
+            assert!(parse(&full[..end]).is_err(), "prefix of len {end} parsed");
+        }
+        for src in ["\"\\u12\"", "\"\\u\"", "\"\\", "-", "[", "[{", "{\"k\":", "nul", "falsy"] {
+            assert!(parse(src).is_err(), "{src:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        // far past MAX_DEPTH: without the bound this aborts the process
+        let deep = "[".repeat(100_000);
+        let err = parse(&deep).unwrap_err();
+        assert!(err.message.contains("nesting too deep"), "{err}");
+        let deep_obj = "{\"k\":".repeat(100_000);
+        assert!(parse(&deep_obj).is_err());
+        // at the bound itself both sides behave as documented
+        let ok = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(parse(&ok).is_ok(), "exactly MAX_DEPTH levels must parse");
+        let over = format!("{}{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(parse(&over).is_err());
+        // ...and siblings do not accumulate depth
+        let wide = format!("[{}1]", "[1],".repeat(1000));
+        assert!(parse(&wide).is_ok());
     }
 
     #[test]

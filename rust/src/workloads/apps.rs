@@ -10,20 +10,37 @@
 use crate::dag::{AppDag, Transform};
 use crate::util::units::{gb, Mb};
 
-/// `size(scale) = θ0 + θ1 · scale` (Eq. 1 of the paper; scale 1000 = 100 %).
+/// `size(scale) = θ0 + θ1 · scale^γ` — the paper's linear law (Eq. 1,
+/// γ = 1; scale 1000 = 100 %) extended with a growth exponent so synthetic
+/// workloads ([`super::synth`]) can cache sublinearly or superlinearly
+/// growing datasets. [`SizeLaw::new`] keeps γ = 1 and the exact legacy
+/// arithmetic, so every paper calibration stays bit-identical.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SizeLaw {
     pub theta0: Mb,
     pub theta1: Mb,
+    /// Growth exponent γ (1 = the paper's linear law).
+    pub gamma: f64,
 }
 
 impl SizeLaw {
     pub const fn new(theta0: Mb, theta1: Mb) -> Self {
-        SizeLaw { theta0, theta1 }
+        SizeLaw { theta0, theta1, gamma: 1.0 }
+    }
+
+    /// A power-law variant (`γ ≠ 1` grows sub-/superlinearly in scale).
+    pub const fn power(theta0: Mb, theta1: Mb, gamma: f64) -> Self {
+        SizeLaw { theta0, theta1, gamma }
     }
 
     pub fn at(&self, scale: f64) -> Mb {
-        self.theta0 + self.theta1 * scale
+        if self.gamma == 1.0 {
+            // the paper's exact expression — `powf(1.0)` is not guaranteed
+            // to be the identity, and Table 1/2 must stay bit-identical
+            self.theta0 + self.theta1 * scale
+        } else {
+            self.theta0 + self.theta1 * scale.powf(self.gamma)
+        }
     }
 }
 
@@ -55,10 +72,33 @@ impl SizeNoise {
     }
 }
 
-/// Static model of one HiBench application.
-#[derive(Clone)]
+/// How an application's merged transformation DAG is produced.
+#[derive(Debug, Clone)]
+pub enum DagSpec {
+    /// A hand-built paper DAG (the Fig. 2 shapes of the eight fixtures).
+    Builtin(fn() -> AppDag),
+    /// A parameterized layered DAG (synthetic workloads): `depth` layers
+    /// of `width` datasets, `cached` of them marked `.cache()`, feeding
+    /// `iterations` actions. Built by [`super::synth::layered_dag`].
+    Layered { depth: usize, width: usize, cached: usize, iterations: usize },
+}
+
+impl DagSpec {
+    pub fn build(&self) -> AppDag {
+        match self {
+            DagSpec::Builtin(f) => f(),
+            DagSpec::Layered { depth, width, cached, iterations } => {
+                super::synth::layered_dag(*depth, *width, *cached, *iterations)
+            }
+        }
+    }
+}
+
+/// Static model of one application — a HiBench fixture from the registry
+/// below, or a generated one from [`super::synth`].
+#[derive(Debug, Clone)]
 pub struct AppModel {
-    pub name: &'static str,
+    pub name: String,
     /// Original (100 %) input size and DFS block count (Table 1).
     pub input_mb_full: Mb,
     pub blocks_full: usize,
@@ -98,7 +138,7 @@ pub struct AppModel {
     pub force_block_s: bool,
     /// The paper's enlarged evaluation scale (Table 1 bottom half).
     pub enlarged_scale: f64,
-    pub build_dag: fn() -> AppDag,
+    pub dag_spec: DagSpec,
 }
 
 /// A generic iterative-ML merged DAG: input -> features (cached) -> per-
@@ -150,7 +190,7 @@ fn svm_dag() -> AppDag {
 pub fn all_apps() -> Vec<AppModel> {
     vec![
         AppModel {
-            name: "als",
+            name: "als".to_string(),
             input_mb_full: gb(5.6),
             blocks_full: 100,
             cached_laws: vec![SizeLaw::new(3.0, 5.197)],
@@ -169,10 +209,10 @@ pub fn all_apps() -> Vec<AppModel> {
             parallelism_cap: None,
             force_block_s: false,
             enlarged_scale: 10_000.0, // 10^3 %
-            build_dag: als_dag,
+            dag_spec: DagSpec::Builtin(als_dag),
         },
         AppModel {
-            name: "bayes",
+            name: "bayes".to_string(),
             input_mb_full: gb(17.6),
             blocks_full: 2000,
             cached_laws: vec![SizeLaw::new(5.0, 40.1)],
@@ -191,10 +231,10 @@ pub fn all_apps() -> Vec<AppModel> {
             parallelism_cap: None,
             force_block_s: false,
             enlarged_scale: 1_500.0, // 150 %
-            build_dag: bayes_dag,
+            dag_spec: DagSpec::Builtin(bayes_dag),
         },
         AppModel {
-            name: "gbt",
+            name: "gbt".to_string(),
             input_mb_full: 30.6,
             blocks_full: 100,
             cached_laws: vec![SizeLaw::new(0.0, 0.0217)],
@@ -213,10 +253,10 @@ pub fn all_apps() -> Vec<AppModel> {
             parallelism_cap: None,
             force_block_s: false,
             enlarged_scale: 1_797_000.0, // 18x10^4 % (53.7 GB / 30.6 MB)
-            build_dag: gbt_dag,
+            dag_spec: DagSpec::Builtin(gbt_dag),
         },
         AppModel {
-            name: "km",
+            name: "km".to_string(),
             input_mb_full: gb(21.5),
             blocks_full: 2000,
             cached_laws: vec![SizeLaw::new(2.0, 23.0)],
@@ -235,10 +275,10 @@ pub fn all_apps() -> Vec<AppModel> {
             parallelism_cap: Some(100),
             force_block_s: true,
             enlarged_scale: 2_000.0, // 200 %
-            build_dag: km_dag,
+            dag_spec: DagSpec::Builtin(km_dag),
         },
         AppModel {
-            name: "lr",
+            name: "lr".to_string(),
             input_mb_full: gb(22.4),
             blocks_full: 2000,
             cached_laws: vec![SizeLaw::new(8.0, 16.992)],
@@ -257,10 +297,10 @@ pub fn all_apps() -> Vec<AppModel> {
             parallelism_cap: None,
             force_block_s: false,
             enlarged_scale: 2_000.0, // 200 %
-            build_dag: lr_dag,
+            dag_spec: DagSpec::Builtin(lr_dag),
         },
         AppModel {
-            name: "pca",
+            name: "pca".to_string(),
             input_mb_full: gb(1.5),
             blocks_full: 50,
             cached_laws: vec![SizeLaw::new(2.0, 0.878)],
@@ -279,10 +319,10 @@ pub fn all_apps() -> Vec<AppModel> {
             parallelism_cap: None,
             force_block_s: false,
             enlarged_scale: 49_870.0, // 5x10^3 % (74.8 GB / 1.5 GB)
-            build_dag: pca_dag,
+            dag_spec: DagSpec::Builtin(pca_dag),
         },
         AppModel {
-            name: "rfc",
+            name: "rfc".to_string(),
             input_mb_full: gb(29.8),
             blocks_full: 2000,
             cached_laws: vec![SizeLaw::new(6.0, 19.994)],
@@ -301,10 +341,10 @@ pub fn all_apps() -> Vec<AppModel> {
             parallelism_cap: None,
             force_block_s: false,
             enlarged_scale: 2_000.0, // 200 %
-            build_dag: rfc_dag,
+            dag_spec: DagSpec::Builtin(rfc_dag),
         },
         AppModel {
-            name: "svm",
+            name: "svm".to_string(),
             input_mb_full: gb(59.6),
             blocks_full: 2000,
             cached_laws: vec![SizeLaw::new(10.0, 40.99)],
@@ -323,7 +363,7 @@ pub fn all_apps() -> Vec<AppModel> {
             parallelism_cap: None,
             force_block_s: false,
             enlarged_scale: 1_500.0, // 150 %
-            build_dag: svm_dag,
+            dag_spec: DagSpec::Builtin(svm_dag),
         },
     ]
 }

@@ -1,4 +1,6 @@
-//! Models of the eight HiBench applications the paper evaluates (§6).
+//! Application models: the eight HiBench fixtures the paper evaluates (§6)
+//! plus a seeded synthetic-workload generator ([`synth`]) that opens the
+//! same [`AppModel`] interface to unbounded app shapes.
 //!
 //! Blink treats applications as black boxes; what the reproduction needs
 //! per app is (a) its merged DAG shape (which datasets are cached), (b) the
@@ -20,8 +22,10 @@
 //! paper's 12 — see DESIGN.md §5).
 
 pub mod apps;
+pub mod synth;
 
-pub use apps::{all_apps, app_by_name, AppModel, SizeLaw, SizeNoise};
+pub use apps::{all_apps, app_by_name, AppModel, DagSpec, SizeLaw, SizeNoise};
+pub use synth::{layered_dag, Growth, SynthConfig};
 
 use crate::dag::AppDag;
 use crate::hdfs::{DfsFile, Sampler};
@@ -63,7 +67,7 @@ impl AppModel {
     /// paper's 13.8 MB vs 21.7 MB actual (§6.2).
     pub fn measured_cached_mb(&self, i: usize, scale: f64) -> Mb {
         let true_mb = self.true_cached_mb(i, scale);
-        let z = 2.0 * hash_unit(self.name, (scale * 1000.0) as u64 ^ (i as u64) << 48) - 1.0;
+        let z = 2.0 * hash_unit(&self.name, (scale * 1000.0) as u64 ^ (i as u64) << 48) - 1.0;
         let rel = self.size_noise.rel_amp(true_mb);
         (true_mb * (1.0 - self.size_noise.bias * rel + rel * z)).max(0.0)
     }
@@ -83,7 +87,7 @@ impl AppModel {
     /// The DFS file holding the original input.
     pub fn dfs_file(&self) -> DfsFile {
         DfsFile::ingest(
-            self.name,
+            &self.name,
             self.input_mb_full,
             self.input_mb_full / self.blocks_full as f64,
         )
@@ -165,7 +169,7 @@ impl AppModel {
 
     /// The merged transformation DAG (Fig. 2 style) for this app.
     pub fn dag(&self) -> AppDag {
-        (self.build_dag)()
+        self.dag_spec.build()
     }
 }
 
@@ -178,7 +182,7 @@ mod tests {
     fn eight_apps_registered() {
         let apps = all_apps();
         assert_eq!(apps.len(), 8);
-        let names: Vec<&str> = apps.iter().map(|a| a.name).collect();
+        let names: Vec<&str> = apps.iter().map(|a| a.name.as_str()).collect();
         assert_eq!(names, ["als", "bayes", "gbt", "km", "lr", "pca", "rfc", "svm"]);
     }
 

@@ -1,0 +1,464 @@
+//! Seeded synthetic workload generator: unlimited iterative app shapes.
+//!
+//! The paper's evaluation stops at 16 hand-measured rows; Blink's core
+//! claim — tiny sample runs predict cached-dataset sizes well enough to
+//! pick the optimal cluster — should hold for *any* iterative application.
+//! This module generates first-class [`AppModel`]s from a seed and a
+//! [`SynthConfig`]: configurable DAG depth/width, number and growth law of
+//! cached datasets (linear / sublinear / superlinear in scale, plus noisy
+//! "measured" variants mimicking the §4 sampling error), skewed task
+//! durations, Block-s preparation phases and multi-dataset cache
+//! contention. Generated workloads flow through the whole stack unchanged:
+//! `Advisor::profile`, `planner::plan`/`risk_adjusted`, every
+//! `sim::scenario` under the event engine, and the CLI (`blink synth`).
+//!
+//! Generation is deterministic: the same `(preset, seed)` always produces
+//! the same model (the differential testkit prints seeds on failure so any
+//! counterexample reproduces from the log).
+
+use crate::dag::{AppDag, Transform};
+use crate::util::prng::Rng;
+use crate::util::units::Mb;
+
+use super::apps::{AppModel, DagSpec, SizeLaw, SizeNoise};
+use super::FULL_SCALE;
+
+/// Growth law of a cached dataset's size in the data scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Growth {
+    /// `θ0 + θ1·s^0.85` — e.g. deduplicated or compressed features.
+    Sublinear,
+    /// `θ0 + θ1·s` — the paper's Eq. 1 (validated in §4.4).
+    Linear,
+    /// `θ0 + θ1·s^1.12` — e.g. pairwise features or index blowup.
+    Superlinear,
+}
+
+impl Growth {
+    pub const ALL: [Growth; 3] = [Growth::Sublinear, Growth::Linear, Growth::Superlinear];
+
+    /// The exponent γ of the generated [`SizeLaw`].
+    pub fn gamma(self) -> f64 {
+        match self {
+            Growth::Sublinear => 0.85,
+            Growth::Linear => 1.0,
+            Growth::Superlinear => 1.12,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Growth::Sublinear => "sublinear",
+            Growth::Linear => "linear",
+            Growth::Superlinear => "superlinear",
+        }
+    }
+}
+
+/// Largest scale any sampling policy touches (GBT-style extended sampling
+/// stops at 10). Generated laws are clamped so the single sample node
+/// never evicts — the §5.1 eviction-retry loop stays a corner case the
+/// paper fixtures exercise, not the synthetic common path.
+const MAX_SAMPLE_SCALE: f64 = 10.0;
+
+/// Cached-footprint budget (MB) at [`MAX_SAMPLE_SCALE`]: well under the
+/// i3 sample node's ~830 MB worst-case caching capacity.
+const SAMPLE_CACHED_BUDGET_MB: Mb = 600.0;
+
+/// Knobs of the generator. All ranges are inclusive and sampled uniformly;
+/// build one via a preset ([`SynthConfig::by_name`]) and override fields.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    /// Preset name, baked into generated workload names.
+    pub preset: &'static str,
+    /// Number of cached datasets (multi-dataset = cache contention).
+    pub datasets: (usize, usize),
+    /// Growth laws to draw from, uniformly.
+    pub growth: &'static [Growth],
+    /// Measurement-noise amplitude (mimics the §4/§6.2 sampling error).
+    pub noise_amp: (f64, f64),
+    /// Size at which the measurement noise has halved, MB.
+    pub noise_half_mb: (f64, f64),
+    /// Total true cached size at 100 % scale, MB.
+    pub cached_full_mb: (f64, f64),
+    /// Total execution memory at 100 % scale, MB.
+    pub exec_full_mb: (f64, f64),
+    /// Input size at 100 % scale, MB.
+    pub input_full_mb: (f64, f64),
+    /// DFS block count of the full input.
+    pub blocks: (usize, usize),
+    /// Iterative actions after materialization.
+    pub iterations: (usize, usize),
+    /// Log-space sigma of task-duration noise (partition/task skew).
+    pub skew_sigma: (f64, f64),
+    /// Probability of a forced Block-s preparation phase.
+    pub prep_probability: f64,
+    /// Probability of a KM-style parallelism cap (coalesced stages).
+    pub coalesce_probability: f64,
+    /// Probability of the no-cached-data atypical case (§5.1 case 1).
+    pub uncached_probability: f64,
+    /// Layers of the generated merged DAG.
+    pub dag_depth: (usize, usize),
+    /// Datasets per layer.
+    pub dag_width: (usize, usize),
+}
+
+impl SynthConfig {
+    /// The default preset: every knob in play.
+    pub fn mixed() -> SynthConfig {
+        SynthConfig {
+            preset: "mixed",
+            datasets: (1, 3),
+            growth: &Growth::ALL,
+            noise_amp: (0.02, 0.15),
+            noise_half_mb: (0.5, 4.0),
+            cached_full_mb: (500.0, 40_000.0),
+            exec_full_mb: (100.0, 15_000.0),
+            input_full_mb: (200.0, 40_000.0),
+            blocks: (50, 2000),
+            iterations: (3, 20),
+            skew_sigma: (0.05, 0.3),
+            prep_probability: 0.3,
+            coalesce_probability: 0.15,
+            uncached_probability: 0.05,
+            dag_depth: (1, 4),
+            dag_width: (1, 3),
+        }
+    }
+
+    /// One fixed growth law for every cached dataset.
+    pub fn growth_only(g: Growth) -> SynthConfig {
+        let growth: &'static [Growth] = match g {
+            Growth::Sublinear => &[Growth::Sublinear],
+            Growth::Linear => &[Growth::Linear],
+            Growth::Superlinear => &[Growth::Superlinear],
+        };
+        SynthConfig { preset: g.name(), growth, uncached_probability: 0.0, ..Self::mixed() }
+    }
+
+    /// Heavy measurement noise on tiny caches — the GBT/§6.2 regime.
+    pub fn noisy() -> SynthConfig {
+        SynthConfig {
+            preset: "noisy",
+            noise_amp: (0.3, 0.9),
+            noise_half_mb: (0.02, 1.0),
+            cached_full_mb: (20.0, 2_000.0),
+            uncached_probability: 0.0,
+            ..Self::mixed()
+        }
+    }
+
+    /// Several large cached datasets contending for storage memory.
+    pub fn contended() -> SynthConfig {
+        SynthConfig {
+            preset: "contended",
+            datasets: (2, 3),
+            cached_full_mb: (20_000.0, 60_000.0),
+            uncached_probability: 0.0,
+            ..Self::mixed()
+        }
+    }
+
+    /// The no-cached-data atypical case, always.
+    pub fn uncached() -> SynthConfig {
+        SynthConfig { preset: "uncached", uncached_probability: 1.0, ..Self::mixed() }
+    }
+
+    /// Tiny, fast workloads for smoke tests.
+    pub fn smoke() -> SynthConfig {
+        SynthConfig {
+            preset: "smoke",
+            datasets: (1, 2),
+            cached_full_mb: (200.0, 4_000.0),
+            exec_full_mb: (50.0, 2_000.0),
+            input_full_mb: (100.0, 2_000.0),
+            blocks: (50, 300),
+            iterations: (2, 6),
+            uncached_probability: 0.0,
+            ..Self::mixed()
+        }
+    }
+
+    /// Look a preset up by CLI name.
+    pub fn by_name(name: &str) -> Option<SynthConfig> {
+        match name {
+            "mixed" => Some(Self::mixed()),
+            "linear" => Some(Self::growth_only(Growth::Linear)),
+            "sublinear" => Some(Self::growth_only(Growth::Sublinear)),
+            "superlinear" => Some(Self::growth_only(Growth::Superlinear)),
+            "noisy" => Some(Self::noisy()),
+            "contended" => Some(Self::contended()),
+            "uncached" => Some(Self::uncached()),
+            "smoke" => Some(Self::smoke()),
+            _ => None,
+        }
+    }
+
+    /// Every preset name (the CLI help and error messages).
+    pub fn names() -> &'static [&'static str] {
+        &["mixed", "linear", "sublinear", "superlinear", "noisy", "contended", "uncached", "smoke"]
+    }
+
+    /// Generate one workload. Deterministic in `(preset, seed)`.
+    pub fn generate(&self, seed: u64) -> AppModel {
+        let mut rng = Rng::new(seed).fork(self.preset);
+        let uf = |rng: &mut Rng, (lo, hi): (f64, f64)| rng.range(lo, hi);
+        let ui = |rng: &mut Rng, (lo, hi): (usize, usize)| lo + rng.below(hi - lo + 1);
+
+        let uncached = rng.f64() < self.uncached_probability;
+        let n_ds = if uncached { 0 } else { ui(&mut rng, self.datasets) };
+
+        let mut cached_laws = Vec::with_capacity(n_ds);
+        if n_ds > 0 {
+            let total_full = uf(&mut rng, self.cached_full_mb);
+            let shares: Vec<f64> = (0..n_ds).map(|_| rng.range(0.2, 1.0)).collect();
+            let share_sum: f64 = shares.iter().sum();
+            for share in shares {
+                let g = self.growth[rng.below(self.growth.len())];
+                let full = total_full * share / share_sum;
+                let theta0 = rng.range(0.0, 20.0).min(full / 2.0);
+                let theta1 = (full - theta0).max(1.0) / FULL_SCALE.powf(g.gamma());
+                cached_laws.push(SizeLaw::power(theta0, theta1, g.gamma()));
+            }
+            // clamp the sampling-scale footprint so sampling never evicts
+            let at_sample: Mb = cached_laws.iter().map(|l| l.at(MAX_SAMPLE_SCALE)).sum();
+            if at_sample > SAMPLE_CACHED_BUDGET_MB {
+                let k = SAMPLE_CACHED_BUDGET_MB / at_sample;
+                for law in &mut cached_laws {
+                    law.theta0 *= k;
+                    law.theta1 *= k;
+                }
+            }
+        }
+
+        let exec_full = uf(&mut rng, self.exec_full_mb);
+        let exec_theta0 = rng.range(20.0, 200.0).min(exec_full / 2.0);
+        let exec_law = SizeLaw::new(exec_theta0, (exec_full - exec_theta0).max(0.0) / FULL_SCALE);
+
+        let iterations = ui(&mut rng, self.iterations);
+        let depth = ui(&mut rng, self.dag_depth).max(1);
+        let width = ui(&mut rng, self.dag_width).max(1);
+
+        AppModel {
+            name: format!("synth-{}-{seed:04x}", self.preset),
+            input_mb_full: uf(&mut rng, self.input_full_mb),
+            blocks_full: ui(&mut rng, self.blocks),
+            cached_laws,
+            exec_law,
+            size_noise: SizeNoise::with_bias(
+                uf(&mut rng, self.noise_amp),
+                uf(&mut rng, self.noise_half_mb),
+                rng.range(0.2, 0.8),
+            ),
+            iterations,
+            compute_s_per_mb: rng.range(0.005, 0.5),
+            cached_speedup: 97.0,
+            recompute_factor: rng.range(0.3, 6.0),
+            serial_fixed_s: rng.range(0.1, 8.0),
+            serial_per_scale_s: rng.range(0.0, 0.03),
+            shuffle_mb_full: rng.range(10.0, 1500.0),
+            task_overhead_s: 0.01,
+            task_time_sigma: uf(&mut rng, self.skew_sigma),
+            per_partition_overhead_mb: rng.range(0.001, 0.04),
+            parallelism_cap: (rng.f64() < self.coalesce_probability)
+                .then(|| 50 + rng.below(200)),
+            force_block_s: rng.f64() < self.prep_probability,
+            enlarged_scale: 2.0 * FULL_SCALE,
+            dag_spec: DagSpec::Layered { depth, width, cached: n_ds, iterations },
+        }
+    }
+
+    /// Generate `count` workloads from consecutive seeds
+    /// `first_seed..first_seed+count`, each paired with its seed — the
+    /// one seed-pairing convention shared by the CLI, the testkit matrix
+    /// and the examples, so reproduction seeds never desynchronize.
+    pub fn generate_many(&self, first_seed: u64, count: usize) -> Vec<(u64, AppModel)> {
+        (0..count as u64)
+            .map(|i| {
+                let seed = first_seed.wrapping_add(i);
+                (seed, self.generate(seed))
+            })
+            .collect()
+    }
+}
+
+/// Build a layered merged DAG: `depth` layers of `width` datasets (the
+/// first node of each layer joins the whole previous layer, the rest chain
+/// narrowly), `cached` of them marked `.cache()`, feeding `iterations`
+/// Wide-transform actions off the final layer. Acyclic by construction;
+/// the cached count always matches exactly (extra cached nodes extend the
+/// chain when `cached > depth`).
+pub fn layered_dag(depth: usize, width: usize, cached: usize, iterations: usize) -> AppDag {
+    let mut g = AppDag::new();
+    let src = g.source("input");
+    let mut prev_layer = vec![src];
+    let mut cached_left = cached;
+    for d in 0..depth.max(1) {
+        let mut layer = Vec::with_capacity(width.max(1));
+        for w in 0..width.max(1) {
+            let t = if w % 2 == 1 { Transform::Wide } else { Transform::Narrow };
+            let parents: Vec<usize> = if w == 0 {
+                prev_layer.clone()
+            } else {
+                vec![prev_layer[w % prev_layer.len()]]
+            };
+            layer.push(g.dataset(&format!("d{d}_{w}"), t, &parents));
+        }
+        if cached_left > 0 {
+            g.cache(layer[0]);
+            cached_left -= 1;
+        }
+        prev_layer = layer;
+    }
+    while cached_left > 0 {
+        let id = g.dataset(&format!("extra_{cached_left}"), Transform::Narrow, &[prev_layer[0]]);
+        g.cache(id);
+        prev_layer = vec![id];
+        cached_left -= 1;
+    }
+    for i in 0..iterations.max(1) {
+        let it = g.dataset(&format!("iter_{i}"), Transform::Wide, &[prev_layer[0]]);
+        g.action(&format!("action_{i}"), it);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blink::sample_runs::{SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
+
+    #[test]
+    fn generation_is_deterministic_per_preset_and_seed() {
+        let cfg = SynthConfig::mixed();
+        let (a, b) = (cfg.generate(42), cfg.generate(42));
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.cached_laws, b.cached_laws);
+        assert_eq!(a.exec_law, b.exec_law);
+        assert_eq!(a.input_mb_full, b.input_mb_full);
+        assert_eq!(a.iterations, b.iterations);
+        // generate_many pairs each workload with exactly the seed that
+        // regenerates it (the CLI/testkit reproduction convention)
+        let many = cfg.generate_many(42, 3);
+        assert_eq!(many.len(), 3);
+        for (seed, app) in &many {
+            assert_eq!(app.name, cfg.generate(*seed).name);
+            assert_eq!(app.input_mb_full, cfg.generate(*seed).input_mb_full);
+        }
+        assert_eq!(many[0].0, 42);
+        assert_eq!(many[2].0, 44);
+        // a different seed or preset produces a different model
+        assert_ne!(a.input_mb_full, cfg.generate(43).input_mb_full);
+        assert_ne!(
+            a.input_mb_full,
+            SynthConfig::smoke().generate(42).input_mb_full,
+            "preset is part of the stream"
+        );
+    }
+
+    #[test]
+    fn every_preset_resolves_and_generates_valid_dags() {
+        for name in SynthConfig::names() {
+            let cfg = SynthConfig::by_name(name).unwrap();
+            assert_eq!(cfg.preset, *name);
+            for seed in 0..8 {
+                let app = cfg.generate(seed);
+                let dag = app.dag();
+                assert!(dag.is_acyclic(), "{}", app.name);
+                assert_eq!(
+                    dag.cached_datasets().len(),
+                    app.cached_laws.len(),
+                    "{}: DAG cached sets must match the size laws",
+                    app.name
+                );
+                assert!(!dag.actions.is_empty(), "{}", app.name);
+                assert!(app.input_mb_full > 0.0 && app.blocks_full > 0, "{}", app.name);
+            }
+        }
+        assert!(SynthConfig::by_name("meteor").is_none());
+    }
+
+    #[test]
+    fn sample_scale_footprint_stays_within_the_sample_node_budget() {
+        for name in SynthConfig::names() {
+            let cfg = SynthConfig::by_name(name).unwrap();
+            for seed in 0..32 {
+                let app = cfg.generate(seed);
+                let at_sample: f64 =
+                    (0..app.cached_laws.len()).map(|i| app.true_cached_mb(i, 10.0)).sum();
+                assert!(
+                    at_sample <= SAMPLE_CACHED_BUDGET_MB + 1e-6,
+                    "{} (seed {seed}): {at_sample} MB at scale 10",
+                    app.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn growth_laws_shape_the_size_curve() {
+        let sub = SynthConfig::growth_only(Growth::Sublinear).generate(7);
+        let sup = SynthConfig::growth_only(Growth::Superlinear).generate(7);
+        for app in [&sub, &sup] {
+            for law in &app.cached_laws {
+                assert!(law.theta1 > 0.0);
+            }
+        }
+        // superlinear laws accelerate: size(2s) - size(s) grows with s
+        let l = sup.cached_laws[0];
+        let d1 = l.at(200.0) - l.at(100.0);
+        let d2 = l.at(400.0) - l.at(200.0);
+        assert!(d2 > d1, "superlinear must accelerate: {d1} vs {d2}");
+        // sublinear laws decelerate per doubling
+        let l = sub.cached_laws[0];
+        let r1 = l.at(200.0) / l.at(100.0);
+        let r2 = l.at(400.0) / l.at(200.0);
+        assert!(r2 < r1 * 1.001, "sublinear must decelerate: {r1} vs {r2}");
+    }
+
+    #[test]
+    fn uncached_preset_hits_atypical_case_1_end_to_end() {
+        let app = SynthConfig::uncached().generate(3);
+        assert!(app.cached_laws.is_empty());
+        let mgr = SampleRunsManager::default();
+        match mgr.run(&app, &DEFAULT_SCALES) {
+            SamplingOutcome::NoCachedData { sample_cost_machine_s } => {
+                assert!(sample_cost_machine_s > 0.0);
+            }
+            other => panic!("expected NoCachedData, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sampling_generated_workloads_never_evicts_on_the_sample_node() {
+        // the generator's clamp makes the §5.1 retry loop unnecessary:
+        // every run completes at its requested scale
+        let cfg = SynthConfig::contended(); // the heaviest cache footprint
+        let mgr = SampleRunsManager::default();
+        for seed in 0..6 {
+            let app = cfg.generate(seed);
+            match mgr.run(&app, &DEFAULT_SCALES) {
+                SamplingOutcome::Profiled(runs) => {
+                    for r in &runs {
+                        assert!(!r.rescaled, "{} (seed {seed}) evicted while sampling", app.name);
+                        assert_eq!(r.summary.evictions, 0);
+                    }
+                }
+                other => panic!("{} caches data, got {other:?}", app.name),
+            }
+        }
+    }
+
+    #[test]
+    fn layered_dag_counts_match_for_edge_shapes() {
+        // cached > depth spills into chain extensions; width 1 degenerates
+        // to the classic iterative chain
+        let g = layered_dag(2, 1, 4, 3);
+        assert!(g.is_acyclic());
+        assert_eq!(g.cached_datasets().len(), 4);
+        assert_eq!(g.actions.len(), 3);
+        let g = layered_dag(3, 3, 0, 1);
+        assert!(g.cached_datasets().is_empty());
+        assert!(g.is_acyclic());
+    }
+}

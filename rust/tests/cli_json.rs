@@ -64,6 +64,14 @@ fn every_subcommand_emits_one_json_document() {
 
     let j = query_json(&["apps"]);
     assert_eq!(marker(&j, "query"), "apps");
+
+    let j = query_json(&[
+        "synth", "--preset", "smoke", "--seed", "3", "--count", "2", "--scale", "200",
+        "--catalog", "paper", "--pricing", "machine-seconds",
+    ]);
+    assert_eq!(marker(&j, "query"), "synth");
+    let workloads = j.path(&["workloads"]).and_then(Json::as_arr).expect("workloads array");
+    assert_eq!(workloads.len(), 2);
 }
 
 #[test]

@@ -328,10 +328,10 @@ fn every_app_is_byte_identical_across_the_paper_machine_range() {
     for app in all_apps() {
         let profile = app.profile(30.0);
         for machines in [4usize, 7, 12, 16, 24] {
-            assert_identical(&profile, machines, 1000 + machines as u64, true, app.name);
+            assert_identical(&profile, machines, 1000 + machines as u64, true, &app.name);
         }
-        assert_identical(&profile, 4, 77, false, app.name);
-        assert_identical(&profile, 24, 78, false, app.name);
+        assert_identical(&profile, 4, 77, false, &app.name);
+        assert_identical(&profile, 24, 78, false, &app.name);
     }
 }
 

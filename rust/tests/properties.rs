@@ -199,6 +199,94 @@ fn fit_backend_rmse_consistent_with_theta() {
     );
 }
 
+/// A random JSON value of bounded size/depth (finite numbers only: the
+/// printer encodes NaN/Inf as `null` by design, which would change type).
+fn random_json(rng: &mut Rng, depth: usize, size: usize) -> json::Json {
+    let leaf = depth == 0 || rng.below(3) == 0;
+    if leaf {
+        match rng.below(4) {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.below(2) == 0),
+            2 => json::Json::Num((rng.range(-1e6, 1e6) * 100.0).round() / 100.0),
+            _ => {
+                let n = rng.below(8);
+                let s: String = (0..n)
+                    .map(|_| {
+                        // printable ASCII plus the escapes the writer handles
+                        let pool = b"abXYZ09 \"\\\n\t/\x07";
+                        pool[rng.below(pool.len())] as char
+                    })
+                    .collect();
+                json::Json::Str(s)
+            }
+        }
+    } else if rng.below(2) == 0 {
+        let n = rng.below(size.max(1) + 1);
+        json::Json::Arr((0..n).map(|_| random_json(rng, depth - 1, size / 2)).collect())
+    } else {
+        let n = rng.below(size.max(1) + 1);
+        json::Json::Obj(
+            (0..n)
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1, size / 2)))
+                .collect(),
+        )
+    }
+}
+
+#[test]
+fn json_printer_output_always_reparses_to_the_same_value() {
+    check(
+        &Config { cases: 128, seed: 0x5050, max_size: 10 },
+        |rng, size| random_json(rng, 4, size),
+        |v| {
+            for text in [v.to_string(), v.pretty()] {
+                let back = json::parse(&text).map_err(|e| format!("{e} in {text:?}"))?;
+                if back != *v {
+                    return Err(format!("{v:?} reparsed as {back:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn json_parser_survives_adversarial_mutations() {
+    // mutate valid documents — truncate, splice bytes, corrupt escapes —
+    // and require a clean Ok/Err from the parser every time (a panic or
+    // abort fails the test process itself)
+    check(
+        &Config { cases: 192, seed: 0xfade, max_size: 10 },
+        |rng, size| {
+            let mut bytes = random_json(rng, 3, size).to_string().into_bytes();
+            match rng.below(3) {
+                0 => {
+                    let keep = rng.below(bytes.len().max(1));
+                    bytes.truncate(keep);
+                }
+                1 => {
+                    if !bytes.is_empty() {
+                        let i = rng.below(bytes.len());
+                        let pool = b"[{}]\",:\\x9";
+                        bytes[i] = pool[rng.below(pool.len())];
+                    }
+                }
+                _ => {
+                    let garbage = b"{\"\\u12";
+                    bytes.extend_from_slice(&garbage[..rng.below(garbage.len() + 1)]);
+                }
+            }
+            bytes
+        },
+        |bytes| {
+            if let Ok(text) = std::str::from_utf8(bytes) {
+                let _ = json::parse(text); // must return, never panic
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn event_json_roundtrips_for_all_variants() {
     let events = vec![

@@ -200,6 +200,77 @@ fn autoscale_and_straggler_scenarios_complete_with_consistent_logs() {
 }
 
 #[test]
+fn every_scenario_from_by_name_leaves_its_engine_level_signature() {
+    // one engine-level assertion on the realized timeline per CLI-visible
+    // scenario, so a new scenario cannot ship as an accidental no-op
+    let app = app_by_name("svm").unwrap();
+    let profile = app.profile(150.0);
+    let fleet = cloud_fleet("gp.xlarge", 6);
+    let base = engine::run(&profile, &fleet, &scenario::NoDisturbances, opts(5, false)).unwrap();
+    let bs = RunSummary::from_log(&base.sim.log);
+    for name in ["none", "spot", "straggler", "failure", "autoscale"] {
+        let sc = scenario::by_name(name).unwrap();
+        let run = engine::run(&profile, &fleet, sc.as_ref(), opts(5, false)).unwrap();
+        let s = RunSummary::from_log(&run.sim.log);
+        let lost_events = run
+            .sim
+            .log
+            .events
+            .iter()
+            .filter(|e| matches!(e, Event::MachineLost { .. }))
+            .count();
+        let joined_events = run
+            .sim
+            .log
+            .events
+            .iter()
+            .filter(|e| matches!(e, Event::MachineJoined { .. }))
+            .count();
+        match name {
+            "none" => {
+                assert_eq!(run.timeline, base.timeline, "none must replay the baseline");
+                assert_eq!(s.duration_s, bs.duration_s);
+                assert_eq!((lost_events, joined_events), (0, 0));
+            }
+            "spot" => {
+                // 6 machines -> 1 auto victim; it stops billing at reclaim
+                assert_eq!(lost_events, 1, "spot reclaims one machine");
+                assert_eq!(s.machines_lost, 1);
+                assert!(
+                    run.timeline.machine_seconds() < 6.0 * s.duration_s,
+                    "the reclaimed machine's uptime segment must end early"
+                );
+            }
+            "straggler" => {
+                assert!(
+                    s.duration_s > bs.duration_s,
+                    "straggler must strictly stretch the run: {} vs {}",
+                    s.duration_s,
+                    bs.duration_s
+                );
+                assert_eq!((lost_events, joined_events), (0, 0));
+            }
+            "failure" => {
+                assert_eq!((lost_events, joined_events), (1, 1), "crash then restart");
+                // the restarted machine bills two uptime segments
+                assert_eq!(run.timeline.entries.len(), 7);
+                assert!(s.duration_s > bs.duration_s, "losing in-flight work costs time");
+            }
+            "autoscale" => {
+                assert_eq!(joined_events, 6, "default autoscale doubles the fleet");
+                assert_eq!(lost_events, 0);
+                assert_eq!(run.timeline.entries.len(), 12);
+                // late joiners bill only from their join time
+                let late: Vec<_> =
+                    run.timeline.entries.iter().filter(|e| e.up_from_s > 0.0).collect();
+                assert_eq!(late.len(), 6);
+            }
+            other => unreachable!("unknown scenario {other}"),
+        }
+    }
+}
+
+#[test]
 fn blink_table1_picks_survive_the_engine_refactor() {
     // the legacy path (simulate -> engine + none) still lands the paper's
     // bold numbers; redundant with blink's own tests, but cheap insurance

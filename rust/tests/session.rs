@@ -337,7 +337,7 @@ fn apps_report_round_trips() {
     let rows = j.path(&["apps"]).unwrap().as_arr().unwrap();
     assert_eq!(rows.len(), all_apps().len());
     for (row, app) in rows.iter().zip(all_apps()) {
-        assert_eq!(row.path(&["name"]).unwrap().as_str(), Some(app.name));
+        assert_eq!(row.path(&["name"]).unwrap().as_str(), Some(app.name.as_str()));
         assert_eq!(num(row, &["input_mb"]), app.input_mb_full);
     }
 }
