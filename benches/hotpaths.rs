@@ -1,18 +1,24 @@
 //! Micro-benchmarks of the hot paths (the §Perf instrument panel):
 //! simulator task throughput, memory-manager ops, NNLS fitting (Rust vs
-//! PJRT Pallas kernel), selector, and listener-log serialization.
+//! PJRT Pallas kernel), planner search (pruned vs frozen exhaustive),
+//! selector, and listener-log serialization.
 //! `cargo bench --bench hotpaths`.
+//!
+//! Recording a baseline:
+//! `BLINK_BENCH_JSON=BENCH_hotpaths.json cargo bench --bench hotpaths`;
+//! CI smoke adds `BLINK_BENCH_SMOKE=1` (fewer samples, same schema).
 
 use blink::blink::models::{FitBackend, FitProblem, RustFit};
-use blink::blink::select_cluster_size;
+use blink::blink::{plan, plan_exhaustive, select_cluster_size, PlanInput};
+use blink::cost::PerInstanceHour;
 use blink::memory::{EvictionPolicy, PartitionKey, UnifiedMemory};
 use blink::metrics::{EventLog, RunSummary};
-use blink::sim::{simulate, ClusterSpec, MachineSpec, SimOptions};
+use blink::sim::{simulate, ClusterSpec, InstanceCatalog, MachineSpec, SimOptions};
 use blink::util::bench::Bencher;
 use blink::workloads::{app_by_name, FULL_SCALE};
 
 fn main() {
-    let mut b = Bencher::default();
+    let mut b = Bencher::from_env();
 
     // ---- simulator: full svm actual run (2000 parts x 101 jobs) --------
     let svm = app_by_name("svm").unwrap();
@@ -91,6 +97,29 @@ fn main() {
         eprintln!("skipping pjrt bench: run `make artifacts`");
     }
 
+    // ---- planner: branch-and-bound vs the frozen exhaustive grid ----------
+    let als = app_by_name("als").unwrap();
+    let als_profile = als.profile(FULL_SCALE);
+    let input = PlanInput {
+        profile: &als_profile,
+        cached_total_mb: als.total_true_cached_mb(FULL_SCALE),
+        exec_total_mb: als.exec_mem_mb(FULL_SCALE),
+    };
+    let catalog = InstanceCatalog::all();
+    let pricing = PerInstanceHour::hourly();
+    let pruned_s =
+        b.bench("planner/plan-cloud-x64", || plan(&input, &catalog, &pricing, 64)).median_s();
+    let full_s = b
+        .bench("planner/plan-exhaustive-cloud-x64", || {
+            plan_exhaustive(&input, &catalog, &pricing, 64)
+        })
+        .median_s();
+    println!(
+        "  -> pruning speedup {:.2}x on {} types x 64 counts",
+        full_s / pruned_s,
+        catalog.instances.len()
+    );
+
     // ---- selector ---------------------------------------------------------
     let machine = MachineSpec::worker_node();
     b.bench("selector/sweep-64-sizes", || {
@@ -114,6 +143,12 @@ fn main() {
     b.bench("metrics/parse-jsonl+summarize", || {
         RunSummary::from_log(&EventLog::from_jsonl(&text).unwrap())
     });
+
+    match b.write_json_from_env("hotpaths") {
+        Ok(Some(path)) => println!("bench json -> {path}"),
+        Ok(None) => {}
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
 
     println!("\nall hot-path benches done");
 }

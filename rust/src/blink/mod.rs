@@ -42,7 +42,10 @@ pub mod selector;
 pub mod session;
 
 pub use models::{FitBackend, RustFit};
-pub use planner::{plan, risk_adjusted, CandidateConfig, Plan, PlanInput, RiskAdjustedPick, TypePick};
+pub use planner::{
+    plan, plan_exhaustive, risk_adjusted, CandidateConfig, Plan, PlanInput, RiskAdjustedPick,
+    TypePick,
+};
 pub use predictor::{ExecMemoryPredictor, SizePredictor};
 pub use report::{OutputFormat, Report};
 pub use sample_runs::{SampleRun, SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};

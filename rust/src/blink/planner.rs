@@ -12,12 +12,27 @@
 //! * one *recommended* configuration per instance type (the minimal
 //!   eviction-free count — exactly the §5.4 rule applied to that type),
 //!   ranked across types by predicted cost;
-//! * the full evaluation grid;
+//! * the evaluation grid (pruned — see below);
 //! * the Pareto front of the (time, cost) trade-off, for operators who can
 //!   spend money to go faster.
 //!
 //! On a single-type catalog the ranked list degenerates to the classic
 //! [`select_cluster_size`] answer — the reproduction path never changes.
+//!
+//! ## Branch-and-bound pruning
+//!
+//! [`plan`] no longer evaluates the exhaustive `(type × count)` grid.
+//! [`select_cluster_size`] scans counts upward and returns the *first*
+//! eviction-free `n` for a type (the §5.4 lower bound), so every count
+//! below `selection.machines` is saturated — never a ranked pick, and
+//! never on the Pareto front, which is drawn from eviction-free
+//! candidates. Each type therefore only evaluates
+//! `selection.machines..=max_machines` (a saturated type contributes just
+//! its boundary candidate). When *every* type saturates, the front falls
+//! back to the whole grid, so [`plan`] delegates to the frozen
+//! [`plan_exhaustive`] — the pre-pruning implementation kept as the
+//! reference the property tests compare against. Ranked picks and Pareto
+//! front are byte-identical between the two; only `Plan::grid` shrinks.
 
 use super::selector::{machine_split, select_cluster_size, Selection};
 use crate::cost::PricingModel;
@@ -70,7 +85,10 @@ pub struct Plan {
     /// One pick per instance type, best (eviction-free, then cheapest)
     /// first.
     pub ranked: Vec<TypePick>,
-    /// Every evaluated candidate (catalog types × 1..=max_machines).
+    /// Every evaluated candidate. [`plan_exhaustive`] fills the full
+    /// catalog types × 1..=max_machines grid; [`plan`] prunes counts below
+    /// each type's §5.4 lower bound (they can influence neither the ranked
+    /// picks nor the Pareto front).
     pub grid: Vec<CandidateConfig>,
     /// Non-dominated (time, cost) candidates among the eviction-free grid
     /// (the whole grid when nothing fits), sorted fastest-first.
@@ -162,7 +180,10 @@ fn dominates(a: &CandidateConfig, b: &CandidateConfig) -> bool {
         && (a.predicted_time_s < b.predicted_time_s || a.predicted_cost < b.predicted_cost)
 }
 
-fn pareto_front(grid: &[CandidateConfig]) -> Vec<CandidateConfig> {
+/// The frozen quadratic Pareto filter the pre-pruning planner shipped
+/// with, kept verbatim for [`plan_exhaustive`]: every pool member is
+/// tested against every other via [`dominates`].
+fn pareto_front_exhaustive(grid: &[CandidateConfig]) -> Vec<CandidateConfig> {
     let free: Vec<&CandidateConfig> = grid.iter().filter(|c| c.eviction_free).collect();
     let pool: Vec<&CandidateConfig> =
         if free.is_empty() { grid.iter().collect() } else { free };
@@ -171,18 +192,130 @@ fn pareto_front(grid: &[CandidateConfig]) -> Vec<CandidateConfig> {
         .filter(|c| !pool.iter().any(|o| dominates(o, c)))
         .map(|c| (*c).clone())
         .collect();
+    sort_front(&mut front);
+    front.dedup();
+    front
+}
+
+fn sort_front(front: &mut [CandidateConfig]) {
     front.sort_by(|a, b| {
         a.predicted_time_s
             .total_cmp(&b.predicted_time_s)
             .then(a.predicted_cost.total_cmp(&b.predicted_cost))
             .then(a.instance.cmp(&b.instance))
     });
+}
+
+/// Non-dominated (time, cost) filter in `O(G log G)`: sort by time then
+/// cost, sweep in time order keeping the lowest cost seen at strictly
+/// earlier times; within an equal-time group only the group's cost minima
+/// survive, and only when they strictly undercut every earlier time.
+/// Produces the same front as [`pareto_front_exhaustive`] — same
+/// survivors, same final order — which the planner property suites assert
+/// across the testkit matrix.
+fn pareto_front(grid: &[CandidateConfig]) -> Vec<CandidateConfig> {
+    let free: Vec<&CandidateConfig> = grid.iter().filter(|c| c.eviction_free).collect();
+    let mut pool: Vec<&CandidateConfig> =
+        if free.is_empty() { grid.iter().collect() } else { free };
+    pool.sort_by(|a, b| {
+        a.predicted_time_s
+            .total_cmp(&b.predicted_time_s)
+            .then(a.predicted_cost.total_cmp(&b.predicted_cost))
+    });
+    let mut front: Vec<CandidateConfig> = Vec::new();
+    let mut best_cost = f64::INFINITY;
+    let mut i = 0;
+    while i < pool.len() {
+        // arithmetic (==) grouping so ±0.0 times merge exactly as the
+        // `dominates` comparisons treat them; equal times are contiguous
+        // after the total_cmp sort
+        let t = pool[i].predicted_time_s;
+        let mut j = i;
+        let mut group_min = f64::INFINITY;
+        while j < pool.len() && pool[j].predicted_time_s == t {
+            group_min = group_min.min(pool[j].predicted_cost);
+            j += 1;
+        }
+        if group_min < best_cost {
+            for c in &pool[i..j] {
+                if c.predicted_cost == group_min {
+                    front.push((*c).clone());
+                }
+            }
+            best_cost = group_min;
+        }
+        i = j;
+    }
+    sort_front(&mut front);
     front.dedup();
     front
 }
 
-/// Search every `(instance type × count)` configuration of `catalog`.
+fn sort_ranked(ranked: &mut [TypePick]) {
+    ranked.sort_by(|a, b| {
+        b.candidate
+            .eviction_free
+            .cmp(&a.candidate.eviction_free)
+            .then(a.candidate.predicted_cost.total_cmp(&b.candidate.predicted_cost))
+            .then(a.candidate.predicted_time_s.total_cmp(&b.candidate.predicted_time_s))
+            .then(a.candidate.instance.cmp(&b.candidate.instance))
+    });
+}
+
+/// Branch-and-bound search over `catalog`: per type, counts below the
+/// §5.4 eviction-free lower bound are pruned (see the module docs for the
+/// argument), so a Crispy-sized catalog costs `O(types × free-range)`
+/// instead of `O(types × max_machines)` evaluations. Ranked picks and
+/// Pareto front are byte-identical to [`plan_exhaustive`].
 pub fn plan(
+    input: &PlanInput<'_>,
+    catalog: &InstanceCatalog,
+    pricing: &dyn PricingModel,
+    max_machines: usize,
+) -> Plan {
+    assert!(max_machines >= 1);
+    let selections: Vec<Selection> = catalog
+        .instances
+        .iter()
+        .map(|instance| {
+            select_cluster_size(
+                input.cached_total_mb,
+                input.exec_total_mb,
+                &instance.spec,
+                max_machines,
+            )
+        })
+        .collect();
+    if selections.iter().all(|s| s.saturated) {
+        // nothing fits anywhere: the Pareto front falls back to the whole
+        // grid, so every candidate matters — no pruning is sound
+        return plan_exhaustive(input, catalog, pricing, max_machines);
+    }
+    let mut grid = Vec::with_capacity(catalog.instances.len() * max_machines);
+    let mut ranked = Vec::with_capacity(catalog.instances.len());
+    for (instance, selection) in catalog.instances.iter().zip(selections) {
+        // the selector scanned 1..=max and `selection.machines` is the
+        // first eviction-free count (== max_machines when saturated):
+        // everything below is saturated and prunable
+        for n in selection.machines..=max_machines {
+            let c = evaluate(input, instance, n, pricing);
+            if n == selection.machines {
+                ranked.push(TypePick { candidate: c.clone(), selection: selection.clone() });
+            }
+            grid.push(c);
+        }
+    }
+    sort_ranked(&mut ranked);
+    let pareto = pareto_front(&grid);
+    Plan { ranked, grid, pareto }
+}
+
+/// The frozen exhaustive reference: every `(instance type × count)`
+/// candidate of `catalog`, filtered by the quadratic Pareto pass — the
+/// planner exactly as it shipped before pruning. Kept public so property
+/// tests (and the `planner/plan-exhaustive-*` bench) can assert [`plan`]
+/// never diverges from it.
+pub fn plan_exhaustive(
     input: &PlanInput<'_>,
     catalog: &InstanceCatalog,
     pricing: &dyn PricingModel,
@@ -206,15 +339,8 @@ pub fn plan(
             grid.push(c);
         }
     }
-    ranked.sort_by(|a, b| {
-        b.candidate
-            .eviction_free
-            .cmp(&a.candidate.eviction_free)
-            .then(a.candidate.predicted_cost.total_cmp(&b.candidate.predicted_cost))
-            .then(a.candidate.predicted_time_s.total_cmp(&b.candidate.predicted_time_s))
-            .then(a.candidate.instance.cmp(&b.candidate.instance))
-    });
-    let pareto = pareto_front(&grid);
+    sort_ranked(&mut ranked);
+    let pareto = pareto_front_exhaustive(&grid);
     Plan { ranked, grid, pareto }
 }
 
@@ -261,14 +387,18 @@ pub fn risk_adjusted(
     seeds: &[u64],
     top_k: usize,
 ) -> Vec<RiskAdjustedPick> {
-    let mut out = Vec::new();
-    for pick in plan.ranked.iter().take(top_k) {
-        let Some(instance) = catalog.get(&pick.candidate.instance) else {
-            continue;
-        };
-        let Ok(fleet) = FleetSpec::homogeneous(instance.clone(), pick.candidate.machines) else {
-            continue;
-        };
+    let picks: Vec<&TypePick> = plan.ranked.iter().take(top_k).collect();
+    if picks.is_empty() {
+        return Vec::new();
+    }
+    // one engine-validation task per pick, fanned out over the bounded
+    // sweep pool; the per-seed loop stays serial inside each task, so the
+    // f64 accumulation order — and thus every mean — is bit-identical to
+    // the historical serial path
+    let validated = crate::util::par::sweep_range(0, picks.len() - 1, |i| {
+        let pick = picks[i];
+        let instance = catalog.get(&pick.candidate.instance)?;
+        let fleet = FleetSpec::homogeneous(instance.clone(), pick.candidate.machines).ok()?;
         let (mut time, mut cost, mut lost, mut runs) = (0.0, 0.0, 0.0, 0usize);
         for &seed in seeds {
             let opts = SimOptions {
@@ -288,7 +418,7 @@ pub fn risk_adjusted(
         }
         if runs == 0 {
             // every validation run collapsed: rank the pick last, loudly
-            out.push(RiskAdjustedPick {
+            return Some(RiskAdjustedPick {
                 pick: pick.clone(),
                 realized_time_s: f64::INFINITY,
                 realized_cost: f64::INFINITY,
@@ -296,19 +426,19 @@ pub fn risk_adjusted(
                 cost_inflation: f64::INFINITY,
                 completed_runs: 0,
             });
-            continue;
         }
         let k = runs as f64;
         let realized_cost = cost / k;
-        out.push(RiskAdjustedPick {
+        Some(RiskAdjustedPick {
             pick: pick.clone(),
             realized_time_s: time / k,
             realized_cost,
             machines_lost: lost / k,
             cost_inflation: realized_cost / pick.candidate.predicted_cost.max(1e-12),
             completed_runs: runs,
-        });
-    }
+        })
+    });
+    let mut out: Vec<RiskAdjustedPick> = validated.into_iter().flatten().collect();
     out.sort_by(|a, b| {
         a.realized_cost
             .total_cmp(&b.realized_cost)
@@ -340,7 +470,60 @@ mod tests {
         let sel = select_cluster_size(cached, exec, &MachineSpec::worker_node(), 12);
         assert_eq!(p.ranked[0].selection, sel);
         assert_eq!(p.ranked[0].candidate.machines, sel.machines);
-        assert_eq!(p.grid.len(), 12);
+        // the pruned grid starts at the §5.4 lower bound instead of 1
+        assert_eq!(p.grid.len(), 12 - sel.machines + 1);
+        let full = plan_exhaustive(&input, &catalog, &MachineSeconds, 12);
+        assert_eq!(full.grid.len(), 12);
+        assert_eq!(p.ranked, full.ranked);
+        assert_eq!(p.pareto, full.pareto);
+    }
+
+    #[test]
+    fn pruned_plan_matches_the_frozen_exhaustive_reference() {
+        // picks and front byte-identical across catalogs, pricing models
+        // and scales — the grid is the only thing pruning may change
+        for (app, scale) in [("svm", FULL_SCALE), ("als", FULL_SCALE), ("km", 300.0)] {
+            let (profile, cached, exec) = input_for(app, scale);
+            let input =
+                PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+            for max in [1, 4, 12] {
+                let a = plan(&input, &InstanceCatalog::cloud(), &PerInstanceHour::hourly(), max);
+                let b = plan_exhaustive(
+                    &input,
+                    &InstanceCatalog::cloud(),
+                    &PerInstanceHour::hourly(),
+                    max,
+                );
+                assert_eq!(a.ranked, b.ranked, "{app}@{scale} max={max}");
+                assert_eq!(a.pareto, b.pareto, "{app}@{scale} max={max}");
+                assert!(a.grid.len() <= b.grid.len());
+                // every pruned-away candidate was saturated
+                let kept: std::collections::BTreeSet<(String, usize)> =
+                    a.grid.iter().map(|c| (c.instance.clone(), c.machines)).collect();
+                for c in &b.grid {
+                    if !kept.contains(&(c.instance.clone(), c.machines)) {
+                        assert!(!c.eviction_free, "pruned a free candidate: {c:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_saturated_catalog_falls_back_to_the_full_grid() {
+        // a footprint nothing fits: the front must be drawn from the whole
+        // grid, so plan() delegates to the exhaustive reference wholesale
+        let (profile, _, _) = input_for("svm", FULL_SCALE);
+        let input =
+            PlanInput { profile: &profile, cached_total_mb: 9.0e9, exec_total_mb: 1.0e6 };
+        let p = plan(&input, &InstanceCatalog::cloud(), &MachineSeconds, 6);
+        let full = plan_exhaustive(&input, &InstanceCatalog::cloud(), &MachineSeconds, 6);
+        assert!(p.ranked.iter().all(|t| t.selection.saturated));
+        assert_eq!(p.grid.len(), InstanceCatalog::cloud().instances.len() * 6);
+        assert_eq!(p.ranked, full.ranked);
+        assert_eq!(p.grid, full.grid);
+        assert_eq!(p.pareto, full.pareto);
+        assert!(!p.pareto.is_empty(), "saturated front still offers trade-offs");
     }
 
     #[test]

@@ -13,7 +13,9 @@ use crate::metrics::RunSummary;
 use crate::sim::{FleetTimeline, InstanceType};
 
 /// Prices a run of `machines` nodes of one instance type for a duration.
-pub trait PricingModel {
+/// `Sync` because pricing models are stateless lookup tables and the
+/// planner shares one reference across its parallel validation sweep.
+pub trait PricingModel: Sync {
     fn name(&self) -> &'static str;
 
     /// Cost of keeping `machines` nodes of `instance` busy `duration_s`

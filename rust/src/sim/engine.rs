@@ -48,7 +48,8 @@
 //! concurrent, so this only shifts which in-flight tasks a loss rewinds;
 //! job barriers and all cross-job effects remain time-consistent.
 
-use std::collections::VecDeque;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::cluster::InstanceType;
 use super::fleet::{FleetSpec, SimError};
@@ -165,45 +166,61 @@ struct QueueItem {
     kind: QueuedKind,
 }
 
-/// Time-ordered queue of pending engine events. Sizes are tiny (a handful
-/// of disturbances per run), so a scanned `Vec` beats a heap and keeps
-/// `(at_s, seq)` ordering trivially stable.
+// Min-ordering on `(at_s, seq)` via `Reverse` in the heap below. `total_cmp`
+// gives a total order on `f64`, but non-finite times are rejected at intake
+// (`run` returns [`SimError::NonFiniteEventTime`]) because a NaN deadline
+// would sort after every finite time and silently starve the queue.
+impl Ord for QueueItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.at_s.total_cmp(&other.at_s).then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for QueueItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for QueueItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for QueueItem {}
+
+/// Time-ordered queue of pending engine events: a binary min-heap keyed on
+/// `(at_s, seq)`. Replaces the historical scanned-`Vec` whose `pop_due` was
+/// O(n) per call (O(n²) per drained queue); the heap keeps the same
+/// deterministic `(at_s, seq)` order at O(log n) per operation, which is
+/// what lets dense disturbance schedules (large spot fleets, autoscale
+/// storms) stay off the profile.
 struct EventQueue {
-    items: Vec<QueueItem>,
+    heap: BinaryHeap<Reverse<QueueItem>>,
     seq: u64,
 }
 
 impl EventQueue {
     fn new() -> Self {
-        EventQueue { items: Vec::new(), seq: 0 }
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
     }
 
     fn push(&mut self, at_s: f64, kind: QueuedKind) {
+        debug_assert!(at_s.is_finite(), "event time must be finite (guarded at intake)");
         let seq = self.seq;
         self.seq += 1;
-        self.items.push(QueueItem { at_s, seq, kind });
+        self.heap.push(Reverse(QueueItem { at_s, seq, kind }));
     }
 
     /// Remove and return the earliest item due at or before `t`, if any.
+    /// The heap minimum is the globally earliest `(at_s, seq)`, so if it is
+    /// not due nothing is — identical semantics to the old full scan.
     fn pop_due(&mut self, t: f64) -> Option<QueueItem> {
-        let mut best: Option<usize> = None;
-        for (i, it) in self.items.iter().enumerate() {
-            if it.at_s > t {
-                continue;
-            }
-            best = match best {
-                None => Some(i),
-                Some(b) => {
-                    let cur = &self.items[b];
-                    if (it.at_s, it.seq) < (cur.at_s, cur.seq) {
-                        Some(i)
-                    } else {
-                        Some(b)
-                    }
-                }
-            };
+        match self.heap.peek() {
+            Some(Reverse(item)) if item.at_s <= t => self.heap.pop().map(|r| r.0),
+            _ => None,
         }
-        best.map(|i| self.items.remove(i))
     }
 }
 
@@ -226,13 +243,18 @@ enum JournalEntry {
     Marker(Event),
 }
 
-fn flush_journal(log: &mut EventLog, journal: &mut Vec<JournalEntry>) {
+/// Drain the journal into the log in assignment order. Emptied per-task
+/// event buffers are returned to `spare` so the next job's tasks reuse
+/// their capacity instead of reallocating — one of the two allocation hot
+/// spots the perf baseline (`BENCH_hotpaths.json`) tracks.
+fn flush_journal(log: &mut EventLog, journal: &mut Vec<JournalEntry>, spare: &mut Vec<Vec<Event>>) {
     for entry in journal.drain(..) {
         match entry {
-            JournalEntry::Task { events, .. } => {
-                for e in events {
+            JournalEntry::Task { mut events, .. } => {
+                for e in events.drain(..) {
                     log.push(e);
                 }
+                spare.push(events);
             }
             JournalEntry::Marker(e) => log.push(e),
         }
@@ -525,8 +547,12 @@ fn apply_item(
             }
         }
         QueuedKind::Disturb(DisturbanceKind::ScaleOut { instance, count }) => {
-            // degenerate instance shapes are ignored, not panicked on
-            if FleetSpec::homogeneous(instance.clone(), count.max(1)).is_err() {
+            // degenerate requests are ignored, not panicked on — and a
+            // zero-count scale-out must be rejected *before* mutating
+            // `groups`: the old `count.max(1)` validation let `count == 0`
+            // through, pushing an empty `InstanceGroup` into the group
+            // table (and its type into every later overhead aggregation)
+            if count == 0 || FleetSpec::homogeneous(instance.clone(), count).is_err() {
                 return;
             }
             let group = groups.len();
@@ -606,6 +632,25 @@ pub fn run(
     let mut queue = EventQueue::new();
     let horizon = horizon_s(profile, fleet);
     for d in scenario.schedule(&ScenarioCtx { fleet, profile, horizon_s: horizon }) {
+        // NaN/infinite deadlines would sort after every finite time and
+        // silently starve the queue (the run would simply never see the
+        // disturbance, or hang fast-forwarding to it) — reject them as a
+        // typed error at intake instead
+        if !d.at_s.is_finite() {
+            return Err(SimError::NonFiniteEventTime {
+                scenario: scenario.name().to_string(),
+                at_s: d.at_s,
+            });
+        }
+        if let DisturbanceKind::Fail { restart_delay_s, .. } = d.kind {
+            // the restart schedules a second queue push at `at_s + delay`
+            if !restart_delay_s.is_finite() || !(d.at_s + restart_delay_s).is_finite() {
+                return Err(SimError::NonFiniteEventTime {
+                    scenario: scenario.name().to_string(),
+                    at_s: d.at_s + restart_delay_s,
+                });
+            }
+        }
         queue.push(d.at_s, QueuedKind::Disturb(d.kind));
     }
 
@@ -628,13 +673,18 @@ pub fn run(
     // rewound by a machine loss at time t must not re-run before t, even
     // on a survivor whose slot idled earlier (causality of the retry)
     let mut not_before: Vec<f64> = vec![0.0; parts];
+    // work list, journal and per-task event buffers are allocated once and
+    // recycled across every job of the run: the journal drains at each
+    // barrier and the emptied event buffers rotate through `spare_events`
+    let mut pending: VecDeque<usize> = VecDeque::with_capacity(parts);
+    let mut journal: Vec<JournalEntry> = Vec::new();
+    let mut spare_events: Vec<Vec<Event>> = Vec::new();
 
     // ---------------------------------------------------------- job 0 ----
     // Materialize: read input, compute, cache each partition where it ran.
     let input_per_task = profile.input_mb / parts as f64;
     {
-        let mut pending: VecDeque<usize> = (0..parts).collect();
-        let mut journal: Vec<JournalEntry> = Vec::new();
+        pending.extend(0..parts);
         loop {
             while let Some(p) = pending.pop_front() {
                 loop {
@@ -686,7 +736,7 @@ pub fn run(
                         * machines[mi].slowdown_at(start);
                     machines[mi].slots[si] = start + dur;
                     machines[mi].tasks_run += 1;
-                    let mut events = Vec::new();
+                    let mut events = spare_events.pop().unwrap_or_default();
                     let mut entry_evictions = 0usize;
                     if detailed {
                         events.push(Event::TaskEnd {
@@ -755,7 +805,7 @@ pub fn run(
             now = b;
             break;
         }
-        flush_journal(&mut log, &mut journal);
+        flush_journal(&mut log, &mut journal, &mut spare_events);
     }
     now += profile.serial_s + fleet_overhead_s(profile, &machines, &groups);
     set_all_slots(&mut machines, now);
@@ -768,8 +818,8 @@ pub fn run(
 
     // ------------------------------------------------- iteration jobs ----
     for job in 1..=profile.iterations {
-        let mut pending: VecDeque<usize> = (0..parts).collect();
-        let mut journal: Vec<JournalEntry> = Vec::new();
+        pending.clear();
+        pending.extend(0..parts);
         // losses/joins between jobs take effect before the exec claim
         while let Some(item) = queue.pop_due(now) {
             apply_item(
@@ -786,11 +836,12 @@ pub fn run(
                 now,
             );
         }
-        flush_journal(&mut log, &mut journal);
+        flush_journal(&mut log, &mut journal, &mut spare_events);
         // the between-jobs drain only produces markers (the journal was
         // empty, so nothing could rewind); start the job from a clean
         // work list and retry-floor
-        pending = (0..parts).collect();
+        pending.clear();
+        pending.extend(0..parts);
         for nb in &mut not_before {
             *nb = 0.0;
         }
@@ -818,7 +869,7 @@ pub fn run(
             );
             alive_n = machines.iter().filter(|m| m.alive).count();
         }
-        flush_journal(&mut log, &mut journal);
+        flush_journal(&mut log, &mut journal, &mut spare_events);
 
         // Execution memory is claimed at the start of each action; with a
         // thin margin this is what evicts over-cached machines (Fig. 11).
@@ -911,7 +962,7 @@ pub fn run(
                     machines[mi].slots[si] = start + dur;
                     machines[mi].tasks_run += 1;
                     machines[mi].iter_tasks += 1;
-                    let mut events = Vec::new();
+                    let mut events = spare_events.pop().unwrap_or_default();
                     let mut entry_evictions = 0usize;
                     if detailed {
                         events.push(Event::TaskEnd {
@@ -977,7 +1028,7 @@ pub fn run(
             }
             break;
         }
-        flush_journal(&mut log, &mut journal);
+        flush_journal(&mut log, &mut journal, &mut spare_events);
         let job_start = now;
         now = barrier(&machines, now);
         now += profile.serial_s + fleet_overhead_s(profile, &machines, &groups);
@@ -1260,5 +1311,53 @@ mod tests {
         let big = horizon_s(&p, &worker_fleet(8));
         assert!(small > 0.0 && big > 0.0);
         assert!(big < small, "more slots, shorter horizon anchor");
+    }
+
+    #[test]
+    fn heap_queue_pops_by_time_then_insertion_order() {
+        // the heap-backed queue must keep the scanned-Vec semantics: due
+        // items come out ordered by (at_s, insertion seq), never by heap
+        // internals
+        let mut q = EventQueue::new();
+        q.push(5.0, QueuedKind::Rejoin { machine: 5 });
+        q.push(1.0, QueuedKind::Disturb(DisturbanceKind::Preempt { machine: 0 }));
+        q.push(1.0, QueuedKind::Rejoin { machine: 1 });
+        q.push(3.0, QueuedKind::Rejoin { machine: 3 });
+        assert!(q.pop_due(0.5).is_none(), "nothing due before t=1");
+        let a = q.pop_due(10.0).unwrap();
+        let b = q.pop_due(10.0).unwrap();
+        assert_eq!((a.at_s, b.at_s), (1.0, 1.0));
+        assert!(a.seq < b.seq, "ties break by insertion order");
+        assert!(matches!(a.kind, QueuedKind::Disturb(_)), "first pushed pops first");
+        assert_eq!(q.pop_due(10.0).unwrap().at_s, 3.0);
+        assert_eq!(q.pop_due(10.0).unwrap().at_s, 5.0);
+        assert!(q.pop_due(f64::INFINITY).is_none());
+    }
+
+    #[test]
+    fn scale_out_with_zero_count_is_rejected_before_mutating_the_fleet() {
+        // regression: the old code validated with `count.max(1)` but
+        // spawned with `count`, pushing an empty InstanceGroup into the
+        // fleet state and the realized timeline
+        struct ZeroScaleOut;
+        impl super::super::scenario::Scenario for ZeroScaleOut {
+            fn name(&self) -> &'static str {
+                "zero-scale-out"
+            }
+            fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<super::super::scenario::Disturbance> {
+                vec![super::super::scenario::Disturbance {
+                    at_s: ctx.horizon_s * 0.2,
+                    kind: DisturbanceKind::ScaleOut {
+                        instance: InstanceType::paper_worker(),
+                        count: 0,
+                    },
+                }]
+            }
+        }
+        let p = toy_profile(2000.0, 4, 32);
+        let disturbed = run(&p, &worker_fleet(3), &ZeroScaleOut, opts(9)).unwrap();
+        let base = run(&p, &worker_fleet(3), &NoDisturbances, opts(9)).unwrap();
+        assert_eq!(disturbed.timeline, base.timeline, "zero-count join must be a no-op");
+        assert_eq!(disturbed.sim.log.to_jsonl(), base.sim.log.to_jsonl());
     }
 }

@@ -33,6 +33,10 @@ pub enum SimError {
     NoBandwidth { instance: String },
     /// A disturbance scenario removed every machine mid-run.
     AllMachinesLost { at_s: f64 },
+    /// A scenario scheduled a disturbance at a NaN/infinite time. Rejected
+    /// at intake: a non-finite deadline sorts after every finite one, so it
+    /// would silently starve the event queue instead of ever firing.
+    NonFiniteEventTime { scenario: String, at_s: f64 },
 }
 
 impl std::fmt::Display for SimError {
@@ -56,6 +60,9 @@ impl std::fmt::Display for SimError {
             }
             SimError::AllMachinesLost { at_s } => {
                 write!(f, "scenario removed every machine by t={at_s:.1}s")
+            }
+            SimError::NonFiniteEventTime { scenario, at_s } => {
+                write!(f, "scenario '{scenario}' scheduled a disturbance at non-finite t={at_s}")
             }
         }
     }

@@ -54,7 +54,10 @@ pub enum DisturbanceKind {
 /// A disturbance scenario. Implementations are stateless (`&self`) so one
 /// scenario value can drive many engine runs (the planner's risk
 /// cross-validation reuses it across seeds and candidate fleets).
-pub trait Scenario {
+/// `Sync` because implementations are stateless and the planner's
+/// risk-adjusted validation fans engine runs out across threads, sharing
+/// one scenario reference per pick.
+pub trait Scenario: Sync {
     fn name(&self) -> &'static str;
     /// The disturbances to inject for this fleet/workload.
     fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance>;

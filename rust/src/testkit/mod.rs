@@ -27,7 +27,10 @@
 
 use std::fmt;
 
-use crate::blink::{machine_split, select_cluster_size, Advisor, RustFit, TrainedProfile};
+use crate::blink::{
+    machine_split, plan_exhaustive, select_cluster_size, Advisor, PlanInput, RustFit,
+    TrainedProfile,
+};
 use crate::cost::pricing_by_name;
 use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
@@ -202,12 +205,47 @@ pub fn check_profile(
                     ),
                 ));
             }
-            if plan.grid.len() != catalog.instances.len() * spec.max_machines {
+            // the pruned grid keeps, per type, exactly the counts from the
+            // §5.4 lower bound up (the whole 1..=max grid when every type
+            // saturates and plan() falls back to the exhaustive search)
+            let expected_grid: usize = if plan.ranked.iter().all(|t| t.selection.saturated) {
+                catalog.instances.len() * spec.max_machines
+            } else {
+                plan.ranked
+                    .iter()
+                    .map(|t| spec.max_machines - t.selection.machines + 1)
+                    .sum()
+            };
+            if plan.grid.len() != expected_grid {
                 out.push(violation(
                     app,
                     seed,
                     "plan-grid",
-                    format!("catalog '{catalog_name}': grid size {}", plan.grid.len()),
+                    format!(
+                        "catalog '{catalog_name}': grid size {} (expected {expected_grid})",
+                        plan.grid.len()
+                    ),
+                ));
+            }
+            // pruning must be invisible outside the grid: ranked picks and
+            // Pareto front byte-identical to the frozen exhaustive search
+            checks += 1;
+            let wp = app.profile(scale);
+            let input = PlanInput {
+                profile: &wp,
+                cached_total_mb: profile.predicted_cached_mb(scale),
+                exec_total_mb: profile.predicted_exec_mb(scale),
+            };
+            let full = plan_exhaustive(&input, &catalog, pricing.as_ref(), spec.max_machines);
+            if plan.ranked != full.ranked || plan.pareto != full.pareto {
+                out.push(violation(
+                    app,
+                    seed,
+                    "plan-pruned-exact",
+                    format!(
+                        "catalog '{catalog_name}' pricing '{pricing_name}': \
+                         branch-and-bound diverged from the exhaustive grid"
+                    ),
                 ));
             }
             // free picks precede saturated ones; free block sorted by cost

@@ -1,10 +1,40 @@
 //! Criterion-like micro-benchmark runner (offline stand-in for `criterion`).
 //!
-//! Fixed-iteration-count timing with warmup, reporting mean / σ / min per
-//! iteration. `benches/*.rs` are `harness = false` binaries built on this.
+//! Fixed-iteration-count timing with warmup, reporting median / mean / σ /
+//! min per iteration. `benches/*.rs` are `harness = false` binaries built
+//! on this. Two env knobs make the harness machine-recordable:
+//!
+//! * `BLINK_BENCH_SMOKE=1` — switch to the quick profile (fewer samples;
+//!   what the CI smoke job runs);
+//! * `BLINK_BENCH_JSON=<path>` — after the run, write every measurement as
+//!   a deterministic JSON report (the `BENCH_*.json` schema below), which
+//!   is how the committed `BENCH_hotpaths.json` baseline is produced.
+//!
+//! ## `BENCH_*.json` schema (version 1)
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "bench": "hotpaths",
+//!   "mode": "full" | "smoke",
+//!   "entries": {
+//!     "<name>": {"median_s": .., "mean_s": .., "std_s": .., "min_s": ..,
+//!                "samples": ..}
+//!   }
+//! }
+//! ```
+//!
+//! Committed baselines may carry extra advisory keys (e.g. `before` /
+//! `deltas` for recorded speedups); the harness never emits or reads them.
 
 use std::hint::black_box;
 use std::time::Instant;
+
+use super::json::Json;
+
+/// Version stamp of the emitted `BENCH_*.json` layout; CI's schema-drift
+/// check compares it against the committed baseline.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
 
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
@@ -14,6 +44,12 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Median seconds per iteration — the headline number (robust to a
+    /// stray slow sample, unlike the mean).
+    pub fn median_s(&self) -> f64 {
+        super::stats::percentile(&self.samples, 50.0)
+    }
+
     pub fn mean_s(&self) -> f64 {
         super::stats::mean(&self.samples)
     }
@@ -26,8 +62,18 @@ impl Measurement {
         super::stats::min(&self.samples)
     }
 
+    /// The entry object under `entries.<name>` in the JSON report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("median_s", Json::Num(self.median_s())),
+            ("mean_s", Json::Num(self.mean_s())),
+            ("std_s", Json::Num(self.std_s())),
+            ("min_s", Json::Num(self.min_s())),
+            ("samples", Json::Num(self.samples.len() as f64)),
+        ])
+    }
+
     pub fn report(&self) -> String {
-        let m = self.mean_s();
         let unit = |s: f64| {
             if s < 1e-6 {
                 format!("{:.1} ns", s * 1e9)
@@ -40,9 +86,10 @@ impl Measurement {
             }
         };
         format!(
-            "{:<44} mean {:>10}  σ {:>10}  min {:>10}  ({} samples)",
+            "{:<44} median {:>10}  mean {:>10}  σ {:>10}  min {:>10}  ({} samples)",
             self.name,
-            unit(m),
+            unit(self.median_s()),
+            unit(self.mean_s()),
             unit(self.std_s()),
             unit(self.min_s()),
             self.samples.len()
@@ -55,6 +102,9 @@ pub struct Bencher {
     pub warmup_iters: usize,
     pub sample_count: usize,
     pub iters_per_sample: usize,
+    /// `"full"` or `"smoke"` — recorded in the JSON report so a baseline
+    /// can never be silently compared against a smoke run.
+    pub mode: &'static str,
     pub results: Vec<Measurement>,
 }
 
@@ -64,6 +114,7 @@ impl Default for Bencher {
             warmup_iters: 3,
             sample_count: 10,
             iters_per_sample: 1,
+            mode: "full",
             results: Vec::new(),
         }
     }
@@ -71,7 +122,23 @@ impl Default for Bencher {
 
 impl Bencher {
     pub fn quick() -> Self {
-        Bencher { warmup_iters: 1, sample_count: 5, iters_per_sample: 1, results: Vec::new() }
+        Bencher {
+            warmup_iters: 1,
+            sample_count: 5,
+            iters_per_sample: 1,
+            mode: "smoke",
+            results: Vec::new(),
+        }
+    }
+
+    /// The profile the environment asks for: [`Bencher::quick`] when
+    /// `BLINK_BENCH_SMOKE` is set non-empty (and not `"0"`), the full
+    /// default otherwise.
+    pub fn from_env() -> Self {
+        match std::env::var("BLINK_BENCH_SMOKE") {
+            Ok(v) if !v.is_empty() && v != "0" => Bencher::quick(),
+            _ => Bencher::default(),
+        }
     }
 
     /// Time `f`, which must return a value (black-boxed to defeat DCE).
@@ -92,6 +159,36 @@ impl Bencher {
         self.results.push(m);
         self.results.last().unwrap()
     }
+
+    /// The full machine-readable report (schema above). Objects are
+    /// `BTreeMap`-backed, so the output is deterministic for a given set
+    /// of measurements.
+    pub fn to_json(&self, bench_name: &str) -> Json {
+        let entries: Vec<(&str, Json)> =
+            self.results.iter().map(|m| (m.name.as_str(), m.to_json())).collect();
+        Json::obj(vec![
+            ("schema_version", Json::Num(BENCH_SCHEMA_VERSION as f64)),
+            ("bench", Json::Str(bench_name.to_string())),
+            ("mode", Json::Str(self.mode.to_string())),
+            ("entries", Json::obj(entries)),
+        ])
+    }
+
+    /// Write the JSON report to the path in `BLINK_BENCH_JSON`, if set.
+    /// Returns the path written to. A bench binary calls this once at the
+    /// end of `main`.
+    pub fn write_json_from_env(&self, bench_name: &str) -> std::io::Result<Option<String>> {
+        let Ok(path) = std::env::var("BLINK_BENCH_JSON") else {
+            return Ok(None);
+        };
+        if path.is_empty() {
+            return Ok(None);
+        }
+        let mut text = self.to_json(bench_name).pretty();
+        text.push('\n');
+        std::fs::write(&path, text)?;
+        Ok(Some(path))
+    }
 }
 
 #[cfg(test)]
@@ -109,6 +206,7 @@ mod tests {
             acc
         });
         assert!(m.mean_s() > 0.0);
+        assert!(m.median_s() > 0.0);
         assert_eq!(m.samples.len(), 5);
     }
 
@@ -118,5 +216,34 @@ mod tests {
         assert!(m.report().contains("µs"));
         let m = Measurement { name: "x".into(), samples: vec![2.0, 2.0] };
         assert!(m.report().contains(" s"));
+    }
+
+    #[test]
+    fn median_is_robust_to_one_outlier() {
+        let m = Measurement { name: "x".into(), samples: vec![1.0, 1.0, 1.0, 1.0, 100.0] };
+        assert_eq!(m.median_s(), 1.0);
+        assert!(m.mean_s() > 20.0);
+    }
+
+    #[test]
+    fn json_report_carries_schema_mode_and_entries() {
+        let mut b = Bencher::quick();
+        b.bench("a/first", || 1u64);
+        b.bench("b/second", || 2u64);
+        let j = b.to_json("hotpaths");
+        assert_eq!(j.get("schema_version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("hotpaths"));
+        assert_eq!(j.get("mode").and_then(Json::as_str), Some("smoke"));
+        for name in ["a/first", "b/second"] {
+            for field in ["median_s", "mean_s", "std_s", "min_s", "samples"] {
+                let v = j.path(&["entries", name, field]).and_then(Json::as_f64);
+                assert!(v.is_some(), "{name}.{field} missing");
+                assert!(v.unwrap() >= 0.0, "{name}.{field} negative");
+            }
+        }
+        // round-trips through the parser
+        let text = j.pretty();
+        let back = crate::util::json::parse(&text).expect("valid json");
+        assert_eq!(back, j);
     }
 }

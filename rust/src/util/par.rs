@@ -1,16 +1,27 @@
 //! Deterministic parallel sweeps over an index range.
 //!
 //! The experiment drivers evaluate many independent `(cluster size, seed)`
-//! simulations; [`sweep_range`] fans them out over scoped threads
-//! (`std::thread::scope`, no dependencies) and returns results in index
-//! order. Every simulation derives its RNG from the index, so the parallel
-//! sweep is *bit-identical* to [`sweep_range_serial`] — asserted by unit
-//! and integration tests, and the reason the drivers may use either path
-//! interchangeably.
+//! simulations; [`sweep_range`] fans them out over a bounded pool of scoped
+//! threads (`std::thread::scope`, no dependencies) and returns results in
+//! index order. Every simulation derives its RNG from the index, so the
+//! parallel sweep is *bit-identical* to [`sweep_range_serial`] — asserted by
+//! unit and integration tests, and the reason the drivers may use either
+//! path interchangeably.
+//!
+//! The pool is sized by `std::thread::available_parallelism` (capped at the
+//! range length), with workers pulling indices from a shared atomic counter.
+//! The historical one-OS-thread-per-index spawn made a large sweep — e.g. a
+//! Crispy-sized catalog of hundreds of instance types — exhaust thread
+//! limits; the bounded pool keeps the same ordered, bit-identical contract
+//! at any range size.
 
-/// Run `f(i)` for every `i` in `lo..=hi` on scoped threads; results are
-/// returned in index order. `f` must be pure per index (it receives no
-/// shared mutable state), which is what makes the sweep deterministic.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `f(i)` for every `i` in `lo..=hi` on a bounded pool of scoped
+/// threads; results are returned in index order. `f` must be pure per index
+/// (it receives no shared mutable state), which is what makes the sweep
+/// deterministic: each index's result is computed independently and placed
+/// by index, so scheduling order cannot leak into the output.
 pub fn sweep_range<T, F>(lo: usize, hi: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -19,15 +30,33 @@ where
     if hi < lo {
         return Vec::new();
     }
+    let n = hi - lo + 1;
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n);
     let mut out: Vec<Option<T>> = Vec::new();
-    out.resize_with(hi - lo + 1, || None);
+    out.resize_with(n, || None);
+    let next = AtomicUsize::new(0);
     std::thread::scope(|scope| {
-        for (i, slot) in out.iter_mut().enumerate() {
-            let f = &f;
-            // the scope joins every handle on exit; no need to keep them
-            let _ = scope.spawn(move || {
-                *slot = Some(f(lo + i));
-            });
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let f = &f;
+                let next = &next;
+                scope.spawn(move || {
+                    let mut done: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        done.push((i, f(lo + i)));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("sweep worker panicked") {
+                out[i] = Some(v);
+            }
         }
     });
     out.into_iter().map(|v| v.expect("sweep worker filled its slot")).collect()
@@ -75,5 +104,21 @@ mod tests {
     #[test]
     fn single_element() {
         assert_eq!(sweep_range(7, 7, |i| i + 1), vec![8]);
+    }
+
+    #[test]
+    fn large_range_stays_bounded_ordered_and_identical_to_serial() {
+        // regression for the unbounded spawn: 10_000 indices used to mean
+        // 10_000 OS threads; the pool must complete this with a handful,
+        // index-ordered and bit-identical to the serial path
+        let work = |i: usize| {
+            let mut rng = crate::util::prng::Rng::new(i as u64);
+            rng.f64() + i as f64
+        };
+        let par = sweep_range(0, 9_999, work);
+        let ser = sweep_range_serial(0, 9_999, work);
+        assert_eq!(par.len(), 10_000);
+        assert_eq!(par, ser);
+        assert!(par.windows(2).all(|w| w[1] > w[0]), "index order preserved");
     }
 }

@@ -9,7 +9,9 @@
 //!   for fixed seeds;
 //! * saturated selections surface a deficit, never positive headroom.
 
-use blink::blink::{plan, select_cluster_size, Blink, PlanInput, RustFit, DEFAULT_SCALES};
+use blink::blink::{
+    plan, plan_exhaustive, select_cluster_size, Blink, PlanInput, RustFit, DEFAULT_SCALES,
+};
 use blink::cost::{MachineSeconds, PerInstanceHour};
 use blink::experiments;
 use blink::metrics::RunSummary;
@@ -47,6 +49,44 @@ fn property_single_type_catalog_degenerates_to_selector() {
             }
             if pick.candidate.eviction_free == sel.saturated {
                 return Err("eviction_free must be the negation of saturated".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_pruned_plan_equals_the_frozen_exhaustive_grid() {
+    // branch-and-bound prunes counts below each type's §5.4 lower bound;
+    // ranked picks and Pareto front must be byte-identical to the frozen
+    // exhaustive reference for any footprint (the prop harness prints the
+    // failing seed and input on violation)
+    let app = app_by_name("als").unwrap();
+    let profile = app.profile(500.0);
+    check(
+        &Config { cases: 64, seed: 0xb1a6f00d, max_size: 64 },
+        |rng: &mut Rng, _size| (rng.range(10.0, 300_000.0), rng.range(0.0, 80_000.0)),
+        |&(cached, exec)| {
+            let input =
+                PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+            for catalog in [InstanceCatalog::cloud(), InstanceCatalog::all()] {
+                let pruned = plan(&input, &catalog, &PerInstanceHour::hourly(), 12);
+                let full = plan_exhaustive(&input, &catalog, &PerInstanceHour::hourly(), 12);
+                if pruned.ranked != full.ranked {
+                    return Err(format!(
+                        "ranked diverged on '{}' (cached {cached:.1} MB, exec {exec:.1} MB)",
+                        catalog.name
+                    ));
+                }
+                if pruned.pareto != full.pareto {
+                    return Err(format!(
+                        "pareto diverged on '{}' (cached {cached:.1} MB, exec {exec:.1} MB)",
+                        catalog.name
+                    ));
+                }
+                if pruned.grid.len() > full.grid.len() {
+                    return Err("pruned grid larger than exhaustive".into());
+                }
             }
             Ok(())
         },

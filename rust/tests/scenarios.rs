@@ -13,7 +13,11 @@ use blink::coordinator;
 use blink::cost::{PricingModel, SpotDiscount};
 use blink::memory::EvictionPolicy;
 use blink::metrics::{Event, EventLog, RunSummary};
-use blink::sim::{engine, scenario, FleetSpec, InstanceCatalog, SimOptions};
+use blink::sim::scenario::ScenarioCtx;
+use blink::sim::{
+    engine, scenario, Disturbance, DisturbanceKind, FleetSpec, InstanceCatalog, Scenario,
+    SimError, SimOptions,
+};
 use blink::workloads::app_by_name;
 
 fn opts(seed: u64, detailed: bool) -> SimOptions<'static> {
@@ -268,6 +272,85 @@ fn every_scenario_from_by_name_leaves_its_engine_level_signature() {
             other => unreachable!("unknown scenario {other}"),
         }
     }
+}
+
+#[test]
+fn zero_count_scale_out_is_a_no_op_not_a_phantom_group() {
+    // regression for the ScaleOut zero-count bug: validation used
+    // `count.max(1)` while the spawn loop used `count`, so a scenario
+    // emitting `count == 0` pushed an empty InstanceGroup into the fleet
+    // state and a zero-machine entry into the realized timeline
+    struct ZeroJoin;
+    impl Scenario for ZeroJoin {
+        fn name(&self) -> &'static str {
+            "zero-join"
+        }
+        fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+            vec![Disturbance {
+                at_s: ctx.horizon_s * 0.3,
+                kind: DisturbanceKind::ScaleOut {
+                    instance: InstanceCatalog::cloud().get("gp.xlarge").unwrap().clone(),
+                    count: 0,
+                },
+            }]
+        }
+    }
+    let app = app_by_name("km").unwrap();
+    let profile = app.profile(100.0);
+    let fleet = cloud_fleet("cpu.xlarge", 3);
+    let joined = engine::run(&profile, &fleet, &ZeroJoin, opts(2, false)).unwrap();
+    let base = engine::run(&profile, &fleet, &scenario::NoDisturbances, opts(2, false)).unwrap();
+    let s = RunSummary::from_log(&joined.sim.log);
+    assert_eq!(s.machines_joined, 0, "a zero-count join must not join anything");
+    assert_eq!(joined.timeline, base.timeline, "no phantom timeline entry");
+    assert_eq!(joined.sim.log.to_jsonl(), base.sim.log.to_jsonl());
+}
+
+#[test]
+fn non_finite_disturbance_times_are_a_typed_error_not_a_hang() {
+    // adversarial scenario: NaN/infinite deadlines sort after every finite
+    // time under total order, so pre-guard they would sit in the queue
+    // forever (a silently-starved disturbance) — intake must reject them
+    struct BadClock {
+        at_s: f64,
+    }
+    impl Scenario for BadClock {
+        fn name(&self) -> &'static str {
+            "bad-clock"
+        }
+        fn schedule(&self, _ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+            vec![Disturbance { at_s: self.at_s, kind: DisturbanceKind::Preempt { machine: 0 } }]
+        }
+    }
+    struct BadRestart;
+    impl Scenario for BadRestart {
+        fn name(&self) -> &'static str {
+            "bad-restart"
+        }
+        fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+            vec![Disturbance {
+                at_s: ctx.horizon_s * 0.2,
+                kind: DisturbanceKind::Fail { machine: 0, restart_delay_s: f64::INFINITY },
+            }]
+        }
+    }
+    let app = app_by_name("svm").unwrap();
+    let profile = app.profile(150.0);
+    let fleet = cloud_fleet("gp.xlarge", 4);
+    for at_s in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let err = engine::run(&profile, &fleet, &BadClock { at_s }, opts(1, false)).unwrap_err();
+        match err {
+            SimError::NonFiniteEventTime { ref scenario, .. } => {
+                assert_eq!(scenario, "bad-clock");
+            }
+            other => panic!("expected NonFiniteEventTime, got {other:?}"),
+        }
+        assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+    // a finite disturbance time with a non-finite restart delay is the
+    // same starvation in disguise (the rejoin event never fires)
+    let err = engine::run(&profile, &fleet, &BadRestart, opts(1, false)).unwrap_err();
+    assert!(matches!(err, SimError::NonFiniteEventTime { .. }), "{err:?}");
 }
 
 #[test]
