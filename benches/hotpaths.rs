@@ -62,6 +62,21 @@ fn main() {
     });
     println!("  -> {:.2} M tasks/s under spot preemption", tasks as f64 / m.mean_s() / 1e6);
 
+    // arena journal + detailed log: every task event flows through the
+    // flat event arena before the barrier flush
+    let quiet_fleet =
+        blink::sim::FleetSpec::homogeneous(blink::sim::InstanceType::paper_worker(), 4).unwrap();
+    let m = b.bench("engine/arena-svm-100pct-4-machines-detailed", || {
+        blink::sim::engine::run(
+            &profile,
+            &quiet_fleet,
+            &blink::sim::scenario::NoDisturbances,
+            SimOptions { seed: 1, detailed_log: true, ..Default::default() },
+        )
+        .unwrap()
+    });
+    println!("  -> {:.2} M detailed tasks/s through the arena", tasks as f64 / m.mean_s() / 1e6);
+
     // ---- memory manager --------------------------------------------------
     b.bench("memory/insert-evict-10k", || {
         let mut mem = UnifiedMemory::new(1000.0, 500.0, EvictionPolicy::Lru);
@@ -118,6 +133,17 @@ fn main() {
         "  -> pruning speedup {:.2}x on {} types x 64 counts",
         full_s / pruned_s,
         catalog.instances.len()
+    );
+
+    // cloud-scale catalog: 512 generated types, same footprint and count
+    // range as plan-cloud-x64 so the medians compare directly
+    let generated = InstanceCatalog::generate(42, 512);
+    let gen_s = b
+        .bench("planner/plan-generated-512", || plan(&input, &generated, &pricing, 64))
+        .median_s();
+    println!(
+        "  -> generated-512 at {:.2}x the 6-type cloud median",
+        gen_s / pruned_s
     );
 
     // ---- selector ---------------------------------------------------------

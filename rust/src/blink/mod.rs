@@ -43,13 +43,15 @@ pub mod session;
 
 pub use models::{FitBackend, RustFit};
 pub use planner::{
-    plan, plan_exhaustive, risk_adjusted, CandidateConfig, Plan, PlanInput, RiskAdjustedPick,
-    TypePick,
+    plan, plan_exhaustive, plan_exhaustive_search, plan_search, risk_adjusted, CandidateConfig,
+    Plan, PlanInput, RiskAdjustedPick, SearchSpace, TypePick,
 };
 pub use predictor::{ExecMemoryPredictor, SizePredictor};
 pub use report::{OutputFormat, Report};
 pub use sample_runs::{SampleRun, SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
-pub use selector::{machine_split, select_cluster_size, Selection};
+pub use selector::{
+    machine_split, machine_split_at, select_cluster_size, select_cluster_size_at, Selection,
+};
 pub use session::{Advisor, AdvisorBuilder, Recommendation, Scales, TrainedProfile, ValidationSpec};
 
 use crate::cost::PricingModel;

@@ -19,22 +19,50 @@
 //! On a single-type catalog the ranked list degenerates to the classic
 //! [`select_cluster_size`] answer — the reproduction path never changes.
 //!
+//! ## The memory-split dimension
+//!
+//! Crispy-style assistants tune the executor memory split, not just the
+//! machine count. [`SearchSpace::storage_fractions`] adds candidate
+//! `spark.memory.storageFraction` settings as a planner dimension: each
+//! `(type × fraction)` pair is searched as a virtual type through the
+//! same §5.4 geometry ([`machine_split_at`]), producing one ranked pick
+//! per pair and a Pareto front over the full `(type × fraction × count)`
+//! grid. An empty fraction list (the default, and what [`plan`] passes)
+//! evaluates each type at its configured `storage_fraction` with
+//! arithmetic identical to the pre-dimension planner — the paper catalog
+//! and Table 1/2 stay byte-identical.
+//!
 //! ## Branch-and-bound pruning
 //!
-//! [`plan`] no longer evaluates the exhaustive `(type × count)` grid.
-//! [`select_cluster_size`] scans counts upward and returns the *first*
-//! eviction-free `n` for a type (the §5.4 lower bound), so every count
-//! below `selection.machines` is saturated — never a ranked pick, and
-//! never on the Pareto front, which is drawn from eviction-free
-//! candidates. Each type therefore only evaluates
-//! `selection.machines..=max_machines` (a saturated type contributes just
-//! its boundary candidate). When *every* type saturates, the front falls
-//! back to the whole grid, so [`plan`] delegates to the frozen
-//! [`plan_exhaustive`] — the pre-pruning implementation kept as the
-//! reference the property tests compare against. Ranked picks and Pareto
-//! front are byte-identical between the two; only `Plan::grid` shrinks.
+//! [`plan_search`] does not evaluate the exhaustive grid.
+//! [`select_cluster_size_at`] scans counts upward and returns the *first*
+//! eviction-free `n` for a `(type, fraction)` (the §5.4 lower bound), so
+//! every count below `selection.machines` is saturated — never a ranked
+//! pick, and never on the Pareto front, which is drawn from eviction-free
+//! candidates. Each pair therefore only evaluates
+//! `selection.machines..=max_machines` (a saturated pair contributes just
+//! its boundary candidate).
+//!
+//! The fraction dimension extends the bound (DESIGN §8): raising the
+//! storage fraction `f` raises `R = M·f`, which shrinks the execution
+//! share `min(M − R, exec/n)` and therefore *grows* the caching capacity
+//! `M − MachineMem_exec(n)` at every count — so the minimal eviction-free
+//! count `n*(f)` is non-increasing in `f`. Fractions are scanned
+//! ascending and each unsaturated `n*` caps the next fraction's count
+//! scan; a capped scan cannot miss (the condition already holds at the
+//! previous `n*` under the larger capacity) and cannot saturate, so the
+//! returned `Selection` is identical to an uncapped scan.
+//!
+//! When *every* `(type, fraction)` saturates, the front falls back to the
+//! whole grid, so [`plan_search`] delegates to the frozen
+//! [`plan_exhaustive_search`] — the pre-pruning implementation kept as
+//! the reference the property tests compare against. Ranked picks and
+//! Pareto front are byte-identical between the two; only `Plan::grid`
+//! shrinks. On large catalogs the per-type work fans out over
+//! [`crate::util::par::sweep_range`], whose index-ordered results keep
+//! the parallel path bit-identical to the serial one.
 
-use super::selector::{machine_split, select_cluster_size, Selection};
+use super::selector::{machine_split_at, select_cluster_size_at, Selection};
 use crate::cost::PricingModel;
 use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
@@ -55,12 +83,17 @@ pub struct PlanInput<'a> {
     pub exec_total_mb: Mb,
 }
 
-/// One evaluated `(instance type × count)` configuration.
+/// One evaluated `(instance type × storage fraction × count)`
+/// configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CandidateConfig {
     /// Instance type name (from the catalog).
     pub instance: String,
     pub machines: usize,
+    /// The `spark.memory.storageFraction` this candidate was evaluated at
+    /// (the type's configured value unless the search space supplied an
+    /// explicit fraction grid).
+    pub storage_fraction: f64,
     /// Whether the predicted footprint fits eviction-free (§5.4 geometry).
     pub eviction_free: bool,
     /// Per-machine caching headroom; negative = deficit.
@@ -82,17 +115,55 @@ pub struct TypePick {
 /// The planner's full answer.
 #[derive(Debug, Clone, Default)]
 pub struct Plan {
-    /// One pick per instance type, best (eviction-free, then cheapest)
-    /// first.
+    /// One pick per `(instance type × searched fraction)`, best
+    /// (eviction-free, then cheapest) first. One per type when no explicit
+    /// fraction grid was searched.
     pub ranked: Vec<TypePick>,
-    /// Every evaluated candidate. [`plan_exhaustive`] fills the full
-    /// catalog types × 1..=max_machines grid; [`plan`] prunes counts below
-    /// each type's §5.4 lower bound (they can influence neither the ranked
-    /// picks nor the Pareto front).
+    /// Every evaluated candidate. [`plan_exhaustive_search`] fills the
+    /// full types × fractions × 1..=max_machines grid; [`plan_search`]
+    /// prunes counts below each pair's §5.4 lower bound (they can
+    /// influence neither the ranked picks nor the Pareto front).
     pub grid: Vec<CandidateConfig>,
     /// Non-dominated (time, cost) candidates among the eviction-free grid
     /// (the whole grid when nothing fits), sorted fastest-first.
     pub pareto: Vec<CandidateConfig>,
+    /// The explicit storage-fraction grid that was searched, ascending —
+    /// empty when each type ran at its own configured fraction (the
+    /// default). Renderers use this to decide whether the split is worth
+    /// a column.
+    pub fractions: Vec<f64>,
+}
+
+/// The dimensions [`plan_search`] explores beyond the catalog itself.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Upper bound on the per-candidate machine count (≥ 1).
+    pub max_machines: usize,
+    /// Candidate `spark.memory.storageFraction` values, each in (0, 1).
+    /// Empty = evaluate each type at its configured fraction only.
+    pub storage_fractions: Vec<f64>,
+}
+
+impl SearchSpace {
+    /// A count-only search — exactly the pre-dimension planner.
+    pub fn counts(max_machines: usize) -> SearchSpace {
+        SearchSpace { max_machines, storage_fractions: Vec::new() }
+    }
+
+    /// The searched fraction grid: finite values in (0, 1), ascending,
+    /// deduplicated. Both search paths normalize through this, so the
+    /// caller's ordering can never desynchronize pruned vs exhaustive.
+    fn normalized_fractions(&self) -> Vec<f64> {
+        let mut fs: Vec<f64> = self
+            .storage_fractions
+            .iter()
+            .copied()
+            .filter(|f| f.is_finite() && *f > 0.0 && *f < 1.0)
+            .collect();
+        fs.sort_by(f64::total_cmp);
+        fs.dedup();
+        fs
+    }
 }
 
 impl Plan {
@@ -143,13 +214,15 @@ pub fn estimate_time_s(
     t
 }
 
-fn evaluate(
+fn evaluate_at(
     input: &PlanInput<'_>,
     instance: &InstanceType,
+    storage_fraction: f64,
     machines: usize,
     pricing: &dyn PricingModel,
 ) -> CandidateConfig {
-    let (_, capacity) = machine_split(input.exec_total_mb, &instance.spec, machines);
+    let (_, capacity) =
+        machine_split_at(input.exec_total_mb, &instance.spec, storage_fraction, machines);
     let cached_pm = input.cached_total_mb / machines as f64;
     let eviction_free = cached_pm < capacity;
     let resident = if input.cached_total_mb <= 0.0 {
@@ -167,6 +240,7 @@ fn evaluate(
     CandidateConfig {
         instance: instance.name.to_string(),
         machines,
+        storage_fraction,
         eviction_free,
         headroom_mb: capacity - cached_pm,
         predicted_time_s: time_s,
@@ -197,12 +271,20 @@ fn pareto_front_exhaustive(grid: &[CandidateConfig]) -> Vec<CandidateConfig> {
     front
 }
 
+// Tie-break chain shared by the front sort: equal (time, cost) candidates
+// order by type name, then count, then fraction. The trailing keys make the
+// comparator total over distinct candidates, so the front's order is a pure
+// function of its *contents* — duplicate-priced types can never pick up
+// insertion order from whichever search path (pruned, exhaustive, parallel
+// chunks) produced the pool.
 fn sort_front(front: &mut [CandidateConfig]) {
     front.sort_by(|a, b| {
         a.predicted_time_s
             .total_cmp(&b.predicted_time_s)
             .then(a.predicted_cost.total_cmp(&b.predicted_cost))
             .then(a.instance.cmp(&b.instance))
+            .then(a.machines.cmp(&b.machines))
+            .then(a.storage_fraction.total_cmp(&b.storage_fraction))
     });
 }
 
@@ -259,89 +341,178 @@ fn sort_ranked(ranked: &mut [TypePick]) {
             .then(a.candidate.predicted_cost.total_cmp(&b.candidate.predicted_cost))
             .then(a.candidate.predicted_time_s.total_cmp(&b.candidate.predicted_time_s))
             .then(a.candidate.instance.cmp(&b.candidate.instance))
+            .then(a.candidate.machines.cmp(&b.candidate.machines))
+            .then(a.candidate.storage_fraction.total_cmp(&b.candidate.storage_fraction))
     });
 }
 
-/// Branch-and-bound search over `catalog`: per type, counts below the
-/// §5.4 eviction-free lower bound are pruned (see the module docs for the
-/// argument), so a Crispy-sized catalog costs `O(types × free-range)`
-/// instead of `O(types × max_machines)` evaluations. Ranked picks and
-/// Pareto front are byte-identical to [`plan_exhaustive`].
+/// Above this many catalog types the per-type search fans out over the
+/// bounded sweep pool; below it the serial path avoids pool setup on the
+/// 2–7-type hand-written catalogs (whose whole search is microseconds).
+const PAR_TYPE_THRESHOLD: usize = 16;
+
+/// Everything one instance type contributes to the pruned search: one
+/// pick and one grid chunk per searched fraction, plus whether any
+/// fraction produced an eviction-free selection. Pure per type (reads
+/// shared inputs, owns its outputs), which is what lets [`plan_search`]
+/// run types concurrently with bit-identical results.
+fn plan_type_pruned(
+    input: &PlanInput<'_>,
+    instance: &InstanceType,
+    fractions: &[f64],
+    max_machines: usize,
+    pricing: &dyn PricingModel,
+) -> (Vec<TypePick>, Vec<CandidateConfig>, bool) {
+    let own = [instance.spec.storage_fraction];
+    let fractions = if fractions.is_empty() { &own[..] } else { fractions };
+    let mut picks = Vec::with_capacity(fractions.len());
+    let mut grid = Vec::new();
+    let mut any_free = false;
+    // fractions ascend, so each unsaturated n* caps the next fraction's
+    // count scan (the extended §5.4 bound, module docs / DESIGN §8); the
+    // capped scan returns the identical Selection because the condition
+    // already holds at the previous n* under the larger capacity
+    let mut cap = max_machines;
+    for &fraction in fractions {
+        let selection = select_cluster_size_at(
+            input.cached_total_mb,
+            input.exec_total_mb,
+            &instance.spec,
+            fraction,
+            cap,
+        );
+        debug_assert!(
+            !selection.saturated || cap == max_machines,
+            "a capped fraction scan can never saturate"
+        );
+        if !selection.saturated {
+            any_free = true;
+            cap = selection.machines;
+        }
+        // the selector scanned upward and `selection.machines` is the
+        // first eviction-free count (== max_machines when saturated):
+        // everything below is saturated and prunable
+        for n in selection.machines..=max_machines {
+            let c = evaluate_at(input, instance, fraction, n, pricing);
+            if n == selection.machines {
+                picks.push(TypePick { candidate: c.clone(), selection: selection.clone() });
+            }
+            grid.push(c);
+        }
+    }
+    (picks, grid, any_free)
+}
+
+/// Branch-and-bound search over `catalog × space`: per `(type, fraction)`
+/// pair, counts below the §5.4 eviction-free lower bound are pruned and
+/// the fraction dimension reuses each unsaturated bound as the next scan
+/// cap (see the module docs), so a Crispy-sized catalog costs
+/// `O(pairs × free-range)` instead of `O(pairs × max_machines)`
+/// evaluations — with the per-type work fanned out over the sweep pool on
+/// large catalogs. Ranked picks and Pareto front are byte-identical to
+/// [`plan_exhaustive_search`].
+pub fn plan_search(
+    input: &PlanInput<'_>,
+    catalog: &InstanceCatalog,
+    pricing: &dyn PricingModel,
+    space: &SearchSpace,
+) -> Plan {
+    assert!(space.max_machines >= 1);
+    let fractions = space.normalized_fractions();
+    let types = catalog.instances.len();
+    if types == 0 {
+        return Plan { fractions, ..Plan::default() };
+    }
+    let per_type = |i: usize| {
+        plan_type_pruned(input, &catalog.instances[i], &fractions, space.max_machines, pricing)
+    };
+    // sweep_range re-places results by index, so the parallel fan-out
+    // concatenates exactly as the serial loop would
+    let chunks = if types >= PAR_TYPE_THRESHOLD {
+        crate::util::par::sweep_range(0, types - 1, per_type)
+    } else {
+        crate::util::par::sweep_range_serial(0, types - 1, per_type)
+    };
+    if !chunks.iter().any(|(_, _, any_free)| *any_free) {
+        // nothing fits anywhere: the Pareto front falls back to the whole
+        // grid, so every candidate matters — no pruning is sound
+        return plan_exhaustive_search(input, catalog, pricing, space);
+    }
+    let mut ranked = Vec::with_capacity(types * fractions.len().max(1));
+    let mut grid = Vec::new();
+    for (picks, chunk, _) in chunks {
+        ranked.extend(picks);
+        grid.extend(chunk);
+    }
+    sort_ranked(&mut ranked);
+    let pareto = pareto_front(&grid);
+    Plan { ranked, grid, pareto, fractions }
+}
+
+/// Branch-and-bound search over `(type × count)` with each type at its
+/// configured storage fraction — the classic planner surface, now a thin
+/// wrapper over [`plan_search`] with a count-only [`SearchSpace`].
 pub fn plan(
     input: &PlanInput<'_>,
     catalog: &InstanceCatalog,
     pricing: &dyn PricingModel,
     max_machines: usize,
 ) -> Plan {
-    assert!(max_machines >= 1);
-    let selections: Vec<Selection> = catalog
-        .instances
-        .iter()
-        .map(|instance| {
-            select_cluster_size(
+    plan_search(input, catalog, pricing, &SearchSpace::counts(max_machines))
+}
+
+/// The frozen exhaustive reference: every `(type × fraction × count)`
+/// candidate of `catalog × space`, filtered by the quadratic Pareto pass
+/// — the planner exactly as it shipped before pruning, extended over the
+/// fraction grid with the same nested iteration order the pruned path
+/// concatenates in. Kept public so property tests (and the
+/// `planner/plan-exhaustive-*` bench) can assert [`plan_search`] never
+/// diverges from it.
+pub fn plan_exhaustive_search(
+    input: &PlanInput<'_>,
+    catalog: &InstanceCatalog,
+    pricing: &dyn PricingModel,
+    space: &SearchSpace,
+) -> Plan {
+    assert!(space.max_machines >= 1);
+    let fractions = space.normalized_fractions();
+    let max_machines = space.max_machines;
+    let mut grid = Vec::with_capacity(catalog.instances.len() * max_machines);
+    let mut ranked = Vec::with_capacity(catalog.instances.len());
+    for instance in &catalog.instances {
+        let own = [instance.spec.storage_fraction];
+        let fs = if fractions.is_empty() { &own[..] } else { &fractions[..] };
+        for &fraction in fs {
+            let selection = select_cluster_size_at(
                 input.cached_total_mb,
                 input.exec_total_mb,
                 &instance.spec,
+                fraction,
                 max_machines,
-            )
-        })
-        .collect();
-    if selections.iter().all(|s| s.saturated) {
-        // nothing fits anywhere: the Pareto front falls back to the whole
-        // grid, so every candidate matters — no pruning is sound
-        return plan_exhaustive(input, catalog, pricing, max_machines);
-    }
-    let mut grid = Vec::with_capacity(catalog.instances.len() * max_machines);
-    let mut ranked = Vec::with_capacity(catalog.instances.len());
-    for (instance, selection) in catalog.instances.iter().zip(selections) {
-        // the selector scanned 1..=max and `selection.machines` is the
-        // first eviction-free count (== max_machines when saturated):
-        // everything below is saturated and prunable
-        for n in selection.machines..=max_machines {
-            let c = evaluate(input, instance, n, pricing);
-            if n == selection.machines {
-                ranked.push(TypePick { candidate: c.clone(), selection: selection.clone() });
+            );
+            for n in 1..=max_machines {
+                let c = evaluate_at(input, instance, fraction, n, pricing);
+                if n == selection.machines {
+                    ranked.push(TypePick { candidate: c.clone(), selection: selection.clone() });
+                }
+                grid.push(c);
             }
-            grid.push(c);
         }
     }
     sort_ranked(&mut ranked);
-    let pareto = pareto_front(&grid);
-    Plan { ranked, grid, pareto }
+    let pareto = pareto_front_exhaustive(&grid);
+    Plan { ranked, grid, pareto, fractions }
 }
 
-/// The frozen exhaustive reference: every `(instance type × count)`
-/// candidate of `catalog`, filtered by the quadratic Pareto pass — the
-/// planner exactly as it shipped before pruning. Kept public so property
-/// tests (and the `planner/plan-exhaustive-*` bench) can assert [`plan`]
-/// never diverges from it.
+/// [`plan_exhaustive_search`] with a count-only [`SearchSpace`] — the
+/// pre-dimension exhaustive reference, signature unchanged.
 pub fn plan_exhaustive(
     input: &PlanInput<'_>,
     catalog: &InstanceCatalog,
     pricing: &dyn PricingModel,
     max_machines: usize,
 ) -> Plan {
-    assert!(max_machines >= 1);
-    let mut grid = Vec::with_capacity(catalog.instances.len() * max_machines);
-    let mut ranked = Vec::with_capacity(catalog.instances.len());
-    for instance in &catalog.instances {
-        let selection = select_cluster_size(
-            input.cached_total_mb,
-            input.exec_total_mb,
-            &instance.spec,
-            max_machines,
-        );
-        for n in 1..=max_machines {
-            let c = evaluate(input, instance, n, pricing);
-            if n == selection.machines {
-                ranked.push(TypePick { candidate: c.clone(), selection: selection.clone() });
-            }
-            grid.push(c);
-        }
-    }
-    sort_ranked(&mut ranked);
-    let pareto = pareto_front_exhaustive(&grid);
-    Plan { ranked, grid, pareto }
+    plan_exhaustive_search(input, catalog, pricing, &SearchSpace::counts(max_machines))
 }
 
 /// One analytic pick cross-validated against event-driven engine runs
@@ -397,8 +568,12 @@ pub fn risk_adjusted(
     // the historical serial path
     let validated = crate::util::par::sweep_range(0, picks.len() - 1, |i| {
         let pick = picks[i];
-        let instance = catalog.get(&pick.candidate.instance)?;
-        let fleet = FleetSpec::homogeneous(instance.clone(), pick.candidate.machines).ok()?;
+        // validate at the pick's searched memory split: the engine's
+        // UnifiedMemory floor must match what the planner promised (for a
+        // count-only search this writes the spec's own value back — no-op)
+        let mut instance = catalog.get(&pick.candidate.instance)?.clone();
+        instance.spec.storage_fraction = pick.candidate.storage_fraction;
+        let fleet = FleetSpec::homogeneous(instance, pick.candidate.machines).ok()?;
         let (mut time, mut cost, mut lost, mut runs) = (0.0, 0.0, 0.0, 0usize);
         for &seed in seeds {
             let opts = SimOptions {
@@ -451,6 +626,7 @@ pub fn risk_adjusted(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::blink::selector::select_cluster_size;
     use crate::cost::{MachineSeconds, PerInstanceHour};
     use crate::sim::scenario::{NoDisturbances, SpotPreemption};
     use crate::workloads::{app_by_name, FULL_SCALE};
@@ -507,6 +683,99 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn fraction_search_matches_the_exhaustive_reference() {
+        // the new dimension through both paths: picks, front AND the
+        // per-pair grid coverage must agree, on hand-written and
+        // generated catalogs alike
+        let space = SearchSpace {
+            max_machines: 12,
+            storage_fractions: vec![0.7, 0.3, 0.5, 0.5], // unsorted + dup on purpose
+        };
+        for catalog in [InstanceCatalog::cloud(), InstanceCatalog::generate(9, 24)] {
+            let (profile, cached, exec) = input_for("als", FULL_SCALE);
+            let input =
+                PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+            let a = plan_search(&input, &catalog, &PerInstanceHour::hourly(), &space);
+            let b = plan_exhaustive_search(&input, &catalog, &PerInstanceHour::hourly(), &space);
+            assert_eq!(a.fractions, vec![0.3, 0.5, 0.7], "normalized ascending, deduped");
+            assert_eq!(a.fractions, b.fractions);
+            assert_eq!(a.ranked.len(), catalog.instances.len() * 3, "one pick per pair");
+            assert_eq!(a.ranked, b.ranked, "{}", catalog.name);
+            assert_eq!(a.pareto, b.pareto, "{}", catalog.name);
+            assert!(a.grid.len() <= b.grid.len());
+        }
+    }
+
+    #[test]
+    fn count_only_search_keeps_the_default_fraction() {
+        let (profile, cached, exec) = input_for("svm", FULL_SCALE);
+        let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+        let p = plan(&input, &InstanceCatalog::cloud(), &MachineSeconds, 12);
+        assert!(p.fractions.is_empty(), "no explicit grid was searched");
+        for c in &p.grid {
+            assert_eq!(
+                c.storage_fraction,
+                InstanceCatalog::cloud().get(&c.instance).unwrap().spec.storage_fraction
+            );
+        }
+    }
+
+    #[test]
+    fn duplicate_priced_types_keep_a_deterministic_front_order() {
+        // satellite regression: two types with identical spec and price
+        // produce pairwise-equal (time, cost) candidates; the front must
+        // order them by (name, count) regardless of which search path —
+        // or which insertion order — built the pool
+        let mut twin_a = InstanceCatalog::cloud().get("gp.xlarge").unwrap().clone();
+        let mut twin_b = twin_a.clone();
+        twin_a.name = "twin-a".into();
+        twin_b.name = "twin-b".into();
+        let fwd = InstanceCatalog {
+            name: "twins".into(),
+            instances: vec![twin_a.clone(), twin_b.clone()],
+        };
+        let rev = InstanceCatalog { name: "twins-rev".into(), instances: vec![twin_b, twin_a] };
+        let (profile, cached, exec) = input_for("als", FULL_SCALE);
+        let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+        let pricing = PerInstanceHour::hourly();
+        let pf = plan(&input, &fwd, &pricing, 12);
+        let pr = plan(&input, &rev, &pricing, 12);
+        let xf = plan_exhaustive(&input, &fwd, &pricing, 12);
+        assert_eq!(pf.pareto, pr.pareto, "front order must not depend on catalog order");
+        assert_eq!(pf.pareto, xf.pareto);
+        // equal-(time, cost) neighbors are name-then-count ordered
+        for w in pf.pareto.windows(2) {
+            if w[0].predicted_time_s == w[1].predicted_time_s
+                && w[0].predicted_cost == w[1].predicted_cost
+            {
+                assert!(
+                    (w[0].instance.as_str(), w[0].machines)
+                        < (w[1].instance.as_str(), w[1].machines),
+                    "{w:?}"
+                );
+            }
+        }
+        // both twins appear somewhere in the evaluated pool
+        assert!(pf.grid.iter().any(|c| c.instance == "twin-a"));
+        assert!(pf.grid.iter().any(|c| c.instance == "twin-b"));
+    }
+
+    #[test]
+    fn generated_512_search_is_pruned_and_covered() {
+        // the cloud-scale path stays exact at a size where the win shows:
+        // one pick per type, grid strictly smaller than exhaustive
+        let catalog = InstanceCatalog::generate(42, 512);
+        let (profile, cached, exec) = input_for("als", FULL_SCALE);
+        let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+        let p = plan(&input, &catalog, &PerInstanceHour::hourly(), 24);
+        assert_eq!(p.ranked.len(), 512);
+        assert!(p.grid.len() < 512 * 24, "pruning must bite at this scale");
+        assert!(!p.pareto.is_empty());
+        let free = p.ranked.iter().filter(|t| t.candidate.eviction_free).count();
+        assert!(free > 0, "a 512-type menu must contain fitting shapes");
     }
 
     #[test]

@@ -83,6 +83,7 @@ pub fn candidate_json(c: &CandidateConfig) -> Json {
     Json::obj(vec![
         ("instance", c.instance.as_str().into()),
         ("machines", c.machines.into()),
+        ("storage_fraction", c.storage_fraction.into()),
         ("eviction_free", c.eviction_free.into()),
         ("headroom_mb", c.headroom_mb.into()),
         ("predicted_time_s", c.predicted_time_s.into()),
@@ -102,6 +103,7 @@ pub fn plan_json(p: &Plan) -> Json {
         ("ranked", Json::Arr(p.ranked.iter().map(type_pick_json).collect())),
         ("pareto", Json::Arr(p.pareto.iter().map(candidate_json).collect())),
         ("best", p.best().map_or(Json::Null, type_pick_json)),
+        ("fractions", Json::Arr(p.fractions.iter().map(|&f| f.into()).collect())),
     ])
 }
 
@@ -125,23 +127,37 @@ pub fn risk_pick_json(r: &RiskAdjustedPick) -> Json {
 // ======================================================================
 
 /// The `blink advise` plan table: ranked per-type picks, then the
-/// time/cost Pareto front over the whole (type × count) grid.
+/// time/cost Pareto front over the whole (type × count) grid. When the
+/// plan searched an explicit storage-fraction grid, a `split` column shows
+/// each pick's fraction; the count-only layout is byte-identical to the
+/// pre-dimension renderer.
 pub fn render_plan_text(
     plan: &Plan,
     catalog_name: &str,
     catalog_types: usize,
     pricing: &str,
 ) -> String {
+    let split = !plan.fractions.is_empty();
     let mut out = String::new();
     let _ = writeln!(
         out,
         "\nPLAN — catalog '{catalog_name}' ({catalog_types} types), pricing '{pricing}'"
     );
-    let _ = writeln!(
-        out,
-        "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12} {:>14} {:>6}",
-        "rank", "instance", "n", "min", "max", "time", "cost", "headroom", "free"
-    );
+    if split {
+        let fs: Vec<String> = plan.fractions.iter().map(|f| format!("{f:.2}")).collect();
+        let _ = writeln!(out, "searched storage fractions: {}", fs.join(", "));
+        let _ = writeln!(
+            out,
+            "{:>4} {:<12} {:>5} {:>4} {:>4}..{:<4} {:>10} {:>12} {:>14} {:>6}",
+            "rank", "instance", "split", "n", "min", "max", "time", "cost", "headroom", "free"
+        );
+    } else {
+        let _ = writeln!(
+            out,
+            "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12} {:>14} {:>6}",
+            "rank", "instance", "n", "min", "max", "time", "cost", "headroom", "free"
+        );
+    }
     for (i, pick) in plan.ranked.iter().enumerate() {
         let c = &pick.candidate;
         let s = &pick.selection;
@@ -150,19 +166,36 @@ pub fn render_plan_text(
         } else {
             fmt_mb_signed(c.headroom_mb)
         };
-        let _ = writeln!(
-            out,
-            "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12.2} {:>14} {:>6}",
-            i + 1,
-            c.instance,
-            c.machines,
-            s.machines_min,
-            s.machines_max,
-            fmt_secs(c.predicted_time_s),
-            c.predicted_cost,
-            headroom,
-            if c.eviction_free { "yes" } else { "NO" },
-        );
+        if split {
+            let _ = writeln!(
+                out,
+                "{:>4} {:<12} {:>5.2} {:>4} {:>4}..{:<4} {:>10} {:>12.2} {:>14} {:>6}",
+                i + 1,
+                c.instance,
+                c.storage_fraction,
+                c.machines,
+                s.machines_min,
+                s.machines_max,
+                fmt_secs(c.predicted_time_s),
+                c.predicted_cost,
+                headroom,
+                if c.eviction_free { "yes" } else { "NO" },
+            );
+        } else {
+            let _ = writeln!(
+                out,
+                "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12.2} {:>14} {:>6}",
+                i + 1,
+                c.instance,
+                c.machines,
+                s.machines_min,
+                s.machines_max,
+                fmt_secs(c.predicted_time_s),
+                c.predicted_cost,
+                headroom,
+                if c.eviction_free { "yes" } else { "NO" },
+            );
+        }
     }
     if plan.pareto.iter().all(|c| c.eviction_free) {
         let _ = writeln!(out, "pareto front (time vs cost, eviction-free candidates):");
@@ -173,13 +206,15 @@ pub fn render_plan_text(
         );
     }
     for c in &plan.pareto {
+        let at_split = if split { format!(" @{:.2}", c.storage_fraction) } else { String::new() };
         let _ = writeln!(
             out,
-            "  {:<12} x{:<3} {:>10}  cost {:>10.2}",
+            "  {:<12} x{:<3} {:>10}  cost {:>10.2}{}",
             c.instance,
             c.machines,
             fmt_secs(c.predicted_time_s),
-            c.predicted_cost
+            c.predicted_cost,
+            at_split
         );
     }
     if let Some(best) = plan.best() {

@@ -48,8 +48,23 @@ impl Selection {
 /// selector below and the catalog planner ([`crate::blink::planner`]), so
 /// both evaluate candidates with identical numerics.
 pub fn machine_split(exec_total_mb: Mb, machine: &MachineSpec, n: usize) -> (Mb, Mb) {
+    machine_split_at(exec_total_mb, machine, machine.storage_fraction, n)
+}
+
+/// [`machine_split`] with an explicit storage fraction: the protected
+/// floor becomes `R = M * storage_fraction` instead of the machine type's
+/// configured value. With `storage_fraction == machine.storage_fraction`
+/// this computes the exact same expressions as the original split — the
+/// catalog planner uses it to search the memory split as a dimension
+/// while the paper path stays bit-identical.
+pub fn machine_split_at(
+    exec_total_mb: Mb,
+    machine: &MachineSpec,
+    storage_fraction: f64,
+    n: usize,
+) -> (Mb, Mb) {
     let m = machine.unified_mb();
-    let r = machine.storage_floor_mb();
+    let r = m * storage_fraction;
     let exec_pm = (m - r).min(exec_total_mb / n as f64);
     (exec_pm, m - exec_pm)
 }
@@ -65,15 +80,34 @@ pub fn select_cluster_size(
     machine: &MachineSpec,
     max_machines: usize,
 ) -> Selection {
+    select_cluster_size_at(
+        cached_total_mb,
+        exec_total_mb,
+        machine,
+        machine.storage_fraction,
+        max_machines,
+    )
+}
+
+/// [`select_cluster_size`] with an explicit storage fraction (see
+/// [`machine_split_at`]). `machines_max = ceil(ΣD / R)` uses the same
+/// overridden floor, so the reported bracket matches the searched split.
+pub fn select_cluster_size_at(
+    cached_total_mb: Mb,
+    exec_total_mb: Mb,
+    machine: &MachineSpec,
+    storage_fraction: f64,
+    max_machines: usize,
+) -> Selection {
     let m = machine.unified_mb();
-    let r = machine.storage_floor_mb();
+    let r = m * storage_fraction;
     assert!(max_machines >= 1);
 
     let machines_min = (cached_total_mb / m).ceil().max(1.0) as usize;
     let machines_max = (cached_total_mb / r).ceil().max(1.0) as usize;
 
     for n in 1..=max_machines {
-        let (exec_pm, capacity) = machine_split(exec_total_mb, machine, n);
+        let (exec_pm, capacity) = machine_split_at(exec_total_mb, machine, storage_fraction, n);
         if cached_total_mb / (n as f64) < capacity {
             return Selection {
                 machines: n,
@@ -85,7 +119,8 @@ pub fn select_cluster_size(
             };
         }
     }
-    let (exec_pm, capacity) = machine_split(exec_total_mb, machine, max_machines);
+    let (exec_pm, capacity) =
+        machine_split_at(exec_total_mb, machine, storage_fraction, max_machines);
     Selection {
         machines: max_machines,
         machines_min,
@@ -169,6 +204,50 @@ mod tests {
         let small = select_cluster_size(cached, exec, &MachineSpec::sample_node(), 64);
         let big = select_cluster_size(cached, exec, &worker(), 64);
         assert!(small.machines > big.machines);
+    }
+
+    #[test]
+    fn explicit_fraction_at_default_is_bit_identical() {
+        let m = worker();
+        for n in 1..=16 {
+            assert_eq!(
+                machine_split(6000.0, &m, n),
+                machine_split_at(6000.0, &m, m.storage_fraction, n)
+            );
+        }
+        let a = select_cluster_size(40.0 * 1024.0, 6000.0, &m, 20);
+        let b = select_cluster_size_at(40.0 * 1024.0, 6000.0, &m, m.storage_fraction, 20);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn property_minimal_count_is_monotone_in_storage_fraction() {
+        // the planner's fraction-pruning bound: raising the storage
+        // fraction raises R, shrinks the execution share, grows capacity —
+        // so the minimal eviction-free count never increases with f
+        prop::check(
+            &prop::Config { cases: 96, seed: 0xf7ac, max_size: 64 },
+            |rng: &mut Rng, _size| {
+                (rng.range(10.0, 120_000.0), rng.range(0.0, 50_000.0))
+            },
+            |&(cached, exec)| {
+                let m = worker();
+                let mut prev: Option<Selection> = None;
+                for f in [0.2, 0.35, 0.5, 0.65, 0.8] {
+                    let s = select_cluster_size_at(cached, exec, &m, f, 24);
+                    if let Some(p) = &prev {
+                        if !p.saturated && !s.saturated && s.machines > p.machines {
+                            return Err(format!(
+                                "n*({f}) = {} > n* at lower fraction = {}",
+                                s.machines, p.machines
+                            ));
+                        }
+                    }
+                    prev = Some(s);
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

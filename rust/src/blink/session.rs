@@ -357,6 +357,38 @@ impl TrainedProfile {
         }
     }
 
+    /// [`TrainedProfile::plan`] with explicit candidate
+    /// `spark.memory.storageFraction` settings: each `(type × fraction)`
+    /// pair is searched as a virtual type. An empty list is exactly
+    /// [`TrainedProfile::plan`] (each type at its configured fraction);
+    /// the advisor's `max_machines` still bounds the count dimension.
+    pub fn plan_with_fractions(
+        &self,
+        scale: f64,
+        catalog: &InstanceCatalog,
+        pricing: &dyn PricingModel,
+        storage_fractions: &[f64],
+    ) -> Advice {
+        let cached = self.predicted_cached_mb(scale);
+        let exec_mb = self.predicted_exec_mb(scale);
+        let profile = self.app.profile(scale);
+        let input = PlanInput {
+            profile: &profile,
+            cached_total_mb: cached,
+            exec_total_mb: exec_mb,
+        };
+        let space = planner::SearchSpace {
+            max_machines: self.max_machines,
+            storage_fractions: storage_fractions.to_vec(),
+        };
+        Advice {
+            plan: planner::plan_search(&input, catalog, pricing, &space),
+            predicted_cached_mb: cached,
+            predicted_exec_mb: exec_mb,
+            sample_cost_machine_s: self.sample_cost_machine_s,
+        }
+    }
+
     /// The Table-2 inverse query: the maximum data scale that still runs
     /// eviction-free on a fixed cluster of `machines` nodes of `machine`
     /// type. Infinite when the app caches nothing.

@@ -16,7 +16,7 @@ use crate::blink::report::{
     RunStats, SimulateReport, SynthReport, SynthRow,
 };
 use crate::blink::{Advisor, OutputFormat, Report, RustFit, ValidationSpec};
-use crate::cost::pricing_by_name;
+use crate::cost::{pricing_by_name, pricing_names};
 use crate::experiments::{self, report};
 use crate::hdfs::Sampler;
 use crate::memory::EvictionPolicy;
@@ -85,6 +85,41 @@ fn lookup(app: &str) -> Result<AppModel> {
     })
 }
 
+fn lookup_catalog(name: &str) -> Result<InstanceCatalog> {
+    InstanceCatalog::by_name(name).ok_or_else(|| {
+        anyhow!("unknown catalog '{name}' (choose from {})", InstanceCatalog::names().join(" "))
+    })
+}
+
+fn lookup_pricing(name: &str) -> Result<Box<dyn crate::cost::PricingModel>> {
+    pricing_by_name(name).ok_or_else(|| {
+        anyhow!("unknown pricing model '{name}' (choose from {})", pricing_names().join(" "))
+    })
+}
+
+/// Parse the `--fractions` grid: a comma-separated list of storage
+/// fractions, each strictly inside (0, 1). Empty means "don't search the
+/// memory split" — every candidate keeps its type's configured fraction.
+fn parse_fractions(s: &str) -> Result<Vec<f64>> {
+    if s.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        let f: f64 = part
+            .parse()
+            .map_err(|_| anyhow!("invalid storage fraction '{part}' in --fractions '{s}'"))?;
+        if !f.is_finite() || f <= 0.0 || f >= 1.0 {
+            return Err(anyhow!(
+                "storage fraction {f} out of range in --fractions '{s}' (each must be in (0, 1))"
+            ));
+        }
+        out.push(f);
+    }
+    Ok(out)
+}
+
 /// `blink decide`: the §5.4 recommendation for one app/scale.
 pub fn cmd_decide(
     app: &str,
@@ -115,17 +150,16 @@ pub fn cmd_advise(
     pricing_name: &str,
     max_machines: usize,
     scenario_name: &str,
+    fractions: &str,
     format: OutputFormat,
 ) -> Result<PlanReport> {
     let app = lookup(app)?;
-    let catalog = InstanceCatalog::by_name(catalog_name)
-        .ok_or_else(|| anyhow!("unknown catalog '{catalog_name}' (paper|cloud|all)"))?;
-    let pricing = pricing_by_name(pricing_name).ok_or_else(|| {
-        anyhow!("unknown pricing model '{pricing_name}' (machine-seconds|hourly|per-second|spot)")
-    })?;
+    let catalog = lookup_catalog(catalog_name)?;
+    let pricing = lookup_pricing(pricing_name)?;
     let scenario = scenario::by_name(scenario_name).ok_or_else(|| {
         anyhow!("unknown scenario '{scenario_name}' (spot|straggler|failure|autoscale|none)")
     })?;
+    let fractions = parse_fractions(fractions)?;
     if max_machines == 0 {
         return Err(anyhow!("--max-machines must be at least 1"));
     }
@@ -135,7 +169,11 @@ pub fn cmd_advise(
         Advisor::builder().max_machines(max_machines),
         |advisor| {
             let profile = advisor.profile(&app);
-            let advice = profile.plan(scale, &catalog, pricing.as_ref());
+            let advice = if fractions.is_empty() {
+                profile.plan(scale, &catalog, pricing.as_ref())
+            } else {
+                profile.plan_with_fractions(scale, &catalog, pricing.as_ref(), &fractions)
+            };
             let spec =
                 ValidationSpec { scenario: scenario.as_ref(), seeds: &[11, 12, 13], top_k: 3 };
             let risk = (scenario_name != "none").then(|| RiskSection {
@@ -187,9 +225,7 @@ pub fn cmd_simulate(q: &SimulateQuery<'_>, format: OutputFormat) -> Result<Simul
     let scenario = scenario::by_name(q.scenario).ok_or_else(|| {
         anyhow!("unknown scenario '{}' (spot|straggler|failure|autoscale|none)", q.scenario)
     })?;
-    let pricing = pricing_by_name(q.pricing).ok_or_else(|| {
-        anyhow!("unknown pricing model '{}' (machine-seconds|hourly|per-second|spot)", q.pricing)
-    })?;
+    let pricing = lookup_pricing(q.pricing)?;
     let fleet = FleetSpec::homogeneous(instance.clone(), q.machines)
         .map_err(|e| anyhow!("invalid fleet: {e}"))?;
     let profile = model.profile(q.scale);
@@ -320,11 +356,8 @@ pub fn cmd_synth(q: &SynthQuery<'_>, format: OutputFormat) -> Result<SynthReport
     let cfg = SynthConfig::by_name(q.preset).ok_or_else(|| {
         anyhow!("unknown preset '{}' (choose from {})", q.preset, SynthConfig::names().join(" "))
     })?;
-    let catalog = InstanceCatalog::by_name(q.catalog)
-        .ok_or_else(|| anyhow!("unknown catalog '{}' (paper|cloud|all)", q.catalog))?;
-    let pricing = pricing_by_name(q.pricing).ok_or_else(|| {
-        anyhow!("unknown pricing model '{}' (machine-seconds|hourly|per-second|spot)", q.pricing)
-    })?;
+    let catalog = lookup_catalog(q.catalog)?;
+    let pricing = lookup_pricing(q.pricing)?;
     if q.count == 0 {
         return Err(anyhow!("--count must be at least 1"));
     }
@@ -533,11 +566,41 @@ mod tests {
 
     #[test]
     fn advise_rejects_bad_inputs() {
-        assert!(cmd_advise("nope", 1000.0, "cloud", "hourly", 12, "none", F).is_err());
-        assert!(cmd_advise("svm", 1000.0, "bogus-catalog", "hourly", 12, "none", F).is_err());
-        assert!(cmd_advise("svm", 1000.0, "cloud", "free-lunch", 12, "none", F).is_err());
-        assert!(cmd_advise("svm", 1000.0, "cloud", "hourly", 0, "none", F).is_err());
-        assert!(cmd_advise("svm", 1000.0, "cloud", "hourly", 12, "meteor", F).is_err());
+        let advise = |app, catalog, pricing, max, scenario, fractions| {
+            cmd_advise(app, 1000.0, catalog, pricing, max, scenario, fractions, F)
+        };
+        assert!(advise("nope", "cloud", "hourly", 12, "none", "").is_err());
+        assert!(advise("svm", "bogus-catalog", "hourly", 12, "none", "").is_err());
+        assert!(advise("svm", "cloud", "free-lunch", 12, "none", "").is_err());
+        assert!(advise("svm", "cloud", "hourly", 0, "none", "").is_err());
+        assert!(advise("svm", "cloud", "hourly", 12, "meteor", "").is_err());
+        // malformed or out-of-range fraction grids
+        assert!(advise("svm", "cloud", "hourly", 12, "none", "0.3,nope").is_err());
+        assert!(advise("svm", "cloud", "hourly", 12, "none", "0.0").is_err());
+        assert!(advise("svm", "cloud", "hourly", 12, "none", "1.5").is_err());
+    }
+
+    #[test]
+    fn unknown_catalog_and_pricing_errors_list_the_valid_names() {
+        let err = lookup_catalog("bogus-catalog").unwrap_err().to_string();
+        for name in InstanceCatalog::names() {
+            assert!(err.contains(name), "catalog error must list '{name}': {err}");
+        }
+        let err = lookup_pricing("free-lunch").unwrap_err().to_string();
+        for name in pricing_names() {
+            assert!(err.contains(name), "pricing error must list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn fractions_parse_roundtrips_and_rejects_garbage() {
+        assert_eq!(parse_fractions("").unwrap(), Vec::<f64>::new());
+        assert_eq!(parse_fractions("  ").unwrap(), Vec::<f64>::new());
+        assert_eq!(parse_fractions("0.3,0.5, 0.7").unwrap(), vec![0.3, 0.5, 0.7]);
+        assert!(parse_fractions("0.3,,0.5").is_err());
+        assert!(parse_fractions("nan").is_err());
+        assert!(parse_fractions("-0.2").is_err());
+        assert!(parse_fractions("1").is_err());
     }
 
     #[test]

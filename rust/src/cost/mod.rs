@@ -137,6 +137,11 @@ pub fn pricing_by_name(name: &str) -> Option<Box<dyn PricingModel>> {
     }
 }
 
+/// Every name [`pricing_by_name`] accepts, for CLI help and error text.
+pub fn pricing_names() -> &'static [&'static str] {
+    &["machine-seconds", "hourly", "per-second", "spot"]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,8 +201,8 @@ mod tests {
     #[test]
     fn pricing_lookup_roundtrips_names() {
         // the advise report prints name(); it must identify the exact model
-        for name in ["machine-seconds", "hourly", "per-second", "spot"] {
-            assert_eq!(pricing_by_name(name).unwrap().name(), name);
+        for name in pricing_names() {
+            assert_eq!(pricing_by_name(name).unwrap().name(), *name);
         }
         assert!(pricing_by_name("free-lunch").is_none());
     }

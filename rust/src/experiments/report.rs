@@ -236,7 +236,7 @@ pub fn print_table2(rows: &[Table2Row]) {
 /// Pareto front over the whole (type × count) grid. Thin wrapper over
 /// [`render_plan_text`] for callers that print straight to stdout.
 pub fn print_plan(plan: &Plan, catalog: &InstanceCatalog, pricing: &str) {
-    println!("{}", render_plan_text(plan, catalog.name, catalog.instances.len(), pricing));
+    println!("{}", render_plan_text(plan, &catalog.name, catalog.instances.len(), pricing));
 }
 
 /// Risk cross-validation table: the planner's analytic picks realized by

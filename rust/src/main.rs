@@ -41,7 +41,11 @@ fn app() -> App {
                 opts: vec![
                     Opt::with_default("app", "workload (als|bayes|gbt|km|lr|pca|rfc|svm)", "als"),
                     Opt::with_default("scale", "target data scale (1000 = 100 %)", "1000"),
-                    Opt::with_default("catalog", "instance catalog (paper|cloud|all)", "cloud"),
+                    Opt::with_default(
+                        "catalog",
+                        "instance catalog (paper|cloud|all|generated:<seed>:<n>)",
+                        "cloud",
+                    ),
                     Opt::with_default(
                         "pricing",
                         "pricing model (machine-seconds|hourly|per-second|spot)",
@@ -52,6 +56,11 @@ fn app() -> App {
                         "scenario",
                         "cross-validate top picks via engine runs (spot|straggler|failure|autoscale|none)",
                         "none",
+                    ),
+                    Opt::with_default(
+                        "fractions",
+                        "comma-separated storage fractions to search as a plan dimension (empty = keep each type's configured split)",
+                        "",
                     ),
                 ],
             },
@@ -114,7 +123,11 @@ fn app() -> App {
                     Opt::with_default("seed", "first generator seed", "1"),
                     Opt::with_default("count", "number of workloads (consecutive seeds)", "8"),
                     Opt::with_default("scale", "target data scale (1000 = 100 %)", "1000"),
-                    Opt::with_default("catalog", "instance catalog (paper|cloud|all)", "cloud"),
+                    Opt::with_default(
+                        "catalog",
+                        "instance catalog (paper|cloud|all|generated:<seed>:<n>)",
+                        "cloud",
+                    ),
                     Opt::with_default(
                         "pricing",
                         "pricing model (machine-seconds|hourly|per-second|spot)",
@@ -145,6 +158,7 @@ fn dispatch(cmd: &Command, m: &Matches, format: OutputFormat) -> anyhow::Result<
             m.get("pricing").unwrap(),
             m.get_usize("max-machines").unwrap_or(12),
             m.get("scenario").unwrap(),
+            m.get("fractions").unwrap_or(""),
             format,
         )
         .map(|_| ()),

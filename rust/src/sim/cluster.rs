@@ -10,7 +10,14 @@
 //! catalog; the original constructors ([`ClusterSpec::workers`],
 //! [`ClusterSpec::single_sample_node`]) stay as thin wrappers so every
 //! paper-reproduction call site is untouched.
+//!
+//! Beyond the hand-written menus, [`InstanceCatalog::generate`] builds a
+//! seeded cloud-scale catalog — hundreds of types across four families and
+//! successive hardware generations with coherent core/memory/price scaling
+//! — so the planner can be stressed at the search-space sizes Crispy-style
+//! allocation assistants face (`--catalog generated:<seed>:<n>`).
 
+use crate::util::prng::Rng;
 use crate::util::units::Mb;
 
 /// One machine/instance type. Defaults model the paper's two node types.
@@ -78,7 +85,7 @@ impl MachineSpec {
 /// A named, priced machine shape — one row of an [`InstanceCatalog`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct InstanceType {
-    pub name: &'static str,
+    pub name: String,
     pub spec: MachineSpec,
     /// On-demand price per instance-hour (the paper's testbed nodes carry
     /// an amortized hardware+power figure so both catalogs price the same
@@ -89,12 +96,20 @@ pub struct InstanceType {
 impl InstanceType {
     /// The paper's i5 worker node, priced at amortized ownership cost.
     pub fn paper_worker() -> InstanceType {
-        InstanceType { name: "i5-worker", spec: MachineSpec::worker_node(), price_per_hour: 0.10 }
+        InstanceType {
+            name: "i5-worker".into(),
+            spec: MachineSpec::worker_node(),
+            price_per_hour: 0.10,
+        }
     }
 
     /// The paper's i3 sample node.
     pub fn paper_sample() -> InstanceType {
-        InstanceType { name: "i3-sample", spec: MachineSpec::sample_node(), price_per_hour: 0.05 }
+        InstanceType {
+            name: "i3-sample".into(),
+            spec: MachineSpec::sample_node(),
+            price_per_hour: 0.05,
+        }
     }
 
     /// A homogeneous cluster of `machines` nodes of this type.
@@ -120,15 +135,28 @@ fn cloud_spec(cores: usize, ram_gb: f64, disk_mb_s: f64, net_mb_s: f64) -> Machi
 /// A named set of instance types the planner may choose from.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InstanceCatalog {
-    pub name: &'static str,
+    pub name: String,
     pub instances: Vec<InstanceType>,
 }
+
+/// The four generated-catalog families: (name prefix, RAM GB per core,
+/// baseline disk MB/s, price per core-hour). Prices follow the hand-written
+/// cloud menu's per-core rates so the generated catalog is a superset in
+/// spirit, not a different economy.
+const GENERATED_FAMILIES: [(&str, f64, f64, f64); 4] = [
+    ("gp", 4.0, 200.0, 0.048),
+    ("cpu", 2.0, 180.0, 0.0425),
+    ("mem", 8.0, 200.0, 0.063),
+    ("io", 8.0, 450.0, 0.078),
+];
+
+const GENERATED_SIZES: [&str; 4] = ["xlarge", "2xlarge", "4xlarge", "8xlarge"];
 
 impl InstanceCatalog {
     /// The paper's testbed: the two node types of §6.
     pub fn paper() -> InstanceCatalog {
         InstanceCatalog {
-            name: "paper",
+            name: "paper".into(),
             instances: vec![InstanceType::paper_worker(), InstanceType::paper_sample()],
         }
     }
@@ -137,30 +165,30 @@ impl InstanceCatalog {
     /// shapes with plausible on-demand prices.
     pub fn cloud() -> InstanceCatalog {
         InstanceCatalog {
-            name: "cloud",
+            name: "cloud".into(),
             instances: vec![
                 InstanceType {
-                    name: "gp.xlarge", // general purpose, 4 vCPU / 16 GB
+                    name: "gp.xlarge".into(), // general purpose, 4 vCPU / 16 GB
                     spec: cloud_spec(4, 16.0, 200.0, 300.0),
                     price_per_hour: 0.192,
                 },
                 InstanceType {
-                    name: "cpu.xlarge", // compute optimized, 4 vCPU / 8 GB
+                    name: "cpu.xlarge".into(), // compute optimized, 4 vCPU / 8 GB
                     spec: cloud_spec(4, 8.0, 180.0, 300.0),
                     price_per_hour: 0.170,
                 },
                 InstanceType {
-                    name: "mem.xlarge", // memory optimized, 4 vCPU / 32 GB
+                    name: "mem.xlarge".into(), // memory optimized, 4 vCPU / 32 GB
                     spec: cloud_spec(4, 32.0, 200.0, 300.0),
                     price_per_hour: 0.252,
                 },
                 InstanceType {
-                    name: "mem.2xlarge", // memory optimized, 8 vCPU / 64 GB
+                    name: "mem.2xlarge".into(), // memory optimized, 8 vCPU / 64 GB
                     spec: cloud_spec(8, 64.0, 250.0, 600.0),
                     price_per_hour: 0.504,
                 },
                 InstanceType {
-                    name: "io.xlarge", // storage optimized, 4 vCPU / 32 GB, NVMe
+                    name: "io.xlarge".into(), // storage optimized, 4 vCPU / 32 GB, NVMe
                     spec: cloud_spec(4, 32.0, 450.0, 300.0),
                     price_per_hour: 0.312,
                 },
@@ -168,25 +196,80 @@ impl InstanceCatalog {
         }
     }
 
-    /// Union of every known catalog.
+    /// Union of every known hand-written catalog.
     pub fn all() -> InstanceCatalog {
         let mut instances = InstanceCatalog::paper().instances;
         instances.extend(InstanceCatalog::cloud().instances);
-        InstanceCatalog { name: "all", instances }
+        InstanceCatalog { name: "all".into(), instances }
     }
 
     /// A one-type catalog (the planner degenerates to §5.4 on it).
     pub fn single(instance: InstanceType) -> InstanceCatalog {
-        InstanceCatalog { name: "single", instances: vec![instance] }
+        InstanceCatalog { name: "single".into(), instances: vec![instance] }
     }
 
-    /// Look a catalog up by CLI name.
+    /// A seeded, deterministic cloud-scale catalog of `n` instance types.
+    ///
+    /// Types are enumerated structurally — family (gp/cpu/mem/io) × size
+    /// (xlarge..8xlarge, 4..32 cores) × hardware generation — so names are
+    /// unique for any `n` and the shape grid is coherent: RAM scales with
+    /// cores at a per-family GB/core ratio, disk/network bandwidth grow
+    /// with size and generation, and the hourly price is per-core family
+    /// pricing with a small generational discount. The seed drives only
+    /// bounded jitter (price ±3 %, storage fraction in [0.4, 0.6]) via the
+    /// same forked-PRNG idiom as `workloads::synth`: the same
+    /// `(seed, n)` always yields byte-identical catalogs, and catalogs for
+    /// the same seed agree on their common prefix.
+    pub fn generate(seed: u64, n: usize) -> InstanceCatalog {
+        let mut rng = Rng::new(seed).fork("catalog");
+        let mut instances = Vec::with_capacity(n);
+        for i in 0..n {
+            let (family, ram_gb_per_core, disk_base, price_per_core) =
+                GENERATED_FAMILIES[i % GENERATED_FAMILIES.len()];
+            let size_idx = (i / GENERATED_FAMILIES.len()) % GENERATED_SIZES.len();
+            let generation = i / (GENERATED_FAMILIES.len() * GENERATED_SIZES.len()) + 1;
+            let cores = 4usize << size_idx;
+            let gen_speedup = 1.0 + 0.05 * (generation - 1) as f64;
+            let disk_mb_s = disk_base * (1.0 + 0.5 * size_idx as f64) * gen_speedup;
+            let net_mb_s = 75.0 * cores as f64 * gen_speedup;
+            let mut spec = cloud_spec(cores, cores as f64 * ram_gb_per_core, disk_mb_s, net_mb_s);
+            // newer generations trade a slice of protected storage for
+            // execution room — this is what makes the storage fraction a
+            // dimension worth searching, and it keeps R strictly below M
+            spec.storage_fraction = rng.range(0.4, 0.6);
+            let discount = (1.0 - 0.02 * (generation - 1) as f64).max(0.5);
+            let price_per_hour = cores as f64 * price_per_core * discount * rng.range(0.97, 1.03);
+            instances.push(InstanceType {
+                name: format!("{family}{generation}.{}", GENERATED_SIZES[size_idx]),
+                spec,
+                price_per_hour,
+            });
+        }
+        InstanceCatalog { name: format!("generated:{seed}:{n}"), instances }
+    }
+
+    /// The valid `by_name` spellings, for CLI error messages.
+    pub fn names() -> &'static [&'static str] {
+        &["paper", "cloud", "all", "generated:<seed>:<n>"]
+    }
+
+    /// Look a catalog up by CLI name. `generated:<seed>:<n>` builds a
+    /// seeded catalog of `n` types via [`InstanceCatalog::generate`].
     pub fn by_name(name: &str) -> Option<InstanceCatalog> {
         match name {
             "paper" => Some(InstanceCatalog::paper()),
             "cloud" => Some(InstanceCatalog::cloud()),
             "all" => Some(InstanceCatalog::all()),
-            _ => None,
+            _ => {
+                let rest = name.strip_prefix("generated:")?;
+                let (seed, count) = rest.split_once(':')?;
+                let seed: u64 = seed.parse().ok()?;
+                let count: usize = count.parse().ok()?;
+                if count == 0 {
+                    return None;
+                }
+                Some(InstanceCatalog::generate(seed, count))
+            }
         }
     }
 
@@ -265,7 +348,7 @@ mod tests {
         assert!(cloud.instances.len() >= 4, "cloud catalog needs >= 4 types");
         let all = InstanceCatalog::all();
         assert_eq!(all.instances.len(), paper.instances.len() + cloud.instances.len());
-        let mut names: Vec<&str> = all.instances.iter().map(|i| i.name).collect();
+        let mut names: Vec<&str> = all.instances.iter().map(|i| i.name.as_str()).collect();
         let before = names.len();
         names.sort_unstable();
         names.dedup();
@@ -284,6 +367,94 @@ mod tests {
         assert!(cloud.get("mem.xlarge").is_some());
         assert!(cloud.get("i5-worker").is_none());
         assert_eq!(InstanceCatalog::paper().get("i5-worker").unwrap().spec, MachineSpec::worker_node());
+    }
+
+    #[test]
+    fn generated_catalog_is_deterministic_and_parsable() {
+        let a = InstanceCatalog::generate(42, 64);
+        let b = InstanceCatalog::generate(42, 64);
+        assert_eq!(a, b, "same (seed, n) must be byte-identical");
+        assert_eq!(a.name, "generated:42:64");
+        assert_eq!(a.instances.len(), 64);
+        // prefix property: growing n extends, never reshuffles
+        let small = InstanceCatalog::generate(42, 16);
+        assert_eq!(&a.instances[..16], &small.instances[..]);
+        // a different seed moves prices but not the structural grid
+        let c = InstanceCatalog::generate(43, 64);
+        assert_eq!(
+            a.instances.iter().map(|i| i.name.as_str()).collect::<Vec<_>>(),
+            c.instances.iter().map(|i| i.name.as_str()).collect::<Vec<_>>(),
+        );
+        let moved =
+            a.instances.iter().zip(&c.instances).any(|(x, y)| x.price_per_hour != y.price_per_hour);
+        assert!(moved, "a different seed must move prices");
+        // CLI spelling round-trips
+        let via_cli = InstanceCatalog::by_name("generated:42:64").unwrap();
+        assert_eq!(via_cli, a);
+        assert!(InstanceCatalog::by_name("generated:42:0").is_none());
+        assert!(InstanceCatalog::by_name("generated:42").is_none());
+        assert!(InstanceCatalog::by_name("generated:x:8").is_none());
+    }
+
+    #[test]
+    fn generated_families_scale_coherently() {
+        let cat = InstanceCatalog::generate(7, 512);
+        let gp1 = cat.get("gp1.xlarge").unwrap();
+        let gp1_big = cat.get("gp1.8xlarge").unwrap();
+        assert_eq!(gp1.spec.cores, 4);
+        assert_eq!(gp1_big.spec.cores, 32);
+        // RAM and price scale with cores within a family/generation
+        assert!(gp1_big.spec.heap_mb > 7.0 * gp1.spec.heap_mb);
+        assert!(gp1_big.price_per_hour > 6.0 * gp1.price_per_hour);
+        // memory-optimized shapes hold more cache per core than compute
+        let mem = cat.get("mem1.xlarge").unwrap();
+        let cpu = cat.get("cpu1.xlarge").unwrap();
+        assert!(mem.spec.unified_mb() > 2.0 * cpu.spec.unified_mb());
+        // later generations are no pricier than generation 1
+        let gp9 = cat.get("gp9.xlarge").unwrap();
+        assert!(gp9.price_per_hour < gp1.price_per_hour * 1.05);
+    }
+
+    #[test]
+    fn property_generated_types_are_unique_finite_and_memory_sound() {
+        use crate::util::prng::Rng;
+        use crate::util::prop;
+        prop::check(
+            &prop::Config { cases: 48, seed: 0xca7a10, max_size: 64 },
+            |rng: &mut Rng, _size| (rng.below(1 << 20) as u64, rng.below(512) as usize + 1),
+            |&(seed, n)| {
+                let cat = InstanceCatalog::generate(seed, n);
+                if cat.instances.len() != n {
+                    return Err(format!("seed {seed}: {} types, wanted {n}", cat.instances.len()));
+                }
+                let mut names: Vec<&str> =
+                    cat.instances.iter().map(|i| i.name.as_str()).collect();
+                names.sort_unstable();
+                names.dedup();
+                if names.len() != n {
+                    return Err(format!("seed {seed}: duplicate instance names"));
+                }
+                for i in &cat.instances {
+                    if !(i.price_per_hour.is_finite() && i.price_per_hour > 0.0) {
+                        return Err(format!(
+                            "seed {seed}: {} price {} not finite-positive",
+                            i.name, i.price_per_hour
+                        ));
+                    }
+                    let (m, r) = (i.spec.unified_mb(), i.spec.storage_floor_mb());
+                    if !(m.is_finite() && m > 0.0 && r.is_finite() && r > 0.0) {
+                        return Err(format!("seed {seed}: {} degenerate memory", i.name));
+                    }
+                    if r > m {
+                        return Err(format!(
+                            "seed {seed}: {} storage floor {r} exceeds unified {m}",
+                            i.name
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

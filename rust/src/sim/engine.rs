@@ -231,6 +231,15 @@ impl EventQueue {
 /// Journal of a job in flight. Flushed to the log at the job barrier in
 /// assignment order (identical to the legacy push order); task entries of
 /// a lost machine can be rewound before the flush.
+///
+/// Task events live in one flat arena (`Vec<Event>`) shared by every task
+/// of the job; each entry holds its contiguous `Range` into it. This
+/// replaced the per-task `Vec<Event>` buffers (and the spare-buffer pool
+/// that recycled them): a job now costs one arena grow instead of one
+/// allocation per task, the hot spot `BENCH_hotpaths.json` tracks under
+/// `engine/arena-svm-100pct-4-machines-detailed`. A rewound task's range
+/// is simply never flushed; the garbage is reclaimed when the arena
+/// clears at the barrier.
 enum JournalEntry {
     Task {
         part: usize,
@@ -238,27 +247,27 @@ enum JournalEntry {
         end_s: f64,
         iteration: bool,
         evictions: usize,
-        events: Vec<Event>,
+        events: std::ops::Range<usize>,
     },
     Marker(Event),
 }
 
-/// Drain the journal into the log in assignment order. Emptied per-task
-/// event buffers are returned to `spare` so the next job's tasks reuse
-/// their capacity instead of reallocating — one of the two allocation hot
-/// spots the perf baseline (`BENCH_hotpaths.json`) tracks.
-fn flush_journal(log: &mut EventLog, journal: &mut Vec<JournalEntry>, spare: &mut Vec<Vec<Event>>) {
+/// Drain the journal into the log in assignment order, copying each live
+/// task's event range out of the arena (task events carry no heap data),
+/// then reset the arena for the next job. Ranges of rewound tasks are
+/// skipped because their entries are gone from the journal.
+fn flush_journal(log: &mut EventLog, journal: &mut Vec<JournalEntry>, arena: &mut Vec<Event>) {
     for entry in journal.drain(..) {
         match entry {
-            JournalEntry::Task { mut events, .. } => {
-                for e in events.drain(..) {
+            JournalEntry::Task { events, .. } => {
+                for e in arena[events].iter().cloned() {
                     log.push(e);
                 }
-                spare.push(events);
             }
             JournalEntry::Marker(e) => log.push(e),
         }
     }
+    arena.clear();
 }
 
 // ---------------------------------------------------------------------
@@ -441,7 +450,8 @@ pub fn horizon_s(profile: &WorkloadProfile, fleet: &FleetSpec) -> f64 {
 /// A machine leaves at `at_s`: close its uptime segment, drop its cached
 /// store (the `memory` layer releases everything at once), clear partition
 /// locations, and rewind its in-flight journal entries back into the job's
-/// work queue.
+/// work queue. Returns whether any state changed (`false` for a machine
+/// that is already gone), so the caller can skip rescanning the frontier.
 #[allow(clippy::too_many_arguments)]
 fn lose_machine(
     mi: usize,
@@ -451,9 +461,9 @@ fn lose_machine(
     journal: &mut Vec<JournalEntry>,
     pending: &mut VecDeque<usize>,
     not_before: &mut [f64],
-) {
+) -> bool {
     if !machines[mi].alive {
-        return;
+        return false;
     }
     // a loss cannot predate the machine's current uptime segment
     let at_s = at_s.max(machines[mi].up_from_s);
@@ -505,8 +515,14 @@ fn lose_machine(
         cached_mb_lost,
         inflight_tasks: inflight,
     }));
+    true
 }
 
+/// Apply one queued event. Returns whether any scheduling-visible state
+/// changed: `false` for no-op events (a preempt of an out-of-range or
+/// already-dead machine, a slowdown on a dead machine, a degenerate
+/// scale-out), which lets the dispatch loops keep their computed frontier
+/// slot instead of rescanning every machine.
 #[allow(clippy::too_many_arguments)]
 fn apply_item(
     item: QueueItem,
@@ -520,30 +536,36 @@ fn apply_item(
     policy: EvictionPolicy,
     exec_pm: Mb,
     now: f64,
-) {
+) -> bool {
     // a join can only take effect at the scheduling frontier: a machine
     // (re)appearing during the inter-job serial window must not run tasks
     // of the next job before that job starts
     let join_s = item.at_s.max(now);
     match item.kind {
         QueuedKind::Disturb(DisturbanceKind::Preempt { machine }) => {
-            if machine < machines.len() {
-                lose_machine(machine, item.at_s, machines, location, journal, pending, not_before);
-            }
+            machine < machines.len()
+                && lose_machine(
+                    machine, item.at_s, machines, location, journal, pending, not_before,
+                )
         }
         QueuedKind::Disturb(DisturbanceKind::Fail { machine, restart_delay_s }) => {
             if machine < machines.len() && machines[machine].alive {
                 lose_machine(machine, item.at_s, machines, location, journal, pending, not_before);
                 queue.push(item.at_s + restart_delay_s, QueuedKind::Rejoin { machine });
+                true
+            } else {
+                false
             }
         }
         QueuedKind::Disturb(DisturbanceKind::Slowdown { machine, factor, duration_s }) => {
-            if let Some(m) = machines.get_mut(machine) {
-                if m.alive {
+            match machines.get_mut(machine) {
+                Some(m) if m.alive => {
                     m.slow_factor = factor;
                     m.slow_from = item.at_s;
                     m.slow_until = item.at_s + duration_s;
+                    true
                 }
+                _ => false,
             }
         }
         QueuedKind::Disturb(DisturbanceKind::ScaleOut { instance, count }) => {
@@ -553,7 +575,7 @@ fn apply_item(
             // through, pushing an empty `InstanceGroup` into the group
             // table (and its type into every later overhead aggregation)
             if count == 0 || FleetSpec::homogeneous(instance.clone(), count).is_err() {
-                return;
+                return false;
             }
             let group = groups.len();
             groups.push(instance.clone());
@@ -569,6 +591,7 @@ fn apply_item(
                     time_s: join_s,
                 }));
             }
+            true
         }
         QueuedKind::Rejoin { machine } => {
             let m = &mut machines[machine];
@@ -588,6 +611,7 @@ fn apply_item(
                 machine,
                 time_s: join_s,
             }));
+            true
         }
     }
 }
@@ -673,12 +697,13 @@ pub fn run(
     // rewound by a machine loss at time t must not re-run before t, even
     // on a survivor whose slot idled earlier (causality of the retry)
     let mut not_before: Vec<f64> = vec![0.0; parts];
-    // work list, journal and per-task event buffers are allocated once and
+    // work list, journal and the task-event arena are allocated once and
     // recycled across every job of the run: the journal drains at each
-    // barrier and the emptied event buffers rotate through `spare_events`
+    // barrier and the arena clears with it, so steady state allocates
+    // nothing per task
     let mut pending: VecDeque<usize> = VecDeque::with_capacity(parts);
     let mut journal: Vec<JournalEntry> = Vec::new();
-    let mut spare_events: Vec<Vec<Event>> = Vec::new();
+    let mut arena: Vec<Event> = Vec::new();
 
     // ---------------------------------------------------------- job 0 ----
     // Materialize: read input, compute, cache each partition where it ran.
@@ -713,8 +738,13 @@ pub fn run(
                         }
                     };
                     let start = machines[mi].slots[si].max(not_before[p]);
-                    if let Some(item) = queue.pop_due(start) {
-                        apply_item(
+                    // drain due no-op events without rescanning the
+                    // frontier — the slot stays valid until one changes
+                    // scheduling-visible state
+                    let mut changed = false;
+                    while !changed {
+                        let Some(item) = queue.pop_due(start) else { break };
+                        changed = apply_item(
                             item,
                             &mut machines,
                             &mut groups,
@@ -727,6 +757,8 @@ pub fn run(
                             exec_pm,
                             now,
                         );
+                    }
+                    if changed {
                         continue;
                     }
                     let base = input_per_task / machines[mi].spec.disk_mb_s
@@ -736,10 +768,10 @@ pub fn run(
                         * machines[mi].slowdown_at(start);
                     machines[mi].slots[si] = start + dur;
                     machines[mi].tasks_run += 1;
-                    let mut events = spare_events.pop().unwrap_or_default();
+                    let events_from = arena.len();
                     let mut entry_evictions = 0usize;
                     if detailed {
-                        events.push(Event::TaskEnd {
+                        arena.push(Event::TaskEnd {
                             stage: 0,
                             task: p,
                             machine: mi,
@@ -759,14 +791,14 @@ pub fn run(
                         for key in machines[mi].mem.drain_evicted() {
                             machines[mi].evictions += 1;
                             entry_evictions += 1;
-                            events.push(Event::Eviction { machine: mi });
+                            arena.push(Event::Eviction { machine: mi });
                             mark_evicted(&mut location, profile, key);
                         }
                         if stored {
                             location[di][p] = Some(mi);
                         }
                         if detailed {
-                            events.push(Event::BlockUpdate {
+                            arena.push(Event::BlockUpdate {
                                 dataset: ds.id,
                                 partition: p,
                                 size_mb: measured_part,
@@ -780,14 +812,16 @@ pub fn run(
                         end_s: start + dur,
                         iteration: false,
                         evictions: entry_evictions,
-                        events,
+                        events: events_from..arena.len(),
                     });
                     break;
                 }
             }
             let b = barrier(&machines, now);
-            if let Some(item) = queue.pop_due(b) {
-                apply_item(
+            let mut changed = false;
+            while !changed {
+                let Some(item) = queue.pop_due(b) else { break };
+                changed = apply_item(
                     item,
                     &mut machines,
                     &mut groups,
@@ -800,12 +834,14 @@ pub fn run(
                     exec_pm,
                     now,
                 );
+            }
+            if changed {
                 continue;
             }
             now = b;
             break;
         }
-        flush_journal(&mut log, &mut journal, &mut spare_events);
+        flush_journal(&mut log, &mut journal, &mut arena);
     }
     now += profile.serial_s + fleet_overhead_s(profile, &machines, &groups);
     set_all_slots(&mut machines, now);
@@ -836,7 +872,7 @@ pub fn run(
                 now,
             );
         }
-        flush_journal(&mut log, &mut journal, &mut spare_events);
+        flush_journal(&mut log, &mut journal, &mut arena);
         // the between-jobs drain only produces markers (the journal was
         // empty, so nothing could rewind); start the job from a clean
         // work list and retry-floor
@@ -869,7 +905,7 @@ pub fn run(
             );
             alive_n = machines.iter().filter(|m| m.alive).count();
         }
-        flush_journal(&mut log, &mut journal, &mut spare_events);
+        flush_journal(&mut log, &mut journal, &mut arena);
 
         // Execution memory is claimed at the start of each action; with a
         // thin margin this is what evicts over-cached machines (Fig. 11).
@@ -925,8 +961,12 @@ pub fn run(
                         },
                     };
                     let start = machines[mi].slots[si].max(not_before[p]);
-                    if let Some(item) = queue.pop_due(start) {
-                        apply_item(
+                    // as in job 0: only a state-changing event invalidates
+                    // the computed slot (or the pinned machine's liveness)
+                    let mut changed = false;
+                    while !changed {
+                        let Some(item) = queue.pop_due(start) else { break };
+                        changed = apply_item(
                             item,
                             &mut machines,
                             &mut groups,
@@ -939,6 +979,8 @@ pub fn run(
                             exec_pm,
                             now,
                         );
+                    }
+                    if changed {
                         continue;
                     }
                     let cached_read = pinned.is_some();
@@ -962,10 +1004,10 @@ pub fn run(
                     machines[mi].slots[si] = start + dur;
                     machines[mi].tasks_run += 1;
                     machines[mi].iter_tasks += 1;
-                    let mut events = spare_events.pop().unwrap_or_default();
+                    let events_from = arena.len();
                     let mut entry_evictions = 0usize;
                     if detailed {
-                        events.push(Event::TaskEnd {
+                        arena.push(Event::TaskEnd {
                             stage: job,
                             task: p,
                             machine: mi,
@@ -990,7 +1032,7 @@ pub fn run(
                             for key in machines[mi].mem.drain_evicted() {
                                 machines[mi].evictions += 1;
                                 entry_evictions += 1;
-                                events.push(Event::Eviction { machine: mi });
+                                arena.push(Event::Eviction { machine: mi });
                                 mark_evicted(&mut location, profile, key);
                             }
                             if stored {
@@ -1004,14 +1046,16 @@ pub fn run(
                         end_s: start + dur,
                         iteration: true,
                         evictions: entry_evictions,
-                        events,
+                        events: events_from..arena.len(),
                     });
                     break;
                 }
             }
             let b = barrier(&machines, now);
-            if let Some(item) = queue.pop_due(b) {
-                apply_item(
+            let mut changed = false;
+            while !changed {
+                let Some(item) = queue.pop_due(b) else { break };
+                changed = apply_item(
                     item,
                     &mut machines,
                     &mut groups,
@@ -1024,11 +1068,13 @@ pub fn run(
                     exec_pm,
                     now,
                 );
+            }
+            if changed {
                 continue;
             }
             break;
         }
-        flush_journal(&mut log, &mut journal, &mut spare_events);
+        flush_journal(&mut log, &mut journal, &mut arena);
         let job_start = now;
         now = barrier(&machines, now);
         now += profile.serial_s + fleet_overhead_s(profile, &machines, &groups);
@@ -1332,6 +1378,35 @@ mod tests {
         assert_eq!(q.pop_due(10.0).unwrap().at_s, 3.0);
         assert_eq!(q.pop_due(10.0).unwrap().at_s, 5.0);
         assert!(q.pop_due(f64::INFINITY).is_none());
+    }
+
+    #[test]
+    fn no_op_disturbances_leave_the_run_byte_identical() {
+        // the dispatch loops keep their computed frontier slot across
+        // no-op events (out-of-range preempt, slowdown of a machine that
+        // does not exist); the run must match an undisturbed one exactly
+        struct NoOps;
+        impl super::super::scenario::Scenario for NoOps {
+            fn name(&self) -> &'static str {
+                "no-ops"
+            }
+            fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<super::super::scenario::Disturbance> {
+                let d = |at_s, kind| super::super::scenario::Disturbance { at_s, kind };
+                vec![
+                    d(0.0, DisturbanceKind::Preempt { machine: 99 }),
+                    d(
+                        ctx.horizon_s * 0.1,
+                        DisturbanceKind::Slowdown { machine: 99, factor: 4.0, duration_s: 10.0 },
+                    ),
+                    d(ctx.horizon_s * 0.2, DisturbanceKind::Preempt { machine: 99 }),
+                ]
+            }
+        }
+        let p = toy_profile(2000.0, 4, 32);
+        let disturbed = run(&p, &worker_fleet(3), &NoOps, opts(9)).unwrap();
+        let base = run(&p, &worker_fleet(3), &NoDisturbances, opts(9)).unwrap();
+        assert_eq!(disturbed.sim.log.to_jsonl(), base.sim.log.to_jsonl());
+        assert_eq!(disturbed.timeline, base.timeline);
     }
 
     #[test]

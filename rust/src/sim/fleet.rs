@@ -104,7 +104,7 @@ impl FleetSpec {
     pub fn from_cluster(cluster: &ClusterSpec) -> Result<FleetSpec, SimError> {
         FleetSpec::homogeneous(
             InstanceType {
-                name: "cluster",
+                name: "cluster".into(),
                 spec: cluster.machine.clone(),
                 price_per_hour: 0.0,
             },

@@ -10,6 +10,10 @@
 //! * **planner degeneracy** — on a single-type catalog the catalog search
 //!   collapses to `select_cluster_size`, and ranked picks stay ordered
 //!   (eviction-free first, then cheapest);
+//! * **generated-catalog exactness** — over a seeded generated catalog
+//!   with an explicit storage-fraction grid, the pruned `plan_search` is
+//!   byte-identical to the exhaustive `(type × fraction × count)`
+//!   reference;
 //! * **deficit monotonicity** — the per-machine cache deficit never
 //!   shrinks as the data scale grows (fixed cluster);
 //! * **max-scale inversion** — just below `TrainedProfile::max_scale` the
@@ -28,8 +32,8 @@
 use std::fmt;
 
 use crate::blink::{
-    machine_split, plan_exhaustive, select_cluster_size, Advisor, PlanInput, RustFit,
-    TrainedProfile,
+    machine_split, plan_exhaustive, plan_exhaustive_search, plan_search, select_cluster_size,
+    Advisor, PlanInput, RustFit, SearchSpace, TrainedProfile,
 };
 use crate::cost::pricing_by_name;
 use crate::memory::EvictionPolicy;
@@ -74,6 +78,12 @@ pub struct MatrixSpec {
     pub max_machines: usize,
     /// Seed of the engine runs (task-duration noise stream).
     pub engine_seed: u64,
+    /// `(seed, types)` of the [`InstanceCatalog::generate`] catalog the
+    /// `plan-generated-exact` invariant plans over. Kept small so the
+    /// quadratic exhaustive reference stays cheap per workload.
+    pub generated_catalog: (u64, usize),
+    /// Storage-fraction grid for the `plan-generated-exact` invariant.
+    pub fraction_grid: Vec<f64>,
 }
 
 impl Default for MatrixSpec {
@@ -86,6 +96,8 @@ impl Default for MatrixSpec {
             pricing_names: vec!["machine-seconds", "hourly"],
             max_machines: 12,
             engine_seed: 11,
+            generated_catalog: (7, 12),
+            fraction_grid: vec![0.3, 0.5, 0.7],
         }
     }
 }
@@ -299,6 +311,41 @@ pub fn check_profile(
                     ),
                 )),
             }
+        }
+    }
+
+    // the fraction-dimension search: over a seeded generated catalog with
+    // an explicit storage-fraction grid, the pruned plan_search must be
+    // byte-identical to the exhaustive (type × fraction × count) reference
+    {
+        checks += 1;
+        let (gseed, gtypes) = spec.generated_catalog;
+        let catalog = InstanceCatalog::generate(gseed, gtypes);
+        let pricing = pricing_by_name(spec.pricing_names[0]).expect("matrix pricing exists");
+        let scale = spec.engine_scale;
+        let wp = app.profile(scale);
+        let input = PlanInput {
+            profile: &wp,
+            cached_total_mb: profile.predicted_cached_mb(scale),
+            exec_total_mb: profile.predicted_exec_mb(scale),
+        };
+        let space = SearchSpace {
+            max_machines: spec.max_machines,
+            storage_fractions: spec.fraction_grid.clone(),
+        };
+        let fast = plan_search(&input, &catalog, pricing.as_ref(), &space);
+        let full = plan_exhaustive_search(&input, &catalog, pricing.as_ref(), &space);
+        if fast.ranked != full.ranked || fast.pareto != full.pareto {
+            out.push(violation(
+                app,
+                seed,
+                "plan-generated-exact",
+                format!(
+                    "generated:{gseed}:{gtypes} with fractions {:?}: pruned search \
+                     diverged from the exhaustive grid",
+                    spec.fraction_grid
+                ),
+            ));
         }
     }
 

@@ -21,6 +21,20 @@ fn blink_cli(args: &[&str]) -> String {
     String::from_utf8(out.stdout).expect("utf8 stdout")
 }
 
+/// Run the real `blink` binary expecting failure; return its stderr.
+fn blink_cli_err(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_blink"))
+        .args(args)
+        .output()
+        .expect("spawn blink binary");
+    assert!(
+        !out.status.success(),
+        "blink {args:?} unexpectedly succeeded:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    String::from_utf8(out.stderr).expect("utf8 stderr")
+}
+
 /// Run a subcommand with `--format json` appended; stdout must be one doc.
 fn query_json(args: &[&str]) -> Json {
     let mut full = args.to_vec();
@@ -84,6 +98,53 @@ fn format_flag_accepts_equals_syntax_and_rejects_unknown() {
         .output()
         .expect("spawn blink binary");
     assert!(!out.status.success(), "unknown format must fail");
+}
+
+#[test]
+fn unknown_catalog_and_pricing_errors_list_the_valid_names() {
+    // a typo'd name must enumerate every valid spelling, so the error is
+    // actionable without opening the docs
+    let err = blink_cli_err(&["advise", "--app", "svm", "--scale", "200", "--catalog", "nope"]);
+    assert!(err.contains("unknown catalog 'nope'"), "stderr: {err}");
+    for name in ["paper", "cloud", "all", "generated:<seed>:<n>"] {
+        assert!(err.contains(name), "catalog error must list '{name}': {err}");
+    }
+    let err = blink_cli_err(&["advise", "--app", "svm", "--scale", "200", "--pricing", "florins"]);
+    assert!(err.contains("unknown pricing model 'florins'"), "stderr: {err}");
+    for name in ["machine-seconds", "hourly", "per-second", "spot"] {
+        assert!(err.contains(name), "pricing error must list '{name}': {err}");
+    }
+    // simulate shares the pricing lookup
+    let err = blink_cli_err(&[
+        "simulate", "--app", "svm", "--scale", "50", "--machines", "2", "--pricing", "florins",
+    ]);
+    assert!(err.contains("unknown pricing model 'florins'"), "stderr: {err}");
+}
+
+#[test]
+fn advise_handles_generated_catalogs_and_fraction_grids() {
+    // `generated:<seed>:<n>` catalogs and an explicit `--fractions` grid
+    // surface in the JSON contract: one ranked pick per (type, fraction)
+    let j = query_json(&[
+        "advise", "--app", "svm", "--scale", "200", "--catalog", "generated:7:6", "--pricing",
+        "hourly", "--max-machines", "4", "--fractions", "0.4,0.6",
+    ]);
+    assert_eq!(marker(&j, "query"), "plan");
+    assert_eq!(marker(&j, "catalog"), "generated:7:6");
+    let fractions = j.path(&["plan", "fractions"]).and_then(Json::as_arr).expect("fractions");
+    assert_eq!(fractions.len(), 2);
+    let ranked = j.path(&["plan", "ranked"]).and_then(Json::as_arr).expect("ranked array");
+    assert_eq!(ranked.len(), 6 * 2, "one pick per (type, fraction) pair");
+    for pick in ranked {
+        let f = pick.path(&["candidate", "storage_fraction"]).and_then(Json::as_f64).unwrap();
+        assert!(f == 0.4 || f == 0.6, "storage_fraction {f}");
+    }
+    // a malformed grid is rejected up front, before any profiling work
+    let err =
+        blink_cli_err(&["advise", "--app", "svm", "--scale", "200", "--fractions", "0.4,nope"]);
+    assert!(err.contains("invalid storage fraction"), "stderr: {err}");
+    let err = blink_cli_err(&["advise", "--app", "svm", "--scale", "200", "--fractions", "1.5"]);
+    assert!(err.contains("out of range"), "stderr: {err}");
 }
 
 #[test]
