@@ -1,6 +1,7 @@
 //! Micro-benchmarks of the hot paths (the §Perf instrument panel):
 //! simulator task throughput, memory-manager ops, NNLS fitting (Rust vs
-//! PJRT Pallas kernel), planner search (pruned vs frozen exhaustive),
+//! PJRT Pallas kernel), planner search (pruned vs frozen exhaustive), the
+//! sharded profile-store serve loop (cold misses vs lock-free hot reads),
 //! selector, and listener-log serialization.
 //! `cargo bench --bench hotpaths`.
 //!
@@ -9,7 +10,9 @@
 //! CI smoke adds `BLINK_BENCH_SMOKE=1` (fewer samples, same schema).
 
 use blink::blink::models::{FitBackend, FitProblem, RustFit};
-use blink::blink::{plan, plan_exhaustive, select_cluster_size, PlanInput};
+use blink::blink::{
+    plan, plan_exhaustive, select_cluster_size, serve_batch, PlanInput, ProfileStore,
+};
 use blink::cost::PerInstanceHour;
 use blink::memory::{EvictionPolicy, PartitionKey, UnifiedMemory};
 use blink::metrics::{EventLog, RunSummary};
@@ -144,6 +147,38 @@ fn main() {
     println!(
         "  -> generated-512 at {:.2}x the 6-type cloud median",
         gen_s / pruned_s
+    );
+
+    // ---- serve: the sharded profile store hot path ------------------------
+    // one JSONL batch of recommend queries over 100 seeded synthetic apps
+    // (the PR 5 generator), the advisor-as-a-service workload shape
+    let serve_input = (1..=100u64)
+        .map(|s| format!("{{\"query\":\"recommend\",\"app\":\"synth:mixed:{s}\",\"scale\":800}}"))
+        .collect::<Vec<_>>()
+        .join("\n");
+
+    // cold path: every query is a profile miss (fresh store per sample,
+    // 100 sampling phases + fits inside the timed region)
+    b.bench("serve/cold-100-profile-misses", || {
+        let store = ProfileStore::builder().shards(8).build();
+        serve_batch(&store, &serve_input, 1).len()
+    });
+
+    // hot path: a warmed store answers the same batch lock-free; the
+    // 1-thread vs 8-thread pair is the read-path scaling instrument
+    let store = ProfileStore::builder().shards(8).build();
+    serve_batch(&store, &serve_input, 0); // warm all 100 profiles
+    let one_s = b
+        .bench("serve/hot-queries-1-thread", || serve_batch(&store, &serve_input, 1).len())
+        .median_s();
+    let eight_s = b
+        .bench("serve/hot-queries-8-threads", || serve_batch(&store, &serve_input, 8).len())
+        .median_s();
+    println!(
+        "  -> hot store: {:.0} q/s at 1 thread, {:.0} q/s at 8 threads ({:.2}x)",
+        100.0 / one_s,
+        100.0 / eight_s,
+        one_s / eight_s
     );
 
     // ---- selector ---------------------------------------------------------

@@ -40,6 +40,7 @@ pub mod report;
 pub mod sample_runs;
 pub mod selector;
 pub mod session;
+pub mod store;
 
 pub use models::{FitBackend, RustFit};
 pub use planner::{
@@ -50,9 +51,18 @@ pub use predictor::{ExecMemoryPredictor, SizePredictor};
 pub use report::{OutputFormat, Report};
 pub use sample_runs::{SampleRun, SampleRunsManager, SamplingOutcome, DEFAULT_SCALES};
 pub use selector::{
-    machine_split, machine_split_at, select_cluster_size, select_cluster_size_at, Selection,
+    machine_split, machine_split_at, select_cluster_size, select_cluster_size_at,
+    select_cluster_size_seeded, Selection,
 };
-pub use session::{Advisor, AdvisorBuilder, Recommendation, Scales, TrainedProfile, ValidationSpec};
+pub use session::{
+    app_fingerprint, normalize_scales, Advisor, AdvisorBuilder, Recommendation, ScaleError, Scales,
+    TrainedProfile, ValidationSpec,
+};
+pub use store::{
+    load_profile, profile_from_json, profile_to_json, resolve_app, results_bytes, save_profile,
+    serve_batch, ProfileStore, ProfileStoreBuilder, ServeOutcome, StoreError, PREDICTOR_VERSION,
+    PROFILE_FORMAT_VERSION,
+};
 
 use crate::cost::PricingModel;
 use crate::sim::{InstanceCatalog, MachineSpec};

@@ -62,7 +62,9 @@
 //! [`crate::util::par::sweep_range`], whose index-ordered results keep
 //! the parallel path bit-identical to the serial one.
 
-use super::selector::{machine_split_at, select_cluster_size_at, Selection};
+use super::selector::{
+    machine_split_at, select_cluster_size_at, select_cluster_size_seeded, Selection,
+};
 use crate::cost::PricingModel;
 use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
@@ -368,26 +370,39 @@ fn plan_type_pruned(
     let mut picks = Vec::with_capacity(fractions.len());
     let mut grid = Vec::new();
     let mut any_free = false;
-    // fractions ascend, so each unsaturated n* caps the next fraction's
-    // count scan (the extended §5.4 bound, module docs / DESIGN §8); the
-    // capped scan returns the identical Selection because the condition
-    // already holds at the previous n* under the larger capacity
-    let mut cap = max_machines;
+    // fractions ascend, so each unsaturated n* seeds the next fraction's
+    // count scan (the extended §5.4 bound, module docs / DESIGN §8): the
+    // condition already holds at the previous n* under the larger
+    // capacity, so the seeded selector walks *down* from it instead of
+    // re-scanning up from 1 — on a dense fraction grid each scan visits
+    // only the (usually zero or one) counts the pick actually moved by,
+    // and returns the identical Selection
+    let mut hint: Option<usize> = None;
     for &fraction in fractions {
-        let selection = select_cluster_size_at(
-            input.cached_total_mb,
-            input.exec_total_mb,
-            &instance.spec,
-            fraction,
-            cap,
-        );
+        let selection = match hint {
+            Some(h) => select_cluster_size_seeded(
+                input.cached_total_mb,
+                input.exec_total_mb,
+                &instance.spec,
+                fraction,
+                max_machines,
+                h,
+            ),
+            None => select_cluster_size_at(
+                input.cached_total_mb,
+                input.exec_total_mb,
+                &instance.spec,
+                fraction,
+                max_machines,
+            ),
+        };
         debug_assert!(
-            !selection.saturated || cap == max_machines,
-            "a capped fraction scan can never saturate"
+            !selection.saturated || hint.is_none(),
+            "a seeded fraction scan can never saturate"
         );
         if !selection.saturated {
             any_free = true;
-            cap = selection.machines;
+            hint = Some(selection.machines);
         }
         // the selector scanned upward and `selection.machines` is the
         // first eviction-free count (== max_machines when saturated):

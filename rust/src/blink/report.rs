@@ -956,6 +956,86 @@ impl Report for SynthReport {
     }
 }
 
+/// `blink serve`: one JSONL batch answered from the sharded profile
+/// store. The `results` array (one doc per query line, in line order) is
+/// the deterministic payload — byte-identical at any shard or thread
+/// count; `elapsed_s`/`queries_per_s` are wall-clock diagnostics and
+/// deliberately sit outside it.
+pub struct ServeReport {
+    pub backend: String,
+    pub queries: usize,
+    pub ok: usize,
+    pub errors: usize,
+    /// Distinct profiles in the store after the batch.
+    pub profiles: usize,
+    /// Sampling phases actually paid (cold misses; preloads don't count).
+    pub sampling_phases: usize,
+    pub shards: usize,
+    /// Requested worker count (0 = sized from the host).
+    pub threads: usize,
+    pub elapsed_s: f64,
+    /// One answer doc per query line, in line order.
+    pub results: Vec<Json>,
+}
+
+impl ServeReport {
+    pub fn queries_per_s(&self) -> f64 {
+        self.queries as f64 / self.elapsed_s.max(1e-9)
+    }
+}
+
+impl Report for ServeReport {
+    fn render_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "SERVE — {} queries ({} ok, {} errors) from {} profiles ({} sampling phases)",
+            self.queries, self.ok, self.errors, self.profiles, self.sampling_phases,
+        );
+        let _ = writeln!(
+            out,
+            "fit backend: {}; {} shards, {} threads{}",
+            self.backend,
+            self.shards,
+            self.threads,
+            if self.threads == 0 { " (auto)" } else { "" },
+        );
+        let _ = writeln!(
+            out,
+            "elapsed {} ({:.0} queries/s)",
+            fmt_secs(self.elapsed_s),
+            self.queries_per_s(),
+        );
+        for (i, doc) in self.results.iter().enumerate() {
+            let kind = doc.get("query").and_then(Json::as_str).unwrap_or("?");
+            let detail = if kind == "error" {
+                doc.get("error").and_then(Json::as_str).unwrap_or("").to_string()
+            } else {
+                doc.get("app").and_then(Json::as_str).unwrap_or("").to_string()
+            };
+            let _ = writeln!(out, "  [{i}] {kind} {detail}");
+        }
+        finish(out)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("query", "serve".into()),
+            ("backend", self.backend.as_str().into()),
+            ("queries", self.queries.into()),
+            ("ok", self.ok.into()),
+            ("errors", self.errors.into()),
+            ("profiles", self.profiles.into()),
+            ("sampling_phases", self.sampling_phases.into()),
+            ("shards", self.shards.into()),
+            ("threads", self.threads.into()),
+            ("elapsed_s", self.elapsed_s.into()),
+            ("queries_per_s", self.queries_per_s().into()),
+            ("results", Json::Arr(self.results.clone())),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -131,6 +131,73 @@ pub fn select_cluster_size_at(
     }
 }
 
+/// [`select_cluster_size_at`] seeded with a count `hint` that is already
+/// known to satisfy the eviction-free condition (e.g. the selection at a
+/// *lower* storage fraction on a dense `--fractions` grid — the minimal
+/// count is non-increasing in the fraction, see the planner's pruning
+/// argument). Instead of scanning up from 1, walk *down* from the hint
+/// while the condition still holds, which visits `hint - n* + 1` counts
+/// instead of `n*`. The eviction-free condition `ΣD/n < M - min(M-R,
+/// Mem_exec/n)` is monotone in `n` (the left side strictly decreases, the
+/// capacity is non-decreasing), so the first failing `n-1` proves `n` is
+/// minimal and the result is identical to the ground-up scan — asserted in
+/// debug builds.
+pub fn select_cluster_size_seeded(
+    cached_total_mb: Mb,
+    exec_total_mb: Mb,
+    machine: &MachineSpec,
+    storage_fraction: f64,
+    max_machines: usize,
+    hint: usize,
+) -> Selection {
+    let m = machine.unified_mb();
+    let r = m * storage_fraction;
+    assert!(max_machines >= 1);
+    let hint = hint.clamp(1, max_machines);
+
+    let holds = |n: usize| {
+        let (_, capacity) = machine_split_at(exec_total_mb, machine, storage_fraction, n);
+        cached_total_mb / (n as f64) < capacity
+    };
+    if !holds(hint) {
+        // bad hint: the caller's invariant does not apply; fall back
+        return select_cluster_size_at(
+            cached_total_mb,
+            exec_total_mb,
+            machine,
+            storage_fraction,
+            max_machines,
+        );
+    }
+    let mut n = hint;
+    while n > 1 && holds(n - 1) {
+        n -= 1;
+    }
+    let machines_min = (cached_total_mb / m).ceil().max(1.0) as usize;
+    let machines_max = (cached_total_mb / r).ceil().max(1.0) as usize;
+    let (exec_pm, capacity) = machine_split_at(exec_total_mb, machine, storage_fraction, n);
+    let selection = Selection {
+        machines: n,
+        machines_min,
+        machines_max,
+        machine_exec_mb: exec_pm,
+        headroom_mb: capacity - cached_total_mb / n as f64,
+        saturated: false,
+    };
+    debug_assert_eq!(
+        selection,
+        select_cluster_size_at(
+            cached_total_mb,
+            exec_total_mb,
+            machine,
+            storage_fraction,
+            max_machines
+        ),
+        "seeded scan must match the ground-up scan"
+    );
+    selection
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +311,33 @@ mod tests {
                         }
                     }
                     prev = Some(s);
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_seeded_scan_is_identical_to_ground_up_scan() {
+        // satellite of the dense-fraction planner speedup: any valid hint
+        // (a count satisfying the condition), and any *invalid* hint via
+        // the fallback, must reproduce select_cluster_size_at exactly
+        prop::check(
+            &prop::Config { cases: 96, seed: 0x5eed, max_size: 64 },
+            |rng: &mut Rng, _size| {
+                (
+                    rng.range(10.0, 120_000.0),
+                    rng.range(0.0, 50_000.0),
+                    rng.range(0.2, 0.8),
+                    1 + rng.below(24),
+                )
+            },
+            |&(cached, exec, fraction, hint)| {
+                let m = worker();
+                let plain = select_cluster_size_at(cached, exec, &m, fraction, 24);
+                let seeded = select_cluster_size_seeded(cached, exec, &m, fraction, 24, hint);
+                if plain != seeded {
+                    return Err(format!("hint {hint}: {seeded:?} != {plain:?}"));
                 }
                 Ok(())
             },

@@ -59,6 +59,60 @@ impl Scales {
     }
 }
 
+/// Why a sampling-scale set was rejected at advisor intake.
+///
+/// Scales enter the profile cache key as **exact f64 bit patterns**, so
+/// values whose bit pattern is ambiguous or absorbing must be handled
+/// here rather than silently keyed: `-0.0 == 0.0` numerically but has a
+/// different bit pattern (one logical scale set would split into two
+/// cache entries, re-paying the sampling phase), and `NaN != NaN` (a key
+/// that can never hit — every query re-samples forever).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScaleError {
+    /// A scale was NaN or ±∞.
+    NonFinite { index: usize, value: f64 },
+    /// A scale was strictly negative — data scales are magnitudes.
+    Negative { index: usize, value: f64 },
+}
+
+impl std::fmt::Display for ScaleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScaleError::NonFinite { index, value } => {
+                write!(f, "sampling scale #{index} is not finite ({value})")
+            }
+            ScaleError::Negative { index, value } => {
+                write!(f, "sampling scale #{index} is negative ({value})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScaleError {}
+
+/// Validate and canonicalize sampling scales at advisor intake: reject
+/// non-finite and negative values with a typed [`ScaleError`], and
+/// normalize `-0.0` to `0.0` so the bit-exact cache key cannot split one
+/// logical scale set into two entries. Every other value passes through
+/// bit-identically.
+pub fn normalize_scales(scales: &[f64]) -> Result<Vec<f64>, ScaleError> {
+    scales
+        .iter()
+        .enumerate()
+        .map(|(index, &value)| {
+            if !value.is_finite() {
+                Err(ScaleError::NonFinite { index, value })
+            } else if value < 0.0 {
+                Err(ScaleError::Negative { index, value })
+            } else if value == 0.0 {
+                Ok(0.0) // collapse -0.0 onto +0.0
+            } else {
+                Ok(value)
+            }
+        })
+        .collect()
+}
+
 /// Configures and builds an [`Advisor`] — the only way to make one.
 pub struct AdvisorBuilder {
     max_machines: usize,
@@ -128,7 +182,7 @@ type ProfileKey = (String, Vec<u64>, Vec<u64>);
 /// Every scalar model parameter that can influence what a sampling phase
 /// measures or costs — two same-named models differing in ANY of these
 /// must not share a cached profile.
-fn app_fingerprint(app: &AppModel) -> Vec<u64> {
+pub fn app_fingerprint(app: &AppModel) -> Vec<u64> {
     let mut bits: Vec<u64> = Vec::with_capacity(3 * app.cached_laws.len() + 16);
     for law in &app.cached_laws {
         bits.push(law.theta0.to_bits());
@@ -180,13 +234,22 @@ impl<'a> Advisor<'a> {
     /// profiled `(app, scales)`. The returned profile is an owned
     /// snapshot; all queries on it are backend-free.
     pub fn profile(&mut self, app: &AppModel) -> TrainedProfile {
-        let scales = self.scales.for_app(app);
+        self.try_profile(app)
+            .unwrap_or_else(|e| panic!("invalid sampling scales: {e}"))
+    }
+
+    /// Like [`Advisor::profile`], but surfaces bad sampling scales
+    /// (NaN, ±∞, negative) as a typed [`ScaleError`] instead of
+    /// panicking. `-0.0` scales are normalized to `0.0` before keying,
+    /// so the sign of zero can never split the cache.
+    pub fn try_profile(&mut self, app: &AppModel) -> Result<TrainedProfile, ScaleError> {
+        let scales = normalize_scales(&self.scales.for_app(app))?;
         let key: ProfileKey = (
             app.name.to_string(),
             app_fingerprint(app),
             scales.iter().map(|s| s.to_bits()).collect(),
         );
-        match self.cache.entry(key) {
+        Ok(match self.cache.entry(key) {
             std::collections::btree_map::Entry::Occupied(hit) => hit.get().clone(),
             std::collections::btree_map::Entry::Vacant(miss) => {
                 self.sampling_phases += 1;
@@ -199,7 +262,7 @@ impl<'a> Advisor<'a> {
                 ))
                 .clone()
             }
-        }
+        })
     }
 
     /// How many sampling phases this session has actually paid for
@@ -259,7 +322,7 @@ pub struct TrainedProfile {
 }
 
 impl TrainedProfile {
-    fn train(
+    pub(crate) fn train(
         backend: &mut dyn FitBackend,
         manager: &SampleRunsManager,
         app: &AppModel,

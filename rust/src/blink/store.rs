@@ -1,0 +1,975 @@
+//! Advisor-as-a-service: persistent profiles + a sharded concurrent store.
+//!
+//! The session API ([`super::session`]) amortizes one sampling phase
+//! across many queries, but its cache dies with the process and serializes
+//! every caller through one `&mut` advisor. This module closes both gaps:
+//!
+//! * **Persistent profiles** — [`save_profile`] / [`load_profile`] encode a
+//!   [`TrainedProfile`] as a `util::json` document. Every f64 is stored as
+//!   its exact 16-hex-digit bit pattern, so a round-tripped profile answers
+//!   `recommend`/`plan`/`max_scale` *bit-identically* to the in-process
+//!   one. A fingerprint block (app name, the scalar-parameter bits of
+//!   [`app_fingerprint`], the exact sampling-scale bits, and the predictor
+//!   version) is validated on load: a stale profile for a changed app is
+//!   rejected with a typed [`StoreError`] instead of silently answering.
+//! * **[`ProfileStore`]** — N shards of `RwLock<HashMap<key, Arc<…>>>`,
+//!   keyed by the same `(app name, fingerprint bits, scale bits)` tuple as
+//!   the advisor cache and sharded by its hash. Reads never block reads
+//!   (shared `read()` lock, clone the `Arc`, drop the lock); all compute
+//!   on a profile happens with zero locks held. Racing writers double-check
+//!   under the shard's write lock, so each key pays exactly one sampling
+//!   phase (`sampling_phases()` counts the real trainings).
+//! * **[`serve_batch`]** — the `blink serve` loop: one `util::json` query
+//!   doc per JSONL line, fanned out over [`crate::util::par`] workers,
+//!   answers re-placed by line index. Each answer is the same JSON the
+//!   tested `--format json` CLI contract emits (or a per-query error doc —
+//!   a malformed line never aborts the batch). Because every answer is a
+//!   pure function of its line and the trained profile is a pure function
+//!   of `(app, scales, config)` no matter which racing thread trains it,
+//!   the output is byte-identical at any shard or thread count.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::models::{FitBackend, ModelKind, RustFit, SelectedModel, ALL_KINDS};
+use super::predictor::{ExecMemoryPredictor, SizePredictor};
+use super::report::{BoundsReport, PlanReport, RecommendReport, Report};
+use super::sample_runs::{SampleRun, SampleRunsManager};
+use super::session::{app_fingerprint, normalize_scales, ScaleError, Scales, TrainedProfile};
+use crate::cost::pricing_by_name;
+use crate::metrics::RunSummary;
+use crate::sim::{InstanceCatalog, MachineSpec};
+use crate::util::json::{parse, Json};
+use crate::util::par::{sweep_range_serial, sweep_range_with};
+use crate::workloads::{app_by_name, AppModel, DagSpec, SizeLaw, SizeNoise, SynthConfig};
+
+/// Version of the on-disk profile document layout.
+pub const PROFILE_FORMAT_VERSION: u64 = 1;
+/// Version of the predictor pipeline a profile was trained with; bump on
+/// any change to model families, CV folds, or fitting numerics, so stale
+/// trained state is rejected instead of silently answering differently.
+pub const PREDICTOR_VERSION: u64 = 1;
+
+/// Typed failure of profile persistence or store intake.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreError {
+    /// Filesystem failure (message carries the path).
+    Io(String),
+    /// The file is not a `util::json` document.
+    Parse(String),
+    /// The document is JSON but not a profile of the expected shape.
+    Schema(String),
+    /// The document's format version is not this build's.
+    Version { found: u64, expected: u64 },
+    /// The stored fingerprint does not match the live application — the
+    /// profile is stale (the app changed since it was trained) or the
+    /// file was edited.
+    Fingerprint { field: &'static str, app: String },
+    /// The stored app name resolves to no live application.
+    UnknownApp(String),
+    /// The profile's sampling scales fail advisor intake validation.
+    InvalidScale(ScaleError),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(m) => write!(f, "profile io error: {m}"),
+            StoreError::Parse(m) => write!(f, "profile parse error: {m}"),
+            StoreError::Schema(m) => write!(f, "profile schema error: {m}"),
+            StoreError::Version { found, expected } => {
+                write!(f, "profile format version {found} (this build reads {expected})")
+            }
+            StoreError::Fingerprint { field, app } => {
+                write!(f, "stale profile for '{app}': fingerprint mismatch in {field}")
+            }
+            StoreError::UnknownApp(a) => write!(f, "profile for unknown app '{a}'"),
+            StoreError::InvalidScale(e) => write!(f, "profile has invalid scales: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<ScaleError> for StoreError {
+    fn from(e: ScaleError) -> Self {
+        StoreError::InvalidScale(e)
+    }
+}
+
+// ======================================================================
+// Bit-exact JSON encoding
+// ======================================================================
+//
+// `Json::Num` is an f64 and the pretty-printer formats for humans, so
+// floats round-trip *approximately* through text. Profiles must round-trip
+// *exactly* (the acceptance bar is bit-identical answers), so every f64 is
+// stored as its 16-hex-digit `to_bits()` string — which also survives
+// NaN/±∞/-0.0, none of which JSON numbers can carry.
+
+fn bits(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+fn u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn schema(what: &str) -> StoreError {
+    StoreError::Schema(format!("missing or malformed field '{what}'"))
+}
+
+fn get<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a Json, StoreError> {
+    j.get(key).ok_or_else(|| schema(&format!("{ctx}.{key}")))
+}
+
+fn f64_bits(j: &Json, key: &str, ctx: &str) -> Result<f64, StoreError> {
+    let s = get(j, key, ctx)?.as_str().ok_or_else(|| schema(&format!("{ctx}.{key}")))?;
+    let b = u64::from_str_radix(s, 16)
+        .map_err(|_| StoreError::Schema(format!("'{ctx}.{key}' is not a hex bit pattern")))?;
+    Ok(f64::from_bits(b))
+}
+
+fn u64_field(j: &Json, key: &str, ctx: &str) -> Result<u64, StoreError> {
+    let s = get(j, key, ctx)?.as_str().ok_or_else(|| schema(&format!("{ctx}.{key}")))?;
+    u64::from_str_radix(s, 16)
+        .map_err(|_| StoreError::Schema(format!("'{ctx}.{key}' is not a hex u64")))
+}
+
+fn usize_field(j: &Json, key: &str, ctx: &str) -> Result<usize, StoreError> {
+    let v = get(j, key, ctx)?.as_f64().ok_or_else(|| schema(&format!("{ctx}.{key}")))?;
+    if v < 0.0 || v.fract() != 0.0 || v > (1u64 << 53) as f64 {
+        return Err(StoreError::Schema(format!("'{ctx}.{key}' is not a small integer")));
+    }
+    Ok(v as usize)
+}
+
+fn str_field<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a str, StoreError> {
+    get(j, key, ctx)?.as_str().ok_or_else(|| schema(&format!("{ctx}.{key}")))
+}
+
+fn arr_field<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a [Json], StoreError> {
+    get(j, key, ctx)?.as_arr().ok_or_else(|| schema(&format!("{ctx}.{key}")))
+}
+
+fn bits_arr(values: &[f64]) -> Json {
+    Json::Arr(values.iter().map(|&v| bits(v)).collect())
+}
+
+fn bits_arr_from(j: &Json, key: &str, ctx: &str) -> Result<Vec<f64>, StoreError> {
+    arr_field(j, key, ctx)?
+        .iter()
+        .map(|v| {
+            let s = v.as_str().ok_or_else(|| schema(&format!("{ctx}.{key}[]")))?;
+            let b = u64::from_str_radix(s, 16)
+                .map_err(|_| StoreError::Schema(format!("'{ctx}.{key}[]' bad bit pattern")))?;
+            Ok(f64::from_bits(b))
+        })
+        .collect()
+}
+
+// ======================================================================
+// Domain encodings
+// ======================================================================
+
+fn law_json(l: &SizeLaw) -> Json {
+    Json::obj(vec![
+        ("theta0", bits(l.theta0)),
+        ("theta1", bits(l.theta1)),
+        ("gamma", bits(l.gamma)),
+    ])
+}
+
+fn law_from(j: &Json, ctx: &str) -> Result<SizeLaw, StoreError> {
+    Ok(SizeLaw {
+        theta0: f64_bits(j, "theta0", ctx)?,
+        theta1: f64_bits(j, "theta1", ctx)?,
+        gamma: f64_bits(j, "gamma", ctx)?,
+    })
+}
+
+fn noise_json(n: &SizeNoise) -> Json {
+    Json::obj(vec![
+        ("amp", bits(n.amp)),
+        ("half_mb", bits(n.half_mb)),
+        ("bias", bits(n.bias)),
+    ])
+}
+
+fn noise_from(j: &Json, ctx: &str) -> Result<SizeNoise, StoreError> {
+    Ok(SizeNoise {
+        amp: f64_bits(j, "amp", ctx)?,
+        half_mb: f64_bits(j, "half_mb", ctx)?,
+        bias: f64_bits(j, "bias", ctx)?,
+    })
+}
+
+/// A [`DagSpec::Builtin`] holds a fn pointer, which cannot be serialized —
+/// but every builtin DAG belongs to exactly one registry app, so the app
+/// *name* is its durable spelling and the registry restores the pointer.
+fn dag_json(d: &DagSpec, app_name: &str) -> Json {
+    match d {
+        DagSpec::Builtin(_) => Json::obj(vec![("builtin", app_name.into())]),
+        DagSpec::Layered { depth, width, cached, iterations } => Json::obj(vec![(
+            "layered",
+            Json::obj(vec![
+                ("depth", (*depth).into()),
+                ("width", (*width).into()),
+                ("cached", (*cached).into()),
+                ("iterations", (*iterations).into()),
+            ]),
+        )]),
+    }
+}
+
+fn dag_from(j: &Json, ctx: &str) -> Result<DagSpec, StoreError> {
+    if let Some(name) = j.get("builtin").and_then(Json::as_str) {
+        let app = app_by_name(name).ok_or_else(|| StoreError::UnknownApp(name.to_string()))?;
+        return Ok(app.dag_spec);
+    }
+    if let Some(l) = j.get("layered") {
+        return Ok(DagSpec::Layered {
+            depth: usize_field(l, "depth", ctx)?,
+            width: usize_field(l, "width", ctx)?,
+            cached: usize_field(l, "cached", ctx)?,
+            iterations: usize_field(l, "iterations", ctx)?,
+        });
+    }
+    Err(schema(&format!("{ctx}.dag")))
+}
+
+fn app_json(a: &AppModel) -> Json {
+    Json::obj(vec![
+        ("name", a.name.as_str().into()),
+        ("input_mb_full", bits(a.input_mb_full)),
+        ("blocks_full", a.blocks_full.into()),
+        ("cached_laws", Json::Arr(a.cached_laws.iter().map(law_json).collect())),
+        ("exec_law", law_json(&a.exec_law)),
+        ("size_noise", noise_json(&a.size_noise)),
+        ("iterations", a.iterations.into()),
+        ("compute_s_per_mb", bits(a.compute_s_per_mb)),
+        ("cached_speedup", bits(a.cached_speedup)),
+        ("recompute_factor", bits(a.recompute_factor)),
+        ("serial_fixed_s", bits(a.serial_fixed_s)),
+        ("serial_per_scale_s", bits(a.serial_per_scale_s)),
+        ("shuffle_mb_full", bits(a.shuffle_mb_full)),
+        ("task_overhead_s", bits(a.task_overhead_s)),
+        ("task_time_sigma", bits(a.task_time_sigma)),
+        ("per_partition_overhead_mb", bits(a.per_partition_overhead_mb)),
+        ("parallelism_cap", a.parallelism_cap.map_or(Json::Null, Json::from)),
+        ("force_block_s", a.force_block_s.into()),
+        ("enlarged_scale", bits(a.enlarged_scale)),
+        ("dag", dag_json(&a.dag_spec, &a.name)),
+    ])
+}
+
+fn app_from(j: &Json) -> Result<AppModel, StoreError> {
+    let ctx = "app";
+    let laws = arr_field(j, "cached_laws", ctx)?
+        .iter()
+        .map(|l| law_from(l, "app.cached_laws[]"))
+        .collect::<Result<Vec<_>, _>>()?;
+    let parallelism_cap = match get(j, "parallelism_cap", ctx)? {
+        Json::Null => None,
+        other => Some(other.as_f64().ok_or_else(|| schema("app.parallelism_cap"))? as usize),
+    };
+    Ok(AppModel {
+        name: str_field(j, "name", ctx)?.to_string(),
+        input_mb_full: f64_bits(j, "input_mb_full", ctx)?,
+        blocks_full: usize_field(j, "blocks_full", ctx)?,
+        cached_laws: laws,
+        exec_law: law_from(get(j, "exec_law", ctx)?, "app.exec_law")?,
+        size_noise: noise_from(get(j, "size_noise", ctx)?, "app.size_noise")?,
+        iterations: usize_field(j, "iterations", ctx)?,
+        compute_s_per_mb: f64_bits(j, "compute_s_per_mb", ctx)?,
+        cached_speedup: f64_bits(j, "cached_speedup", ctx)?,
+        recompute_factor: f64_bits(j, "recompute_factor", ctx)?,
+        serial_fixed_s: f64_bits(j, "serial_fixed_s", ctx)?,
+        serial_per_scale_s: f64_bits(j, "serial_per_scale_s", ctx)?,
+        shuffle_mb_full: f64_bits(j, "shuffle_mb_full", ctx)?,
+        task_overhead_s: f64_bits(j, "task_overhead_s", ctx)?,
+        task_time_sigma: f64_bits(j, "task_time_sigma", ctx)?,
+        per_partition_overhead_mb: f64_bits(j, "per_partition_overhead_mb", ctx)?,
+        parallelism_cap,
+        force_block_s: get(j, "force_block_s", ctx)?
+            .as_bool()
+            .ok_or_else(|| schema("app.force_block_s"))?,
+        enlarged_scale: f64_bits(j, "enlarged_scale", ctx)?,
+        dag_spec: dag_from(get(j, "dag", ctx)?, "app.dag")?,
+    })
+}
+
+fn summary_json(s: &RunSummary) -> Json {
+    Json::obj(vec![
+        ("app", s.app.as_str().into()),
+        ("machines", s.machines.into()),
+        ("data_scale", bits(s.data_scale)),
+        ("duration_s", bits(s.duration_s)),
+        (
+            "cached_sizes_mb",
+            Json::Arr(
+                s.cached_sizes_mb
+                    .iter()
+                    .map(|(id, mb)| Json::obj(vec![("id", (*id).into()), ("mb", bits(*mb))]))
+                    .collect(),
+            ),
+        ),
+        ("evictions", s.evictions.into()),
+        ("exec_memory_mb", bits(s.exec_memory_mb)),
+        ("tasks", s.tasks.into()),
+        ("cached_reads", s.cached_reads.into()),
+        ("machines_lost", s.machines_lost.into()),
+        ("machines_joined", s.machines_joined.into()),
+        ("cost_machine_s", bits(s.cost_machine_s)),
+    ])
+}
+
+fn summary_from(j: &Json) -> Result<RunSummary, StoreError> {
+    let ctx = "run.summary";
+    let sizes = arr_field(j, "cached_sizes_mb", ctx)?
+        .iter()
+        .map(|e| Ok((usize_field(e, "id", ctx)?, f64_bits(e, "mb", ctx)?)))
+        .collect::<Result<Vec<_>, StoreError>>()?;
+    Ok(RunSummary {
+        app: str_field(j, "app", ctx)?.to_string(),
+        machines: usize_field(j, "machines", ctx)?,
+        data_scale: f64_bits(j, "data_scale", ctx)?,
+        duration_s: f64_bits(j, "duration_s", ctx)?,
+        cached_sizes_mb: sizes,
+        evictions: usize_field(j, "evictions", ctx)?,
+        exec_memory_mb: f64_bits(j, "exec_memory_mb", ctx)?,
+        tasks: usize_field(j, "tasks", ctx)?,
+        cached_reads: usize_field(j, "cached_reads", ctx)?,
+        machines_lost: usize_field(j, "machines_lost", ctx)?,
+        machines_joined: usize_field(j, "machines_joined", ctx)?,
+        cost_machine_s: f64_bits(j, "cost_machine_s", ctx)?,
+    })
+}
+
+fn run_json(r: &SampleRun) -> Json {
+    Json::obj(vec![
+        ("scale", bits(r.scale)),
+        ("summary", summary_json(&r.summary)),
+        ("rescaled", r.rescaled.into()),
+    ])
+}
+
+fn run_from(j: &Json) -> Result<SampleRun, StoreError> {
+    Ok(SampleRun {
+        scale: f64_bits(j, "scale", "run")?,
+        summary: summary_from(get(j, "summary", "run")?)?,
+        rescaled: get(j, "rescaled", "run")?.as_bool().ok_or_else(|| schema("run.rescaled"))?,
+    })
+}
+
+fn kind_by_name(name: &str) -> Option<ModelKind> {
+    ALL_KINDS.into_iter().find(|k| k.name() == name)
+}
+
+fn model_json(m: &SelectedModel) -> Json {
+    Json::obj(vec![
+        ("kind", m.kind.name().into()),
+        ("theta", bits_arr(&m.theta)),
+        ("cv_rmse", bits(m.cv_rmse)),
+        ("cv_rel_err", bits(m.cv_rel_err)),
+    ])
+}
+
+fn model_from(j: &Json, ctx: &str) -> Result<SelectedModel, StoreError> {
+    let kind_name = str_field(j, "kind", ctx)?;
+    let kind = kind_by_name(kind_name)
+        .ok_or_else(|| StoreError::Schema(format!("unknown model kind '{kind_name}'")))?;
+    Ok(SelectedModel {
+        kind,
+        theta: bits_arr_from(j, "theta", ctx)?,
+        cv_rmse: f64_bits(j, "cv_rmse", ctx)?,
+        cv_rel_err: f64_bits(j, "cv_rel_err", ctx)?,
+    })
+}
+
+fn predictors_json(sizes: &SizePredictor, exec: &ExecMemoryPredictor) -> Json {
+    Json::obj(vec![
+        (
+            "sizes",
+            Json::Arr(
+                sizes
+                    .models
+                    .iter()
+                    .map(|(ds, m)| {
+                        Json::obj(vec![("dataset", (*ds).into()), ("model", model_json(m))])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("exec", model_json(&exec.model)),
+    ])
+}
+
+fn predictors_from(j: &Json) -> Result<(SizePredictor, ExecMemoryPredictor), StoreError> {
+    let mut models = std::collections::BTreeMap::new();
+    for entry in arr_field(j, "sizes", "models")? {
+        let ds = usize_field(entry, "dataset", "models.sizes[]")?;
+        models.insert(ds, model_from(get(entry, "model", "models.sizes[]")?, "models.sizes[]")?);
+    }
+    let exec = model_from(get(j, "exec", "models")?, "models.exec")?;
+    Ok((SizePredictor { models }, ExecMemoryPredictor { model: exec }))
+}
+
+fn fingerprint_json(app: &AppModel, scales: &[f64]) -> Json {
+    Json::obj(vec![
+        ("app", app.name.as_str().into()),
+        ("app_bits", Json::Arr(app_fingerprint(app).into_iter().map(u64_hex).collect())),
+        ("scale_bits", Json::Arr(scales.iter().map(|s| u64_hex(s.to_bits())).collect())),
+        ("predictor_version", u64_hex(PREDICTOR_VERSION)),
+    ])
+}
+
+fn hex_arr(j: &Json, key: &str, ctx: &str) -> Result<Vec<u64>, StoreError> {
+    arr_field(j, key, ctx)?
+        .iter()
+        .map(|v| {
+            let s = v.as_str().ok_or_else(|| schema(&format!("{ctx}.{key}[]")))?;
+            u64::from_str_radix(s, 16)
+                .map_err(|_| StoreError::Schema(format!("'{ctx}.{key}[]' bad hex")))
+        })
+        .collect()
+}
+
+/// Encode a trained profile as a self-describing `util::json` document.
+pub fn profile_to_json(p: &TrainedProfile) -> Json {
+    Json::obj(vec![
+        ("blink_profile", u64_hex(PROFILE_FORMAT_VERSION)),
+        ("fingerprint", fingerprint_json(&p.app, &p.scales)),
+        (
+            "profile",
+            Json::obj(vec![
+                ("app", app_json(&p.app)),
+                ("scales", bits_arr(&p.scales)),
+                ("max_machines", p.max_machines.into()),
+                ("sample_cost_machine_s", bits(p.sample_cost_machine_s)),
+                ("runs", Json::Arr(p.runs.iter().map(run_json).collect())),
+                (
+                    "models",
+                    p.models
+                        .as_ref()
+                        .map_or(Json::Null, |(s, e)| predictors_json(s, e)),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Decode a profile document, verifying the format version and that the
+/// embedded fingerprint matches the *decoded* app and scales (a tampered
+/// or truncated file fails here, before any query can consult it).
+pub fn profile_from_json(doc: &Json) -> Result<TrainedProfile, StoreError> {
+    let found = u64_field(doc, "blink_profile", "")?;
+    if found != PROFILE_FORMAT_VERSION {
+        return Err(StoreError::Version { found, expected: PROFILE_FORMAT_VERSION });
+    }
+    let body = get(doc, "profile", "")?;
+    let app = app_from(get(body, "app", "profile")?)?;
+    let scales = bits_arr_from(body, "scales", "profile")?;
+    let runs = arr_field(body, "runs", "profile")?
+        .iter()
+        .map(run_from)
+        .collect::<Result<Vec<_>, _>>()?;
+    let models = match get(body, "models", "profile")? {
+        Json::Null => None,
+        m => Some(predictors_from(m)?),
+    };
+    let profile = TrainedProfile {
+        app,
+        scales,
+        max_machines: usize_field(body, "max_machines", "profile")?,
+        sample_cost_machine_s: f64_bits(body, "sample_cost_machine_s", "profile")?,
+        runs,
+        models,
+    };
+    // self-consistency: the stored fingerprint must match what the decoded
+    // payload implies
+    let fp = get(doc, "fingerprint", "")?;
+    if str_field(fp, "app", "fingerprint")? != profile.app.name {
+        return Err(StoreError::Fingerprint { field: "app", app: profile.app.name });
+    }
+    if u64_field(fp, "predictor_version", "fingerprint")? != PREDICTOR_VERSION {
+        return Err(StoreError::Fingerprint {
+            field: "predictor_version",
+            app: profile.app.name,
+        });
+    }
+    if hex_arr(fp, "app_bits", "fingerprint")? != app_fingerprint(&profile.app) {
+        return Err(StoreError::Fingerprint { field: "app_bits", app: profile.app.name });
+    }
+    let scale_bits: Vec<u64> = profile.scales.iter().map(|s| s.to_bits()).collect();
+    if hex_arr(fp, "scale_bits", "fingerprint")? != scale_bits {
+        return Err(StoreError::Fingerprint { field: "scale_bits", app: profile.app.name });
+    }
+    Ok(profile)
+}
+
+/// Write `profile` to `path` as a pretty-printed JSON document.
+pub fn save_profile(profile: &TrainedProfile, path: &Path) -> Result<(), StoreError> {
+    let doc = profile_to_json(profile).pretty();
+    std::fs::write(path, doc + "\n")
+        .map_err(|e| StoreError::Io(format!("write {}: {e}", path.display())))
+}
+
+/// Load a profile from `path` and validate it against the *live*
+/// definition of the application: the stored fingerprint must match
+/// `app_fingerprint(live)` exactly, or the profile is stale (the app's
+/// laws changed since training) and is rejected with a typed error.
+pub fn load_profile(path: &Path, live: &AppModel) -> Result<TrainedProfile, StoreError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| StoreError::Io(format!("read {}: {e}", path.display())))?;
+    let doc = parse(&text).map_err(|e| StoreError::Parse(format!("{}: {e}", path.display())))?;
+    let profile = profile_from_json(&doc)?;
+    if profile.app.name != live.name {
+        return Err(StoreError::Fingerprint { field: "app", app: live.name.clone() });
+    }
+    if app_fingerprint(&profile.app) != app_fingerprint(live) {
+        return Err(StoreError::Fingerprint { field: "app_bits", app: live.name.clone() });
+    }
+    Ok(profile)
+}
+
+// ======================================================================
+// The sharded concurrent store
+// ======================================================================
+
+/// Same identity as the advisor's cache key: app name + scalar-parameter
+/// fingerprint + exact (normalized) sampling-scale bits.
+type StoreKey = (String, Vec<u64>, Vec<u64>);
+
+fn store_key(app: &AppModel, scales: &[f64]) -> StoreKey {
+    (app.name.clone(), app_fingerprint(app), scales.iter().map(|s| s.to_bits()).collect())
+}
+
+/// Configures a [`ProfileStore`].
+pub struct ProfileStoreBuilder {
+    shards: usize,
+    max_machines: usize,
+    scales: Scales,
+    manager: SampleRunsManager,
+}
+
+impl Default for ProfileStoreBuilder {
+    fn default() -> Self {
+        ProfileStoreBuilder {
+            shards: 8,
+            max_machines: 12,
+            scales: Scales::Paper,
+            manager: SampleRunsManager::default(),
+        }
+    }
+}
+
+impl ProfileStoreBuilder {
+    /// Shard count (≥ 1). Sharding only spreads lock contention; answers
+    /// are identical at any count.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+
+    pub fn max_machines(mut self, max_machines: usize) -> Self {
+        self.max_machines = max_machines.max(1);
+        self
+    }
+
+    pub fn scales(mut self, scales: &[f64]) -> Self {
+        self.scales = Scales::Fixed(scales.to_vec());
+        self
+    }
+
+    pub fn scales_policy(mut self, scales: Scales) -> Self {
+        self.scales = scales;
+        self
+    }
+
+    pub fn manager(mut self, manager: SampleRunsManager) -> Self {
+        self.manager = manager;
+        self
+    }
+
+    pub fn build(self) -> ProfileStore {
+        ProfileStore {
+            shards: (0..self.shards).map(|_| RwLock::new(HashMap::new())).collect(),
+            manager: self.manager,
+            max_machines: self.max_machines,
+            scales: self.scales,
+            sampling_phases: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// A sharded, thread-safe profile cache: the [`super::session::Advisor`]
+/// cache generalized from `&mut self` to `&self` so any number of threads
+/// can query concurrently. Hot reads take one shard's `read()` lock just
+/// long enough to clone an `Arc<TrainedProfile>`; all query compute
+/// (`recommend`/`plan`/`max_scale`) runs with zero locks held. Misses
+/// train under the shard's write lock with a double-check, so racing
+/// writers collapse to exactly one sampling phase per key.
+///
+/// Training uses the pure-Rust fit backend (it is `Send`-free state built
+/// per call); profiles trained elsewhere — including by the PJRT backend —
+/// enter via [`ProfileStore::insert`] after [`load_profile`].
+pub struct ProfileStore {
+    shards: Vec<RwLock<HashMap<StoreKey, Arc<TrainedProfile>>>>,
+    manager: SampleRunsManager,
+    max_machines: usize,
+    scales: Scales,
+    sampling_phases: AtomicUsize,
+}
+
+impl ProfileStore {
+    pub fn builder() -> ProfileStoreBuilder {
+        ProfileStoreBuilder::default()
+    }
+
+    fn shard_of(&self, key: &StoreKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// The hot path: return the cached profile for `(app, scales)` or
+    /// train it exactly once. Scales go through the same intake
+    /// validation as the advisor ([`normalize_scales`]).
+    pub fn get_or_train(&self, app: &AppModel) -> Result<Arc<TrainedProfile>, ScaleError> {
+        let scales = normalize_scales(&self.scales.for_app(app))?;
+        let key = store_key(app, &scales);
+        let shard = &self.shards[self.shard_of(&key)];
+        if let Some(hit) = shard.read().expect("shard lock poisoned").get(&key) {
+            return Ok(Arc::clone(hit));
+        }
+        let mut guard = shard.write().expect("shard lock poisoned");
+        // double-check: a racing writer may have trained while we waited
+        if let Some(hit) = guard.get(&key) {
+            return Ok(Arc::clone(hit));
+        }
+        self.sampling_phases.fetch_add(1, Ordering::Relaxed);
+        let mut backend = RustFit::default();
+        let profile = Arc::new(TrainedProfile::train(
+            &mut backend,
+            &self.manager,
+            app,
+            &scales,
+            self.max_machines,
+        ));
+        guard.insert(key, Arc::clone(&profile));
+        Ok(profile)
+    }
+
+    /// Read-only probe: the cached profile, or `None` without training.
+    pub fn get(&self, app: &AppModel) -> Option<Arc<TrainedProfile>> {
+        let scales = normalize_scales(&self.scales.for_app(app)).ok()?;
+        let key = store_key(app, &scales);
+        self.shards[self.shard_of(&key)]
+            .read()
+            .expect("shard lock poisoned")
+            .get(&key)
+            .cloned()
+    }
+
+    /// Seed the store with an externally trained (e.g. loaded) profile,
+    /// keyed by its own app and scales. Returns whether the key was new.
+    pub fn insert(&self, profile: TrainedProfile) -> Result<bool, ScaleError> {
+        let scales = normalize_scales(&profile.scales)?;
+        let key = store_key(&profile.app, &scales);
+        let shard = &self.shards[self.shard_of(&key)];
+        let mut guard = shard.write().expect("shard lock poisoned");
+        if guard.contains_key(&key) {
+            return Ok(false);
+        }
+        guard.insert(key, Arc::new(profile));
+        Ok(true)
+    }
+
+    /// How many sampling phases this store actually paid for (loads and
+    /// cache hits do not count).
+    pub fn sampling_phases(&self) -> usize {
+        self.sampling_phases.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().expect("shard lock poisoned").len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Name of the fit backend cold misses train with.
+    pub fn backend_name(&self) -> &'static str {
+        RustFit::default().name()
+    }
+
+    /// Every stored profile, sorted by key — a deterministic snapshot for
+    /// persistence regardless of shard layout or insertion order.
+    pub fn profiles(&self) -> Vec<Arc<TrainedProfile>> {
+        let mut all: Vec<(StoreKey, Arc<TrainedProfile>)> = Vec::new();
+        for shard in &self.shards {
+            for (k, v) in shard.read().expect("shard lock poisoned").iter() {
+                all.push((k.clone(), Arc::clone(v)));
+            }
+        }
+        all.sort_by(|a, b| a.0.cmp(&b.0));
+        all.into_iter().map(|(_, v)| v).collect()
+    }
+}
+
+// ======================================================================
+// The serve loop
+// ======================================================================
+
+/// Resolve a serve-query app spelling: a registry name (`svm`), or a
+/// seeded synthetic workload as `synth:<preset>:<seed>` (the PR 5
+/// generator — what lets one query file exercise hundreds of apps).
+pub fn resolve_app(name: &str) -> Option<AppModel> {
+    if let Some(rest) = name.strip_prefix("synth:") {
+        let (preset, seed) = rest.split_once(':')?;
+        let seed: u64 = seed.parse().ok()?;
+        return Some(SynthConfig::by_name(preset)?.generate(seed));
+    }
+    app_by_name(name)
+}
+
+/// One serve answer: the JSON doc (an answer in the `--format json` CLI
+/// contract, or an error doc) plus whether the query succeeded.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub doc: Json,
+    pub ok: bool,
+}
+
+fn error_doc(msg: &str) -> Json {
+    Json::obj(vec![("query", "error".into()), ("error", msg.into())])
+}
+
+fn f64_of(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing or non-numeric '{key}'"))
+}
+
+/// Answer one JSONL query line against the store. Pure per line: any
+/// failure becomes an error doc, never a panic or abort.
+fn answer_line(store: &ProfileStore, line: &str) -> Result<Json, String> {
+    let q = parse(line).map_err(|e| format!("malformed query line: {e}"))?;
+    let kind = q
+        .get("query")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing 'query' field".to_string())?;
+    let app_name =
+        q.get("app").and_then(Json::as_str).ok_or_else(|| "missing 'app' field".to_string())?;
+    let app = resolve_app(app_name).ok_or_else(|| format!("unknown app '{app_name}'"))?;
+    let profile = store.get_or_train(&app).map_err(|e| e.to_string())?;
+    match kind {
+        "recommend" => {
+            let scale = f64_of(&q, "scale")?;
+            Ok(RecommendReport::new(
+                store.backend_name(),
+                &profile,
+                scale,
+                &MachineSpec::worker_node(),
+                false,
+            )
+            .to_json())
+        }
+        "plan" => {
+            let scale = f64_of(&q, "scale")?;
+            let catalog_name = q.get("catalog").and_then(Json::as_str).unwrap_or("paper");
+            let catalog = InstanceCatalog::by_name(catalog_name)
+                .ok_or_else(|| format!("unknown catalog '{catalog_name}'"))?;
+            let pricing_name =
+                q.get("pricing").and_then(Json::as_str).unwrap_or("machine-seconds");
+            let pricing = pricing_by_name(pricing_name)
+                .ok_or_else(|| format!("unknown pricing model '{pricing_name}'"))?;
+            let fractions: Vec<f64> = match q.get("fractions") {
+                None | Some(Json::Null) => Vec::new(),
+                Some(a) => a
+                    .as_arr()
+                    .ok_or_else(|| "'fractions' must be an array".to_string())?
+                    .iter()
+                    .map(|v| {
+                        let f = v.as_f64().ok_or("non-numeric storage fraction")?;
+                        if !f.is_finite() || f <= 0.0 || f >= 1.0 {
+                            return Err("storage fraction out of range (0, 1)");
+                        }
+                        Ok(f)
+                    })
+                    .collect::<Result<_, &str>>()
+                    .map_err(str::to_string)?,
+            };
+            let advice = if fractions.is_empty() {
+                profile.plan(scale, &catalog, pricing.as_ref())
+            } else {
+                profile.plan_with_fractions(scale, &catalog, pricing.as_ref(), &fractions)
+            };
+            Ok(PlanReport {
+                backend: store.backend_name().to_string(),
+                app: app.name.clone(),
+                scale,
+                input_mb: app.input_mb(scale),
+                predicted_cached_mb: advice.predicted_cached_mb,
+                predicted_exec_mb: advice.predicted_exec_mb,
+                sample_cost_machine_s: advice.sample_cost_machine_s,
+                plan: advice.plan,
+                catalog_name: catalog.name.to_string(),
+                catalog_types: catalog.instances.len(),
+                pricing: pricing.name().to_string(),
+                risk: None,
+            }
+            .to_json())
+        }
+        "max_scale" => {
+            let machines = f64_of(&q, "machines")?;
+            if machines < 1.0 || machines.fract() != 0.0 {
+                return Err(format!("'machines' must be a positive integer, got {machines}"));
+            }
+            let machines = machines as usize;
+            let s = profile.max_scale(&MachineSpec::worker_node(), machines);
+            Ok(BoundsReport {
+                app: app.name.clone(),
+                machines,
+                max_scale: s,
+                input_mb_at_max: if s.is_finite() { app.input_mb(s) } else { 0.0 },
+            }
+            .to_json())
+        }
+        other => Err(format!("unknown query kind '{other}'")),
+    }
+}
+
+/// Answer a whole JSONL batch. `threads == 0` sizes the pool from the
+/// host, `1` runs the reference serial loop, `n` runs exactly `n`
+/// workers. Results are re-placed by line index, and each answer is a
+/// pure function of its line (racing trainings produce the identical
+/// profile), so the output is byte-identical at every `threads` and
+/// shard-count setting — the serve determinism contract, property-tested
+/// in the testkit.
+pub fn serve_batch(store: &ProfileStore, input: &str, threads: usize) -> Vec<ServeOutcome> {
+    let lines: Vec<&str> = input.lines().filter(|l| !l.trim().is_empty()).collect();
+    if lines.is_empty() {
+        return Vec::new();
+    }
+    let one = |i: usize| match answer_line(store, lines[i]) {
+        Ok(doc) => ServeOutcome { doc, ok: true },
+        Err(msg) => ServeOutcome { doc: error_doc(&msg), ok: false },
+    };
+    if threads == 1 {
+        sweep_range_serial(0, lines.len() - 1, one)
+    } else {
+        sweep_range_with(threads, 0, lines.len() - 1, one)
+    }
+}
+
+/// The deterministic payload of a serve run: every answer doc, rendered
+/// and newline-joined — what the byte-identity property compares.
+pub fn results_bytes(outcomes: &[ServeOutcome]) -> String {
+    outcomes.iter().map(|o| o.doc.pretty()).collect::<Vec<_>>().join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blink::Advisor;
+
+    fn svm() -> AppModel {
+        app_by_name("svm").unwrap()
+    }
+
+    #[test]
+    fn store_and_advisor_answer_identically() {
+        let mut backend = RustFit::default();
+        let mut advisor = Advisor::builder().build(&mut backend);
+        let from_advisor = advisor.profile(&svm());
+        let store = ProfileStore::builder().build();
+        let from_store = store.get_or_train(&svm()).unwrap();
+        let machine = MachineSpec::worker_node();
+        let a = from_advisor.recommend(2000.0, &machine);
+        let b = from_store.recommend(2000.0, &machine);
+        assert_eq!(a.machines, b.machines);
+        assert_eq!(a.predicted_cached_mb.to_bits(), b.predicted_cached_mb.to_bits());
+        assert_eq!(store.sampling_phases(), 1);
+        // second call hits
+        store.get_or_train(&svm()).unwrap();
+        assert_eq!(store.sampling_phases(), 1);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn profile_round_trips_bit_identically() {
+        let store = ProfileStore::builder().build();
+        let original = store.get_or_train(&svm()).unwrap();
+        let doc = profile_to_json(&original);
+        let text = doc.pretty();
+        let reparsed = parse(&text).expect("round-trip parse");
+        let loaded = profile_from_json(&reparsed).expect("round-trip decode");
+        let machine = MachineSpec::worker_node();
+        for scale in [50.0, 1000.0, 2000.0, 12_345.678] {
+            let a = original.recommend(scale, &machine);
+            let b = loaded.recommend(scale, &machine);
+            assert_eq!(a.machines, b.machines, "scale {scale}");
+            assert_eq!(a.predicted_cached_mb.to_bits(), b.predicted_cached_mb.to_bits());
+            assert_eq!(a.predicted_exec_mb.to_bits(), b.predicted_exec_mb.to_bits());
+        }
+        assert_eq!(
+            original.max_scale(&machine, 7).to_bits(),
+            loaded.max_scale(&machine, 7).to_bits()
+        );
+    }
+
+    #[test]
+    fn tampered_fingerprint_is_rejected() {
+        let store = ProfileStore::builder().build();
+        let p = store.get_or_train(&svm()).unwrap();
+        let doc = profile_to_json(&p);
+        // flip one app_bits entry: decode must fail with a typed error
+        let mut text = doc.pretty();
+        let fp = app_fingerprint(&p.app);
+        let needle = format!("{:016x}", fp[0]);
+        let flipped = format!("{:016x}", fp[0] ^ 1);
+        text = text.replacen(&needle, &flipped, 1);
+        let reparsed = parse(&text).unwrap();
+        match profile_from_json(&reparsed) {
+            Err(StoreError::Fingerprint { field, .. }) => assert_eq!(field, "app_bits"),
+            other => panic!("expected fingerprint error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resolve_app_handles_registry_and_synth_spellings() {
+        assert!(resolve_app("svm").is_some());
+        assert!(resolve_app("nope").is_none());
+        let a = resolve_app("synth:smoke:7").expect("synth spelling");
+        let b = SynthConfig::by_name("smoke").unwrap().generate(7);
+        assert_eq!(a.name, b.name);
+        assert!(resolve_app("synth:smoke:notanumber").is_none());
+        assert!(resolve_app("synth:meteor:1").is_none());
+    }
+
+    #[test]
+    fn malformed_lines_become_error_docs_not_aborts() {
+        let store = ProfileStore::builder().build();
+        let input = "{\"query\":\"max_scale\",\"app\":\"svm\",\"machines\":4}\n\
+                     not json at all\n\
+                     {\"query\":\"warp\",\"app\":\"svm\"}\n\
+                     {\"query\":\"recommend\",\"app\":\"nope\",\"scale\":100}";
+        let out = serve_batch(&store, input, 1);
+        assert_eq!(out.len(), 4);
+        assert!(out[0].ok);
+        assert!(!out[1].ok && !out[2].ok && !out[3].ok);
+        for bad in &out[1..] {
+            assert_eq!(bad.doc.get("query").and_then(Json::as_str), Some("error"));
+            assert!(bad.doc.get("error").is_some());
+        }
+    }
+}

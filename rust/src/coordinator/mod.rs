@@ -13,9 +13,9 @@ use anyhow::{anyhow, Result};
 
 use crate::blink::report::{
     AppRow, AppsReport, BoundsReport, PlanReport, RecommendReport, RiskSection, RunReport,
-    RunStats, SimulateReport, SynthReport, SynthRow,
+    RunStats, ServeReport, SimulateReport, SynthReport, SynthRow,
 };
-use crate::blink::{Advisor, OutputFormat, Report, RustFit, ValidationSpec};
+use crate::blink::{store, Advisor, OutputFormat, Report, RustFit, ValidationSpec};
 use crate::cost::{pricing_by_name, pricing_names};
 use crate::experiments::{self, report};
 use crate::hdfs::Sampler;
@@ -421,6 +421,104 @@ pub fn cmd_synth(q: &SynthQuery<'_>, format: OutputFormat) -> Result<SynthReport
     Ok(report)
 }
 
+/// Parsed-name inputs of `blink serve`.
+pub struct ServeQuery<'a> {
+    /// Path to the JSONL query file (one `util::json` doc per line).
+    pub queries: &'a str,
+    /// Directory of saved profiles to preload ("" = none).
+    pub profiles: &'a str,
+    /// Directory to write the store's trained profiles into ("" = none).
+    pub save_profiles: &'a str,
+    pub shards: usize,
+    /// Worker threads for the batch (0 = sized from the host, 1 = serial).
+    pub threads: usize,
+    pub max_machines: usize,
+}
+
+/// Keep only filename-safe characters of an app name.
+fn safe_file_stem(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+        .collect()
+}
+
+/// `blink serve`: answer a JSONL batch of `recommend`/`plan`/`max_scale`
+/// queries from a sharded concurrent [`store::ProfileStore`] — thousands
+/// of apps profiled once (or preloaded from disk), every query answered
+/// lock-free on the read path. The per-query answers mirror the
+/// `--format json` contract of the corresponding subcommands; a malformed
+/// line yields a per-query error doc, never a process abort. A preloaded
+/// profile whose fingerprint does not match the live app definition is
+/// rejected up front with a typed error.
+pub fn cmd_serve(q: &ServeQuery<'_>, format: OutputFormat) -> Result<ServeReport> {
+    if q.shards == 0 {
+        return Err(anyhow!("--shards must be at least 1"));
+    }
+    if q.max_machines == 0 {
+        return Err(anyhow!("--max-machines must be at least 1"));
+    }
+    let input = std::fs::read_to_string(q.queries)
+        .map_err(|e| anyhow!("read queries file '{}': {e}", q.queries))?;
+    let profile_store =
+        store::ProfileStore::builder().shards(q.shards).max_machines(q.max_machines).build();
+    if !q.profiles.is_empty() {
+        let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(q.profiles)
+            .map_err(|e| anyhow!("read profiles dir '{}': {e}", q.profiles))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        paths.sort();
+        for path in paths {
+            // the file names its app; the live definition is the referee
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("read profile '{}': {e}", path.display()))?;
+            let doc = crate::util::json::parse(&text)
+                .map_err(|e| anyhow!("profile '{}': {e}", path.display()))?;
+            let name = doc
+                .path(&["fingerprint", "app"])
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("profile '{}': no fingerprint.app", path.display()))?;
+            let live = store::resolve_app(name)
+                .ok_or_else(|| anyhow!("profile '{}': unknown app '{name}'", path.display()))?;
+            let profile = store::load_profile(&path, &live)
+                .map_err(|e| anyhow!("profile '{}': {e}", path.display()))?;
+            profile_store.insert(profile).map_err(|e| anyhow!("profile intake: {e}"))?;
+        }
+    }
+    let started = std::time::Instant::now();
+    let outcomes = store::serve_batch(&profile_store, &input, q.threads);
+    let elapsed_s = started.elapsed().as_secs_f64();
+    if !q.save_profiles.is_empty() {
+        std::fs::create_dir_all(q.save_profiles)
+            .map_err(|e| anyhow!("create save dir '{}': {e}", q.save_profiles))?;
+        for profile in profile_store.profiles() {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            use std::hash::{Hash, Hasher};
+            for s in &profile.scales {
+                s.to_bits().hash(&mut h);
+            }
+            let file = format!("{}-{:08x}.json", safe_file_stem(&profile.app.name), h.finish());
+            let path = std::path::Path::new(q.save_profiles).join(file);
+            store::save_profile(&profile, &path).map_err(|e| anyhow!("{e}"))?;
+        }
+    }
+    let ok = outcomes.iter().filter(|o| o.ok).count();
+    let report = ServeReport {
+        backend: profile_store.backend_name().to_string(),
+        queries: outcomes.len(),
+        ok,
+        errors: outcomes.len() - ok,
+        profiles: profile_store.len(),
+        sampling_phases: profile_store.sampling_phases(),
+        shards: profile_store.shard_count(),
+        threads: q.threads,
+        elapsed_s,
+        results: outcomes.into_iter().map(|o| o.doc).collect(),
+    };
+    println!("{}", report.render(format));
+    Ok(report)
+}
+
 /// `blink experiment --id <id>`: regenerate a paper table/figure.
 pub fn cmd_experiment(id: &str, seed: u64, format: OutputFormat) -> Result<()> {
     match format {
@@ -624,6 +722,21 @@ mod tests {
     #[test]
     fn bounds_rejects_zero_machines() {
         assert!(cmd_bounds("svm", 0, F).is_err());
+    }
+
+    #[test]
+    fn serve_rejects_bad_inputs() {
+        let q = |queries, shards, max_machines| ServeQuery {
+            queries,
+            profiles: "",
+            save_profiles: "",
+            shards,
+            threads: 1,
+            max_machines,
+        };
+        assert!(cmd_serve(&q("/no/such/queries.jsonl", 8, 12), F).is_err());
+        assert!(cmd_serve(&q("/no/such/queries.jsonl", 0, 12), F).is_err());
+        assert!(cmd_serve(&q("/no/such/queries.jsonl", 8, 0), F).is_err());
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! ```
 
 use blink::blink::OutputFormat;
-use blink::coordinator::{self, SimulateQuery, SynthQuery};
+use blink::coordinator::{self, ServeQuery, SimulateQuery, SynthQuery};
 use blink::util::cli::{App, CliError, Command, Matches, Opt};
 
 fn app() -> App {
@@ -112,6 +112,26 @@ fn app() -> App {
             },
             Command { name: "apps", about: "list the workload models", opts: vec![] },
             Command {
+                name: "serve",
+                about: "answer a JSONL batch of recommend/plan/max_scale queries from a sharded profile store",
+                opts: vec![
+                    Opt::value("queries", "JSONL query file (one JSON doc per line)"),
+                    Opt::with_default(
+                        "profiles",
+                        "directory of saved profiles to preload (fingerprint-validated)",
+                        "",
+                    ),
+                    Opt::with_default(
+                        "save-profiles",
+                        "directory to write the store's trained profiles into",
+                        "",
+                    ),
+                    Opt::with_default("shards", "profile store shard count", "8"),
+                    Opt::with_default("threads", "worker threads (0 = auto, 1 = serial)", "0"),
+                    Opt::with_default("max-machines", "largest candidate cluster size", "12"),
+                ],
+            },
+            Command {
                 name: "synth",
                 about: "generate seeded synthetic workloads and run each through the advisor",
                 opts: vec![
@@ -197,6 +217,20 @@ fn dispatch(cmd: &Command, m: &Matches, format: OutputFormat) -> anyhow::Result<
             coordinator::cmd_apps(format);
             Ok(())
         }
+        "serve" => coordinator::cmd_serve(
+            &ServeQuery {
+                queries: m
+                    .get("queries")
+                    .ok_or_else(|| anyhow::anyhow!("--queries <file> is required"))?,
+                profiles: m.get("profiles").unwrap_or(""),
+                save_profiles: m.get("save-profiles").unwrap_or(""),
+                shards: m.get_usize("shards").unwrap_or(8),
+                threads: m.get_usize("threads").unwrap_or(0),
+                max_machines: m.get_usize("max-machines").unwrap_or(12),
+            },
+            format,
+        )
+        .map(|_| ()),
         "synth" => coordinator::cmd_synth(
             &SynthQuery {
                 preset: m.get("preset").unwrap(),

@@ -32,8 +32,9 @@
 use std::fmt;
 
 use crate::blink::{
-    machine_split, plan_exhaustive, plan_exhaustive_search, plan_search, select_cluster_size,
-    Advisor, PlanInput, RustFit, SearchSpace, TrainedProfile,
+    machine_split, plan_exhaustive, plan_exhaustive_search, plan_search, results_bytes,
+    select_cluster_size, serve_batch, Advisor, PlanInput, ProfileStore, RustFit, SearchSpace,
+    TrainedProfile,
 };
 use crate::cost::pricing_by_name;
 use crate::memory::EvictionPolicy;
@@ -548,6 +549,72 @@ pub fn check_engine(
         }
     }
 
+    (checks, out)
+}
+
+/// The serve determinism contract (`blink serve` / [`serve_batch`]): one
+/// JSONL batch over `count` seeded synthetic workloads — recommend,
+/// max_scale and plan queries via their `synth:<preset>:<seed>` spellings,
+/// plus deliberately malformed lines — answered at a grid of
+/// `shard × thread` settings. Two invariants:
+///
+/// * **serve-deterministic** — every run's [`results_bytes`] payload is
+///   byte-identical to the single-shard serial reference, no matter how
+///   many shards spread the keys or how many threads race the batch;
+/// * **serve-one-phase-per-key** — each distinct workload pays exactly one
+///   sampling phase per store, however many of its queries race.
+///
+/// Returns `(checks_run, violations)`; violations carry `first_seed` so a
+/// counterexample batch reproduces from the log.
+pub fn check_serve(preset: &str, first_seed: u64, count: usize) -> (usize, Vec<Violation>) {
+    let mut checks = 0usize;
+    let mut out = Vec::new();
+    let mut lines: Vec<String> = Vec::new();
+    for seed in first_seed..first_seed + count as u64 {
+        let app = format!("synth:{preset}:{seed}");
+        lines.push(format!("{{\"query\":\"recommend\",\"app\":\"{app}\",\"scale\":800}}"));
+        lines.push(format!("{{\"query\":\"max_scale\",\"app\":\"{app}\",\"machines\":4}}"));
+        if seed % 3 == 0 {
+            lines.push(format!(
+                "{{\"query\":\"plan\",\"app\":\"{app}\",\"scale\":400,\"catalog\":\"paper\"}}"
+            ));
+        }
+        if seed % 4 == 0 {
+            lines.push("definitely not a json query".to_string());
+        }
+    }
+    let input = lines.join("\n");
+    let workload = format!("serve:{preset}x{count}");
+    let fail = |invariant: &'static str, detail: String, out: &mut Vec<Violation>| {
+        out.push(Violation { workload: workload.clone(), seed: first_seed, invariant, detail });
+    };
+    let reference_store = ProfileStore::builder().shards(1).build();
+    let reference = results_bytes(&serve_batch(&reference_store, &input, 1));
+    for &shards in &[1usize, 2, 8, 64] {
+        for &threads in &[1usize, 2, 4, 8] {
+            let store = ProfileStore::builder().shards(shards).build();
+            let got = results_bytes(&serve_batch(&store, &input, threads));
+            checks += 1;
+            if got != reference {
+                fail(
+                    "serve-deterministic",
+                    format!("{shards} shards x {threads} threads diverged from serial/1-shard"),
+                    &mut out,
+                );
+            }
+            checks += 1;
+            if store.sampling_phases() != count {
+                fail(
+                    "serve-one-phase-per-key",
+                    format!(
+                        "{shards} shards x {threads} threads: {} sampling phases for {count} apps",
+                        store.sampling_phases()
+                    ),
+                    &mut out,
+                );
+            }
+        }
+    }
     (checks, out)
 }
 

@@ -27,11 +27,32 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    sweep_range_with(workers, lo, hi, f)
+}
+
+/// [`sweep_range`] with an explicit worker count instead of
+/// `available_parallelism` — the serve loop exposes it as `--threads` so
+/// throughput can be measured at fixed pool sizes. `workers == 0` means
+/// "auto" (same as [`sweep_range`]); `workers == 1` still runs on one
+/// spawned worker, which is what makes the output contract trivially
+/// identical at every pool size: results are placed by index, never by
+/// completion order.
+pub fn sweep_range_with<T, F>(workers: usize, lo: usize, hi: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     if hi < lo {
         return Vec::new();
     }
     let n = hi - lo + 1;
-    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n);
+    let workers = if workers == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        workers
+    }
+    .min(n);
     let mut out: Vec<Option<T>> = Vec::new();
     out.resize_with(n, || None);
     let next = AtomicUsize::new(0);
@@ -104,6 +125,18 @@ mod tests {
     #[test]
     fn single_element() {
         assert_eq!(sweep_range(7, 7, |i| i + 1), vec![8]);
+    }
+
+    #[test]
+    fn explicit_worker_counts_agree_with_serial() {
+        let work = |i: usize| {
+            let mut rng = crate::util::prng::Rng::new(42 + i as u64);
+            (0..32).map(|_| rng.f64()).sum::<f64>()
+        };
+        let reference = sweep_range_serial(0, 63, work);
+        for workers in [0, 1, 2, 3, 8, 64, 200] {
+            assert_eq!(sweep_range_with(workers, 0, 63, work), reference, "workers={workers}");
+        }
     }
 
     #[test]

@@ -163,3 +163,70 @@ fn text_mode_is_unchanged_and_not_json() {
     assert!(stdout.contains("max eviction-free data scale on 12 machines"));
     assert!(parse(&stdout).is_err(), "text output must not be JSON");
 }
+
+#[test]
+fn serve_answers_a_jsonl_batch_as_one_document() {
+    let dir = std::env::temp_dir().join(format!("blink-cli-serve-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let queries = dir.join("queries.jsonl");
+    std::fs::write(
+        &queries,
+        concat!(
+            "{\"query\":\"recommend\",\"app\":\"svm\",\"scale\":200}\n",
+            "{\"query\":\"max_scale\",\"app\":\"svm\",\"machines\":4}\n",
+            "this line is not a json query\n",
+            "{\"query\":\"plan\",\"app\":\"km\",\"scale\":200}\n",
+        ),
+    )
+    .unwrap();
+    let j = query_json(&["serve", "--queries", queries.to_str().unwrap(), "--threads", "2"]);
+    assert_eq!(marker(&j, "query"), "serve");
+    assert_eq!(j.get("queries").and_then(Json::as_f64), Some(4.0));
+    assert_eq!(j.get("ok").and_then(Json::as_f64), Some(3.0));
+    assert_eq!(j.get("errors").and_then(Json::as_f64), Some(1.0));
+    // svm + km profiles, each trained exactly once across the batch
+    assert_eq!(j.get("profiles").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(j.get("sampling_phases").and_then(Json::as_f64), Some(2.0));
+    let results = j.get("results").and_then(Json::as_arr).expect("results array");
+    assert_eq!(results.len(), 4, "answers stay in line order");
+    assert_eq!(marker(&results[0], "query"), "recommend");
+    assert_eq!(marker(&results[1], "query"), "max_scale");
+    // the malformed line becomes a per-query error doc, not an abort
+    assert_eq!(marker(&results[2], "query"), "error");
+    assert!(!marker(&results[2], "error").is_empty());
+    assert_eq!(marker(&results[3], "query"), "plan");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_preloads_saved_profiles_and_rejects_stale_ones() {
+    let dir = std::env::temp_dir().join(format!("blink-cli-stale-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let queries = dir.join("queries.jsonl");
+    std::fs::write(&queries, "{\"query\":\"recommend\",\"app\":\"svm\",\"scale\":200}\n")
+        .unwrap();
+    let q = queries.to_str().unwrap();
+    let profiles = dir.join("profiles");
+    let p = profiles.to_str().unwrap();
+
+    // train once, saving the profile
+    blink_cli(&["serve", "--queries", q, "--save-profiles", p]);
+    // a clean reload answers from the preloaded profile: zero sampling
+    let j = query_json(&["serve", "--queries", q, "--profiles", p]);
+    assert_eq!(j.get("sampling_phases").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(j.get("ok").and_then(Json::as_f64), Some(1.0));
+
+    // tamper: relabel the saved svm profile as km while keeping svm's
+    // laws — the fingerprint no longer matches the live app definition
+    let file = std::fs::read_dir(&profiles)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .find(|e| e.path().extension().is_some_and(|x| x == "json"))
+        .expect("one saved profile")
+        .path();
+    let text = std::fs::read_to_string(&file).unwrap();
+    std::fs::write(&file, text.replace("svm", "km")).unwrap();
+    let err = blink_cli_err(&["serve", "--queries", q, "--profiles", p]);
+    assert!(err.contains("fingerprint"), "stderr must name the fingerprint check:\n{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

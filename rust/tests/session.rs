@@ -10,8 +10,8 @@
 
 use blink::blink::report::{AppsReport, BoundsReport, PlanReport, RecommendReport, RiskSection};
 use blink::blink::{
-    bounds, Advisor, Blink, ExecMemoryPredictor, OutputFormat, Report, RustFit,
-    SampleRunsManager, SamplingOutcome, SizePredictor, ValidationSpec, DEFAULT_SCALES,
+    bounds, normalize_scales, Advisor, Blink, ExecMemoryPredictor, OutputFormat, Report, RustFit,
+    SampleRunsManager, SamplingOutcome, ScaleError, SizePredictor, ValidationSpec, DEFAULT_SCALES,
 };
 use blink::coordinator::{self, SimulateQuery};
 use blink::cost::MachineSeconds;
@@ -348,4 +348,64 @@ fn decide_and_run_reports_share_the_recommendation() {
     let d = coordinator::cmd_decide("svm", 50.0, false, OutputFormat::Text).unwrap();
     let r = coordinator::cmd_run("svm", 50.0, 1, OutputFormat::Text).unwrap();
     assert_eq!(d.recommendation, r.decide.recommendation);
+}
+
+// ======================================================================
+// Intake validation: scales are normalized or rejected, never mis-keyed
+// ======================================================================
+
+#[test]
+fn advisor_intake_rejects_non_finite_and_negative_scales_typed() {
+    let app = app_by_name("svm").unwrap();
+
+    let mut b = RustFit::default();
+    let mut advisor = Advisor::builder().scales(&[1.0, f64::NAN, 3.0]).build(&mut b);
+    match advisor.try_profile(&app) {
+        Err(ScaleError::NonFinite { index, value }) => {
+            assert_eq!(index, 1);
+            assert!(value.is_nan());
+        }
+        other => panic!("expected NonFinite, got {other:?}"),
+    }
+    // the rejection happens at intake: no sampling phase was paid
+    assert_eq!(advisor.sampling_phases(), 0);
+
+    let mut b = RustFit::default();
+    let mut advisor = Advisor::builder().scales(&[f64::INFINITY, 1.0]).build(&mut b);
+    assert!(matches!(
+        advisor.try_profile(&app),
+        Err(ScaleError::NonFinite { index: 0, .. })
+    ));
+
+    let mut b = RustFit::default();
+    let mut advisor = Advisor::builder().scales(&[1.0, 2.0, -3.0]).build(&mut b);
+    match advisor.try_profile(&app) {
+        Err(e @ ScaleError::Negative { index: 2, .. }) => {
+            // the Display form names the offending index and value
+            let text = e.to_string();
+            assert!(text.contains("#2") && text.contains("-3"), "{text}");
+        }
+        other => panic!("expected Negative, got {other:?}"),
+    }
+}
+
+#[test]
+fn negative_zero_scales_normalize_onto_positive_zero_bits() {
+    // -0.0 == 0.0 numerically but differs in bit pattern; since cache
+    // keys are exact bit patterns, intake must collapse the two spellings
+    // or one logical scale set would split into two cache entries and
+    // re-pay the sampling phase
+    let normalized = normalize_scales(&[-0.0, 1.0, 2.0]).expect("valid scales");
+    assert_eq!(normalized.len(), 3);
+    assert_eq!(normalized[0].to_bits(), 0.0f64.to_bits(), "-0.0 must become +0.0");
+    assert_eq!(normalized[1].to_bits(), 1.0f64.to_bits());
+    // all-positive sets pass through bit-identically
+    let passthrough = normalize_scales(&[1.0, 2.5, 1e-300]).unwrap();
+    assert_eq!(passthrough[2].to_bits(), 1e-300f64.to_bits());
+    // and the panicking entry point still works for valid sets
+    let app = app_by_name("svm").unwrap();
+    let mut b = RustFit::default();
+    let mut advisor = Advisor::builder().build(&mut b);
+    let profile = advisor.profile(&app);
+    assert_eq!(profile.scales, blink::experiments::sampling_scales(&app));
 }
