@@ -12,28 +12,32 @@
 //!   [`app_fingerprint`], the exact sampling-scale bits, and the predictor
 //!   version) is validated on load: a stale profile for a changed app is
 //!   rejected with a typed [`StoreError`] instead of silently answering.
-//! * **[`ProfileStore`]** — N shards of `RwLock<HashMap<key, Arc<…>>>`,
+//! * **[`ProfileStore`]** — N shards of `RwLock<HashMap<key, cell>>`,
 //!   keyed by the same `(app name, fingerprint bits, scale bits)` tuple as
 //!   the advisor cache and sharded by its hash. Reads never block reads
 //!   (shared `read()` lock, clone the `Arc`, drop the lock); all compute
-//!   on a profile happens with zero locks held. Racing writers double-check
-//!   under the shard's write lock, so each key pays exactly one sampling
-//!   phase (`sampling_phases()` counts the real trainings).
+//!   on a profile happens with zero locks held. A cold miss inserts an
+//!   empty per-key `OnceLock` cell under a brief shard write lock and
+//!   trains *outside* it, so each key pays exactly one sampling phase
+//!   (`sampling_phases()` counts the real trainings) and a slow training
+//!   only blocks callers of that same key, never the shard's other keys.
 //! * **[`serve_batch`]** — the `blink serve` loop: one `util::json` query
 //!   doc per JSONL line, fanned out over [`crate::util::par`] workers,
-//!   answers re-placed by line index. Each answer is the same JSON the
-//!   tested `--format json` CLI contract emits (or a per-query error doc —
-//!   a malformed line never aborts the batch). Because every answer is a
-//!   pure function of its line and the trained profile is a pure function
-//!   of `(app, scales, config)` no matter which racing thread trains it,
-//!   the output is byte-identical at any shard or thread count.
+//!   answers re-placed by line index (output position N answers input
+//!   line N, blank lines included). Each answer is the same JSON the
+//!   tested `--format json` CLI contract emits (or a per-query error doc
+//!   carrying its 1-based `line` — a malformed line never aborts the
+//!   batch). Because every answer is a pure function of its line and the
+//!   trained profile is a pure function of `(app, scales, config)` no
+//!   matter which racing thread trains it, the output is byte-identical
+//!   at any shard or thread count.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
 use super::models::{FitBackend, ModelKind, RustFit, SelectedModel, ALL_KINDS};
 use super::predictor::{ExecMemoryPredictor, SizePredictor};
@@ -140,12 +144,16 @@ fn u64_field(j: &Json, key: &str, ctx: &str) -> Result<u64, StoreError> {
         .map_err(|_| StoreError::Schema(format!("'{ctx}.{key}' is not a hex u64")))
 }
 
-fn usize_field(j: &Json, key: &str, ctx: &str) -> Result<usize, StoreError> {
-    let v = get(j, key, ctx)?.as_f64().ok_or_else(|| schema(&format!("{ctx}.{key}")))?;
-    if v < 0.0 || v.fract() != 0.0 || v > (1u64 << 53) as f64 {
-        return Err(StoreError::Schema(format!("'{ctx}.{key}' is not a small integer")));
+fn usize_of(v: &Json, what: &str) -> Result<usize, StoreError> {
+    let f = v.as_f64().ok_or_else(|| schema(what))?;
+    if f < 0.0 || f.fract() != 0.0 || f > (1u64 << 53) as f64 {
+        return Err(StoreError::Schema(format!("'{what}' is not a small integer")));
     }
-    Ok(v as usize)
+    Ok(f as usize)
+}
+
+fn usize_field(j: &Json, key: &str, ctx: &str) -> Result<usize, StoreError> {
+    usize_of(get(j, key, ctx)?, &format!("{ctx}.{key}"))
 }
 
 fn str_field<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a str, StoreError> {
@@ -275,7 +283,7 @@ fn app_from(j: &Json) -> Result<AppModel, StoreError> {
         .collect::<Result<Vec<_>, _>>()?;
     let parallelism_cap = match get(j, "parallelism_cap", ctx)? {
         Json::Null => None,
-        other => Some(other.as_f64().ok_or_else(|| schema("app.parallelism_cap"))? as usize),
+        other => Some(usize_of(other, "app.parallelism_cap")?),
     };
     Ok(AppModel {
         name: str_field(j, "name", ctx)?.to_string(),
@@ -549,6 +557,12 @@ fn store_key(app: &AppModel, scales: &[f64]) -> StoreKey {
     (app.name.clone(), app_fingerprint(app), scales.iter().map(|s| s.to_bits()).collect())
 }
 
+/// One key's slot. The cell is *created* under a brief shard write lock
+/// but *filled* (trained) outside any shard lock, so a cold miss only
+/// blocks callers of the same key — `OnceLock` runs the training closure
+/// exactly once however many threads race it.
+type ProfileCell = Arc<OnceLock<Arc<TrainedProfile>>>;
+
 /// Configures a [`ProfileStore`].
 pub struct ProfileStoreBuilder {
     shards: usize,
@@ -611,15 +625,17 @@ impl ProfileStoreBuilder {
 /// cache generalized from `&mut self` to `&self` so any number of threads
 /// can query concurrently. Hot reads take one shard's `read()` lock just
 /// long enough to clone an `Arc<TrainedProfile>`; all query compute
-/// (`recommend`/`plan`/`max_scale`) runs with zero locks held. Misses
-/// train under the shard's write lock with a double-check, so racing
-/// writers collapse to exactly one sampling phase per key.
+/// (`recommend`/`plan`/`max_scale`) runs with zero locks held. A miss
+/// claims its key's [`ProfileCell`] under a brief shard write lock and
+/// trains with no shard lock held: racing writers collapse to exactly one
+/// sampling phase per key, and a slow training stalls only that key's
+/// callers, not the rest of the shard.
 ///
 /// Training uses the pure-Rust fit backend (it is `Send`-free state built
 /// per call); profiles trained elsewhere — including by the PJRT backend —
 /// enter via [`ProfileStore::insert`] after [`load_profile`].
 pub struct ProfileStore {
-    shards: Vec<RwLock<HashMap<StoreKey, Arc<TrainedProfile>>>>,
+    shards: Vec<RwLock<HashMap<StoreKey, ProfileCell>>>,
     manager: SampleRunsManager,
     max_machines: usize,
     scales: Scales,
@@ -644,28 +660,32 @@ impl ProfileStore {
         let scales = normalize_scales(&self.scales.for_app(app))?;
         let key = store_key(app, &scales);
         let shard = &self.shards[self.shard_of(&key)];
-        if let Some(hit) = shard.read().expect("shard lock poisoned").get(&key) {
-            return Ok(Arc::clone(hit));
-        }
-        let mut guard = shard.write().expect("shard lock poisoned");
-        // double-check: a racing writer may have trained while we waited
-        if let Some(hit) = guard.get(&key) {
-            return Ok(Arc::clone(hit));
-        }
-        self.sampling_phases.fetch_add(1, Ordering::Relaxed);
-        let mut backend = RustFit::default();
-        let profile = Arc::new(TrainedProfile::train(
-            &mut backend,
-            &self.manager,
-            app,
-            &scales,
-            self.max_machines,
-        ));
-        guard.insert(key, Arc::clone(&profile));
-        Ok(profile)
+        let cell = shard.read().expect("shard lock poisoned").get(&key).cloned();
+        let cell = match cell {
+            Some(cell) => cell,
+            None => {
+                let mut guard = shard.write().expect("shard lock poisoned");
+                Arc::clone(guard.entry(key).or_insert_with(|| Arc::new(OnceLock::new())))
+            }
+        };
+        // fill outside any shard lock: only same-key callers wait here,
+        // and exactly one of them runs the training closure
+        let profile = cell.get_or_init(|| {
+            self.sampling_phases.fetch_add(1, Ordering::Relaxed);
+            let mut backend = RustFit::default();
+            Arc::new(TrainedProfile::train(
+                &mut backend,
+                &self.manager,
+                app,
+                &scales,
+                self.max_machines,
+            ))
+        });
+        Ok(Arc::clone(profile))
     }
 
-    /// Read-only probe: the cached profile, or `None` without training.
+    /// Read-only probe: the cached profile, or `None` without training
+    /// (a cell another thread is still training reads as absent).
     pub fn get(&self, app: &AppModel) -> Option<Arc<TrainedProfile>> {
         let scales = normalize_scales(&self.scales.for_app(app)).ok()?;
         let key = store_key(app, &scales);
@@ -673,21 +693,21 @@ impl ProfileStore {
             .read()
             .expect("shard lock poisoned")
             .get(&key)
-            .cloned()
+            .and_then(|cell| cell.get().cloned())
     }
 
     /// Seed the store with an externally trained (e.g. loaded) profile,
-    /// keyed by its own app and scales. Returns whether the key was new.
+    /// keyed by its own app and scales. Returns whether the key was new
+    /// (losing a fill race with a trainer or another insert is `false`).
     pub fn insert(&self, profile: TrainedProfile) -> Result<bool, ScaleError> {
         let scales = normalize_scales(&profile.scales)?;
         let key = store_key(&profile.app, &scales);
         let shard = &self.shards[self.shard_of(&key)];
-        let mut guard = shard.write().expect("shard lock poisoned");
-        if guard.contains_key(&key) {
-            return Ok(false);
-        }
-        guard.insert(key, Arc::new(profile));
-        Ok(true)
+        let cell = {
+            let mut guard = shard.write().expect("shard lock poisoned");
+            Arc::clone(guard.entry(key).or_insert_with(|| Arc::new(OnceLock::new())))
+        };
+        Ok(cell.set(Arc::new(profile)).is_ok())
     }
 
     /// How many sampling phases this store actually paid for (loads and
@@ -696,8 +716,18 @@ impl ProfileStore {
         self.sampling_phases.load(Ordering::Relaxed)
     }
 
+    /// Trained profiles in the store (cells still mid-training excluded).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().expect("shard lock poisoned").len()).sum()
+        self.shards
+            .iter()
+            .map(|s| {
+                s.read()
+                    .expect("shard lock poisoned")
+                    .values()
+                    .filter(|cell| cell.get().is_some())
+                    .count()
+            })
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -718,8 +748,10 @@ impl ProfileStore {
     pub fn profiles(&self) -> Vec<Arc<TrainedProfile>> {
         let mut all: Vec<(StoreKey, Arc<TrainedProfile>)> = Vec::new();
         for shard in &self.shards {
-            for (k, v) in shard.read().expect("shard lock poisoned").iter() {
-                all.push((k.clone(), Arc::clone(v)));
+            for (k, cell) in shard.read().expect("shard lock poisoned").iter() {
+                if let Some(v) = cell.get() {
+                    all.push((k.clone(), Arc::clone(v)));
+                }
             }
         }
         all.sort_by(|a, b| a.0.cmp(&b.0));
@@ -731,14 +763,28 @@ impl ProfileStore {
 // The serve loop
 // ======================================================================
 
-/// Resolve a serve-query app spelling: a registry name (`svm`), or a
-/// seeded synthetic workload as `synth:<preset>:<seed>` (the PR 5
-/// generator — what lets one query file exercise hundreds of apps).
+/// Resolve a serve-query app spelling: a registry name (`svm`), a seeded
+/// synthetic workload as `synth:<preset>:<seed>` (the PR 5 generator —
+/// what lets one query file exercise hundreds of apps), or the name a
+/// generated workload carries (`synth-<preset>-<hexseed>`). The last is
+/// what `--save-profiles` writes into `fingerprint.app`, so a saved synth
+/// profile resolves on warm restart exactly like a registry one.
 pub fn resolve_app(name: &str) -> Option<AppModel> {
     if let Some(rest) = name.strip_prefix("synth:") {
         let (preset, seed) = rest.split_once(':')?;
         let seed: u64 = seed.parse().ok()?;
         return Some(SynthConfig::by_name(preset)?.generate(seed));
+    }
+    if let Some(rest) = name.strip_prefix("synth-") {
+        // generated spelling: preset names carry no '-' and the seed is
+        // the `{seed:04x}` hex suffix (see `SynthConfig::generate`)
+        if let Some((preset, seed)) = rest.rsplit_once('-') {
+            if let (Some(cfg), Ok(seed)) =
+                (SynthConfig::by_name(preset), u64::from_str_radix(seed, 16))
+            {
+                return Some(cfg.generate(seed));
+            }
+        }
     }
     app_by_name(name)
 }
@@ -751,8 +797,14 @@ pub struct ServeOutcome {
     pub ok: bool,
 }
 
-fn error_doc(msg: &str) -> Json {
-    Json::obj(vec![("query", "error".into()), ("error", msg.into())])
+/// `index` is the query's 0-based batch position; the doc carries it
+/// 1-based so an error maps straight back to its input line.
+fn error_doc(msg: &str, index: usize) -> Json {
+    Json::obj(vec![
+        ("query", "error".into()),
+        ("line", (index + 1).into()),
+        ("error", msg.into()),
+    ])
 }
 
 fn f64_of(j: &Json, key: &str) -> Result<f64, String> {
@@ -850,19 +902,27 @@ fn answer_line(store: &ProfileStore, line: &str) -> Result<Json, String> {
 
 /// Answer a whole JSONL batch. `threads == 0` sizes the pool from the
 /// host, `1` runs the reference serial loop, `n` runs exactly `n`
-/// workers. Results are re-placed by line index, and each answer is a
-/// pure function of its line (racing trainings produce the identical
-/// profile), so the output is byte-identical at every `threads` and
-/// shard-count setting — the serve determinism contract, property-tested
-/// in the testkit.
+/// workers. Results are re-placed by line index and every input line —
+/// blank ones included — gets exactly one output doc, so position N of
+/// the output always answers line N+1 of the input (a blank line is
+/// answered with an error doc rather than silently skipped, and error
+/// docs carry their 1-based `line`). Each answer is a pure function of
+/// its line (racing trainings produce the identical profile), so the
+/// output is byte-identical at every `threads` and shard-count setting —
+/// the serve determinism contract, property-tested in the testkit.
 pub fn serve_batch(store: &ProfileStore, input: &str, threads: usize) -> Vec<ServeOutcome> {
-    let lines: Vec<&str> = input.lines().filter(|l| !l.trim().is_empty()).collect();
+    let lines: Vec<&str> = input.lines().collect();
     if lines.is_empty() {
         return Vec::new();
     }
-    let one = |i: usize| match answer_line(store, lines[i]) {
-        Ok(doc) => ServeOutcome { doc, ok: true },
-        Err(msg) => ServeOutcome { doc: error_doc(&msg), ok: false },
+    let one = |i: usize| {
+        if lines[i].trim().is_empty() {
+            return ServeOutcome { doc: error_doc("empty query line", i), ok: false };
+        }
+        match answer_line(store, lines[i]) {
+            Ok(doc) => ServeOutcome { doc, ok: true },
+            Err(msg) => ServeOutcome { doc: error_doc(&msg, i), ok: false },
+        }
     };
     if threads == 1 {
         sweep_range_serial(0, lines.len() - 1, one)
@@ -954,6 +1014,34 @@ mod tests {
         assert_eq!(a.name, b.name);
         assert!(resolve_app("synth:smoke:notanumber").is_none());
         assert!(resolve_app("synth:meteor:1").is_none());
+        // the generated name itself resolves back to the same workload —
+        // it is what --save-profiles writes into fingerprint.app, so warm
+        // restarts of synth profiles depend on this round trip
+        assert_eq!(b.name, "synth-smoke-0007");
+        let c = resolve_app(&b.name).expect("generated spelling");
+        assert_eq!(app_fingerprint(&c), app_fingerprint(&b));
+        assert!(resolve_app("synth-smoke-zz").is_none(), "non-hex seed");
+        assert!(resolve_app("synth-meteor-0001").is_none(), "unknown preset");
+        assert!(resolve_app("synth-smoke").is_none(), "no seed suffix");
+    }
+
+    #[test]
+    fn fractional_parallelism_cap_is_a_schema_error_not_a_truncation() {
+        let mut app = svm();
+        app.parallelism_cap = Some(64);
+        let mut doc = app_json(&app);
+        assert!(app_from(&doc).is_ok(), "integer cap decodes");
+        if let Json::Obj(m) = &mut doc {
+            m.insert("parallelism_cap".to_string(), Json::Num(64.5));
+        }
+        match app_from(&doc) {
+            Err(StoreError::Schema(msg)) => assert!(msg.contains("parallelism_cap"), "{msg}"),
+            other => panic!("expected schema error, got {other:?}"),
+        }
+        if let Json::Obj(m) = &mut doc {
+            m.insert("parallelism_cap".to_string(), Json::Num(-3.0));
+        }
+        assert!(matches!(app_from(&doc), Err(StoreError::Schema(_))), "negative cap");
     }
 
     #[test]
@@ -967,9 +1055,28 @@ mod tests {
         assert_eq!(out.len(), 4);
         assert!(out[0].ok);
         assert!(!out[1].ok && !out[2].ok && !out[3].ok);
-        for bad in &out[1..] {
+        for (i, bad) in out.iter().enumerate().skip(1) {
             assert_eq!(bad.doc.get("query").and_then(Json::as_str), Some("error"));
             assert!(bad.doc.get("error").is_some());
+            // error docs name their 1-based input line
+            assert_eq!(bad.doc.get("line").and_then(Json::as_f64), Some((i + 1) as f64));
         }
+    }
+
+    #[test]
+    fn blank_lines_keep_output_positions_aligned_with_input_lines() {
+        let store = ProfileStore::builder().build();
+        let input = "{\"query\":\"max_scale\",\"app\":\"svm\",\"machines\":4}\n\
+                     \n   \n\
+                     {\"query\":\"max_scale\",\"app\":\"svm\",\"machines\":8}";
+        let out = serve_batch(&store, input, 1);
+        assert_eq!(out.len(), 4, "one outcome per input line, blanks included");
+        assert!(out[0].ok && out[3].ok);
+        for (i, blank) in [(1usize, &out[1]), (2, &out[2])] {
+            assert!(!blank.ok);
+            assert_eq!(blank.doc.get("query").and_then(Json::as_str), Some("error"));
+            assert_eq!(blank.doc.get("line").and_then(Json::as_f64), Some((i + 1) as f64));
+        }
+        assert_eq!(out[3].doc.get("machines").and_then(Json::as_f64), Some(8.0));
     }
 }

@@ -203,26 +203,39 @@ fn serve_preloads_saved_profiles_and_rejects_stale_ones() {
     let dir = std::env::temp_dir().join(format!("blink-cli-stale-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let queries = dir.join("queries.jsonl");
-    std::fs::write(&queries, "{\"query\":\"recommend\",\"app\":\"svm\",\"scale\":200}\n")
-        .unwrap();
+    // a registry app and a seeded synthetic one: the synth profile's
+    // fingerprint.app is the *generated* name (synth-smoke-0007), which
+    // preload must resolve back to the generator (regression: it used to
+    // abort the whole warm restart with "unknown app")
+    std::fs::write(
+        &queries,
+        concat!(
+            "{\"query\":\"recommend\",\"app\":\"svm\",\"scale\":200}\n",
+            "{\"query\":\"max_scale\",\"app\":\"synth:smoke:7\",\"machines\":4}\n",
+        ),
+    )
+    .unwrap();
     let q = queries.to_str().unwrap();
     let profiles = dir.join("profiles");
     let p = profiles.to_str().unwrap();
 
-    // train once, saving the profile
+    // train once, saving both profiles
     blink_cli(&["serve", "--queries", q, "--save-profiles", p]);
-    // a clean reload answers from the preloaded profile: zero sampling
+    // a clean reload answers from the preloaded profiles: zero sampling
     let j = query_json(&["serve", "--queries", q, "--profiles", p]);
     assert_eq!(j.get("sampling_phases").and_then(Json::as_f64), Some(0.0));
-    assert_eq!(j.get("ok").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(j.get("ok").and_then(Json::as_f64), Some(2.0));
 
     // tamper: relabel the saved svm profile as km while keeping svm's
     // laws — the fingerprint no longer matches the live app definition
     let file = std::fs::read_dir(&profiles)
         .unwrap()
         .filter_map(|e| e.ok())
-        .find(|e| e.path().extension().is_some_and(|x| x == "json"))
-        .expect("one saved profile")
+        .find(|e| {
+            e.file_name().to_string_lossy().starts_with("svm")
+                && e.path().extension().is_some_and(|x| x == "json")
+        })
+        .expect("the saved svm profile")
         .path();
     let text = std::fs::read_to_string(&file).unwrap();
     std::fs::write(&file, text.replace("svm", "km")).unwrap();
