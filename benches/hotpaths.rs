@@ -11,14 +11,15 @@
 
 use blink::blink::models::{FitBackend, FitProblem, RustFit};
 use blink::blink::{
-    plan, plan_exhaustive, select_cluster_size, serve_batch, PlanInput, ProfileStore,
+    adapt, plan, plan_exhaustive, select_cluster_size, serve_batch, AdaptConfig, Advisor,
+    PlanInput, ProfileStore,
 };
-use blink::cost::PerInstanceHour;
+use blink::cost::{pricing_by_name, PerInstanceHour};
 use blink::memory::{EvictionPolicy, PartitionKey, UnifiedMemory};
 use blink::metrics::{EventLog, RunSummary};
 use blink::sim::{simulate, ClusterSpec, InstanceCatalog, MachineSpec, SimOptions};
 use blink::util::bench::Bencher;
-use blink::workloads::{app_by_name, FULL_SCALE};
+use blink::workloads::{app_by_name, SynthConfig, FULL_SCALE};
 
 fn main() {
     let mut b = Bencher::from_env();
@@ -180,6 +181,32 @@ fn main() {
         100.0 / eight_s,
         one_s / eight_s
     );
+
+    // ---- adaptive: the observe -> refit -> re-plan -> act loop -------------
+    // one noisy-preset synthetic workload (heavy measurement noise on tiny
+    // caches, the §6.2 regime the sample fit mis-estimates); the timed
+    // region is the whole loop — static engine run with job-barrier
+    // observation intake, RLS refits, the divergence check, and the gated
+    // corrective run when it fires
+    let noisy = SynthConfig::by_name("noisy").unwrap().generate(17);
+    let mut fit_backend = RustFit::default();
+    let mut advisor = Advisor::builder().max_machines(12).build(&mut fit_backend);
+    let trained = advisor.profile(&noisy);
+    let paper_catalog = InstanceCatalog::by_name("paper").unwrap();
+    let adapt_pricing = pricing_by_name("machine-seconds").unwrap();
+    let m = b.bench("adaptive/replan-noisy-preset", || {
+        adapt(
+            &trained,
+            300.0,
+            &paper_catalog,
+            adapt_pricing.as_ref(),
+            &blink::sim::scenario::NoDisturbances,
+            &AdaptConfig::default(),
+        )
+        .unwrap()
+        .observations
+    });
+    println!("  -> adaptive loop at {:.1} runs/s", 1.0 / m.mean_s());
 
     // ---- selector ---------------------------------------------------------
     let machine = MachineSpec::worker_node();

@@ -1,0 +1,701 @@
+//! `blink::adaptive` — the observe → refit → re-plan → act loop.
+//!
+//! Blink (§4–5) fits cached-size growth laws from sample runs *once*; if
+//! the fitted γ is wrong, the chosen cluster stays wrong for the whole
+//! run. This module closes the feedback loop the paper leaves open:
+//!
+//! 1. **Observation intake** — per-iteration observed cached-dataset
+//!    sizes from a live run, sourced either from the engine's job-barrier
+//!    snapshots ([`crate::sim::IterationObservation`], the precise path)
+//!    or reconstructed best-effort from a detailed `metrics` listener log
+//!    ([`observations_from_log`]). Each resident snapshot extrapolates to
+//!    a full-dataset size the way a listener extrapolates from the blocks
+//!    it has seen: `resident_mb / resident_parts × parallelism`.
+//! 2. **Recursive least-squares refit** ([`RlsState`]) — each observation
+//!    folds into the trained [`SizePredictor`]'s selected model with the
+//!    textbook λ=1 RLS update, seeded from the sample fit's coefficients.
+//!    No re-sampling, no matrix solves; exact serial arithmetic in a
+//!    fixed order (job ascending, dataset ascending), so replays are
+//!    bit-identical at any thread count and feeding a model its own
+//!    predictions is a bit-exact no-op (the fixed-point property).
+//! 3. **Re-planner** — at each job barrier past a warm-up history, the
+//!    refit total is compared against the launch-time prediction; past a
+//!    configurable relative divergence, [`super::planner::plan`] re-runs
+//!    over the *remaining* iterations with the refit footprint and emits
+//!    a typed [`ReplanDecision`].
+//! 4. **Controller / act** — a decided scale-out is enacted by replaying
+//!    the run with the base scenario composed with a
+//!    [`DeficitController`] anchored at the realized decision time
+//!    (`at_s`), and adopted only if its realized cost does not exceed the
+//!    static run's — the adaptive loop never does worse than the static
+//!    pick by construction, and the differential `check_adaptive`
+//!    invariant (testkit) keeps that falsifiable end to end.
+
+use std::collections::BTreeMap;
+
+use super::models::{ModelKind, SelectedModel};
+use super::planner::{self, PlanInput};
+use super::predictor::SizePredictor;
+use super::session::TrainedProfile;
+use crate::cost::PricingModel;
+use crate::linalg;
+use crate::metrics::{Event, EventLog};
+use crate::sim::engine;
+use crate::sim::scenario::{DeficitController, ScenarioCtx};
+use crate::sim::{
+    Disturbance, FleetSpec, InstanceCatalog, IterationObservation, Scenario, SimError, SimOptions,
+};
+
+/// Recursive least-squares state for one dataset's size model.
+///
+/// Seeded from the sample-phase [`SelectedModel`]: θ starts at the batch
+/// fit's coefficients and `P` at `prior·I`, so the first observations
+/// correct the extrapolation without discarding what the samples
+/// established. λ = 1 (no forgetting): every observation keeps full
+/// weight, matching the batch objective in the limit.
+#[derive(Debug, Clone)]
+pub struct RlsState {
+    /// The model family being refined (fixes the feature map).
+    pub kind: ModelKind,
+    /// Current coefficient vector θ.
+    pub theta: Vec<f64>,
+    /// Inverse-covariance estimate `P`, row-major k×k.
+    p: Vec<f64>,
+    /// Observations folded in so far (zero-residual ones included).
+    pub updates: usize,
+}
+
+impl RlsState {
+    /// Seed the recursion from a batch-fitted model. `prior` scales the
+    /// initial `P = prior·I`: large means "trust the observations", small
+    /// means "trust the sample fit".
+    pub fn from_model(model: &SelectedModel, prior: f64) -> RlsState {
+        let k = model.theta.len();
+        let mut p = vec![0.0; k * k];
+        for i in 0..k {
+            p[i * k + i] = prior;
+        }
+        RlsState { kind: model.kind, theta: model.theta.clone(), p, updates: 0 }
+    }
+
+    /// Predict the dataset size at `scale` under the current θ. Uses the
+    /// same dot product as [`SelectedModel::predict`], so before any
+    /// update the two are bitwise equal.
+    pub fn predict(&self, scale: f64) -> f64 {
+        linalg::predict(&self.kind.features(scale), &self.theta)
+    }
+
+    /// Fold one `(scale, observed MB)` pair in.
+    ///
+    /// Standard RLS with λ=1: `K = P·x / (1 + xᵀP·x)`, `θ += K·residual`,
+    /// `P -= K·(xᵀP)`. An exactly-zero residual skips the update entirely
+    /// — not an optimization but the fixed-point contract: a model fed
+    /// its own predictions keeps θ *and* P bit-identical, so replaying a
+    /// converged log is a no-op.
+    pub fn observe(&mut self, scale: f64, observed_mb: f64) {
+        let x = self.kind.features(scale);
+        let k = x.len();
+        let residual = observed_mb - linalg::predict(&x, &self.theta);
+        self.updates += 1;
+        if residual == 0.0 {
+            return;
+        }
+        let mut px = vec![0.0; k];
+        for i in 0..k {
+            let mut acc = 0.0;
+            for j in 0..k {
+                acc += self.p[i * k + j] * x[j];
+            }
+            px[i] = acc;
+        }
+        let denom = 1.0 + x.iter().zip(&px).map(|(a, b)| a * b).sum::<f64>();
+        // P is symmetric, so xᵀP = (P·x)ᵀ and both updates reuse px.
+        for i in 0..k {
+            let gain = px[i] / denom;
+            self.theta[i] += gain * residual;
+            for j in 0..k {
+                self.p[i * k + j] -= gain * px[j];
+            }
+        }
+    }
+}
+
+/// One observed cached-dataset size, extrapolated to the full dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SizeObservation {
+    /// Job barrier the snapshot was taken at (0 = materialization).
+    pub job: usize,
+    /// Realized time of that barrier, seconds.
+    pub at_s: f64,
+    /// Dataset id in the application DAG.
+    pub dataset: usize,
+    /// Data scale the run executes at.
+    pub scale: f64,
+    /// Extrapolated full-dataset size at `scale`, MB.
+    pub observed_mb: f64,
+}
+
+/// Flatten the engine's job-barrier snapshots into per-dataset size
+/// observations at `scale`, in canonical fold order (job ascending,
+/// dataset ascending — the order the engine emits them in). Datasets
+/// with nothing resident at a barrier yield no observation: an empty
+/// cache is absence of evidence, not evidence of an empty dataset.
+pub fn observations_from_run(
+    observations: &[IterationObservation],
+    scale: f64,
+    parallelism: usize,
+) -> Vec<SizeObservation> {
+    let mut out = Vec::new();
+    for snap in observations {
+        for &(dataset, resident_parts, resident_mb) in &snap.cached {
+            if resident_parts == 0 {
+                continue;
+            }
+            out.push(SizeObservation {
+                job: snap.job,
+                at_s: snap.at_s,
+                dataset,
+                scale,
+                observed_mb: resident_mb / resident_parts as f64 * parallelism as f64,
+            });
+        }
+    }
+    out
+}
+
+/// Best-effort reconstruction of size observations from a detailed
+/// `metrics` listener log — the path a real deployment uses when only
+/// event logs are available. Per-partition `BlockUpdate`s maintain the
+/// resident set; each `JobEnd` barrier snapshots it, extrapolating by
+/// the largest partition index ever stored for the dataset. Aggregate
+/// (non-detailed) logs collapse each dataset to one partition and so
+/// reconstruct the resident size without extrapolation; the engine
+/// observation hook is the precise source.
+pub fn observations_from_log(log: &EventLog) -> Vec<SizeObservation> {
+    let mut scale = 1.0_f64;
+    let mut resident: BTreeMap<usize, BTreeMap<usize, f64>> = BTreeMap::new();
+    let mut parts_total: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut now = 0.0_f64;
+    let mut out = Vec::new();
+    for ev in &log.events {
+        match ev {
+            Event::AppStart { data_scale, .. } => scale = *data_scale,
+            Event::BlockUpdate { dataset, partition, size_mb, stored } => {
+                let parts = resident.entry(*dataset).or_default();
+                if *stored {
+                    parts.insert(*partition, *size_mb);
+                    let seen = parts_total.entry(*dataset).or_insert(0);
+                    *seen = (*seen).max(*partition + 1);
+                } else {
+                    parts.remove(partition);
+                }
+            }
+            Event::JobEnd { job, duration_s } => {
+                now += *duration_s;
+                for (&dataset, parts) in &resident {
+                    let count = parts.len();
+                    if count == 0 {
+                        continue;
+                    }
+                    let sum: f64 = parts.values().sum();
+                    let total = parts_total.get(&dataset).copied().unwrap_or(count).max(count);
+                    out.push(SizeObservation {
+                        job: *job,
+                        at_s: now,
+                        dataset,
+                        scale,
+                        observed_mb: sum / count as f64 * total as f64,
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Per-dataset RLS refit of a trained [`SizePredictor`].
+#[derive(Debug, Clone)]
+pub struct Refit {
+    /// One RLS recursion per dataset, keyed like `SizePredictor::models`.
+    pub states: BTreeMap<usize, RlsState>,
+}
+
+impl Refit {
+    pub fn new(sizes: &SizePredictor, prior: f64) -> Refit {
+        Refit {
+            states: sizes
+                .models
+                .iter()
+                .map(|(&id, m)| (id, RlsState::from_model(m, prior)))
+                .collect(),
+        }
+    }
+
+    /// Fold one observation into its dataset's recursion. Observations
+    /// for datasets the predictor never modeled are ignored.
+    pub fn observe(&mut self, o: &SizeObservation) {
+        if let Some(rls) = self.states.get_mut(&o.dataset) {
+            rls.observe(o.scale, o.observed_mb);
+        }
+    }
+
+    /// Fold a batch in its given order (callers pass canonical order).
+    pub fn observe_all(&mut self, obs: &[SizeObservation]) {
+        for o in obs {
+            self.observe(o);
+        }
+    }
+
+    /// Refit total predicted cached size at `scale`, MB. Mirrors
+    /// [`SizePredictor::predict_total`]'s non-negative clamp per dataset.
+    pub fn predict_total(&self, scale: f64) -> f64 {
+        self.states.values().map(|s| s.predict(scale).max(0.0)).sum()
+    }
+}
+
+/// Tuning knobs for the adaptive loop.
+#[derive(Debug, Clone)]
+pub struct AdaptConfig {
+    /// Relative divergence `|refit − predicted| / max(predicted, 1 MB)`
+    /// at which the re-planner fires. The default is wide enough that
+    /// sample-noise wobble on a well-estimated law never trips it, while
+    /// a mis-fit growth exponent (the superlinear synth preset diverges
+    /// ≈2× at full scale) always does.
+    pub threshold: f64,
+    /// Job barriers to fold in before the divergence check may fire —
+    /// one snapshot is noise, two establish a trend.
+    pub min_history: usize,
+    /// RLS prior variance on the sample-fit coefficients (`P = prior·I`).
+    pub prior: f64,
+    /// Engine noise seed, shared by the static and the corrective run so
+    /// the comparison isolates the controller's effect.
+    pub seed: u64,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig { threshold: 0.5, min_history: 2, prior: 1e6, seed: 11 }
+    }
+}
+
+/// The re-planner's typed verdict, emitted when the refit diverges.
+#[derive(Debug, Clone)]
+pub struct ReplanDecision {
+    /// Job barrier the divergence check fired at.
+    pub job: usize,
+    /// Realized time of that barrier — the corrective action's anchor.
+    pub at_s: f64,
+    /// Launch-time predicted total cached size at the target scale, MB.
+    pub predicted_mb: f64,
+    /// Refit prediction at the same scale when the check fired, MB.
+    pub refit_mb: f64,
+    /// `|refit − predicted| / max(predicted, 1)` at the decision point.
+    pub divergence: f64,
+    /// Observed cache deficit vs the static fleet's storage floor, MB.
+    pub deficit_mb: f64,
+    /// Machine count the re-plan recommends for the remaining iterations.
+    pub replanned_machines: usize,
+    /// Machines the controller adds (0 = advisory only: the re-plan kept
+    /// the static count, or the fleet already fits the refit footprint).
+    pub add_machines: usize,
+}
+
+/// The adaptive loop's full answer for one application run.
+#[derive(Debug, Clone)]
+pub struct AdaptOutcome {
+    pub app: String,
+    pub scale: f64,
+    /// The static pick the loop launched with.
+    pub instance: String,
+    pub machines: usize,
+    /// Launch-time predicted total cached size, MB.
+    pub predicted_mb: f64,
+    /// Final refit total after every observation (equals `predicted_mb`
+    /// when the profile has no size models to refit).
+    pub refit_mb: f64,
+    /// Job-barrier snapshots folded into the refit.
+    pub observations: usize,
+    /// The re-plan, if the divergence check fired.
+    pub decision: Option<ReplanDecision>,
+    /// Whether the corrective run was adopted (its realized cost did not
+    /// exceed the static run's).
+    pub adopted: bool,
+    pub static_time_s: f64,
+    pub static_cost: f64,
+    /// Realized time/cost of the adaptive loop: the corrective run when
+    /// adopted, the static run otherwise — never worse than static by
+    /// construction.
+    pub adaptive_time_s: f64,
+    pub adaptive_cost: f64,
+}
+
+impl AdaptOutcome {
+    /// Canonical bit-exact rendering of everything the loop decided —
+    /// floats as IEEE bit patterns, so two runs agree iff every realized
+    /// number agrees to the last bit. The determinism invariants
+    /// (`check_adaptive`, `rust/tests/adaptive.rs`) compare these across
+    /// the thread matrix.
+    pub fn fingerprint(&self) -> String {
+        let mut s = format!(
+            "{}|{:x}|{}|{}|{:x}|{:x}|{}|{}|{:x}|{:x}|{:x}|{:x}",
+            self.app,
+            self.scale.to_bits(),
+            self.instance,
+            self.machines,
+            self.predicted_mb.to_bits(),
+            self.refit_mb.to_bits(),
+            self.observations,
+            self.adopted,
+            self.static_time_s.to_bits(),
+            self.static_cost.to_bits(),
+            self.adaptive_time_s.to_bits(),
+            self.adaptive_cost.to_bits(),
+        );
+        if let Some(d) = &self.decision {
+            s.push_str(&format!(
+                "|replan@{}:{:x}:{:x}:{:x}:{:x}:{}:{}",
+                d.job,
+                d.at_s.to_bits(),
+                d.refit_mb.to_bits(),
+                d.divergence.to_bits(),
+                d.deficit_mb.to_bits(),
+                d.replanned_machines,
+                d.add_machines,
+            ));
+        }
+        s
+    }
+}
+
+/// The act step's composite scenario: the base scenario's disturbances
+/// plus the controller's corrective scale-out. `engine::run` takes one
+/// scenario, so enacting a decision composes the two schedules.
+struct Enacted<'a> {
+    base: &'a dyn Scenario,
+    controller: DeficitController,
+}
+
+impl Scenario for Enacted<'_> {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+        let mut ds = self.base.schedule(ctx);
+        ds.extend(self.controller.schedule(ctx));
+        ds
+    }
+
+    fn validate(&self) -> Result<(), SimError> {
+        self.base.validate()?;
+        self.controller.validate()
+    }
+}
+
+fn opts(seed: u64) -> SimOptions<'static> {
+    SimOptions { seed, detailed_log: false, ..Default::default() }
+}
+
+/// Run the full observe → refit → re-plan → act loop for one trained
+/// profile at `scale`.
+///
+/// The static pick (the profile's catalog plan) is launched under
+/// `scenario` and observed at every job barrier. Observations refit the
+/// size models by RLS; if the refit total diverges from the launch-time
+/// prediction beyond `cfg.threshold`, the planner re-runs over the
+/// remaining iterations and — when it asks for more machines and the
+/// refit footprint actually exceeds the fleet's storage floor — the run
+/// is replayed with a [`DeficitController`] scale-out anchored at the
+/// realized decision time. The corrective run is adopted only if its
+/// realized cost does not exceed the static run's.
+pub fn adapt(
+    trained: &TrainedProfile,
+    scale: f64,
+    catalog: &InstanceCatalog,
+    pricing: &dyn PricingModel,
+    scenario: &dyn Scenario,
+    cfg: &AdaptConfig,
+) -> Result<AdaptOutcome, SimError> {
+    let advice = trained.plan(scale, catalog, pricing);
+    let pick = advice.plan.best().ok_or(SimError::EmptyFleet)?;
+    let instance = catalog
+        .get(&pick.candidate.instance)
+        .expect("plan picks name catalog instances")
+        .clone();
+    let machines = pick.candidate.machines;
+    let fleet = FleetSpec::homogeneous(instance.clone(), machines)?;
+    let wp = trained.app.profile(scale);
+
+    // launch the static pick, observing every job barrier
+    let static_run = engine::run(&wp, &fleet, scenario, opts(cfg.seed))?;
+    let static_time = static_run.timeline.duration_s;
+    let static_cost = pricing.price_timeline(&static_run.timeline);
+    let predicted_mb = trained.predicted_cached_mb(scale);
+
+    let outcome = |refit_mb, decision, adopted, a_time, a_cost| AdaptOutcome {
+        app: trained.app.name.clone(),
+        scale,
+        instance: instance.name.clone(),
+        machines,
+        predicted_mb,
+        refit_mb,
+        observations: static_run.observations.len(),
+        decision,
+        adopted,
+        static_time_s: static_time,
+        static_cost,
+        adaptive_time_s: a_time,
+        adaptive_cost: a_cost,
+    };
+
+    let Some((sizes, _)) = trained.models.as_ref() else {
+        // atypical no-cached-data profile: nothing to refit, static final
+        return Ok(outcome(predicted_mb, None, false, static_time, static_cost));
+    };
+
+    // observe → refit, one job barrier at a time, in canonical order;
+    // the divergence check fires at the first barrier past the warm-up
+    let obs = observations_from_run(&static_run.observations, scale, wp.parallelism);
+    let mut refit = Refit::new(sizes, cfg.prior);
+    let mut decision: Option<ReplanDecision> = None;
+    let denom = predicted_mb.max(1.0);
+    let mut i = 0;
+    while i < obs.len() {
+        let job = obs[i].job;
+        let mut at_s = obs[i].at_s;
+        while i < obs.len() && obs[i].job == job {
+            at_s = obs[i].at_s;
+            refit.observe(&obs[i]);
+            i += 1;
+        }
+        // snapshots are one per job from 0, so job+1 = history folded
+        if decision.is_none() && job + 1 >= cfg.min_history {
+            let refit_now = refit.predict_total(scale);
+            let divergence = (refit_now - predicted_mb).abs() / denom;
+            if divergence >= cfg.threshold {
+                // re-plan the remaining iterations with the refit
+                // footprint, same instance type (mid-run you can add
+                // machines of the running type, not swap the fleet)
+                let mut remaining = wp.clone();
+                remaining.iterations = wp.iterations.saturating_sub(job).max(1);
+                let input = PlanInput {
+                    profile: &remaining,
+                    cached_total_mb: refit_now,
+                    exec_total_mb: trained.predicted_exec_mb(scale),
+                };
+                let replan = planner::plan(
+                    &input,
+                    &InstanceCatalog::single(instance.clone()),
+                    pricing,
+                    trained.max_machines,
+                );
+                let replanned =
+                    replan.best().map(|p| p.candidate.machines).unwrap_or(machines);
+                let deficit =
+                    refit_now - machines as f64 * instance.spec.storage_floor_mb();
+                let add = if deficit > 0.0 {
+                    replanned.saturating_sub(machines)
+                } else {
+                    0 // the fleet already fits the refit footprint
+                };
+                decision = Some(ReplanDecision {
+                    job,
+                    at_s,
+                    predicted_mb,
+                    refit_mb: refit_now,
+                    divergence,
+                    deficit_mb: deficit,
+                    replanned_machines: replanned,
+                    add_machines: add,
+                });
+            }
+        }
+    }
+    let refit_final = refit.predict_total(scale);
+
+    // act: replay with the corrective scale-out, adopt only if it pays
+    let (adopted, a_time, a_cost) = match &decision {
+        Some(d) if d.add_machines > 0 => {
+            let enacted = Enacted {
+                base: scenario,
+                controller: DeficitController {
+                    at_frac: 0.0,
+                    add: d.add_machines,
+                    deficit_mb: Some(d.deficit_mb),
+                    at_s: Some(d.at_s),
+                },
+            };
+            let run = engine::run(&wp, &fleet, &enacted, opts(cfg.seed))?;
+            let cost = pricing.price_timeline(&run.timeline);
+            if cost <= static_cost {
+                (true, run.timeline.duration_s, cost)
+            } else {
+                (false, static_time, static_cost)
+            }
+        }
+        _ => (false, static_time, static_cost),
+    };
+    Ok(outcome(refit_final, decision, adopted, a_time, a_cost))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::scenario::StepAutoscale;
+    use crate::sim::{CachedData, DisturbanceKind, InstanceType, WorkloadProfile};
+
+    fn model(kind: ModelKind, theta: &[f64]) -> SelectedModel {
+        SelectedModel { kind, theta: theta.to_vec(), cv_rmse: 0.0, cv_rel_err: 0.0 }
+    }
+
+    #[test]
+    fn rls_self_observation_is_a_bit_exact_fixed_point() {
+        let m = model(ModelKind::Quadratic, &[3.0, 0.7, 0.002]);
+        let mut rls = RlsState::from_model(&m, 1e6);
+        let theta0: Vec<u64> = rls.theta.iter().map(|t| t.to_bits()).collect();
+        let p0: Vec<u64> = rls.p.iter().map(|v| v.to_bits()).collect();
+        for s in 1..=50 {
+            let s = s as f64;
+            rls.observe(s, linalg::predict(&m.kind.features(s), &m.theta));
+        }
+        let theta1: Vec<u64> = rls.theta.iter().map(|t| t.to_bits()).collect();
+        let p1: Vec<u64> = rls.p.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(theta0, theta1, "θ moved on zero residuals");
+        assert_eq!(p0, p1, "P moved on zero residuals");
+        assert_eq!(rls.updates, 50);
+    }
+
+    #[test]
+    fn rls_converges_to_the_generating_law() {
+        // seed with a deliberately wrong fit, feed the true law
+        let mut rls = RlsState::from_model(&model(ModelKind::Linear, &[0.0, 1.0]), 1e6);
+        for s in 1..=30 {
+            let s = s as f64;
+            rls.observe(s, 5.0 + 7.0 * s);
+        }
+        let got = rls.predict(100.0);
+        assert!((got - 705.0).abs() < 1.0, "predict(100) = {got}");
+    }
+
+    #[test]
+    fn run_observations_extrapolate_from_residency() {
+        let snaps = vec![IterationObservation {
+            job: 2,
+            at_s: 12.5,
+            // 10 of 40 partitions resident holding 25 MB → 100 MB full
+            cached: vec![(0, 10, 25.0), (1, 0, 0.0)],
+        }];
+        let obs = observations_from_run(&snaps, 300.0, 40);
+        assert_eq!(obs.len(), 1, "empty residency yields no observation");
+        assert_eq!(obs[0].dataset, 0);
+        assert_eq!(obs[0].job, 2);
+        assert!((obs[0].observed_mb - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_observations_track_residency_and_evictions() {
+        let mut log = EventLog::new();
+        log.push(Event::AppStart { app: "toy".into(), machines: 2, data_scale: 300.0 });
+        for p in 0..4 {
+            log.push(Event::BlockUpdate {
+                dataset: 0,
+                partition: p,
+                size_mb: 2.0,
+                stored: true,
+            });
+        }
+        log.push(Event::JobEnd { job: 0, duration_s: 10.0 });
+        // one partition evicted before the next barrier
+        log.push(Event::BlockUpdate { dataset: 0, partition: 3, size_mb: 2.0, stored: false });
+        log.push(Event::JobEnd { job: 1, duration_s: 5.0 });
+        let obs = observations_from_log(&log);
+        assert_eq!(obs.len(), 2);
+        assert_eq!((obs[0].job, obs[0].at_s), (0, 10.0));
+        assert!((obs[0].observed_mb - 8.0).abs() < 1e-9);
+        assert_eq!(obs[0].scale, 300.0);
+        // 3 of 4 known partitions resident → still extrapolates to 8 MB
+        assert_eq!((obs[1].job, obs[1].at_s), (1, 15.0));
+        assert!((obs[1].observed_mb - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn enacted_composes_base_and_controller_schedules() {
+        let fleet = FleetSpec::homogeneous(InstanceType::paper_worker(), 2).unwrap();
+        let profile = WorkloadProfile {
+            name: "toy".into(),
+            scale: 1000.0,
+            input_mb: 1000.0,
+            parallelism: 32,
+            cached: vec![CachedData { id: 0, true_total_mb: 500.0, measured_total_mb: 500.0 }],
+            iterations: 5,
+            compute_s_per_mb: 0.01,
+            cached_speedup: 97.0,
+            recompute_factor: 1.0,
+            serial_s: 1.0,
+            shuffle_mb: 100.0,
+            exec_mem_total_mb: 500.0,
+            task_overhead_s: 0.01,
+            task_time_sigma: 0.1,
+            sample_prep_s: 0.0,
+        };
+        let ctx = ScenarioCtx { fleet: &fleet, profile: &profile, horizon_s: 100.0 };
+        let base = StepAutoscale { at_frac: 0.5, add: 1 };
+        let enacted = Enacted {
+            base: &base,
+            controller: DeficitController {
+                at_frac: 0.0,
+                add: 3,
+                deficit_mb: Some(750.0),
+                at_s: Some(42.0),
+            },
+        };
+        assert_eq!(enacted.name(), "adaptive");
+        assert!(enacted.validate().is_ok());
+        let ds = enacted.schedule(&ctx);
+        assert_eq!(ds.len(), 2, "base + controller");
+        assert_eq!(ds[0].at_s, 50.0);
+        assert_eq!(ds[1].at_s, 42.0);
+        assert!(matches!(ds[1].kind, DisturbanceKind::ScaleOut { count: 3, .. }));
+        // an invalid base poisons the composite at intake
+        let bad = StepAutoscale { at_frac: f64::NAN, add: 1 };
+        let poisoned = Enacted { base: &bad, controller: DeficitController::default() };
+        assert!(matches!(
+            poisoned.validate().unwrap_err(),
+            SimError::BadScheduleFraction { .. }
+        ));
+    }
+
+    #[test]
+    fn fingerprint_is_total_over_the_decision() {
+        let base = AdaptOutcome {
+            app: "synth".into(),
+            scale: 300.0,
+            instance: "gp.xlarge".into(),
+            machines: 3,
+            predicted_mb: 100.0,
+            refit_mb: 250.0,
+            observations: 6,
+            decision: None,
+            adopted: false,
+            static_time_s: 50.0,
+            static_cost: 150.0,
+            adaptive_time_s: 50.0,
+            adaptive_cost: 150.0,
+        };
+        let mut replanned = base.clone();
+        replanned.decision = Some(ReplanDecision {
+            job: 1,
+            at_s: 12.0,
+            predicted_mb: 100.0,
+            refit_mb: 250.0,
+            divergence: 1.5,
+            deficit_mb: 80.0,
+            replanned_machines: 5,
+            add_machines: 2,
+        });
+        assert_eq!(base.fingerprint(), base.fingerprint());
+        assert_ne!(base.fingerprint(), replanned.fingerprint());
+        assert!(replanned.fingerprint().contains("replan@1"));
+    }
+}

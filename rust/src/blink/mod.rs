@@ -17,7 +17,11 @@
 //! ([`crate::cost`]), exposed as [`TrainedProfile::plan`] / `blink advise`;
 //! its analytic picks can be cross-validated against event-driven engine
 //! runs under a disturbance scenario ([`planner::risk_adjusted`],
-//! `blink advise --scenario spot`).
+//! `blink advise --scenario spot`). [`adaptive`] closes the loop at
+//! runtime: job-barrier size observations refit the trained models by
+//! recursive least squares, a diverging refit re-plans the remaining
+//! iterations, and a `DeficitController` scale-out enacts the correction
+//! (`blink adapt`).
 //!
 //! The public entry point is the **session API** ([`session`]): build an
 //! [`Advisor`] once, [`Advisor::profile`] an application once, then answer
@@ -32,6 +36,7 @@
 //! the batched Pallas `linfit` executable via PJRT (`runtime::linfit`), in
 //! tests the pure-Rust oracle.
 
+pub mod adaptive;
 pub mod bounds;
 pub mod models;
 pub mod planner;
@@ -42,6 +47,10 @@ pub mod selector;
 pub mod session;
 pub mod store;
 
+pub use adaptive::{
+    adapt, observations_from_log, observations_from_run, AdaptConfig, AdaptOutcome, Refit,
+    ReplanDecision, RlsState, SizeObservation,
+};
 pub use models::{FitBackend, RustFit};
 pub use planner::{
     plan, plan_exhaustive, plan_exhaustive_search, plan_search, risk_adjusted, CandidateConfig,

@@ -9,6 +9,7 @@
 
 use std::fmt::Write as _;
 
+use super::adaptive::{AdaptOutcome, ReplanDecision};
 use super::planner::{CandidateConfig, Plan, RiskAdjustedPick, TypePick};
 use super::selector::Selection;
 use super::session::TrainedProfile;
@@ -1036,6 +1037,126 @@ impl Report for ServeReport {
     }
 }
 
+// ======================================================================
+// blink adapt
+// ======================================================================
+
+/// `blink adapt`: the observe → refit → re-plan → act loop's answer —
+/// the static pick, what the run's own observations did to the size
+/// models, the re-plan decision (if any), and the realized comparison.
+#[derive(Debug, Clone)]
+pub struct AdaptReport {
+    pub backend: String,
+    pub catalog_name: String,
+    pub pricing: String,
+    pub scenario: String,
+    /// The divergence threshold the loop ran with.
+    pub threshold: f64,
+    pub outcome: AdaptOutcome,
+}
+
+fn replan_json(d: &ReplanDecision) -> Json {
+    Json::obj(vec![
+        ("job", d.job.into()),
+        ("at_s", d.at_s.into()),
+        ("predicted_mb", d.predicted_mb.into()),
+        ("refit_mb", d.refit_mb.into()),
+        ("divergence", d.divergence.into()),
+        ("deficit_mb", d.deficit_mb.into()),
+        ("replanned_machines", d.replanned_machines.into()),
+        ("add_machines", d.add_machines.into()),
+    ])
+}
+
+impl Report for AdaptReport {
+    fn render_text(&self) -> String {
+        let o = &self.outcome;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "ADAPT — app {}  scale {:.0}  pick {} x{} (catalog '{}', pricing '{}', scenario '{}')",
+            o.app,
+            o.scale,
+            o.instance,
+            o.machines,
+            self.catalog_name,
+            self.pricing,
+            self.scenario,
+        );
+        let _ = writeln!(out, "fit backend: {}", self.backend);
+        let _ = writeln!(
+            out,
+            "predicted cached {}  refit {} after {} job barriers (threshold {})",
+            fmt_mb(o.predicted_mb),
+            fmt_mb(o.refit_mb),
+            o.observations,
+            fmt_pct(self.threshold),
+        );
+        match &o.decision {
+            Some(d) => {
+                let _ = writeln!(
+                    out,
+                    "replan @ job {} (t={}): divergence {}, deficit {} -> {} machines (+{})",
+                    d.job,
+                    fmt_secs(d.at_s),
+                    fmt_pct(d.divergence),
+                    fmt_mb_signed(d.deficit_mb),
+                    d.replanned_machines,
+                    d.add_machines,
+                );
+            }
+            None => {
+                let _ = writeln!(out, "no replan: refit stayed within the threshold");
+            }
+        }
+        let _ = writeln!(
+            out,
+            "static run: {} cost {:.4}",
+            fmt_secs(o.static_time_s),
+            o.static_cost,
+        );
+        if o.adopted {
+            let _ = writeln!(
+                out,
+                "-> corrective run ADOPTED: {} cost {:.4} ({:+.1} %)",
+                fmt_secs(o.adaptive_time_s),
+                o.adaptive_cost,
+                (o.adaptive_cost / o.static_cost.max(1e-12) - 1.0) * 100.0,
+            );
+        } else if o.decision.as_ref().is_some_and(|d| d.add_machines > 0) {
+            let _ = writeln!(out, "-> corrective run cost more; static pick kept");
+        } else {
+            let _ = writeln!(out, "-> static pick kept");
+        }
+        finish(out)
+    }
+
+    fn to_json(&self) -> Json {
+        let o = &self.outcome;
+        Json::obj(vec![
+            ("query", "adapt".into()),
+            ("backend", self.backend.as_str().into()),
+            ("app", o.app.as_str().into()),
+            ("scale", o.scale.into()),
+            ("catalog", self.catalog_name.as_str().into()),
+            ("pricing", self.pricing.as_str().into()),
+            ("scenario", self.scenario.as_str().into()),
+            ("threshold", self.threshold.into()),
+            ("instance", o.instance.as_str().into()),
+            ("machines", o.machines.into()),
+            ("predicted_mb", o.predicted_mb.into()),
+            ("refit_mb", o.refit_mb.into()),
+            ("observations", o.observations.into()),
+            ("replan", o.decision.as_ref().map_or(Json::Null, replan_json)),
+            ("adopted", o.adopted.into()),
+            ("static_time_s", o.static_time_s.into()),
+            ("static_cost", o.static_cost.into()),
+            ("adaptive_time_s", o.adaptive_time_s.into()),
+            ("adaptive_cost", o.adaptive_cost.into()),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1088,6 +1209,59 @@ mod tests {
             Some(u64::MAX.to_string().as_str())
         );
         assert_eq!(j.get("checks").and_then(Json::as_f64), Some(12.0));
+    }
+
+    #[test]
+    fn adapt_report_renders_and_roundtrips_json() {
+        let mut report = AdaptReport {
+            backend: "rust-nnls".into(),
+            catalog_name: "cloud".into(),
+            pricing: "machine-seconds".into(),
+            scenario: "none".into(),
+            threshold: 0.5,
+            outcome: AdaptOutcome {
+                app: "synth-superlinear-000b".into(),
+                scale: 300.0,
+                instance: "gp.xlarge".into(),
+                machines: 3,
+                predicted_mb: 100.0,
+                refit_mb: 250.0,
+                observations: 6,
+                decision: Some(ReplanDecision {
+                    job: 1,
+                    at_s: 12.0,
+                    predicted_mb: 100.0,
+                    refit_mb: 240.0,
+                    divergence: 1.4,
+                    deficit_mb: 80.0,
+                    replanned_machines: 5,
+                    add_machines: 2,
+                }),
+                adopted: true,
+                static_time_s: 50.0,
+                static_cost: 150.0,
+                adaptive_time_s: 45.0,
+                adaptive_cost: 120.0,
+            },
+        };
+        let text = report.render_text();
+        assert!(text.contains("replan @ job 1"), "{text}");
+        assert!(text.contains("ADOPTED"), "{text}");
+        let j = crate::util::json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(j.get("query").and_then(Json::as_str), Some("adapt"));
+        assert_eq!(
+            j.path(&["replan"]).unwrap().get("add_machines").and_then(Json::as_f64),
+            Some(2.0)
+        );
+        assert_eq!(j.get("adopted").and_then(Json::as_bool), Some(true));
+        // the no-replan branch renders the quiet path and encodes null
+        report.outcome.decision = None;
+        report.outcome.adopted = false;
+        let text = report.render_text();
+        assert!(text.contains("no replan"), "{text}");
+        assert!(text.contains("static pick kept"), "{text}");
+        let j = crate::util::json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(j.get("replan"), Some(&Json::Null));
     }
 
     #[test]

@@ -12,10 +12,10 @@
 use anyhow::{anyhow, Result};
 
 use crate::blink::report::{
-    AppRow, AppsReport, BoundsReport, PlanReport, RecommendReport, RiskSection, RunReport,
-    RunStats, ServeReport, SimulateReport, SynthReport, SynthRow,
+    AdaptReport, AppRow, AppsReport, BoundsReport, PlanReport, RecommendReport, RiskSection,
+    RunReport, RunStats, ServeReport, SimulateReport, SynthReport, SynthRow,
 };
-use crate::blink::{store, Advisor, OutputFormat, Report, RustFit, ValidationSpec};
+use crate::blink::{adaptive, store, Advisor, OutputFormat, Report, RustFit, ValidationSpec};
 use crate::cost::{pricing_by_name, pricing_names};
 use crate::experiments::{self, report};
 use crate::hdfs::Sampler;
@@ -97,6 +97,15 @@ fn lookup_pricing(name: &str) -> Result<Box<dyn crate::cost::PricingModel>> {
     })
 }
 
+fn lookup_scenario(name: &str) -> Result<Box<dyn scenario::Scenario>> {
+    scenario::by_name(name).ok_or_else(|| {
+        anyhow!(
+            "unknown scenario '{name}' (choose from {})",
+            scenario::scenario_names().join(" ")
+        )
+    })
+}
+
 /// Parse the `--fractions` grid: a comma-separated list of storage
 /// fractions, each strictly inside (0, 1). Empty means "don't search the
 /// memory split" — every candidate keeps its type's configured fraction.
@@ -156,9 +165,7 @@ pub fn cmd_advise(
     let app = lookup(app)?;
     let catalog = lookup_catalog(catalog_name)?;
     let pricing = lookup_pricing(pricing_name)?;
-    let scenario = scenario::by_name(scenario_name).ok_or_else(|| {
-        anyhow!("unknown scenario '{scenario_name}' (spot|straggler|failure|autoscale|none)")
-    })?;
+    let scenario = lookup_scenario(scenario_name)?;
     let fractions = parse_fractions(fractions)?;
     if max_machines == 0 {
         return Err(anyhow!("--max-machines must be at least 1"));
@@ -222,9 +229,7 @@ pub fn cmd_simulate(q: &SimulateQuery<'_>, format: OutputFormat) -> Result<Simul
     let instance = catalog.get(q.instance).ok_or_else(|| {
         anyhow!("unknown instance type '{}' (see the paper|cloud catalogs)", q.instance)
     })?;
-    let scenario = scenario::by_name(q.scenario).ok_or_else(|| {
-        anyhow!("unknown scenario '{}' (spot|straggler|failure|autoscale|none)", q.scenario)
-    })?;
+    let scenario = lookup_scenario(q.scenario)?;
     let pricing = lookup_pricing(q.pricing)?;
     let fleet = FleetSpec::homogeneous(instance.clone(), q.machines)
         .map_err(|e| anyhow!("invalid fleet: {e}"))?;
@@ -417,6 +422,72 @@ pub fn cmd_synth(q: &SynthQuery<'_>, format: OutputFormat) -> Result<SynthReport
             }
         },
     );
+    println!("{}", report.render(format));
+    Ok(report)
+}
+
+/// Parsed-name inputs of `blink adapt`.
+pub struct AdaptQuery<'a> {
+    pub app: &'a str,
+    pub scale: f64,
+    pub catalog: &'a str,
+    pub pricing: &'a str,
+    pub max_machines: usize,
+    pub scenario: &'a str,
+    pub seed: u64,
+    /// Relative refit divergence that triggers a re-plan.
+    pub threshold: f64,
+}
+
+/// `blink adapt`: the observe → refit → re-plan → act loop. Profiles the
+/// app, launches the catalog plan's best pick through the engine under
+/// the scenario, refits the size models from the run's own job-barrier
+/// observations, and — past the divergence threshold — re-plans the
+/// remaining iterations and enacts a deficit-driven scale-out, adopting
+/// it only if the realized cost does not exceed the static run's.
+pub fn cmd_adapt(q: &AdaptQuery<'_>, format: OutputFormat) -> Result<AdaptReport> {
+    let app = lookup(q.app)?;
+    let catalog = lookup_catalog(q.catalog)?;
+    let pricing = lookup_pricing(q.pricing)?;
+    let scenario = lookup_scenario(q.scenario)?;
+    if q.max_machines == 0 {
+        return Err(anyhow!("--max-machines must be at least 1"));
+    }
+    if !q.threshold.is_finite() || q.threshold <= 0.0 {
+        return Err(anyhow!("--threshold must be a positive finite number"));
+    }
+    if !q.scale.is_finite() || q.scale <= 0.0 {
+        return Err(anyhow!("--scale must be a positive finite number"));
+    }
+    let cfg = adaptive::AdaptConfig {
+        threshold: q.threshold,
+        seed: q.seed,
+        ..Default::default()
+    };
+    let mut backend = Backend::auto();
+    let backend_name = backend.name();
+    let outcome = backend.with_advisor_built(
+        Advisor::builder().max_machines(q.max_machines),
+        |advisor| {
+            let profile = advisor.profile(&app);
+            adaptive::adapt(
+                &profile,
+                q.scale,
+                &catalog,
+                pricing.as_ref(),
+                scenario.as_ref(),
+                &cfg,
+            )
+        },
+    );
+    let report = AdaptReport {
+        backend: backend_name.to_string(),
+        catalog_name: catalog.name.to_string(),
+        pricing: pricing.name().to_string(),
+        scenario: scenario.name().to_string(),
+        threshold: cfg.threshold,
+        outcome: outcome.map_err(|e| anyhow!("adaptive run failed: {e}"))?,
+    };
     println!("{}", report.render(format));
     Ok(report)
 }
@@ -688,6 +759,41 @@ mod tests {
         for name in pricing_names() {
             assert!(err.contains(name), "pricing error must list '{name}': {err}");
         }
+    }
+
+    #[test]
+    fn unknown_scenario_error_lists_every_valid_name() {
+        let err = lookup_scenario("meteor").unwrap_err().to_string();
+        for name in scenario::scenario_names() {
+            assert!(err.contains(name), "scenario error must list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn adapt_rejects_bad_inputs() {
+        let q = |app, catalog, pricing, max_machines, scenario| AdaptQuery {
+            app,
+            scale: 100.0,
+            catalog,
+            pricing,
+            max_machines,
+            scenario,
+            seed: 1,
+            threshold: 0.5,
+        };
+        assert!(cmd_adapt(&q("nope", "cloud", "hourly", 12, "none"), F).is_err());
+        assert!(cmd_adapt(&q("svm", "bogus-catalog", "hourly", 12, "none"), F).is_err());
+        assert!(cmd_adapt(&q("svm", "cloud", "free-lunch", 12, "none"), F).is_err());
+        assert!(cmd_adapt(&q("svm", "cloud", "hourly", 0, "none"), F).is_err());
+        assert!(cmd_adapt(&q("svm", "cloud", "hourly", 12, "meteor"), F).is_err());
+        for bad in [f64::NAN, f64::INFINITY, 0.0, -0.5] {
+            let mut query = q("svm", "cloud", "hourly", 12, "none");
+            query.threshold = bad;
+            assert!(cmd_adapt(&query, F).is_err(), "threshold {bad}");
+        }
+        let mut query = q("svm", "cloud", "hourly", 12, "none");
+        query.scale = -1.0;
+        assert!(cmd_adapt(&query, F).is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! blink decide      --app svm --scale 1000        # recommend a cluster size
 //! blink advise      --app als --catalog cloud     # fleet-aware (type x count) plan
 //! blink simulate    --app svm --scenario spot     # engine run under a disturbance
+//! blink adapt       --app svm --scale 1000        # observe, refit and re-plan mid-run
 //! blink run         --app km  --scale 2000        # recommend + actual run
 //! blink bounds      --app lr  --machines 12       # Table-2 max data scale
 //! blink experiment  --id table1                   # regenerate a paper table/figure
@@ -18,7 +19,7 @@
 //! ```
 
 use blink::blink::OutputFormat;
-use blink::coordinator::{self, ServeQuery, SimulateQuery, SynthQuery};
+use blink::coordinator::{self, AdaptQuery, ServeQuery, SimulateQuery, SynthQuery};
 use blink::util::cli::{App, CliError, Command, Matches, Opt};
 
 fn app() -> App {
@@ -54,7 +55,7 @@ fn app() -> App {
                     Opt::with_default("max-machines", "largest candidate cluster size", "12"),
                     Opt::with_default(
                         "scenario",
-                        "cross-validate top picks via engine runs (spot|straggler|failure|autoscale|none)",
+                        "cross-validate top picks via engine runs (spot|straggler|failure|autoscale|deficit|none)",
                         "none",
                     ),
                     Opt::with_default(
@@ -74,7 +75,7 @@ fn app() -> App {
                     Opt::with_default("instance", "instance type name (e.g. i5-worker, gp.xlarge)", "gp.xlarge"),
                     Opt::with_default(
                         "scenario",
-                        "disturbance scenario (spot|straggler|failure|autoscale|none)",
+                        "disturbance scenario (spot|straggler|failure|autoscale|deficit|none)",
                         "spot",
                     ),
                     Opt::with_default(
@@ -83,6 +84,36 @@ fn app() -> App {
                         "spot",
                     ),
                     Opt::with_default("seed", "simulation seed", "1"),
+                ],
+            },
+            Command {
+                name: "adapt",
+                about: "observe a live run, refit the size models and re-plan mid-run when they diverge",
+                opts: vec![
+                    Opt::with_default("app", "workload (als|bayes|gbt|km|lr|pca|rfc|svm)", "svm"),
+                    Opt::with_default("scale", "target data scale (1000 = 100 %)", "1000"),
+                    Opt::with_default(
+                        "catalog",
+                        "instance catalog (paper|cloud|all|generated:<seed>:<n>)",
+                        "cloud",
+                    ),
+                    Opt::with_default(
+                        "pricing",
+                        "pricing model (machine-seconds|hourly|per-second|spot)",
+                        "hourly",
+                    ),
+                    Opt::with_default("max-machines", "largest candidate cluster size", "12"),
+                    Opt::with_default(
+                        "scenario",
+                        "base disturbance scenario (spot|straggler|failure|autoscale|deficit|none)",
+                        "none",
+                    ),
+                    Opt::with_default("seed", "simulation seed", "11"),
+                    Opt::with_default(
+                        "threshold",
+                        "relative refit divergence that triggers a re-plan",
+                        "0.5",
+                    ),
                 ],
             },
             Command {
@@ -191,6 +222,20 @@ fn dispatch(cmd: &Command, m: &Matches, format: OutputFormat) -> anyhow::Result<
                 scenario: m.get("scenario").unwrap(),
                 pricing: m.get("pricing").unwrap(),
                 seed: m.get_u64("seed").unwrap_or(1),
+            },
+            format,
+        )
+        .map(|_| ()),
+        "adapt" => coordinator::cmd_adapt(
+            &AdaptQuery {
+                app: m.get("app").unwrap(),
+                scale: m.get_f64("scale").unwrap_or(1000.0),
+                catalog: m.get("catalog").unwrap(),
+                pricing: m.get("pricing").unwrap(),
+                max_machines: m.get_usize("max-machines").unwrap_or(12),
+                scenario: m.get("scenario").unwrap(),
+                seed: m.get_u64("seed").unwrap_or(11),
+                threshold: m.get_f64("threshold").unwrap_or(0.5),
             },
             format,
         )

@@ -143,11 +143,34 @@ impl FleetTimeline {
     }
 }
 
+/// One job-boundary snapshot of observed cached-dataset residency — the
+/// engine's observation hook for `blink::adaptive`. Sizes are in the
+/// *measured* units a listener would report (what the sample-run fits were
+/// trained on), so the adaptive loop can fold them straight into the
+/// [`crate::blink::SizePredictor`] models without unit conversion.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterationObservation {
+    /// Job index (0 = the materialization job, 1..=iterations after).
+    pub job: usize,
+    /// Simulated time of the job barrier the snapshot was taken at.
+    pub at_s: f64,
+    /// `(dataset id, resident partitions, observed resident MB)` per
+    /// cached dataset, in dataset declaration order. Carrying the
+    /// partition count lets a consumer estimate the *full* dataset size
+    /// (`resident_mb / resident_parts × parallelism`) from the observation
+    /// alone, the way a listener extrapolates from the blocks it has seen.
+    pub cached: Vec<(usize, usize, f64)>,
+}
+
 /// Outcome of an engine run: the legacy [`SimResult`] plus the realized
-/// timeline the cost layer prices.
+/// timeline the cost layer prices and the per-job observation journal
+/// the adaptive loop refits from.
 pub struct EngineResult {
     pub sim: SimResult,
     pub timeline: FleetTimeline,
+    /// Cached-size snapshot at every job barrier (empty only for
+    /// workloads that cache nothing). One entry per job, job order.
+    pub observations: Vec<IterationObservation>,
 }
 
 // ---------------------------------------------------------------------
@@ -632,6 +655,7 @@ pub fn run(
     opts: SimOptions<'_>,
 ) -> Result<EngineResult, SimError> {
     fleet.validate()?;
+    scenario.validate()?;
     let policy = opts.policy;
     let mut rng = Rng::new(opts.seed ^ 0x5117_c0de);
     let mut compute = opts.compute;
@@ -851,6 +875,26 @@ pub fn run(
     } else {
         location[0].iter().filter(|l| l.is_some()).count() as f64 / parts as f64
     };
+
+    // Job-boundary snapshot of observed residency, in measured units —
+    // the same arithmetic as the aggregate BlockUpdate emitted at the end
+    // of a non-detailed run, taken at every barrier for the adaptive loop.
+    let snapshot = |location: &[Vec<Option<usize>>], job: usize, at_s: f64| IterationObservation {
+        job,
+        at_s,
+        cached: profile
+            .cached
+            .iter()
+            .enumerate()
+            .map(|(di, ds)| {
+                let resident = location[di].iter().filter(|l| l.is_some()).count();
+                (ds.id, resident, ds.measured_total_mb / parts as f64 * resident as f64)
+            })
+            .collect(),
+    };
+    let mut observations: Vec<IterationObservation> =
+        Vec::with_capacity(profile.iterations + 1);
+    observations.push(snapshot(&location, 0, now));
 
     // ------------------------------------------------- iteration jobs ----
     for job in 1..=profile.iterations {
@@ -1080,6 +1124,7 @@ pub fn run(
         now += profile.serial_s + fleet_overhead_s(profile, &machines, &groups);
         set_all_slots(&mut machines, now);
         log.push(Event::JobEnd { job, duration_s: now - job_start });
+        observations.push(snapshot(&location, job, now));
     }
 
     if !detailed {
@@ -1127,7 +1172,7 @@ pub fn run(
         evictions_per_machine: machines.iter().map(|m| m.evictions).collect(),
         cached_fraction_after_load,
     };
-    Ok(EngineResult { sim, timeline })
+    Ok(EngineResult { sim, timeline, observations })
 }
 
 #[cfg(test)]

@@ -37,6 +37,11 @@ pub enum SimError {
     /// at intake: a non-finite deadline sorts after every finite one, so it
     /// would silently starve the event queue instead of ever firing.
     NonFiniteEventTime { scenario: String, at_s: f64 },
+    /// A scenario was configured with a horizon fraction outside `[0, 1]`
+    /// (or NaN). Rejected at intake before any disturbance is scheduled:
+    /// a fraction past the horizon silently schedules nothing, a negative
+    /// or NaN one schedules nonsense times.
+    BadScheduleFraction { scenario: String, at_frac: f64 },
 }
 
 impl std::fmt::Display for SimError {
@@ -63,6 +68,12 @@ impl std::fmt::Display for SimError {
             }
             SimError::NonFiniteEventTime { scenario, at_s } => {
                 write!(f, "scenario '{scenario}' scheduled a disturbance at non-finite t={at_s}")
+            }
+            SimError::BadScheduleFraction { scenario, at_frac } => {
+                write!(
+                    f,
+                    "scenario '{scenario}' has a horizon fraction outside [0, 1]: {at_frac}"
+                )
             }
         }
     }

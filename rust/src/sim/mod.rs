@@ -35,10 +35,10 @@ pub mod profile;
 pub mod scenario;
 
 pub use cluster::{ClusterSpec, InstanceCatalog, InstanceType, MachineSpec};
-pub use engine::{EngineResult, FleetTimeline, TimelineEntry};
+pub use engine::{EngineResult, FleetTimeline, IterationObservation, TimelineEntry};
 pub use fleet::{FleetSpec, InstanceGroup, SimError};
 pub use profile::{CachedData, WorkloadProfile};
-pub use scenario::{Disturbance, DisturbanceKind, Scenario};
+pub use scenario::{scenario_names, Disturbance, DisturbanceKind, Scenario};
 
 use crate::memory::EvictionPolicy;
 use crate::metrics::EventLog;

@@ -16,7 +16,7 @@
 //! Table 1/2 and figure reproduction untouched.
 
 use super::cluster::InstanceType;
-use super::fleet::FleetSpec;
+use super::fleet::{FleetSpec, SimError};
 use super::profile::WorkloadProfile;
 
 /// What a scenario sees when scheduling its disturbances.
@@ -61,6 +61,24 @@ pub trait Scenario: Sync {
     fn name(&self) -> &'static str;
     /// The disturbances to inject for this fleet/workload.
     fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance>;
+    /// Reject malformed scenario configuration before any disturbance is
+    /// scheduled. The engine calls this at intake, next to
+    /// `FleetSpec::validate` — a bad `at_frac` becomes a typed error
+    /// instead of a silently empty (or nonsensical) schedule. The default
+    /// accepts everything, so field-free scenarios need not override it.
+    fn validate(&self) -> Result<(), SimError> {
+        Ok(())
+    }
+}
+
+/// Check one horizon-fraction field, the shared intake rule for every
+/// `at_frac`-style scenario knob: finite and within `[0, 1]`.
+fn validate_frac(scenario: &'static str, at_frac: f64) -> Result<(), SimError> {
+    if at_frac.is_finite() && (0.0..=1.0).contains(&at_frac) {
+        Ok(())
+    } else {
+        Err(SimError::BadScheduleFraction { scenario: scenario.to_string(), at_frac })
+    }
 }
 
 /// The no-op scenario (`--scenario none`): the legacy `simulate()` path.
@@ -217,6 +235,118 @@ impl Scenario for StepAutoscale {
             },
         }]
     }
+
+    fn validate(&self) -> Result<(), SimError> {
+        validate_frac(self.name(), self.at_frac)
+    }
+}
+
+/// Feedback-driven autoscaling: scale out **only if** the workload's
+/// cached working set actually exceeds the fleet's storage capacity, and
+/// size the step from that deficit instead of a fixed count.
+///
+/// This is the controller half of `blink::adaptive`: the adaptive loop
+/// observes a live run, refits the size models, and hands the *observed*
+/// deficit to this scenario ([`DeficitController::deficit_mb`]) so the
+/// engine realizes the corrective scale-out. Standalone (`--scenario
+/// deficit`), it derives the deficit from the profile's measured cached
+/// sizes vs. the fleet's §5.4 storage floors — a well-provisioned fleet
+/// sees no disturbance at all, which is what separates it from
+/// [`StepAutoscale`]'s unconditional step.
+pub struct DeficitController {
+    /// When the correction lands, as a fraction of the horizon.
+    pub at_frac: f64,
+    /// How many machines join; 0 = auto-size from the deficit.
+    pub add: usize,
+    /// The cache deficit driving the controller (MB). `None` = derive
+    /// from the profile's measured cached total minus the fleet's
+    /// aggregate storage floor.
+    pub deficit_mb: Option<f64>,
+    /// Absolute decision time (seconds), overriding `at_frac`. The
+    /// adaptive loop sets this to the job barrier its divergence check
+    /// fired at — a realized time from the observed run, which the
+    /// analytic horizon fraction cannot express.
+    pub at_s: Option<f64>,
+}
+
+impl Default for DeficitController {
+    fn default() -> Self {
+        DeficitController { at_frac: 0.3, add: 0, deficit_mb: None, at_s: None }
+    }
+}
+
+impl DeficitController {
+    /// The deficit this controller acts on for a given fleet/workload.
+    pub fn deficit_for(&self, ctx: &ScenarioCtx<'_>) -> f64 {
+        self.deficit_mb.unwrap_or_else(|| {
+            let demand: f64 = ctx.profile.cached.iter().map(|d| d.measured_total_mb).sum();
+            let capacity: f64 = ctx
+                .fleet
+                .groups
+                .iter()
+                .map(|g| g.count as f64 * g.instance.spec.storage_floor_mb())
+                .sum();
+            demand - capacity
+        })
+    }
+}
+
+impl Scenario for DeficitController {
+    fn name(&self) -> &'static str {
+        "deficit"
+    }
+
+    fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+        let deficit = self.deficit_for(ctx);
+        if deficit <= 0.0 || !deficit.is_finite() {
+            return Vec::new(); // the fleet already fits the working set
+        }
+        let count = if self.add > 0 {
+            self.add
+        } else {
+            let per_machine = ctx.fleet.groups[0].instance.spec.storage_floor_mb();
+            if per_machine <= 0.0 {
+                return Vec::new(); // joining machines would add no storage
+            }
+            (deficit / per_machine).ceil() as usize
+        }
+        .max(1);
+        vec![Disturbance {
+            at_s: self.at_s.unwrap_or(ctx.horizon_s * self.at_frac).max(0.0),
+            kind: DisturbanceKind::ScaleOut {
+                instance: ctx.fleet.groups[0].instance.clone(),
+                count,
+            },
+        }]
+    }
+
+    fn validate(&self) -> Result<(), SimError> {
+        validate_frac(self.name(), self.at_frac)?;
+        if let Some(d) = self.deficit_mb {
+            if d.is_nan() {
+                return Err(SimError::BadScheduleFraction {
+                    scenario: self.name().to_string(),
+                    at_frac: d,
+                });
+            }
+        }
+        if let Some(t) = self.at_s {
+            if !t.is_finite() {
+                return Err(SimError::NonFiniteEventTime {
+                    scenario: self.name().to_string(),
+                    at_s: t,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Every CLI-addressable scenario name, the vocabulary of
+/// [`by_name`] — error messages enumerate this so an unknown
+/// `--scenario` lists every valid spelling.
+pub fn scenario_names() -> [&'static str; 6] {
+    ["none", "spot", "straggler", "failure", "autoscale", "deficit"]
 }
 
 /// Look a scenario up by CLI name (`blink simulate --scenario ...`).
@@ -227,6 +357,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Scenario>> {
         "straggler" => Some(Box::new(StragglerSlowdown::default())),
         "failure" => Some(Box::new(FailureRestart::default())),
         "autoscale" => Some(Box::new(StepAutoscale::default())),
+        "deficit" => Some(Box::new(DeficitController::default())),
         _ => None,
     }
 }
@@ -260,7 +391,7 @@ mod tests {
 
     #[test]
     fn lookup_covers_every_cli_name() {
-        for name in ["none", "spot", "straggler", "failure", "autoscale"] {
+        for name in scenario_names() {
             assert_eq!(by_name(name).unwrap().name(), name);
         }
         assert!(by_name("meteor").is_none());
@@ -309,5 +440,60 @@ mod tests {
         let ctx = ScenarioCtx { fleet: &fleet, profile: &profile, horizon_s: 50.0 };
         assert!(StragglerSlowdown { machine: 9, ..Default::default() }.schedule(&ctx).is_empty());
         assert!(FailureRestart { machine: 9, ..Default::default() }.schedule(&ctx).is_empty());
+    }
+
+    #[test]
+    fn bad_at_frac_is_a_typed_intake_error() {
+        for bad in [f64::NAN, f64::INFINITY, -0.1, 1.5] {
+            let e = StepAutoscale { at_frac: bad, add: 1 }.validate().unwrap_err();
+            assert!(
+                matches!(e, SimError::BadScheduleFraction { ref scenario, .. }
+                    if scenario == "autoscale"),
+                "{bad}: {e}"
+            );
+            let e = DeficitController { at_frac: bad, ..Default::default() }
+                .validate()
+                .unwrap_err();
+            assert!(matches!(e, SimError::BadScheduleFraction { .. }), "{bad}: {e}");
+        }
+        // boundary values are fine, as is every default configuration
+        assert!(StepAutoscale { at_frac: 0.0, add: 0 }.validate().is_ok());
+        assert!(StepAutoscale { at_frac: 1.0, add: 0 }.validate().is_ok());
+        for name in scenario_names() {
+            assert!(by_name(name).unwrap().validate().is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn deficit_controller_acts_only_under_actual_deficit() {
+        // 2 paper workers store far less than 5000 MB of cached data ->
+        // the controller must scale out, sized from the deficit
+        let (fleet, mut profile) = ctx_fixture(2);
+        profile.cached[0].measured_total_mb = 5000.0;
+        let ctx = ScenarioCtx { fleet: &fleet, profile: &profile, horizon_s: 100.0 };
+        let ctl = DeficitController::default();
+        assert!(ctl.deficit_for(&ctx) > 0.0);
+        let ds = ctl.schedule(&ctx);
+        assert_eq!(ds.len(), 1);
+        let DisturbanceKind::ScaleOut { count, .. } = &ds[0].kind else {
+            panic!("expected a scale-out")
+        };
+        let floor = fleet.groups[0].instance.spec.storage_floor_mb();
+        assert_eq!(*count, (ctl.deficit_for(&ctx) / floor).ceil() as usize);
+        // a fleet that already fits the working set sees no disturbance
+        let (big, small_profile) = ctx_fixture(8);
+        let ctx = ScenarioCtx { fleet: &big, profile: &small_profile, horizon_s: 100.0 };
+        assert!(DeficitController::default().schedule(&ctx).is_empty());
+        // an explicit observed deficit overrides the derived one
+        let forced = DeficitController { deficit_mb: Some(1.0), add: 3, ..Default::default() };
+        let ds = forced.schedule(&ctx);
+        assert!(matches!(ds[0].kind, DisturbanceKind::ScaleOut { count: 3, .. }));
+        // an absolute decision time overrides the horizon fraction
+        let timed = DeficitController { at_s: Some(42.5), ..forced };
+        assert_eq!(timed.schedule(&ctx)[0].at_s, 42.5);
+        let e = DeficitController { at_s: Some(f64::NAN), ..Default::default() }
+            .validate()
+            .unwrap_err();
+        assert!(matches!(e, SimError::NonFiniteEventTime { .. }));
     }
 }

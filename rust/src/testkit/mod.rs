@@ -23,7 +23,12 @@
 //!   every pricing model;
 //! * **scenario signatures** — every `sim::scenario::by_name` scenario
 //!   leaves its fingerprint on the realized run (machines lost/joined,
-//!   stretched runtime).
+//!   stretched runtime);
+//! * **adaptive loop** ([`check_adaptive`]) — the observe → refit →
+//!   re-plan → act loop never realizes a higher cost than the static
+//!   pick, never re-plans a well-estimated workload, always re-plans a
+//!   systematically under-fit one, and replays bit-identically under
+//!   every worker count.
 //!
 //! Every [`Violation`] carries the workload's generation seed, so any
 //! counterexample found in CI reproduces from the log
@@ -32,7 +37,7 @@
 use std::fmt;
 
 use crate::blink::{
-    machine_split, plan_exhaustive, plan_exhaustive_search, plan_search, results_bytes,
+    adaptive, machine_split, plan_exhaustive, plan_exhaustive_search, plan_search, results_bytes,
     select_cluster_size, serve_batch, Advisor, PlanInput, ProfileStore, RustFit, SearchSpace,
     TrainedProfile,
 };
@@ -40,6 +45,7 @@ use crate::cost::pricing_by_name;
 use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
 use crate::sim::{engine, scenario, FleetSpec, InstanceCatalog, MachineSpec, SimOptions};
+use crate::util::par::sweep_range_with;
 use crate::workloads::{AppModel, SynthConfig};
 
 /// One failed invariant, with everything needed to reproduce it.
@@ -92,7 +98,7 @@ impl Default for MatrixSpec {
         MatrixSpec {
             scales: vec![100.0, 400.0, 1000.0, 2000.0],
             engine_scale: 300.0,
-            scenario_names: vec!["none", "spot", "straggler", "failure", "autoscale"],
+            scenario_names: vec!["none", "spot", "straggler", "failure", "autoscale", "deficit"],
             catalog_names: vec!["paper", "cloud"],
             pricing_names: vec!["machine-seconds", "hourly"],
             max_machines: 12,
@@ -542,6 +548,20 @@ pub fn check_engine(
             "failure" => (s.machines_lost < 1 || s.machines_joined < 1)
                 .then(|| fail("must lose and restart a machine")),
             "autoscale" => (s.machines_joined < 1).then(|| fail("must add machines")),
+            "deficit" => {
+                // the conditional controller: scale out iff the fleet's
+                // storage floor cannot hold the measured working set
+                let demand: f64 = wp.cached.iter().map(|d| d.measured_total_mb).sum();
+                let capacity = 4.0
+                    * crate::sim::InstanceType::paper_worker().spec.storage_floor_mb();
+                if demand > capacity {
+                    (s.machines_joined < 1)
+                        .then(|| fail("must add machines to cover the deficit"))
+                } else {
+                    (s.duration_s != base.duration_s || s.machines_joined != 0)
+                        .then(|| fail("no deficit: must replay the baseline exactly"))
+                }
+            }
             other => Some(format!("unknown scenario '{other}' in the matrix spec")),
         };
         if let Some(detail) = bad {
@@ -612,6 +632,134 @@ pub fn check_serve(preset: &str, first_seed: u64, count: usize) -> (usize, Vec<V
                     ),
                     &mut out,
                 );
+            }
+        }
+    }
+    (checks, out)
+}
+
+/// The adaptive-loop contract (`blink adapt` / [`adaptive::adapt`]): run
+/// the observe → refit → re-plan → act loop over `count` seeded synthetic
+/// workloads from `preset` and assert the differential invariants:
+///
+/// * **adaptive-dominates** — the realized adaptive cost never exceeds
+///   the static pick's realized cost (the act gate only adopts a cheaper
+///   corrective run, so the loop can refuse but never regress);
+/// * **adaptive-no-replan** — on the well-estimated `linear` preset the
+///   refit stays inside the default divergence threshold at every job
+///   barrier, so the re-planner must never fire;
+/// * **adaptive-replan-fired** — on the `superlinear` preset, whose growth
+///   exponent the three sample scales systematically under-fit, at least
+///   one workload in the batch must re-plan;
+/// * **adaptive-deterministic** — re-running the whole loop under every
+///   worker count of the thread matrix reproduces the serial reference's
+///   [`adaptive::AdaptOutcome::fingerprint`] byte for byte.
+///
+/// Returns `(checks_run, violations)`; every violation carries the
+/// generator seed so a counterexample reproduces from the log
+/// (`blink adapt --app synth:<preset>:<seed>` once spelled via `synth`).
+pub fn check_adaptive(preset: &str, first_seed: u64, count: usize) -> (usize, Vec<Violation>) {
+    let mut checks = 0usize;
+    let mut out = Vec::new();
+    let cfg = SynthConfig::by_name(preset).expect("known synth preset");
+    let catalog = InstanceCatalog::by_name("paper").expect("paper catalog exists");
+    let pricing = pricing_by_name("machine-seconds").expect("matrix pricing exists");
+    let scale = MatrixSpec::default().engine_scale;
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().max_machines(12).build(&mut backend);
+    let mut profiles: Vec<(u64, AppModel, TrainedProfile)> = Vec::new();
+    for (seed, app) in cfg.generate_many(first_seed, count) {
+        let profile = advisor.profile(&app);
+        profiles.push((seed, app, profile));
+    }
+    if profiles.is_empty() {
+        return (checks, out);
+    }
+    let run = |seed: u64, profile: &TrainedProfile| {
+        adaptive::adapt(
+            profile,
+            scale,
+            &catalog,
+            pricing.as_ref(),
+            &scenario::NoDisturbances,
+            &adaptive::AdaptConfig { seed, ..Default::default() },
+        )
+    };
+
+    let mut replans = 0usize;
+    let mut reference: Vec<String> = Vec::new();
+    for (seed, app, profile) in &profiles {
+        checks += 1;
+        let outcome = match run(*seed, profile) {
+            Ok(o) => o,
+            Err(e) => {
+                out.push(violation(app, *seed, "adaptive-run", format!("adapt failed: {e}")));
+                reference.push(String::new());
+                continue;
+            }
+        };
+        if outcome.adaptive_cost > outcome.static_cost * (1.0 + 1e-9) {
+            out.push(violation(
+                app,
+                *seed,
+                "adaptive-dominates",
+                format!(
+                    "adaptive cost {} exceeds the static pick's {}",
+                    outcome.adaptive_cost, outcome.static_cost
+                ),
+            ));
+        }
+        checks += 1;
+        if preset == "linear" {
+            if let Some(d) = &outcome.decision {
+                out.push(violation(
+                    app,
+                    *seed,
+                    "adaptive-no-replan",
+                    format!(
+                        "well-estimated preset re-planned at job {} (divergence {:.3})",
+                        d.job, d.divergence
+                    ),
+                ));
+            }
+        }
+        if outcome.decision.is_some() {
+            replans += 1;
+        }
+        reference.push(outcome.fingerprint());
+    }
+    if preset == "superlinear" {
+        checks += 1;
+        if replans == 0 {
+            out.push(Violation {
+                workload: format!("adapt:{preset}x{count}"),
+                seed: first_seed,
+                invariant: "adaptive-replan-fired",
+                detail: format!(
+                    "no workload in seeds {first_seed}..{} re-planned",
+                    first_seed + count as u64
+                ),
+            });
+        }
+    }
+
+    // determinism: the whole loop re-run under each worker count must
+    // reproduce the serial fingerprints byte for byte
+    for &workers in &[1usize, 2, 8, 64] {
+        checks += 1;
+        let got = sweep_range_with(workers, 0, profiles.len() - 1, |i| {
+            let (seed, _, profile) = &profiles[i];
+            run(*seed, profile).map(|o| o.fingerprint()).unwrap_or_default()
+        });
+        for (i, fp) in got.iter().enumerate() {
+            if *fp != reference[i] {
+                let (seed, app, _) = &profiles[i];
+                out.push(violation(
+                    app,
+                    *seed,
+                    "adaptive-deterministic",
+                    format!("{workers}-worker fingerprint diverged from the serial reference"),
+                ));
             }
         }
     }

@@ -1,0 +1,127 @@
+//! Integration: the `blink::adaptive` observe → refit → re-plan → act
+//! loop — the acceptance story of the adaptive subsystem.
+//!
+//! * recursive least squares is a **bit-exact fixed point** under
+//!   self-observation: a model reproducing a `SizeLaw::power` curve fed
+//!   its own predictions never moves θ, by the zero-residual early-out
+//!   rather than numerical luck;
+//! * the adaptive outcome **fingerprint is order-deterministic**: the
+//!   whole loop replays byte-identically under every worker count of the
+//!   `util::par` thread matrix (the violating seed is printed);
+//! * the `testkit::check_adaptive` **differential invariants** hold on
+//!   smoke batches: realized adaptive cost dominates the static pick's,
+//!   the well-estimated `linear` preset never re-plans, and the
+//!   systematically under-fit `superlinear` preset always re-plans
+//!   somewhere in the batch.
+
+use blink::blink::models::{ModelKind, SelectedModel};
+use blink::blink::{adapt, AdaptConfig, Advisor, RlsState, RustFit, TrainedProfile};
+use blink::cost::pricing_by_name;
+use blink::sim::{scenario, InstanceCatalog};
+use blink::testkit::{check_adaptive, Violation};
+use blink::util::par::sweep_range_with;
+use blink::workloads::{SizeLaw, SynthConfig};
+
+fn render(violations: &[Violation]) -> String {
+    violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn rls_self_observation_of_a_fitted_power_law_is_a_bit_exact_fixed_point() {
+    // a quadratic model reproducing SizeLaw::power(3, 1.4, 2): the refit
+    // fed its own predictions must never move θ, bit for bit
+    let law = SizeLaw::power(3.0, 1.4, 2.0);
+    let model = SelectedModel {
+        kind: ModelKind::Quadratic,
+        theta: vec![3.0, 0.0, 1.4],
+        cv_rmse: 0.0,
+        cv_rel_err: 0.0,
+    };
+    let mut state = RlsState::from_model(&model, 1e6);
+    for s in 1..=10 {
+        let s = s as f64;
+        let (got, want) = (state.predict(s), law.at(s));
+        assert!((got - want).abs() <= 1e-9 * want.abs(), "scale {s}: {got} vs {want}");
+    }
+    let before: Vec<u64> = state.theta.iter().map(|t| t.to_bits()).collect();
+    for i in 0..500usize {
+        let s = 1.0 + (i % 37) as f64 * 8.25;
+        let echo = state.predict(s);
+        state.observe(s, echo);
+    }
+    assert_eq!(state.updates, 500, "every self-observation still counts as an update");
+    let after: Vec<u64> = state.theta.iter().map(|t| t.to_bits()).collect();
+    assert_eq!(before, after, "self-observation drifted θ");
+    // and the undisturbed state still tracks the generating law
+    let (got, want) = (state.predict(123.0), law.at(123.0));
+    assert!((got - want).abs() <= 1e-6 * want, "{got} vs {want}");
+}
+
+#[test]
+fn adaptive_outcomes_replay_bit_identically_across_the_thread_matrix() {
+    // the loop's answer is a pure function of (profile, seed): re-running
+    // the same batch under every worker count must reproduce the serial
+    // fingerprints byte for byte, however the threads interleave
+    let catalog = InstanceCatalog::by_name("paper").unwrap();
+    let pricing = pricing_by_name("machine-seconds").unwrap();
+    for preset in ["noisy", "superlinear"] {
+        let cfg = SynthConfig::by_name(preset).unwrap();
+        let mut backend = RustFit::default();
+        let mut advisor = Advisor::builder().max_machines(12).build(&mut backend);
+        let runs: Vec<(u64, TrainedProfile)> = cfg
+            .generate_many(5, 3)
+            .into_iter()
+            .map(|(seed, app)| (seed, advisor.profile(&app)))
+            .collect();
+        let fingerprint = |seed: u64, profile: &TrainedProfile| {
+            adapt(
+                profile,
+                300.0,
+                &catalog,
+                pricing.as_ref(),
+                &scenario::NoDisturbances,
+                &AdaptConfig { seed, ..Default::default() },
+            )
+            .unwrap()
+            .fingerprint()
+        };
+        let reference: Vec<String> = runs.iter().map(|(s, p)| fingerprint(*s, p)).collect();
+        for workers in [0usize, 1, 2, 3, 8, 64, 200] {
+            let got = sweep_range_with(workers, 0, runs.len() - 1, |i| {
+                let (seed, profile) = &runs[i];
+                fingerprint(*seed, profile)
+            });
+            for (i, fp) in got.iter().enumerate() {
+                assert_eq!(
+                    fp, &reference[i],
+                    "preset {preset} seed {}: {workers}-worker fingerprint diverged from serial",
+                    runs[i].0
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn check_adaptive_smoke_linear_never_replans() {
+    let (checks, violations) = check_adaptive("linear", 1, 3);
+    assert!(checks >= 6, "{checks}");
+    assert!(violations.is_empty(), "{}", render(&violations));
+}
+
+#[test]
+fn check_adaptive_smoke_superlinear_replans_and_dominates() {
+    let (checks, violations) = check_adaptive("superlinear", 1, 3);
+    assert!(checks >= 6, "{checks}");
+    assert!(violations.is_empty(), "{}", render(&violations));
+}
+
+#[test]
+#[ignore = "release-matrix scale; CI runs it with --include-ignored"]
+fn check_adaptive_release_matrix() {
+    for preset in ["linear", "noisy", "superlinear"] {
+        let (checks, violations) = check_adaptive(preset, 1, 8);
+        assert!(checks >= 16, "{preset}: {checks}");
+        assert!(violations.is_empty(), "{preset}:\n{}", render(&violations));
+    }
+}

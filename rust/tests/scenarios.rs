@@ -15,8 +15,8 @@ use blink::memory::EvictionPolicy;
 use blink::metrics::{Event, EventLog, RunSummary};
 use blink::sim::scenario::ScenarioCtx;
 use blink::sim::{
-    engine, scenario, Disturbance, DisturbanceKind, FleetSpec, InstanceCatalog, Scenario,
-    SimError, SimOptions,
+    engine, scenario, scenario_names, Disturbance, DisturbanceKind, FleetSpec, InstanceCatalog,
+    Scenario, SimError, SimOptions,
 };
 use blink::workloads::app_by_name;
 
@@ -212,7 +212,7 @@ fn every_scenario_from_by_name_leaves_its_engine_level_signature() {
     let fleet = cloud_fleet("gp.xlarge", 6);
     let base = engine::run(&profile, &fleet, &scenario::NoDisturbances, opts(5, false)).unwrap();
     let bs = RunSummary::from_log(&base.sim.log);
-    for name in ["none", "spot", "straggler", "failure", "autoscale"] {
+    for name in scenario_names() {
         let sc = scenario::by_name(name).unwrap();
         let run = engine::run(&profile, &fleet, sc.as_ref(), opts(5, false)).unwrap();
         let s = RunSummary::from_log(&run.sim.log);
@@ -269,8 +269,52 @@ fn every_scenario_from_by_name_leaves_its_engine_level_signature() {
                     run.timeline.entries.iter().filter(|e| e.up_from_s > 0.0).collect();
                 assert_eq!(late.len(), 6);
             }
+            "deficit" => {
+                // the conditional controller: it only acts when the fleet's
+                // storage floor cannot hold the measured working set
+                let demand: f64 = profile.cached.iter().map(|d| d.measured_total_mb).sum();
+                let capacity = 6.0
+                    * InstanceCatalog::cloud().get("gp.xlarge").unwrap().spec.storage_floor_mb();
+                if demand > capacity {
+                    assert!(joined_events >= 1, "a real deficit must scale out");
+                } else {
+                    assert_eq!(
+                        run.timeline, base.timeline,
+                        "no deficit: the controller must replay the baseline"
+                    );
+                    assert_eq!((lost_events, joined_events), (0, 0));
+                }
+            }
             other => unreachable!("unknown scenario {other}"),
         }
+    }
+}
+
+#[test]
+fn bad_autoscale_fractions_are_a_typed_error_not_a_misfire() {
+    // regression for scenario schedule-time validation: a NaN or
+    // out-of-range at_frac used to flow straight into `horizon_s *
+    // at_frac`, producing a disturbance in the unreachable past or future
+    // (a silent no-op) instead of an error — intake must reject it
+    let app = app_by_name("svm").unwrap();
+    let profile = app.profile(150.0);
+    let fleet = cloud_fleet("gp.xlarge", 4);
+    for at_frac in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.1, 1.5] {
+        let sc = scenario::StepAutoscale { at_frac, ..Default::default() };
+        let err = engine::run(&profile, &fleet, &sc, opts(1, false)).unwrap_err();
+        match err {
+            SimError::BadScheduleFraction { ref scenario, at_frac: bad } => {
+                assert_eq!(scenario, "autoscale");
+                assert!(bad.is_nan() == at_frac.is_nan() && (bad.is_nan() || bad == at_frac));
+            }
+            other => panic!("at_frac {at_frac}: expected BadScheduleFraction, got {other:?}"),
+        }
+        assert!(err.to_string().contains("autoscale"), "{err}");
+    }
+    // the boundary values are legal schedules, not errors
+    for at_frac in [0.0, 1.0] {
+        let sc = scenario::StepAutoscale { at_frac, ..Default::default() };
+        assert!(engine::run(&profile, &fleet, &sc, opts(1, false)).is_ok());
     }
 }
 
