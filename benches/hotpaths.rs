@@ -1,8 +1,9 @@
 //! Micro-benchmarks of the hot paths (the §Perf instrument panel):
 //! simulator task throughput, memory-manager ops, NNLS fitting (Rust vs
 //! PJRT Pallas kernel), planner search (pruned vs frozen exhaustive), the
-//! sharded profile-store serve loop (cold misses vs lock-free hot reads),
-//! selector, and listener-log serialization.
+//! multi-tenant fleet plan, the sharded profile-store serve loop (cold
+//! misses vs lock-free hot reads), selector, and listener-log
+//! serialization.
 //! `cargo bench --bench hotpaths`.
 //!
 //! Recording a baseline:
@@ -11,8 +12,8 @@
 
 use blink::blink::models::{FitBackend, FitProblem, RustFit};
 use blink::blink::{
-    adapt, plan, plan_exhaustive, select_cluster_size, serve_batch, AdaptConfig, Advisor,
-    PlanInput, ProfileStore,
+    adapt, plan, plan_exhaustive, plan_fleet, select_cluster_size, serve_batch, AdaptConfig,
+    Advisor, FleetPlanInput, PlanInput, ProfileStore,
 };
 use blink::cost::{pricing_by_name, PerInstanceHour};
 use blink::memory::{EvictionPolicy, PartitionKey, UnifiedMemory};
@@ -207,6 +208,28 @@ fn main() {
         .observations
     });
     println!("  -> adaptive loop at {:.1} runs/s", 1.0 / m.mean_s());
+
+    // ---- fleet: the shared multi-tenant plan ------------------------------
+    // three paper tenants (svm + km + lr) over the full cloud catalog:
+    // the §5.4 bound on the summed working sets, evaluated per
+    // (type x count), plus the serialized-runtime cost ranking
+    let fleet_apps: Vec<_> =
+        ["svm", "km", "lr"].iter().map(|n| app_by_name(n).unwrap()).collect();
+    let fleet_profiles: Vec<_> = fleet_apps.iter().map(|a| a.profile(FULL_SCALE)).collect();
+    let fleet_inputs: Vec<FleetPlanInput<'_>> = fleet_apps
+        .iter()
+        .zip(&fleet_profiles)
+        .map(|(a, p)| FleetPlanInput {
+            name: a.name.clone(),
+            profile: p,
+            cached_total_mb: a.total_true_cached_mb(FULL_SCALE),
+            exec_total_mb: a.exec_mem_mb(FULL_SCALE),
+        })
+        .collect();
+    let m = b.bench("fleet/plan-3-tenants", || {
+        plan_fleet(&fleet_inputs, &catalog, &pricing, 64).grid.len()
+    });
+    println!("  -> 3-tenant shared plan at {:.0} plans/s", 1.0 / m.mean_s());
 
     // ---- selector ---------------------------------------------------------
     let machine = MachineSpec::worker_node();

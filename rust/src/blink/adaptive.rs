@@ -23,13 +23,16 @@
 //!    configurable relative divergence, [`super::planner::plan`] re-runs
 //!    over the *remaining* iterations with the refit footprint and emits
 //!    a typed [`ReplanDecision`].
-//! 4. **Controller / act** — a decided scale-out is enacted by replaying
+//! 4. **Controller / act** — a decided correction is enacted by replaying
 //!    the run with the base scenario composed with a
 //!    [`DeficitController`] anchored at the realized decision time
-//!    (`at_s`), and adopted only if its realized cost does not exceed the
-//!    static run's — the adaptive loop never does worse than the static
-//!    pick by construction, and the differential `check_adaptive`
-//!    invariant (testkit) keeps that falsifiable end to end.
+//!    (`at_s`): a positive deficit scales out, a surplus (the refit came
+//!    in *below* the launch-time prediction and the re-plan wants fewer
+//!    machines) retires the excess, highest index first. Either arm is
+//!    adopted only if its realized cost does not exceed the static run's
+//!    — the adaptive loop never does worse than the static pick by
+//!    construction, and the differential `check_adaptive` invariant
+//!    (testkit) keeps that falsifiable end to end.
 
 use std::collections::BTreeMap;
 
@@ -171,16 +174,51 @@ pub fn observations_from_run(
 /// (non-detailed) logs collapse each dataset to one partition and so
 /// reconstruct the resident size without extrapolation; the engine
 /// observation hook is the precise source.
+///
+/// A real listener delivers block updates asynchronously, so the tail of
+/// a job's `BlockUpdate`s can land *after* its `JobEnd` marker in the
+/// log. Snapshotting eagerly at the marker would drop those late blocks,
+/// so the barrier is held pending instead and flushed only once the
+/// job's block stream has provably drained: at the next `TaskEnd` (the
+/// following job has started running, so everything before it belonged
+/// to the ended job), at the next `JobEnd`/`AppEnd`, or at the end of
+/// the log. In-order logs — the engine writes `TaskEnd`s before any of a
+/// job's block traffic — snapshot exactly what the eager reading did.
 pub fn observations_from_log(log: &EventLog) -> Vec<SizeObservation> {
     let mut scale = 1.0_f64;
     let mut resident: BTreeMap<usize, BTreeMap<usize, f64>> = BTreeMap::new();
     let mut parts_total: BTreeMap<usize, usize> = BTreeMap::new();
     let mut now = 0.0_f64;
+    let mut pending: Option<(usize, f64)> = None;
     let mut out = Vec::new();
+    let flush = |pending: &mut Option<(usize, f64)>,
+                 resident: &BTreeMap<usize, BTreeMap<usize, f64>>,
+                 parts_total: &BTreeMap<usize, usize>,
+                 out: &mut Vec<SizeObservation>,
+                 scale: f64| {
+        let Some((job, at_s)) = pending.take() else { return };
+        for (&dataset, parts) in resident {
+            let count = parts.len();
+            if count == 0 {
+                continue;
+            }
+            let sum: f64 = parts.values().sum();
+            let total = parts_total.get(&dataset).copied().unwrap_or(count).max(count);
+            out.push(SizeObservation {
+                job,
+                at_s,
+                dataset,
+                scale,
+                observed_mb: sum / count as f64 * total as f64,
+            });
+        }
+    };
     for ev in &log.events {
         match ev {
             Event::AppStart { data_scale, .. } => scale = *data_scale,
             Event::BlockUpdate { dataset, partition, size_mb, stored } => {
+                // no flush: a block update right after a JobEnd marker is
+                // the ended job's late traffic and belongs in its snapshot
                 let parts = resident.entry(*dataset).or_default();
                 if *stored {
                     parts.insert(*partition, *size_mb);
@@ -190,27 +228,21 @@ pub fn observations_from_log(log: &EventLog) -> Vec<SizeObservation> {
                     parts.remove(partition);
                 }
             }
+            Event::TaskEnd { .. } => {
+                flush(&mut pending, &resident, &parts_total, &mut out, scale);
+            }
             Event::JobEnd { job, duration_s } => {
+                flush(&mut pending, &resident, &parts_total, &mut out, scale);
                 now += *duration_s;
-                for (&dataset, parts) in &resident {
-                    let count = parts.len();
-                    if count == 0 {
-                        continue;
-                    }
-                    let sum: f64 = parts.values().sum();
-                    let total = parts_total.get(&dataset).copied().unwrap_or(count).max(count);
-                    out.push(SizeObservation {
-                        job: *job,
-                        at_s: now,
-                        dataset,
-                        scale,
-                        observed_mb: sum / count as f64 * total as f64,
-                    });
-                }
+                pending = Some((*job, now));
+            }
+            Event::AppEnd { .. } => {
+                flush(&mut pending, &resident, &parts_total, &mut out, scale);
             }
             _ => {}
         }
     }
+    flush(&mut pending, &resident, &parts_total, &mut out, scale);
     out
 }
 
@@ -296,9 +328,15 @@ pub struct ReplanDecision {
     pub deficit_mb: f64,
     /// Machine count the re-plan recommends for the remaining iterations.
     pub replanned_machines: usize,
-    /// Machines the controller adds (0 = advisory only: the re-plan kept
-    /// the static count, or the fleet already fits the refit footprint).
+    /// Machines the controller adds (0 = the deficit arm did not fire:
+    /// the re-plan kept the static count, or the fleet already fits the
+    /// refit footprint).
     pub add_machines: usize,
+    /// Machines the controller retires on a surplus (the refit footprint
+    /// fits the fleet with room to spare and the re-plan wants fewer
+    /// machines). At most one of `add_machines` / `remove_machines` is
+    /// non-zero; both zero = advisory only.
+    pub remove_machines: usize,
 }
 
 /// The adaptive loop's full answer for one application run.
@@ -354,7 +392,7 @@ impl AdaptOutcome {
         );
         if let Some(d) = &self.decision {
             s.push_str(&format!(
-                "|replan@{}:{:x}:{:x}:{:x}:{:x}:{}:{}",
+                "|replan@{}:{:x}:{:x}:{:x}:{:x}:{}:{}:{}",
                 d.job,
                 d.at_s.to_bits(),
                 d.refit_mb.to_bits(),
@@ -362,6 +400,7 @@ impl AdaptOutcome {
                 d.deficit_mb.to_bits(),
                 d.replanned_machines,
                 d.add_machines,
+                d.remove_machines,
             ));
         }
         s
@@ -404,11 +443,13 @@ fn opts(seed: u64) -> SimOptions<'static> {
 /// `scenario` and observed at every job barrier. Observations refit the
 /// size models by RLS; if the refit total diverges from the launch-time
 /// prediction beyond `cfg.threshold`, the planner re-runs over the
-/// remaining iterations and — when it asks for more machines and the
-/// refit footprint actually exceeds the fleet's storage floor — the run
-/// is replayed with a [`DeficitController`] scale-out anchored at the
-/// realized decision time. The corrective run is adopted only if its
-/// realized cost does not exceed the static run's.
+/// remaining iterations. A re-plan asking for more machines while the
+/// refit footprint exceeds the fleet's storage floor replays the run
+/// with a [`DeficitController`] scale-out anchored at the realized
+/// decision time; a re-plan asking for *fewer* machines while the
+/// footprint fits with room to spare replays with the controller's
+/// surplus arm retiring the excess. Either corrective run is adopted
+/// only if its realized cost does not exceed the static run's.
 pub fn adapt(
     trained: &TrainedProfile,
     scale: f64,
@@ -494,10 +535,13 @@ pub fn adapt(
                     replan.best().map(|p| p.candidate.machines).unwrap_or(machines);
                 let deficit =
                     refit_now - machines as f64 * instance.spec.storage_floor_mb();
-                let add = if deficit > 0.0 {
-                    replanned.saturating_sub(machines)
+                let (add, remove) = if deficit > 0.0 {
+                    (replanned.saturating_sub(machines), 0)
                 } else {
-                    0 // the fleet already fits the refit footprint
+                    // surplus: the fleet already fits the refit footprint;
+                    // if the re-plan wants fewer machines, retire the
+                    // excess (never below one surviving machine)
+                    (0, machines.saturating_sub(replanned.max(1)))
                 };
                 decision = Some(ReplanDecision {
                     job,
@@ -508,20 +552,23 @@ pub fn adapt(
                     deficit_mb: deficit,
                     replanned_machines: replanned,
                     add_machines: add,
+                    remove_machines: remove,
                 });
             }
         }
     }
     let refit_final = refit.predict_total(scale);
 
-    // act: replay with the corrective scale-out, adopt only if it pays
+    // act: replay with the corrective scale-out (deficit) or scale-in
+    // (surplus), adopt only if it pays
     let (adopted, a_time, a_cost) = match &decision {
-        Some(d) if d.add_machines > 0 => {
+        Some(d) if d.add_machines > 0 || d.remove_machines > 0 => {
             let enacted = Enacted {
                 base: scenario,
                 controller: DeficitController {
                     at_frac: 0.0,
                     add: d.add_machines,
+                    remove: d.remove_machines,
                     deficit_mb: Some(d.deficit_mb),
                     at_s: Some(d.at_s),
                 },
@@ -620,6 +667,62 @@ mod tests {
     }
 
     #[test]
+    fn log_observations_tolerate_blocks_landing_after_the_job_end_marker() {
+        // two logs of the same run: in the second, partition 3's update is
+        // delivered late — after the JobEnd marker — the way a threaded
+        // listener interleaves. Both must reconstruct identically.
+        let build = |late: bool| {
+            let mut log = EventLog::new();
+            log.push(Event::AppStart { app: "toy".into(), machines: 2, data_scale: 200.0 });
+            for p in 0..3 {
+                log.push(Event::BlockUpdate {
+                    dataset: 0,
+                    partition: p,
+                    size_mb: (p + 1) as f64,
+                    stored: true,
+                });
+            }
+            let tail =
+                Event::BlockUpdate { dataset: 0, partition: 3, size_mb: 4.0, stored: true };
+            if !late {
+                log.push(tail.clone());
+            }
+            log.push(Event::JobEnd { job: 0, duration_s: 8.0 });
+            if late {
+                log.push(tail);
+            }
+            // the next job's first task proves job 0's block stream has
+            // drained; the eviction after it must not deflate job 0
+            log.push(Event::TaskEnd {
+                stage: 1,
+                task: 0,
+                machine: 0,
+                duration_s: 1.0,
+                cached_read: true,
+            });
+            log.push(Event::BlockUpdate {
+                dataset: 0,
+                partition: 3,
+                size_mb: 4.0,
+                stored: false,
+            });
+            log.push(Event::JobEnd { job: 1, duration_s: 4.0 });
+            log.push(Event::AppEnd { duration_s: 12.0 });
+            log
+        };
+        let ordered = observations_from_log(&build(false));
+        let reordered = observations_from_log(&build(true));
+        assert_eq!(ordered, reordered, "late block delivery changed the reconstruction");
+        assert_eq!(ordered.len(), 2);
+        // job 0 saw all four partitions: 1 + 2 + 3 + 4 = 10 MB
+        assert_eq!((ordered[0].job, ordered[0].at_s), (0, 8.0));
+        assert!((ordered[0].observed_mb - 10.0).abs() < 1e-9);
+        // job 1 lost p3: 6 MB over 3 resident of 4 known parts → 8 MB
+        assert_eq!((ordered[1].job, ordered[1].at_s), (1, 12.0));
+        assert!((ordered[1].observed_mb - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn enacted_composes_base_and_controller_schedules() {
         let fleet = FleetSpec::homogeneous(InstanceType::paper_worker(), 2).unwrap();
         let profile = WorkloadProfile {
@@ -646,6 +749,7 @@ mod tests {
             controller: DeficitController {
                 at_frac: 0.0,
                 add: 3,
+                remove: 0,
                 deficit_mb: Some(750.0),
                 at_s: Some(42.0),
             },
@@ -693,9 +797,18 @@ mod tests {
             deficit_mb: 80.0,
             replanned_machines: 5,
             add_machines: 2,
+            remove_machines: 0,
         });
         assert_eq!(base.fingerprint(), base.fingerprint());
         assert_ne!(base.fingerprint(), replanned.fingerprint());
         assert!(replanned.fingerprint().contains("replan@1"));
+        // the scale-in arm is part of the total order too
+        let mut shrunk = replanned.clone();
+        if let Some(d) = shrunk.decision.as_mut() {
+            d.deficit_mb = -80.0;
+            d.add_machines = 0;
+            d.remove_machines = 2;
+        }
+        assert_ne!(replanned.fingerprint(), shrunk.fingerprint());
     }
 }

@@ -53,8 +53,9 @@ pub use adaptive::{
 };
 pub use models::{FitBackend, RustFit};
 pub use planner::{
-    plan, plan_exhaustive, plan_exhaustive_search, plan_search, risk_adjusted, CandidateConfig,
-    Plan, PlanInput, RiskAdjustedPick, SearchSpace, TypePick,
+    plan, plan_exhaustive, plan_exhaustive_search, plan_fleet, plan_search, risk_adjusted,
+    CandidateConfig, FleetCandidate, FleetPick, FleetPlan, FleetPlanInput, Plan, PlanInput,
+    RiskAdjustedPick, SearchSpace, TypePick,
 };
 pub use predictor::{ExecMemoryPredictor, SizePredictor};
 pub use report::{OutputFormat, Report};

@@ -530,6 +530,159 @@ pub fn plan_exhaustive(
     plan_exhaustive_search(input, catalog, pricing, &SearchSpace::counts(max_machines))
 }
 
+// ---------------------------------------------------------------------
+// fleet-level planning (multi-tenant)
+// ---------------------------------------------------------------------
+
+/// One tenant's contribution to a fleet plan: the workload's compute
+/// shape plus its predicted memory footprint at the target scale — a
+/// named [`PlanInput`].
+pub struct FleetPlanInput<'a> {
+    pub name: String,
+    pub profile: &'a WorkloadProfile,
+    pub cached_total_mb: Mb,
+    pub exec_total_mb: Mb,
+}
+
+/// One evaluated `(instance type × count)` shared-fleet configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetCandidate {
+    pub instance: String,
+    pub machines: usize,
+    pub storage_fraction: f64,
+    /// Whether *every* tenant fits eviction-free: the §5.4 condition on
+    /// the summed working sets, `Σ cached / n < capacity(Σ exec, n)`.
+    pub eviction_free: bool,
+    /// Per-machine headroom against the summed working set; negative =
+    /// the shared deficit.
+    pub headroom_mb: Mb,
+    /// Sum of the per-tenant runtime estimates — tenants' jobs serialize
+    /// on the shared fleet ([`crate::sim::run_fleet`] is FIFO), so the
+    /// fleet makespan is the serialized sum.
+    pub predicted_time_s: f64,
+    pub predicted_cost: f64,
+    /// Per-tenant runtime estimates, tenant input order.
+    pub per_tenant_time_s: Vec<f64>,
+}
+
+/// The fleet recommendation for one instance type: the minimal
+/// eviction-free count (or the saturated boundary), with the extended
+/// §5.4 selector diagnostics over the summed working sets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetPick {
+    pub candidate: FleetCandidate,
+    pub selection: Selection,
+}
+
+/// The fleet planner's full answer.
+#[derive(Debug, Clone, Default)]
+pub struct FleetPlan {
+    /// Tenant names, input order (column headers for renderers).
+    pub tenants: Vec<String>,
+    /// One pick per instance type, best (eviction-free, then cheapest)
+    /// first.
+    pub ranked: Vec<FleetPick>,
+    /// Every evaluated `(type × count)` candidate, catalog order then
+    /// count ascending from each type's eviction-free floor.
+    pub grid: Vec<FleetCandidate>,
+}
+
+impl FleetPlan {
+    /// The overall recommendation, if any type produced a pick.
+    pub fn best(&self) -> Option<&FleetPick> {
+        self.ranked.first()
+    }
+
+    /// Minimal eviction-free machine count for `instance`, if that type
+    /// has one within the searched bracket — the fleet's §5.4 floor for
+    /// the type. `testkit::check_fleet` asserts this never *shrinks*
+    /// when a tenant is added (the summed working set only grows).
+    pub fn min_eviction_free_machines(&self, instance: &str) -> Option<usize> {
+        self.ranked
+            .iter()
+            .find(|p| p.candidate.instance == instance && !p.selection.saturated)
+            .map(|p| p.selection.machines)
+    }
+}
+
+/// Search `catalog` for the cheapest configuration that runs all
+/// `tenants` concurrently with every tenant eviction-free: the §5.4
+/// bound extended with summed working sets (`Σ cached` against the
+/// capacity left by `Σ exec`), priced over the *serialized* runtime —
+/// [`crate::sim::run_fleet`] interleaves jobs FIFO on one fleet, so N
+/// tenants take roughly the sum of their individual times.
+///
+/// Degeneracies mirror [`plan`]: one tenant reduces to the single-app
+/// bound exactly (same selector arithmetic), and an empty tenant list
+/// returns an empty plan. Counts below each type's eviction-free floor
+/// are pruned from the grid as in [`plan_search`]; a saturated type
+/// contributes only its `max_machines` boundary candidate.
+pub fn plan_fleet(
+    tenants: &[FleetPlanInput<'_>],
+    catalog: &InstanceCatalog,
+    pricing: &dyn PricingModel,
+    max_machines: usize,
+) -> FleetPlan {
+    assert!(max_machines >= 1);
+    if tenants.is_empty() {
+        return FleetPlan::default();
+    }
+    let names: Vec<String> = tenants.iter().map(|t| t.name.clone()).collect();
+    let sum_cached: Mb = tenants.iter().map(|t| t.cached_total_mb).sum();
+    let sum_exec: Mb = tenants.iter().map(|t| t.exec_total_mb).sum();
+
+    let mut ranked = Vec::with_capacity(catalog.instances.len());
+    let mut grid = Vec::new();
+    for instance in &catalog.instances {
+        let fraction = instance.spec.storage_fraction;
+        let selection =
+            select_cluster_size_at(sum_cached, sum_exec, &instance.spec, fraction, max_machines);
+        for n in selection.machines..=max_machines {
+            let (_, capacity) = machine_split_at(sum_exec, &instance.spec, fraction, n);
+            let cached_pm = sum_cached / n as f64;
+            let eviction_free = cached_pm < capacity;
+            // the shared store offers every tenant the same resident
+            // fraction of its working set (one arbitration, N victims)
+            let resident = if sum_cached <= 0.0 {
+                1.0
+            } else {
+                (n as f64 * capacity / sum_cached).min(1.0)
+            };
+            let per_tenant_time_s: Vec<f64> = tenants
+                .iter()
+                .map(|t| {
+                    estimate_time_s(t.profile, &instance.spec, n, t.cached_total_mb, resident)
+                })
+                .collect();
+            let time_s: f64 = per_tenant_time_s.iter().sum();
+            let c = FleetCandidate {
+                instance: instance.name.to_string(),
+                machines: n,
+                storage_fraction: fraction,
+                eviction_free,
+                headroom_mb: capacity - cached_pm,
+                predicted_time_s: time_s,
+                predicted_cost: pricing.price(instance, n, time_s),
+                per_tenant_time_s,
+            };
+            if n == selection.machines {
+                ranked.push(FleetPick { candidate: c.clone(), selection: selection.clone() });
+            }
+            grid.push(c);
+        }
+    }
+    ranked.sort_by(|a, b| {
+        b.candidate
+            .eviction_free
+            .cmp(&a.candidate.eviction_free)
+            .then(a.candidate.predicted_cost.total_cmp(&b.candidate.predicted_cost))
+            .then(a.candidate.predicted_time_s.total_cmp(&b.candidate.predicted_time_s))
+            .then(a.candidate.instance.cmp(&b.candidate.instance))
+            .then(a.candidate.machines.cmp(&b.candidate.machines))
+    });
+    FleetPlan { tenants: names, ranked, grid }
+}
+
 /// One analytic pick cross-validated against event-driven engine runs
 /// under a disturbance scenario.
 #[derive(Debug, Clone)]
@@ -980,5 +1133,129 @@ mod tests {
             assert_eq!(pick.candidate.machines, 1, "{}", pick.candidate.instance);
             assert!(pick.candidate.eviction_free);
         }
+    }
+
+    #[test]
+    fn fleet_plan_of_one_tenant_matches_the_single_app_bound() {
+        let (profile, cached, exec) = input_for("svm", FULL_SCALE);
+        let t = FleetPlanInput {
+            name: "svm".into(),
+            profile: &profile,
+            cached_total_mb: cached,
+            exec_total_mb: exec,
+        };
+        let fp = plan_fleet(&[t], &InstanceCatalog::cloud(), &MachineSeconds, 12);
+        let input = PlanInput { profile: &profile, cached_total_mb: cached, exec_total_mb: exec };
+        let p = plan(&input, &InstanceCatalog::cloud(), &MachineSeconds, 12);
+        assert_eq!(fp.tenants, vec!["svm".to_string()]);
+        // the summed bound of one tenant IS the single-app §5.4 bound:
+        // same floor, same pick arithmetic, per type
+        for pick in &p.ranked {
+            assert_eq!(
+                fp.min_eviction_free_machines(&pick.candidate.instance),
+                (!pick.selection.saturated).then_some(pick.selection.machines),
+                "{}",
+                pick.candidate.instance
+            );
+            let fpick = fp
+                .ranked
+                .iter()
+                .find(|f| f.candidate.instance == pick.candidate.instance)
+                .unwrap();
+            assert_eq!(fpick.selection, pick.selection);
+            assert_eq!(fpick.candidate.machines, pick.candidate.machines);
+            assert_eq!(fpick.candidate.predicted_time_s, pick.candidate.predicted_time_s);
+            assert_eq!(fpick.candidate.predicted_cost, pick.candidate.predicted_cost);
+        }
+    }
+
+    #[test]
+    fn adding_a_tenant_never_shrinks_the_fleet_floor() {
+        let (svm, c1, e1) = input_for("svm", 150.0);
+        let (als, c2, e2) = input_for("als", 150.0);
+        let t1 = FleetPlanInput {
+            name: "svm".into(),
+            profile: &svm,
+            cached_total_mb: c1,
+            exec_total_mb: e1,
+        };
+        let one = plan_fleet(&[t1], &InstanceCatalog::cloud(), &MachineSeconds, 16);
+        let t1 = FleetPlanInput {
+            name: "svm".into(),
+            profile: &svm,
+            cached_total_mb: c1,
+            exec_total_mb: e1,
+        };
+        let t2 = FleetPlanInput {
+            name: "als".into(),
+            profile: &als,
+            cached_total_mb: c2,
+            exec_total_mb: e2,
+        };
+        let two = plan_fleet(&[t1, t2], &InstanceCatalog::cloud(), &MachineSeconds, 16);
+        for inst in InstanceCatalog::cloud().instances.iter().map(|i| i.name.as_str()) {
+            if let (Some(a), Some(b)) =
+                (one.min_eviction_free_machines(inst), two.min_eviction_free_machines(inst))
+            {
+                assert!(b >= a, "{inst}: adding a tenant shrank the floor {a} -> {b}");
+            }
+        }
+        // at this scale the pair still fits somewhere, and sharing one
+        // fleet costs at least as much as running the first tenant alone
+        let best_two = two.best().unwrap();
+        assert!(best_two.candidate.eviction_free);
+        assert!(
+            best_two.candidate.predicted_cost >= one.best().unwrap().candidate.predicted_cost
+        );
+    }
+
+    #[test]
+    fn fleet_ranked_prefers_cheap_eviction_free_and_sums_tenant_times() {
+        let (svm, c1, e1) = input_for("svm", 150.0);
+        let (als, c2, e2) = input_for("als", 150.0);
+        let (km, c3, e3) = input_for("km", 150.0);
+        let tenants = vec![
+            FleetPlanInput {
+                name: "svm".into(),
+                profile: &svm,
+                cached_total_mb: c1,
+                exec_total_mb: e1,
+            },
+            FleetPlanInput {
+                name: "als".into(),
+                profile: &als,
+                cached_total_mb: c2,
+                exec_total_mb: e2,
+            },
+            FleetPlanInput {
+                name: "km".into(),
+                profile: &km,
+                cached_total_mb: c3,
+                exec_total_mb: e3,
+            },
+        ];
+        let fp = plan_fleet(&tenants, &InstanceCatalog::cloud(), &PerInstanceHour::hourly(), 16);
+        assert_eq!(fp.ranked.len(), InstanceCatalog::cloud().instances.len());
+        let mut seen_saturated = false;
+        let mut last = f64::NEG_INFINITY;
+        for p in &fp.ranked {
+            if p.candidate.eviction_free {
+                assert!(!seen_saturated, "free pick after saturated one");
+                assert!(p.candidate.predicted_cost >= last);
+                last = p.candidate.predicted_cost;
+            } else {
+                seen_saturated = true;
+            }
+            assert_eq!(p.candidate.per_tenant_time_s.len(), 3);
+            let sum: f64 = p.candidate.per_tenant_time_s.iter().sum();
+            assert_eq!(sum, p.candidate.predicted_time_s, "serialized makespan is the sum");
+        }
+    }
+
+    #[test]
+    fn empty_tenant_list_yields_an_empty_fleet_plan() {
+        let fp = plan_fleet(&[], &InstanceCatalog::cloud(), &MachineSeconds, 8);
+        assert!(fp.ranked.is_empty() && fp.grid.is_empty() && fp.tenants.is_empty());
+        assert!(fp.best().is_none());
     }
 }

@@ -10,11 +10,13 @@
 use std::fmt::Write as _;
 
 use super::adaptive::{AdaptOutcome, ReplanDecision};
-use super::planner::{CandidateConfig, Plan, RiskAdjustedPick, TypePick};
+use super::planner::{
+    CandidateConfig, FleetCandidate, FleetPick, FleetPlan, Plan, RiskAdjustedPick, TypePick,
+};
 use super::selector::Selection;
 use super::session::TrainedProfile;
 use super::Recommendation;
-use crate::sim::MachineSpec;
+use crate::sim::{MachineSpec, TenantRunStats};
 use crate::util::json::Json;
 use crate::util::units::{fmt_mb, fmt_mb_signed, fmt_pct, fmt_secs};
 
@@ -1038,6 +1040,255 @@ impl Report for ServeReport {
 }
 
 // ======================================================================
+// blink fleet
+// ======================================================================
+
+pub fn fleet_candidate_json(c: &FleetCandidate) -> Json {
+    Json::obj(vec![
+        ("instance", c.instance.as_str().into()),
+        ("machines", c.machines.into()),
+        ("storage_fraction", c.storage_fraction.into()),
+        ("eviction_free", c.eviction_free.into()),
+        ("headroom_mb", c.headroom_mb.into()),
+        ("predicted_time_s", c.predicted_time_s.into()),
+        ("predicted_cost", c.predicted_cost.into()),
+        (
+            "per_tenant_time_s",
+            Json::Arr(c.per_tenant_time_s.iter().map(|&t| t.into()).collect()),
+        ),
+    ])
+}
+
+pub fn fleet_pick_json(p: &FleetPick) -> Json {
+    Json::obj(vec![
+        ("candidate", fleet_candidate_json(&p.candidate)),
+        ("selection", selection_json(&p.selection)),
+    ])
+}
+
+pub fn fleet_plan_json(p: &FleetPlan) -> Json {
+    Json::obj(vec![
+        ("tenants", Json::Arr(p.tenants.iter().map(|t| t.as_str().into()).collect())),
+        ("ranked", Json::Arr(p.ranked.iter().map(fleet_pick_json).collect())),
+        ("best", p.best().map_or(Json::Null, fleet_pick_json)),
+        ("grid", Json::Arr(p.grid.iter().map(fleet_candidate_json).collect())),
+    ])
+}
+
+/// One tenant's sampled predictions feeding the fleet plan.
+#[derive(Debug, Clone)]
+pub struct FleetTenantRow {
+    pub name: String,
+    pub predicted_cached_mb: f64,
+    pub predicted_exec_mb: f64,
+    pub sample_cost_machine_s: f64,
+}
+
+/// The interleaved engine run at the plan's best pick: the realized
+/// shared-fleet outcome `plan_fleet` only predicted.
+#[derive(Debug, Clone)]
+pub struct FleetRealized {
+    pub instance: String,
+    pub machines: usize,
+    pub seed: u64,
+    /// Fleet makespan (the last tenant's finish).
+    pub duration_s: f64,
+    pub realized_cost: f64,
+    /// Order-sensitive digest of the whole run (the `check_fleet`
+    /// determinism handle) — JSON only, too long for the text table.
+    pub fingerprint: String,
+    pub tenants: Vec<TenantRunStats>,
+}
+
+/// `blink fleet`: N concurrent tenants planned onto one shared fleet
+/// (the §5.4 bound over summed working sets), then realized by the
+/// interleaved engine at the best pick.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub backend: String,
+    pub scale: f64,
+    pub catalog_name: String,
+    pub catalog_types: usize,
+    pub pricing: String,
+    pub fairness: String,
+    pub scenario: String,
+    pub rows: Vec<FleetTenantRow>,
+    pub plan: FleetPlan,
+    pub realized: Option<FleetRealized>,
+}
+
+impl Report for FleetReport {
+    fn render_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "FLEET — {} tenants at scale {:.0}, catalog '{}' ({} types), pricing '{}', fairness '{}', scenario '{}'",
+            self.rows.len(),
+            self.scale,
+            self.catalog_name,
+            self.catalog_types,
+            self.pricing,
+            self.fairness,
+            self.scenario,
+        );
+        let _ = writeln!(out, "fit backend: {}", self.backend);
+        let _ = writeln!(
+            out,
+            "{:<22} {:>10} {:>10} {:>10}",
+            "tenant", "cached", "exec", "sampling"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{:<22} {:>10} {:>10} {:>10}",
+                r.name,
+                fmt_mb(r.predicted_cached_mb),
+                fmt_mb(r.predicted_exec_mb),
+                fmt_secs(r.sample_cost_machine_s),
+            );
+        }
+        let _ = writeln!(out, "shared plan (summed working sets, serialized runtimes):");
+        let _ = writeln!(
+            out,
+            "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12} {:>14} {:>6}",
+            "rank", "instance", "n", "min", "max", "time", "cost", "headroom", "free"
+        );
+        for (i, pick) in self.plan.ranked.iter().enumerate() {
+            let c = &pick.candidate;
+            let s = &pick.selection;
+            let headroom = if s.saturated {
+                format!("-{} !", fmt_mb(s.cache_deficit_mb()))
+            } else {
+                fmt_mb_signed(c.headroom_mb)
+            };
+            let _ = writeln!(
+                out,
+                "{:>4} {:<12} {:>4} {:>4}..{:<4} {:>10} {:>12.2} {:>14} {:>6}",
+                i + 1,
+                c.instance,
+                c.machines,
+                s.machines_min,
+                s.machines_max,
+                fmt_secs(c.predicted_time_s),
+                c.predicted_cost,
+                headroom,
+                if c.eviction_free { "yes" } else { "NO" },
+            );
+        }
+        if let Some(best) = self.plan.best() {
+            let _ = writeln!(
+                out,
+                "-> recommend {} x{} ({}, cost {:.2}){}",
+                best.candidate.instance,
+                best.candidate.machines,
+                fmt_secs(best.candidate.predicted_time_s),
+                best.candidate.predicted_cost,
+                if best.candidate.eviction_free {
+                    ""
+                } else {
+                    "  — WARNING: no eviction-free count within the bracket; tenants will evict"
+                }
+            );
+        }
+        if let Some(r) = &self.realized {
+            let _ = writeln!(
+                out,
+                "realized run (seed {}): {} x{} — makespan {}, cost {:.4}",
+                r.seed,
+                r.instance,
+                r.machines,
+                fmt_secs(r.duration_s),
+                r.realized_cost,
+            );
+            let _ = writeln!(
+                out,
+                "  {:<22} {:>5} {:>6} {:>10} {:>10} {:>7}",
+                "tenant", "jobs", "evict", "lost", "finish", "cached"
+            );
+            for t in &r.tenants {
+                let _ = writeln!(
+                    out,
+                    "  {:<22} {:>5} {:>6} {:>10} {:>10} {:>7}",
+                    t.name,
+                    t.jobs,
+                    t.evictions,
+                    fmt_mb(t.cached_mb_lost),
+                    fmt_secs(t.finish_s),
+                    fmt_pct(t.cached_fraction_after_load),
+                );
+            }
+        }
+        finish(out)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("query", "fleet".into()),
+            ("backend", self.backend.as_str().into()),
+            ("scale", self.scale.into()),
+            ("catalog", self.catalog_name.as_str().into()),
+            ("catalog_types", self.catalog_types.into()),
+            ("pricing", self.pricing.as_str().into()),
+            ("fairness", self.fairness.as_str().into()),
+            ("scenario", self.scenario.as_str().into()),
+            (
+                "tenants",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", r.name.as_str().into()),
+                                ("predicted_cached_mb", r.predicted_cached_mb.into()),
+                                ("predicted_exec_mb", r.predicted_exec_mb.into()),
+                                ("sample_cost_machine_s", r.sample_cost_machine_s.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("plan", fleet_plan_json(&self.plan)),
+            (
+                "realized",
+                self.realized.as_ref().map_or(Json::Null, |r| {
+                    Json::obj(vec![
+                        ("instance", r.instance.as_str().into()),
+                        ("machines", r.machines.into()),
+                        // string: u64 seeds above 2^53 would round as
+                        // JSON numbers
+                        ("seed", r.seed.to_string().into()),
+                        ("duration_s", r.duration_s.into()),
+                        ("realized_cost", r.realized_cost.into()),
+                        ("fingerprint", r.fingerprint.as_str().into()),
+                        (
+                            "tenants",
+                            Json::Arr(
+                                r.tenants
+                                    .iter()
+                                    .map(|t| {
+                                        Json::obj(vec![
+                                            ("name", t.name.as_str().into()),
+                                            ("jobs", t.jobs.into()),
+                                            ("evictions", t.evictions.into()),
+                                            ("cached_mb_lost", t.cached_mb_lost.into()),
+                                            ("finish_s", t.finish_s.into()),
+                                            (
+                                                "cached_fraction_after_load",
+                                                t.cached_fraction_after_load.into(),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                }),
+            ),
+        ])
+    }
+}
+
+// ======================================================================
 // blink adapt
 // ======================================================================
 
@@ -1065,6 +1316,7 @@ fn replan_json(d: &ReplanDecision) -> Json {
         ("deficit_mb", d.deficit_mb.into()),
         ("replanned_machines", d.replanned_machines.into()),
         ("add_machines", d.add_machines.into()),
+        ("remove_machines", d.remove_machines.into()),
     ])
 }
 
@@ -1094,15 +1346,23 @@ impl Report for AdaptReport {
         );
         match &o.decision {
             Some(d) => {
+                // a deficit scales out (+n), a surplus scales in (-n);
+                // a decision with neither arm is advisory only
+                let arm = if d.add_machines > 0 {
+                    format!("+{}", d.add_machines)
+                } else if d.remove_machines > 0 {
+                    format!("-{}", d.remove_machines)
+                } else {
+                    "advisory".to_string()
+                };
                 let _ = writeln!(
                     out,
-                    "replan @ job {} (t={}): divergence {}, deficit {} -> {} machines (+{})",
+                    "replan @ job {} (t={}): divergence {}, deficit {} -> {} machines ({arm})",
                     d.job,
                     fmt_secs(d.at_s),
                     fmt_pct(d.divergence),
                     fmt_mb_signed(d.deficit_mb),
                     d.replanned_machines,
-                    d.add_machines,
                 );
             }
             None => {
@@ -1123,7 +1383,11 @@ impl Report for AdaptReport {
                 o.adaptive_cost,
                 (o.adaptive_cost / o.static_cost.max(1e-12) - 1.0) * 100.0,
             );
-        } else if o.decision.as_ref().is_some_and(|d| d.add_machines > 0) {
+        } else if o
+            .decision
+            .as_ref()
+            .is_some_and(|d| d.add_machines > 0 || d.remove_machines > 0)
+        {
             let _ = writeln!(out, "-> corrective run cost more; static pick kept");
         } else {
             let _ = writeln!(out, "-> static pick kept");
@@ -1236,6 +1500,7 @@ mod tests {
                     deficit_mb: 80.0,
                     replanned_machines: 5,
                     add_machines: 2,
+                    remove_machines: 0,
                 }),
                 adopted: true,
                 static_time_s: 50.0,
@@ -1262,6 +1527,109 @@ mod tests {
         assert!(text.contains("static pick kept"), "{text}");
         let j = crate::util::json::parse(&report.to_json().to_string()).unwrap();
         assert_eq!(j.get("replan"), Some(&Json::Null));
+        // the surplus arm renders a retirement and encodes remove_machines
+        report.outcome.decision = Some(ReplanDecision {
+            job: 2,
+            at_s: 20.0,
+            predicted_mb: 300.0,
+            refit_mb: 90.0,
+            divergence: 0.7,
+            deficit_mb: -60.0,
+            replanned_machines: 1,
+            add_machines: 0,
+            remove_machines: 2,
+        });
+        let text = report.render_text();
+        assert!(text.contains("-> 1 machines (-2)"), "{text}");
+        assert!(text.contains("corrective run cost more"), "{text}");
+        let j = crate::util::json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(
+            j.path(&["replan"]).unwrap().get("remove_machines").and_then(Json::as_f64),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn fleet_report_renders_and_roundtrips_json() {
+        let candidate = FleetCandidate {
+            instance: "i5-worker".into(),
+            machines: 7,
+            storage_fraction: 0.5,
+            eviction_free: true,
+            headroom_mb: 120.0,
+            predicted_time_s: 900.0,
+            predicted_cost: 63.0,
+            per_tenant_time_s: vec![400.0, 300.0, 200.0],
+        };
+        let pick = FleetPick {
+            candidate: candidate.clone(),
+            selection: Selection {
+                machines: 7,
+                machines_min: 7,
+                machines_max: 12,
+                machine_exec_mb: 500.0,
+                headroom_mb: 120.0,
+                saturated: false,
+            },
+        };
+        let report = FleetReport {
+            backend: "rust-nnls".into(),
+            scale: 1000.0,
+            catalog_name: "paper".into(),
+            catalog_types: 1,
+            pricing: "machine-seconds".into(),
+            fairness: "shared-lru".into(),
+            scenario: "none".into(),
+            rows: vec![FleetTenantRow {
+                name: "svm".into(),
+                predicted_cached_mb: 9000.0,
+                predicted_exec_mb: 800.0,
+                sample_cost_machine_s: 12.0,
+            }],
+            plan: FleetPlan {
+                tenants: vec!["svm".into(), "km".into(), "lr".into()],
+                ranked: vec![pick],
+                grid: vec![candidate],
+            },
+            realized: Some(FleetRealized {
+                instance: "i5-worker".into(),
+                machines: 7,
+                seed: u64::MAX, // must survive JSON (encoded as string)
+                duration_s: 910.0,
+                realized_cost: 63.7,
+                fingerprint: "svm|6|0|0|0|0|deadbeef#".into(),
+                tenants: vec![TenantRunStats {
+                    name: "svm".into(),
+                    jobs: 6,
+                    evictions: 0,
+                    cached_mb_lost: 0.0,
+                    finish_s: 910.0,
+                    cached_fraction_after_load: 1.0,
+                }],
+            }),
+        };
+        let text = report.render_text();
+        assert!(text.contains("FLEET — 1 tenants"), "{text}");
+        assert!(text.contains("-> recommend i5-worker x7"), "{text}");
+        assert!(text.contains("realized run (seed"), "{text}");
+        let j = crate::util::json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(j.get("query").and_then(Json::as_str), Some("fleet"));
+        assert_eq!(j.get("fairness").and_then(Json::as_str), Some("shared-lru"));
+        assert_eq!(
+            j.path(&["realized"]).unwrap().get("seed").and_then(Json::as_str),
+            Some(u64::MAX.to_string().as_str())
+        );
+        assert_eq!(
+            j.path(&["plan", "best", "candidate"]).unwrap().get("machines").and_then(Json::as_f64),
+            Some(7.0)
+        );
+        // the plan-only shape (no realized run) encodes null
+        let mut report = report;
+        report.realized = None;
+        let text = report.render_text();
+        assert!(!text.contains("realized run"), "{text}");
+        let j = crate::util::json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(j.get("realized"), Some(&Json::Null));
     }
 
     #[test]

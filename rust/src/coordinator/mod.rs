@@ -12,17 +12,24 @@
 use anyhow::{anyhow, Result};
 
 use crate::blink::report::{
-    AdaptReport, AppRow, AppsReport, BoundsReport, PlanReport, RecommendReport, RiskSection,
-    RunReport, RunStats, ServeReport, SimulateReport, SynthReport, SynthRow,
+    AdaptReport, AppRow, AppsReport, BoundsReport, FleetRealized, FleetReport, FleetTenantRow,
+    PlanReport, RecommendReport, RiskSection, RunReport, RunStats, ServeReport, SimulateReport,
+    SynthReport, SynthRow,
 };
-use crate::blink::{adaptive, store, Advisor, OutputFormat, Report, RustFit, ValidationSpec};
+use crate::blink::{
+    adaptive, plan_fleet, store, Advisor, FleetPlanInput, OutputFormat, Report, RustFit,
+    ValidationSpec,
+};
 use crate::cost::{pricing_by_name, pricing_names};
 use crate::experiments::{self, report};
 use crate::hdfs::Sampler;
 use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
 use crate::runtime::{artifacts_available, PjrtFit, Runtime};
-use crate::sim::{engine, scenario, FleetSpec, InstanceCatalog, MachineSpec, SimOptions};
+use crate::sim::{
+    engine, scenario, FleetFairness, FleetSpec, InstanceCatalog, MachineSpec, SimOptions,
+    TenantSpec,
+};
 use crate::testkit;
 use crate::util::json::Json;
 use crate::workloads::{all_apps, app_by_name, AppModel, SynthConfig};
@@ -492,6 +499,142 @@ pub fn cmd_adapt(q: &AdaptQuery<'_>, format: OutputFormat) -> Result<AdaptReport
     Ok(report)
 }
 
+/// Parsed-name inputs of `blink fleet`.
+pub struct FleetQuery<'a> {
+    /// Comma-separated tenant list: registered app names or
+    /// `synth:<preset>:<seed>` generator specs.
+    pub apps: &'a str,
+    pub scale: f64,
+    pub catalog: &'a str,
+    pub pricing: &'a str,
+    pub max_machines: usize,
+    /// Shared-store arbitration: `shared-lru` or `reservation-floors`.
+    pub fairness: &'a str,
+    pub scenario: &'a str,
+    pub seed: u64,
+}
+
+fn lookup_fairness(name: &str) -> Result<FleetFairness> {
+    match name {
+        "shared-lru" => Ok(FleetFairness::SharedLru),
+        "reservation-floors" => Ok(FleetFairness::ReservationFloors),
+        _ => Err(anyhow!(
+            "unknown fairness '{name}' (choose from shared-lru reservation-floors)"
+        )),
+    }
+}
+
+/// `blink fleet`: plan N concurrent tenants onto one shared fleet — the
+/// §5.4 bound extended with summed working sets ([`plan_fleet`]) — then
+/// realize the best pick with the interleaved engine
+/// ([`engine::run_fleet`]) under the requested fairness knob and
+/// disturbance scenario. One sampling phase per tenant; the realized
+/// section prices the shared timeline once for everyone.
+pub fn cmd_fleet(q: &FleetQuery<'_>, format: OutputFormat) -> Result<FleetReport> {
+    let names: Vec<&str> = q.apps.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if names.is_empty() {
+        return Err(anyhow!("--apps needs at least one tenant (comma-separated)"));
+    }
+    let catalog = lookup_catalog(q.catalog)?;
+    let pricing = lookup_pricing(q.pricing)?;
+    let fairness = lookup_fairness(q.fairness)?;
+    let scenario = lookup_scenario(q.scenario)?;
+    if q.max_machines == 0 {
+        return Err(anyhow!("--max-machines must be at least 1"));
+    }
+    if !q.scale.is_finite() || q.scale <= 0.0 {
+        return Err(anyhow!("--scale must be a positive finite number"));
+    }
+    let mut models = Vec::with_capacity(names.len());
+    for name in &names {
+        models.push(store::resolve_app(name).ok_or_else(|| {
+            anyhow!("unknown app '{name}' (registered app or synth:<preset>:<seed>)")
+        })?);
+    }
+    let mut backend = Backend::auto();
+    let backend_name = backend.name();
+    let report = backend.with_advisor_built(
+        Advisor::builder().max_machines(q.max_machines),
+        |advisor| -> Result<FleetReport> {
+            let trained: Vec<_> = models.iter().map(|m| advisor.profile(m)).collect();
+            let workloads: Vec<_> = models.iter().map(|m| m.profile(q.scale)).collect();
+            let inputs: Vec<FleetPlanInput<'_>> = models
+                .iter()
+                .zip(&trained)
+                .zip(&workloads)
+                .map(|((m, t), w)| FleetPlanInput {
+                    name: m.name.clone(),
+                    profile: w,
+                    cached_total_mb: t.predicted_cached_mb(q.scale),
+                    exec_total_mb: t.predicted_exec_mb(q.scale),
+                })
+                .collect();
+            let plan = plan_fleet(&inputs, &catalog, pricing.as_ref(), q.max_machines);
+            let realized = match plan.best() {
+                Some(best) => {
+                    let instance = catalog
+                        .get(&best.candidate.instance)
+                        .expect("plan candidates come from the catalog")
+                        .clone();
+                    let fleet = FleetSpec::homogeneous(instance.clone(), best.candidate.machines)
+                        .map_err(|e| anyhow!("invalid fleet: {e}"))?;
+                    let tenants: Vec<TenantSpec> = models
+                        .iter()
+                        .zip(&workloads)
+                        .map(|(m, w)| TenantSpec { name: m.name.clone(), profile: w.clone() })
+                        .collect();
+                    let res = engine::run_fleet(
+                        &tenants,
+                        &fleet,
+                        scenario.as_ref(),
+                        fairness,
+                        SimOptions {
+                            policy: EvictionPolicy::Lru,
+                            seed: q.seed,
+                            compute: None,
+                            detailed_log: false,
+                        },
+                    )
+                    .map_err(|e| anyhow!("fleet run failed: {e}"))?;
+                    Some(FleetRealized {
+                        instance: instance.name.to_string(),
+                        machines: best.candidate.machines,
+                        seed: q.seed,
+                        duration_s: res.duration_s,
+                        realized_cost: pricing.price_timeline(&res.timeline),
+                        fingerprint: res.fingerprint(),
+                        tenants: res.tenants,
+                    })
+                }
+                None => None,
+            };
+            Ok(FleetReport {
+                backend: backend_name.to_string(),
+                scale: q.scale,
+                catalog_name: catalog.name.to_string(),
+                catalog_types: catalog.instances.len(),
+                pricing: pricing.name().to_string(),
+                fairness: q.fairness.to_string(),
+                scenario: scenario.name().to_string(),
+                rows: models
+                    .iter()
+                    .zip(&trained)
+                    .map(|(m, t)| FleetTenantRow {
+                        name: m.name.clone(),
+                        predicted_cached_mb: t.predicted_cached_mb(q.scale),
+                        predicted_exec_mb: t.predicted_exec_mb(q.scale),
+                        sample_cost_machine_s: t.sample_cost_machine_s,
+                    })
+                    .collect(),
+                plan,
+                realized,
+            })
+        },
+    )?;
+    println!("{}", report.render(format));
+    Ok(report)
+}
+
 /// Parsed-name inputs of `blink serve`.
 pub struct ServeQuery<'a> {
     /// Path to the JSONL query file (one `util::json` doc per line).
@@ -794,6 +937,39 @@ mod tests {
         let mut query = q("svm", "cloud", "hourly", 12, "none");
         query.scale = -1.0;
         assert!(cmd_adapt(&query, F).is_err());
+    }
+
+    #[test]
+    fn fleet_rejects_bad_inputs() {
+        let q = |apps, catalog, pricing, max_machines, fairness, scenario| FleetQuery {
+            apps,
+            scale: 100.0,
+            catalog,
+            pricing,
+            max_machines,
+            fairness,
+            scenario,
+            seed: 1,
+        };
+        let base =
+            |apps| q(apps, "paper", "machine-seconds", 12, "shared-lru", "none");
+        assert!(cmd_fleet(&base(""), F).is_err());
+        assert!(cmd_fleet(&base(" , ,"), F).is_err());
+        assert!(cmd_fleet(&base("svm,nope"), F).is_err());
+        assert!(cmd_fleet(&base("svm,synth:meteor:1"), F).is_err());
+        assert!(cmd_fleet(&q("svm,km", "bogus-catalog", "machine-seconds", 12, "shared-lru", "none"), F).is_err());
+        assert!(cmd_fleet(&q("svm,km", "paper", "free-lunch", 12, "shared-lru", "none"), F).is_err());
+        assert!(cmd_fleet(&q("svm,km", "paper", "machine-seconds", 0, "shared-lru", "none"), F).is_err());
+        assert!(cmd_fleet(&q("svm,km", "paper", "machine-seconds", 12, "communism", "none"), F).is_err());
+        assert!(cmd_fleet(&q("svm,km", "paper", "machine-seconds", 12, "shared-lru", "meteor"), F).is_err());
+        let mut query = base("svm,km");
+        query.scale = -1.0;
+        assert!(cmd_fleet(&query, F).is_err());
+        // the fairness error lists both knobs
+        let err = cmd_fleet(&q("svm", "paper", "machine-seconds", 12, "communism", "none"), F)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shared-lru") && err.contains("reservation-floors"), "{err}");
     }
 
     #[test]

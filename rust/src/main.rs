@@ -10,6 +10,7 @@
 //! blink advise      --app als --catalog cloud     # fleet-aware (type x count) plan
 //! blink simulate    --app svm --scenario spot     # engine run under a disturbance
 //! blink adapt       --app svm --scale 1000        # observe, refit and re-plan mid-run
+//! blink fleet       --apps svm,km,lr              # plan + run N tenants on one shared fleet
 //! blink run         --app km  --scale 2000        # recommend + actual run
 //! blink bounds      --app lr  --machines 12       # Table-2 max data scale
 //! blink experiment  --id table1                   # regenerate a paper table/figure
@@ -19,7 +20,7 @@
 //! ```
 
 use blink::blink::OutputFormat;
-use blink::coordinator::{self, AdaptQuery, ServeQuery, SimulateQuery, SynthQuery};
+use blink::coordinator::{self, AdaptQuery, FleetQuery, ServeQuery, SimulateQuery, SynthQuery};
 use blink::util::cli::{App, CliError, Command, Matches, Opt};
 
 fn app() -> App {
@@ -55,7 +56,7 @@ fn app() -> App {
                     Opt::with_default("max-machines", "largest candidate cluster size", "12"),
                     Opt::with_default(
                         "scenario",
-                        "cross-validate top picks via engine runs (spot|straggler|failure|autoscale|deficit|none)",
+                        "cross-validate top picks via engine runs (spot|straggler|failure|autoscale|deficit|contention|none)",
                         "none",
                     ),
                     Opt::with_default(
@@ -75,7 +76,7 @@ fn app() -> App {
                     Opt::with_default("instance", "instance type name (e.g. i5-worker, gp.xlarge)", "gp.xlarge"),
                     Opt::with_default(
                         "scenario",
-                        "disturbance scenario (spot|straggler|failure|autoscale|deficit|none)",
+                        "disturbance scenario (spot|straggler|failure|autoscale|deficit|contention|none)",
                         "spot",
                     ),
                     Opt::with_default(
@@ -105,7 +106,7 @@ fn app() -> App {
                     Opt::with_default("max-machines", "largest candidate cluster size", "12"),
                     Opt::with_default(
                         "scenario",
-                        "base disturbance scenario (spot|straggler|failure|autoscale|deficit|none)",
+                        "base disturbance scenario (spot|straggler|failure|autoscale|deficit|contention|none)",
                         "none",
                     ),
                     Opt::with_default("seed", "simulation seed", "11"),
@@ -114,6 +115,40 @@ fn app() -> App {
                         "relative refit divergence that triggers a re-plan",
                         "0.5",
                     ),
+                ],
+            },
+            Command {
+                name: "fleet",
+                about: "plan N concurrent tenants onto one shared fleet, then realize the pick with the interleaved engine",
+                opts: vec![
+                    Opt::with_default(
+                        "apps",
+                        "comma-separated tenants (registered apps or synth:<preset>:<seed>)",
+                        "svm,km,lr",
+                    ),
+                    Opt::with_default("scale", "target data scale (1000 = 100 %)", "1000"),
+                    Opt::with_default(
+                        "catalog",
+                        "instance catalog (paper|cloud|all|generated:<seed>:<n>)",
+                        "cloud",
+                    ),
+                    Opt::with_default(
+                        "pricing",
+                        "pricing model (machine-seconds|hourly|per-second|spot)",
+                        "hourly",
+                    ),
+                    Opt::with_default("max-machines", "largest candidate fleet size", "16"),
+                    Opt::with_default(
+                        "fairness",
+                        "shared-store arbitration (shared-lru|reservation-floors)",
+                        "shared-lru",
+                    ),
+                    Opt::with_default(
+                        "scenario",
+                        "disturbance scenario (spot|straggler|failure|autoscale|deficit|contention|none)",
+                        "none",
+                    ),
+                    Opt::with_default("seed", "simulation seed", "1"),
                 ],
             },
             Command {
@@ -236,6 +271,20 @@ fn dispatch(cmd: &Command, m: &Matches, format: OutputFormat) -> anyhow::Result<
                 scenario: m.get("scenario").unwrap(),
                 seed: m.get_u64("seed").unwrap_or(11),
                 threshold: m.get_f64("threshold").unwrap_or(0.5),
+            },
+            format,
+        )
+        .map(|_| ()),
+        "fleet" => coordinator::cmd_fleet(
+            &FleetQuery {
+                apps: m.get("apps").unwrap(),
+                scale: m.get_f64("scale").unwrap_or(1000.0),
+                catalog: m.get("catalog").unwrap(),
+                pricing: m.get("pricing").unwrap(),
+                max_machines: m.get_usize("max-machines").unwrap_or(16),
+                fairness: m.get("fairness").unwrap(),
+                scenario: m.get("scenario").unwrap(),
+                seed: m.get_u64("seed").unwrap_or(1),
             },
             format,
         )

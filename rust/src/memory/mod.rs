@@ -58,6 +58,17 @@ pub struct MemoryStats {
     pub peak_cached_mb: Mb,
 }
 
+/// What one dataset lost when a machine's store was released wholesale
+/// ([`UnifiedMemory::release_all`]): the partitions and bytes that
+/// vanished with the machine. The fleet runner groups these by tenant to
+/// report cross-tenant cache loss instead of one undifferentiated total.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetLoss {
+    pub dataset: usize,
+    pub partitions: usize,
+    pub lost_mb: Mb,
+}
+
 /// One executor's unified memory region.
 #[derive(Debug, Clone)]
 pub struct UnifiedMemory {
@@ -114,16 +125,24 @@ impl UnifiedMemory {
     /// left the fleet (spot reclaim, failure). Unlike eviction this is not
     /// memory pressure — it bypasses the policy and the eviction stats/log
     /// (the engine reports the loss as a `MachineLost` event instead) and
-    /// returns the keys that vanished so the caller can invalidate
-    /// partition locations. Execution-memory accounting is untouched.
-    pub fn release_all(&mut self) -> Vec<PartitionKey> {
-        let keys: Vec<PartitionKey> = self.cached.keys().copied().collect();
+    /// returns per-dataset loss counts so the caller can invalidate
+    /// partition locations AND notify every tenant whose protected dataset
+    /// lost blocks (a bare key list silently under-reported cross-tenant
+    /// loss in the shared fleet store). Sorted by dataset id, so callers
+    /// can attribute losses deterministically. Execution-memory accounting
+    /// is untouched.
+    pub fn release_all(&mut self) -> Vec<DatasetLoss> {
+        let losses: Vec<DatasetLoss> = self
+            .per_dataset
+            .iter()
+            .map(|(&dataset, &(partitions, lost_mb))| DatasetLoss { dataset, partitions, lost_mb })
+            .collect();
         self.cached.clear();
         self.lru_index.clear();
         self.per_dataset.clear();
         self.cached_total_mb = 0.0;
         self.evicted_log.clear();
-        keys
+        losses
     }
 
     /// Storage space currently available for caching: execution may claim
@@ -150,9 +169,17 @@ impl UnifiedMemory {
         }
     }
 
-    /// Any evictable partition (outside `inserting`) present? O(#datasets).
-    fn has_victim(&self, inserting: usize) -> bool {
-        self.per_dataset.keys().any(|&d| d != inserting)
+    /// Any evictable partition (outside `inserting`, allowed by the
+    /// arbitration predicate) present? O(#datasets).
+    fn has_victim(&self, inserting: usize, evictable: &dyn Fn(usize) -> bool) -> bool {
+        self.per_dataset.keys().any(|&d| d != inserting && evictable(d))
+    }
+
+    /// Per-dataset (dataset, partitions, bytes) currently cached, in
+    /// dataset-id order. The fleet runner folds these by tenant stride to
+    /// arbitrate reservation floors across co-resident tenants.
+    pub fn dataset_usage(&self) -> impl Iterator<Item = (usize, usize, Mb)> + '_ {
+        self.per_dataset.iter().map(|(&d, &(n, mb))| (d, n, mb))
     }
 
     pub fn exec_used_mb(&self) -> Mb {
@@ -226,6 +253,25 @@ impl UnifiedMemory {
         ref_count: usize,
         ref_distance: usize,
     ) -> bool {
+        self.insert_guarded(key, size_mb, ref_count, ref_distance, &|_| true)
+    }
+
+    /// [`UnifiedMemory::insert`] with a per-dataset evictability predicate:
+    /// a victim is only considered when `evictable(victim.dataset)` holds.
+    /// This is the shared-store arbitration hook — under per-tenant
+    /// reservation floors the fleet runner passes a predicate that shields
+    /// datasets of tenants still at or below their floor, while the plain
+    /// `insert` path (always-true predicate) stays byte-identical to the
+    /// single-tenant behavior. If every foreign partition is shielded the
+    /// insert fails (counted in `failed_caches`) rather than stealing.
+    pub fn insert_guarded(
+        &mut self,
+        key: PartitionKey,
+        size_mb: Mb,
+        ref_count: usize,
+        ref_distance: usize,
+        evictable: &dyn Fn(usize) -> bool,
+    ) -> bool {
         self.clock += 1;
         let limit = self.storage_limit_mb();
         if size_mb > limit {
@@ -233,13 +279,13 @@ impl UnifiedMemory {
             self.stats.failed_caches += 1;
             return false;
         }
-        if self.cached_total_mb + size_mb > limit && !self.has_victim(key.dataset) {
+        if self.cached_total_mb + size_mb > limit && !self.has_victim(key.dataset, evictable) {
             // hot path: memory full of our own dataset -> cannot evict
             self.stats.failed_caches += 1;
             return false;
         }
         while self.cached_total_mb + size_mb > limit {
-            match self.pick_victim(key.dataset) {
+            match self.pick_victim(key.dataset, evictable) {
                 Some(victim) => {
                     self.remove_key(&victim);
                     self.stats.evictions += 1;
@@ -284,7 +330,7 @@ impl UnifiedMemory {
         let limit = self.storage_limit_mb();
         while self.cached_total_mb > limit {
             // under pressure any dataset is fair game
-            match self.pick_victim(usize::MAX) {
+            match self.pick_victim(usize::MAX, &|_| true) {
                 Some(v) => {
                     self.remove_key(&v);
                     self.stats.evictions += 1;
@@ -296,8 +342,13 @@ impl UnifiedMemory {
     }
 
     /// Choose a victim. Spark never evicts partitions of the dataset being
-    /// written (`inserting`), to avoid thrashing within one RDD.
-    fn pick_victim(&mut self, inserting: usize) -> Option<PartitionKey> {
+    /// written (`inserting`), to avoid thrashing within one RDD; datasets
+    /// the arbitration predicate shields are skipped the same way.
+    fn pick_victim(
+        &mut self,
+        inserting: usize,
+        evictable: &dyn Fn(usize) -> bool,
+    ) -> Option<PartitionKey> {
         match self.policy {
             // LRU: walk the recency index from the front, lazily repairing
             // stale entries and skipping (but keeping) entries of the
@@ -328,7 +379,9 @@ impl UnifiedMemory {
                             self.lru_index.remove(&(ts, key));
                             self.lru_index.insert((now, key));
                         }
-                        Some(_) if key.dataset != inserting => return Some(key),
+                        Some(_) if key.dataset != inserting && evictable(key.dataset) => {
+                            return Some(key)
+                        }
                         Some(_) => cursor = Some((ts, key)), // protected: skip
                     }
                 }
@@ -336,7 +389,7 @@ impl UnifiedMemory {
             EvictionPolicy::Lrc => self
                 .cached
                 .iter()
-                .filter(|(k, _)| k.dataset != inserting)
+                .filter(|(k, _)| k.dataset != inserting && evictable(k.dataset))
                 .min_by(|a, b| {
                     (a.1.ref_count, a.1.last_access).cmp(&(b.1.ref_count, b.1.last_access))
                 })
@@ -344,7 +397,7 @@ impl UnifiedMemory {
             EvictionPolicy::Mrd => self
                 .cached
                 .iter()
-                .filter(|(k, _)| k.dataset != inserting)
+                .filter(|(k, _)| k.dataset != inserting && evictable(k.dataset))
                 .max_by(|a, b| {
                     (a.1.ref_distance, std::cmp::Reverse(a.1.last_access))
                         .cmp(&(b.1.ref_distance, std::cmp::Reverse(b.1.last_access)))
@@ -461,19 +514,69 @@ mod tests {
         for i in 0..8 {
             assert!(m.insert(key(1, i), 10.0, 3, 1));
         }
-        m.claim_execution(30.0);
+        for i in 0..2 {
+            assert!(m.insert(key(4, i), 5.0, 3, 1));
+        }
+        // 90 MB cached: an execution claim of 10 leaves the limit at
+        // exactly the cached total, so nothing is evicted before the loss
+        m.claim_execution(10.0);
         let before = m.stats();
-        let mut keys = m.release_all();
-        keys.sort_unstable();
-        assert_eq!(keys, (0..8).map(|i| key(1, i)).collect::<Vec<_>>());
+        let losses = m.release_all();
+        // every tenant learns exactly what its protected dataset lost,
+        // attributed per dataset in id order — not one aggregate number
+        assert_eq!(
+            losses,
+            vec![
+                DatasetLoss { dataset: 1, partitions: 8, lost_mb: 80.0 },
+                DatasetLoss { dataset: 4, partitions: 2, lost_mb: 10.0 },
+            ]
+        );
         assert_eq!(m.num_cached(), 0);
         assert_eq!(m.cached_mb(), 0.0);
         assert_eq!(m.stats().evictions, before.evictions, "loss is not eviction");
-        assert_eq!(m.exec_used_mb(), 30.0, "execution accounting untouched");
+        assert_eq!(m.exec_used_mb(), 10.0, "execution accounting untouched");
         assert!(m.drain_evicted().is_empty(), "no stale eviction log entries");
+        // an already-empty store reports no losses
+        assert!(m.release_all().is_empty());
         // the store keeps working after a release
         assert!(m.insert(key(2, 0), 10.0, 3, 1));
         assert!(m.contains(key(2, 0)));
+    }
+
+    #[test]
+    fn guarded_insert_shields_datasets_the_predicate_protects() {
+        let mut m = UnifiedMemory::new(100.0, 50.0, EvictionPolicy::Lru);
+        for i in 0..5 {
+            assert!(m.insert(key(0, i), 10.0, 3, 1)); // tenant A, 50 MB
+        }
+        for i in 0..5 {
+            assert!(m.insert(key(1, i), 10.0, 3, 1)); // tenant B, 50 MB
+        }
+        // full store; dataset 0 is shielded -> the victim must come from
+        // dataset 1 even though dataset 0 holds the LRU-oldest partitions
+        assert!(m.insert_guarded(key(2, 0), 10.0, 3, 1, &|d| d != 0));
+        assert_eq!(m.num_cached(), 10);
+        assert!((0..5).all(|i| m.contains(key(0, i))), "shielded dataset intact");
+        assert!(!m.contains(key(1, 0)), "oldest unshielded partition evicted");
+        // when every foreign dataset is shielded the insert fails instead
+        // of stealing, and nothing is evicted
+        let before = m.stats();
+        assert!(!m.insert_guarded(key(3, 0), 10.0, 3, 1, &|_| false));
+        assert_eq!(m.stats().evictions, before.evictions);
+        assert_eq!(m.stats().failed_caches, before.failed_caches + 1);
+        // the always-true predicate is plain insert, byte for byte
+        assert!(m.insert_guarded(key(2, 1), 10.0, 3, 1, &|_| true));
+    }
+
+    #[test]
+    fn dataset_usage_reports_per_dataset_partitions_and_bytes() {
+        let mut m = UnifiedMemory::new(100.0, 50.0, EvictionPolicy::Lru);
+        for i in 0..3 {
+            m.insert(key(7, i), 10.0, 2, 1);
+        }
+        m.insert(key(2, 0), 5.0, 2, 1);
+        let usage: Vec<(usize, usize, Mb)> = m.dataset_usage().collect();
+        assert_eq!(usage, vec![(2, 1, 5.0), (7, 3, 30.0)], "dataset-id order");
     }
 
     #[test]

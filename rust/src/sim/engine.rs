@@ -83,6 +83,11 @@ pub struct MachineState {
     /// `slow_factor`× slower.
     slow_from: f64,
     slow_until: f64,
+    /// Standing cross-job execution pressure (MB) claimed by co-resident
+    /// tenants ([`DisturbanceKind::Pressure`]): added to every execution
+    /// claim from the disturbance on. 0 for every other scenario, which
+    /// keeps their claims byte-identical to the pre-contention engine.
+    pressure_mb: Mb,
 }
 
 impl MachineState {
@@ -116,6 +121,7 @@ impl MachineState {
             slow_factor: 1.0,
             slow_from: f64::INFINITY,
             slow_until: f64::NEG_INFINITY,
+            pressure_mb: 0.0,
         }
     }
 }
@@ -551,6 +557,7 @@ fn apply_item(
     item: QueueItem,
     machines: &mut Vec<MachineState>,
     groups: &mut Vec<InstanceType>,
+    profile: &WorkloadProfile,
     location: &mut [Vec<Option<usize>>],
     journal: &mut Vec<JournalEntry>,
     pending: &mut VecDeque<usize>,
@@ -616,13 +623,37 @@ fn apply_item(
             }
             true
         }
+        QueuedKind::Disturb(DisturbanceKind::Pressure { machine, claim_mb }) => {
+            match machines.get_mut(machine) {
+                Some(m) if m.alive && claim_mb > 0.0 => {
+                    m.pressure_mb = claim_mb;
+                    // the squeeze takes effect immediately: re-claim the
+                    // current execution share plus the co-tenant pressure,
+                    // evicting whatever no longer fits the shrunk storage
+                    // region (journaled so a later rewind stays coherent)
+                    m.mem.claim_execution(exec_pm + claim_mb);
+                    for key in m.mem.drain_evicted() {
+                        m.evictions += 1;
+                        journal.push(JournalEntry::Marker(Event::Eviction { machine }));
+                        mark_evicted(location, profile, key);
+                    }
+                    // even with nothing evicted the claim shifts every
+                    // later task's cache admission, so this always counts
+                    // as a state change
+                    true
+                }
+                _ => false,
+            }
+        }
         QueuedKind::Rejoin { machine } => {
             let m = &mut machines[machine];
             m.alive = true;
             m.up_from_s = join_s;
             m.mem = UnifiedMemory::new(m.spec.unified_mb(), m.spec.storage_floor_mb(), policy);
-            if exec_pm > 0.0 {
-                m.mem.claim_execution(exec_pm);
+            if exec_pm + m.pressure_mb > 0.0 {
+                // a restarted machine rejoins into the same contention
+                // environment it left: the co-tenant pressure persists
+                m.mem.claim_execution(exec_pm + m.pressure_mb);
             }
             for s in &mut m.slots {
                 *s = join_s;
@@ -747,6 +778,7 @@ pub fn run(
                                     item,
                                     &mut machines,
                                     &mut groups,
+                                    profile,
                                     &mut location,
                                     &mut journal,
                                     &mut pending,
@@ -772,6 +804,7 @@ pub fn run(
                             item,
                             &mut machines,
                             &mut groups,
+                            profile,
                             &mut location,
                             &mut journal,
                             &mut pending,
@@ -849,6 +882,7 @@ pub fn run(
                     item,
                     &mut machines,
                     &mut groups,
+                    profile,
                     &mut location,
                     &mut journal,
                     &mut pending,
@@ -906,6 +940,7 @@ pub fn run(
                 item,
                 &mut machines,
                 &mut groups,
+                profile,
                 &mut location,
                 &mut journal,
                 &mut pending,
@@ -938,6 +973,7 @@ pub fn run(
                 item,
                 &mut machines,
                 &mut groups,
+                profile,
                 &mut location,
                 &mut journal,
                 &mut pending,
@@ -953,12 +989,15 @@ pub fn run(
 
         // Execution memory is claimed at the start of each action; with a
         // thin margin this is what evicts over-cached machines (Fig. 11).
+        // Co-tenant pressure (the contention scenario) rides on top of the
+        // job's own share — zero everywhere else, so undisturbed claims
+        // are bit-identical to the pre-contention engine.
         exec_pm = profile.exec_mem_total_mb / alive_n as f64;
         for (mi, m) in machines.iter_mut().enumerate() {
             if !m.alive {
                 continue;
             }
-            m.mem.claim_execution(exec_pm);
+            m.mem.claim_execution(exec_pm + m.pressure_mb);
             for key in m.mem.drain_evicted() {
                 m.evictions += 1;
                 log.push(Event::Eviction { machine: mi });
@@ -986,6 +1025,7 @@ pub fn run(
                                             item,
                                             &mut machines,
                                             &mut groups,
+                                            profile,
                                             &mut location,
                                             &mut journal,
                                             &mut pending,
@@ -1014,6 +1054,7 @@ pub fn run(
                             item,
                             &mut machines,
                             &mut groups,
+                            profile,
                             &mut location,
                             &mut journal,
                             &mut pending,
@@ -1103,6 +1144,7 @@ pub fn run(
                     item,
                     &mut machines,
                     &mut groups,
+                    profile,
                     &mut location,
                     &mut journal,
                     &mut pending,
@@ -1173,6 +1215,710 @@ pub fn run(
         cached_fraction_after_load,
     };
     Ok(EngineResult { sim, timeline, observations })
+}
+
+// ---------------------------------------------------------------------
+// multi-tenant fleet runs
+// ---------------------------------------------------------------------
+
+/// Dataset-id stride separating tenants in the shared store. Tenant `t`'s
+/// local dataset `d` lives under global id `t * TENANT_STRIDE + d`, so one
+/// [`UnifiedMemory`] per machine arbitrates every tenant's blocks while
+/// ownership stays decodable from the key alone (`id / TENANT_STRIDE`).
+/// Per-tenant event logs always use *local* ids — each log is the same
+/// self-contained listener trace a single-tenant run emits.
+const TENANT_STRIDE: usize = 1 << 24;
+
+/// One application sharing the fleet: a display name plus its workload.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub profile: WorkloadProfile,
+}
+
+/// How the shared store arbitrates across tenants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetFairness {
+    /// One global LRU order: any tenant's insert may evict any other
+    /// tenant's coldest block (the Spark default on a shared cluster).
+    SharedLru,
+    /// Each of the N tenants is guaranteed `R / N` of every machine's
+    /// protected storage floor: a foreign insert may only evict a
+    /// tenant's blocks while that tenant holds *more* than its floor.
+    /// A tenant's own inserts still displace its own older blocks.
+    ReservationFloors,
+}
+
+/// Per-tenant outcome of a fleet run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantRunStats {
+    pub name: String,
+    /// Jobs completed (materialization + iterations).
+    pub jobs: usize,
+    /// Cache evictions charged to this tenant's blocks (whoever's insert
+    /// or claim triggered them).
+    pub evictions: usize,
+    /// This tenant's cached MB dropped by machine losses.
+    pub cached_mb_lost: Mb,
+    /// Barrier time of the tenant's last job (its makespan on the shared
+    /// fleet, including time spent waiting behind co-tenants).
+    pub finish_s: f64,
+    /// Fraction of dataset-0 partitions resident after the tenant's
+    /// materialization job — the same Fig. 5 metric the single-tenant
+    /// [`SimResult`] reports.
+    pub cached_fraction_after_load: f64,
+}
+
+/// Outcome of [`run_fleet`]: one listener log per tenant (local dataset
+/// ids, self-contained), per-tenant stats, and the shared realized
+/// timeline the cost layer prices once for everyone.
+pub struct FleetRunResult {
+    pub logs: Vec<EventLog>,
+    pub tenants: Vec<TenantRunStats>,
+    pub timeline: FleetTimeline,
+    /// Fleet makespan (the last tenant's finish).
+    pub duration_s: f64,
+}
+
+impl FleetRunResult {
+    /// Order-sensitive digest of the whole run: FNV-1a over every
+    /// tenant's log bytes plus its stats (f64s by bit pattern) plus the
+    /// timeline shape. Two runs agree byte-for-byte iff their
+    /// fingerprints match — what the `check_fleet` thread-matrix
+    /// invariant compares.
+    pub fn fingerprint(&self) -> String {
+        fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+            h
+        }
+        use std::fmt::Write;
+        let mut s = String::new();
+        for (log, t) in self.logs.iter().zip(&self.tenants) {
+            let digest = fnv(0xcbf2_9ce4_8422_2325, log.to_jsonl().as_bytes());
+            let _ = write!(
+                s,
+                "{}|{}|{}|{:x}|{:x}|{:x}|{:016x}#",
+                t.name,
+                t.jobs,
+                t.evictions,
+                t.cached_mb_lost.to_bits(),
+                t.finish_s.to_bits(),
+                t.cached_fraction_after_load.to_bits(),
+                digest,
+            );
+        }
+        let _ = write!(s, "{:x}|{}", self.duration_s.to_bits(), self.timeline.entries.len());
+        s
+    }
+}
+
+/// Drop evicted shared-store keys out of every owner's location map and
+/// charge the eviction to the owner's stats and log.
+fn fleet_drain_evictions(
+    mi: usize,
+    machines: &mut [MachineState],
+    tenants: &[TenantSpec],
+    locations: &mut [Vec<Vec<Option<usize>>>],
+    stats: &mut [TenantRunStats],
+    logs: &mut [EventLog],
+) {
+    for key in machines[mi].mem.drain_evicted() {
+        let owner = key.dataset / TENANT_STRIDE;
+        if owner >= tenants.len() {
+            continue;
+        }
+        stats[owner].evictions += 1;
+        logs[owner].push(Event::Eviction { machine: mi });
+        let local = key.dataset % TENANT_STRIDE;
+        for (di, ds) in tenants[owner].profile.cached.iter().enumerate() {
+            if ds.id == local {
+                if let Some(slot) = locations[owner][di].get_mut(key.index) {
+                    *slot = None;
+                }
+            }
+        }
+    }
+}
+
+/// Insert one block into the shared store under the fleet's fairness
+/// policy. `ReservationFloors` guards each co-tenant's `R / N` share:
+/// a foreign block is evictable only while its owner sits above the
+/// floor, so contention cannot starve a tenant below its reservation.
+fn fleet_insert(
+    m: &mut MachineState,
+    key: PartitionKey,
+    size_mb: Mb,
+    ref_count: usize,
+    tenant: usize,
+    n_tenants: usize,
+    fairness: FleetFairness,
+) -> bool {
+    match fairness {
+        FleetFairness::SharedLru => m.mem.insert(key, size_mb, ref_count, 1),
+        FleetFairness::ReservationFloors => {
+            let floor = m.mem.r_mb / n_tenants as f64;
+            let mut usage = vec![0.0f64; n_tenants];
+            for (d, _parts, mb) in m.mem.dataset_usage() {
+                let o = d / TENANT_STRIDE;
+                if o < n_tenants {
+                    usage[o] += mb;
+                }
+            }
+            m.mem.insert_guarded(key, size_mb, ref_count, 1, &|d| {
+                let o = d / TENANT_STRIDE;
+                o == tenant || o >= n_tenants || usage[o] > floor
+            })
+        }
+    }
+}
+
+/// A machine leaves a multi-tenant fleet at `at_s`: close its uptime
+/// segment, release the shared store, and attribute the per-dataset
+/// losses ([`crate::memory::DatasetLoss`]) back to their owning tenants —
+/// every tenant's log records a [`Event::MachineLost`] carrying *its own*
+/// lost bytes, so a tenant whose protected dataset lost blocks is
+/// notified even when the loss was triggered by a co-tenant's scenario.
+fn fleet_lose(
+    mi: usize,
+    at_s: f64,
+    machines: &mut [MachineState],
+    tenants: &[TenantSpec],
+    locations: &mut [Vec<Vec<Option<usize>>>],
+    stats: &mut [TenantRunStats],
+    logs: &mut [EventLog],
+) -> bool {
+    if !machines[mi].alive {
+        return false;
+    }
+    let at_s = at_s.max(machines[mi].up_from_s);
+    let losses = {
+        let m = &mut machines[mi];
+        m.alive = false;
+        m.segments.push((m.up_from_s, at_s));
+        m.mem.release_all()
+    };
+    let mut lost_mb = vec![0.0f64; tenants.len()];
+    for l in &losses {
+        let owner = l.dataset / TENANT_STRIDE;
+        if owner < lost_mb.len() {
+            lost_mb[owner] += l.lost_mb;
+        }
+    }
+    for t in 0..tenants.len() {
+        for ds in locations[t].iter_mut() {
+            for slot in ds.iter_mut() {
+                if *slot == Some(mi) {
+                    *slot = None;
+                }
+            }
+        }
+        stats[t].cached_mb_lost += lost_mb[t];
+        logs[t].push(Event::MachineLost {
+            machine: mi,
+            time_s: at_s,
+            cached_mb_lost: lost_mb[t],
+            inflight_tasks: 0,
+        });
+    }
+    true
+}
+
+/// Apply one queued event to a multi-tenant fleet. Fleet runs drain
+/// lifecycle events at job boundaries only (no mid-job rewind — see
+/// [`run_fleet`]), so there is no journal: markers go straight to every
+/// affected tenant's log. Returns whether scheduling-visible state
+/// changed, mirroring [`apply_item`].
+#[allow(clippy::too_many_arguments)]
+fn fleet_apply(
+    item: QueueItem,
+    machines: &mut Vec<MachineState>,
+    groups: &mut Vec<InstanceType>,
+    tenants: &[TenantSpec],
+    locations: &mut [Vec<Vec<Option<usize>>>],
+    stats: &mut [TenantRunStats],
+    logs: &mut [EventLog],
+    queue: &mut EventQueue,
+    policy: EvictionPolicy,
+    now: f64,
+) -> bool {
+    let join_s = item.at_s.max(now);
+    match item.kind {
+        QueuedKind::Disturb(DisturbanceKind::Preempt { machine }) => {
+            machine < machines.len()
+                && fleet_lose(machine, item.at_s, machines, tenants, locations, stats, logs)
+        }
+        QueuedKind::Disturb(DisturbanceKind::Fail { machine, restart_delay_s }) => {
+            if machine < machines.len() && machines[machine].alive {
+                fleet_lose(machine, item.at_s, machines, tenants, locations, stats, logs);
+                queue.push(item.at_s + restart_delay_s, QueuedKind::Rejoin { machine });
+                true
+            } else {
+                false
+            }
+        }
+        QueuedKind::Disturb(DisturbanceKind::Slowdown { machine, factor, duration_s }) => {
+            match machines.get_mut(machine) {
+                Some(m) if m.alive => {
+                    m.slow_factor = factor;
+                    m.slow_from = item.at_s;
+                    m.slow_until = item.at_s + duration_s;
+                    true
+                }
+                _ => false,
+            }
+        }
+        QueuedKind::Disturb(DisturbanceKind::ScaleOut { instance, count }) => {
+            if count == 0 || FleetSpec::homogeneous(instance.clone(), count).is_err() {
+                return false;
+            }
+            let group = groups.len();
+            groups.push(instance.clone());
+            for _ in 0..count {
+                let idx = machines.len();
+                // no execution claim on arrival: the next job's claim
+                // loop sizes the running tenant's share over the new
+                // alive count
+                machines.push(MachineState::new(&instance, group, policy, join_s));
+                for log in logs.iter_mut() {
+                    log.push(Event::MachineJoined { machine: idx, time_s: join_s });
+                }
+            }
+            true
+        }
+        QueuedKind::Disturb(DisturbanceKind::Pressure { machine, claim_mb }) => {
+            if machine >= machines.len() || !machines[machine].alive || claim_mb <= 0.0 {
+                return false;
+            }
+            // ride on top of whatever the running tenant currently
+            // claims; evictions hit whichever tenants lose blocks
+            let cur = machines[machine].mem.exec_used_mb();
+            machines[machine].pressure_mb = claim_mb;
+            machines[machine].mem.claim_execution(cur + claim_mb);
+            fleet_drain_evictions(machine, machines, tenants, locations, stats, logs);
+            true
+        }
+        QueuedKind::Rejoin { machine } => {
+            let m = &mut machines[machine];
+            m.alive = true;
+            m.up_from_s = join_s;
+            m.mem = UnifiedMemory::new(m.spec.unified_mb(), m.spec.storage_floor_mb(), policy);
+            if m.pressure_mb > 0.0 {
+                // the pressure environment persists across a restart
+                m.mem.claim_execution(m.pressure_mb);
+            }
+            for s in &mut m.slots {
+                *s = join_s;
+            }
+            m.slow_factor = 1.0;
+            m.slow_from = f64::INFINITY;
+            m.slow_until = f64::NEG_INFINITY;
+            for log in logs.iter_mut() {
+                log.push(Event::MachineJoined { machine, time_s: join_s });
+            }
+            true
+        }
+    }
+}
+
+/// Interleave N tenants' job streams on one shared fleet.
+///
+/// Jobs are the interleaving grain: tenants' jobs serialize on the fleet
+/// in FIFO order of readiness, merged by the key
+/// `(ready_s, tenant, seq)` — earliest-ready job first, ties broken by
+/// tenant index, then by the tenant's own job order. The key is a total
+/// order over every remaining job (`total_cmp` on the time, integers
+/// after), and nothing in the loop reads wall-clock or address-order
+/// state, so replays are byte-deterministic: same tenants + fleet +
+/// scenario + seed ⇒ identical logs, on any thread count.
+///
+/// Differences from the single-tenant [`run`], by construction:
+///
+/// * **one tenant delegates** — `run_fleet(&[t], ..)` calls [`run`] and
+///   wraps its result, so the degenerate fleet is byte-identical to the
+///   single-tenant engine (the `check_fleet` invariant);
+/// * **job-boundary disturbances** — lifecycle events apply between
+///   jobs, not between tasks, so there is no in-flight rewind. Coarser
+///   than [`run`], but time-consistent at every barrier the tenants
+///   actually share;
+/// * **shared store** — every machine's [`UnifiedMemory`] holds all
+///   tenants' blocks under [`TENANT_STRIDE`]d keys, arbitrated by the
+///   [`FleetFairness`] knob; evictions and machine-loss bytes are
+///   attributed to the owning tenant;
+/// * **no `ExecMemory` events** — the per-machine execution peak is a
+///   fleet-wide quantity that belongs to no single tenant's log.
+///
+/// The scenario is scheduled once against the *summed* horizon of all
+/// tenants (jobs serialize, so the run is roughly the tenants' horizons
+/// laid end to end); profile-derived scenarios see tenant 0's profile.
+pub fn run_fleet(
+    tenants: &[TenantSpec],
+    fleet: &FleetSpec,
+    scenario: &dyn Scenario,
+    fairness: FleetFairness,
+    opts: SimOptions<'_>,
+) -> Result<FleetRunResult, SimError> {
+    let Some(first) = tenants.first() else {
+        return Err(SimError::NoTenants);
+    };
+    if tenants.len() == 1 {
+        // degenerate fleet: exactly the single-tenant engine (fairness
+        // is moot with one tenant)
+        let res = run(&first.profile, fleet, scenario, opts)?;
+        let evictions = res.sim.evictions_per_machine.iter().sum();
+        let cached_mb_lost = res
+            .sim
+            .log
+            .events
+            .iter()
+            .map(|e| match e {
+                Event::MachineLost { cached_mb_lost, .. } => *cached_mb_lost,
+                _ => 0.0,
+            })
+            .sum();
+        let stats = TenantRunStats {
+            name: first.name.clone(),
+            jobs: first.profile.iterations + 1,
+            evictions,
+            cached_mb_lost,
+            finish_s: res.timeline.duration_s,
+            cached_fraction_after_load: res.sim.cached_fraction_after_load,
+        };
+        return Ok(FleetRunResult {
+            duration_s: res.timeline.duration_s,
+            logs: vec![res.sim.log],
+            tenants: vec![stats],
+            timeline: res.timeline,
+        });
+    }
+
+    fleet.validate()?;
+    scenario.validate()?;
+    debug_assert!(
+        tenants.iter().all(|t| t.profile.cached.iter().all(|d| d.id < TENANT_STRIDE)),
+        "dataset ids must fit below the tenant stride"
+    );
+    let n = tenants.len();
+    let policy = opts.policy;
+    let mut rng = Rng::new(opts.seed ^ 0xf1ee_7c0d);
+    let mut compute = opts.compute;
+    let detailed = opts.detailed_log;
+
+    let mut groups: Vec<InstanceType> = fleet.groups.iter().map(|g| g.instance.clone()).collect();
+    let mut machines: Vec<MachineState> = Vec::with_capacity(fleet.machines());
+    for (gi, g) in fleet.groups.iter().enumerate() {
+        for _ in 0..g.count {
+            machines.push(MachineState::new(&g.instance, gi, policy, 0.0));
+        }
+    }
+    let n0 = machines.len();
+
+    let mut logs: Vec<EventLog> = tenants
+        .iter()
+        .map(|t| {
+            let mut log = EventLog::new();
+            log.push(Event::AppStart {
+                app: t.profile.name.clone(),
+                machines: n0,
+                data_scale: t.profile.scale,
+            });
+            log
+        })
+        .collect();
+    let mut stats: Vec<TenantRunStats> = tenants
+        .iter()
+        .map(|t| TenantRunStats {
+            name: t.name.clone(),
+            jobs: 0,
+            evictions: 0,
+            cached_mb_lost: 0.0,
+            finish_s: 0.0,
+            cached_fraction_after_load: 0.0,
+        })
+        .collect();
+
+    let mut queue = EventQueue::new();
+    let horizon: f64 = tenants.iter().map(|t| horizon_s(&t.profile, fleet)).sum();
+    for d in scenario.schedule(&ScenarioCtx { fleet, profile: &first.profile, horizon_s: horizon })
+    {
+        if !d.at_s.is_finite() {
+            return Err(SimError::NonFiniteEventTime {
+                scenario: scenario.name().to_string(),
+                at_s: d.at_s,
+            });
+        }
+        if let DisturbanceKind::Fail { restart_delay_s, .. } = d.kind {
+            if !restart_delay_s.is_finite() || !(d.at_s + restart_delay_s).is_finite() {
+                return Err(SimError::NonFiniteEventTime {
+                    scenario: scenario.name().to_string(),
+                    at_s: d.at_s + restart_delay_s,
+                });
+            }
+        }
+        queue.push(d.at_s, QueuedKind::Disturb(d.kind));
+    }
+
+    // per-tenant partition locations, local dataset order as in `run`
+    let mut locations: Vec<Vec<Vec<Option<usize>>>> = tenants
+        .iter()
+        .map(|t| {
+            let parts = t.profile.parallelism.max(1);
+            t.profile.cached.iter().map(|_| vec![None; parts]).collect()
+        })
+        .collect();
+
+    // merged job stream: next job index and earliest start per tenant
+    let mut next_job: Vec<usize> = vec![0; n];
+    let mut ready_s: Vec<f64> = tenants.iter().map(|t| t.profile.sample_prep_s).collect();
+    let mut fleet_now = 0.0f64;
+
+    loop {
+        // pick the next job by the merge key (ready_s, tenant, seq)
+        let mut pick: Option<(f64, usize, usize)> = None;
+        for t in 0..n {
+            if next_job[t] > tenants[t].profile.iterations {
+                continue;
+            }
+            let key = (ready_s[t], t, next_job[t]);
+            let better = match pick {
+                None => true,
+                Some(cur) => match key.0.total_cmp(&cur.0) {
+                    Ordering::Less => true,
+                    Ordering::Equal => (key.1, key.2) < (cur.1, cur.2),
+                    Ordering::Greater => false,
+                },
+            };
+            if better {
+                pick = Some(key);
+            }
+        }
+        let Some((ready, t, job)) = pick else { break };
+        let prof = &tenants[t].profile;
+        let parts = prof.parallelism.max(1);
+        let job_start = fleet_now.max(ready);
+
+        // job-boundary drain: lifecycle events due by the job's start
+        // apply now; with every machine down, fast-forward to a revival
+        while let Some(item) = queue.pop_due(job_start) {
+            fleet_apply(
+                item, &mut machines, &mut groups, tenants, &mut locations, &mut stats,
+                &mut logs, &mut queue, policy, job_start,
+            );
+        }
+        while machines.iter().filter(|m| m.alive).count() == 0 {
+            let Some(item) = queue.pop_due(f64::INFINITY) else {
+                return Err(SimError::AllMachinesLost { at_s: job_start });
+            };
+            fleet_apply(
+                item, &mut machines, &mut groups, tenants, &mut locations, &mut stats,
+                &mut logs, &mut queue, policy, job_start,
+            );
+        }
+        let alive_n = machines.iter().filter(|m| m.alive).count();
+
+        // raise (never rewind) slots to the job start: machines revived
+        // by the fast-forward join later than `job_start` and keep their
+        // later clocks
+        for m in machines.iter_mut().filter(|m| m.alive) {
+            for s in &mut m.slots {
+                *s = s.max(job_start);
+            }
+        }
+
+        // the running tenant's execution share replaces the previous
+        // tenant's (jobs serialize); standing co-tenant pressure rides on
+        // top, as in the single-tenant claim
+        let exec_pm: Mb =
+            if job == 0 { 0.0 } else { prof.exec_mem_total_mb / alive_n as f64 };
+        for mi in 0..machines.len() {
+            if !machines[mi].alive {
+                continue;
+            }
+            let claim = exec_pm + machines[mi].pressure_mb;
+            machines[mi].mem.claim_execution(claim);
+            fleet_drain_evictions(mi, &mut machines, tenants, &mut locations, &mut stats, &mut logs);
+        }
+
+        if job == 0 {
+            // materialize: read input, cache each partition where it ran
+            let input_per_task = prof.input_mb / parts as f64;
+            for p in 0..parts {
+                let (mi, si) = earliest_slot(&machines).expect("a live machine exists");
+                let start = machines[mi].slots[si];
+                let base = input_per_task / machines[mi].spec.disk_mb_s
+                    + input_per_task * prof.compute_s_per_mb
+                    + prof.task_overhead_s;
+                let dur = task_duration(base, prof, false, &mut rng, &mut compute)
+                    * machines[mi].slowdown_at(start);
+                machines[mi].slots[si] = start + dur;
+                machines[mi].tasks_run += 1;
+                if detailed {
+                    logs[t].push(Event::TaskEnd {
+                        stage: 0,
+                        task: p,
+                        machine: mi,
+                        duration_s: dur,
+                        cached_read: false,
+                    });
+                }
+                for (di, ds) in prof.cached.iter().enumerate() {
+                    let true_part = ds.true_total_mb / parts as f64;
+                    let measured_part = ds.measured_total_mb / parts as f64;
+                    let gkey =
+                        PartitionKey { dataset: t * TENANT_STRIDE + ds.id, index: p };
+                    let stored = fleet_insert(
+                        &mut machines[mi],
+                        gkey,
+                        true_part,
+                        prof.iterations + 1,
+                        t,
+                        n,
+                        fairness,
+                    );
+                    fleet_drain_evictions(
+                        mi, &mut machines, tenants, &mut locations, &mut stats, &mut logs,
+                    );
+                    if stored {
+                        locations[t][di][p] = Some(mi);
+                    }
+                    if detailed {
+                        logs[t].push(Event::BlockUpdate {
+                            dataset: ds.id,
+                            partition: p,
+                            size_mb: measured_part,
+                            stored,
+                        });
+                    }
+                }
+            }
+        } else {
+            for p in 0..parts {
+                // locality pins the task to the machine caching dataset 0
+                let pinned = prof.cached.first().and_then(|_| locations[t][0][p]);
+                let (mi, si) = match pinned {
+                    Some(m) => (m, earliest_slot_on(&machines[m])),
+                    None => earliest_slot(&machines).expect("a live machine exists"),
+                };
+                let start = machines[mi].slots[si];
+                let cached_read = pinned.is_some();
+                let part_input = prof.input_mb / parts as f64;
+                let base = if cached_read {
+                    let part_cached: f64 =
+                        prof.cached.iter().map(|d| d.true_total_mb / parts as f64).sum();
+                    part_cached * prof.compute_s_per_mb / prof.cached_speedup
+                        + prof.task_overhead_s
+                } else {
+                    part_input / machines[mi].spec.disk_mb_s
+                        + part_input * prof.compute_s_per_mb * prof.recompute_factor
+                        + prof.task_overhead_s
+                };
+                let dur = task_duration(base, prof, cached_read, &mut rng, &mut compute)
+                    * machines[mi].slowdown_at(start);
+                machines[mi].slots[si] = start + dur;
+                machines[mi].tasks_run += 1;
+                machines[mi].iter_tasks += 1;
+                if detailed {
+                    logs[t].push(Event::TaskEnd {
+                        stage: job,
+                        task: p,
+                        machine: mi,
+                        duration_s: dur,
+                        cached_read,
+                    });
+                }
+                if cached_read {
+                    for ds in &prof.cached {
+                        machines[mi]
+                            .mem
+                            .touch(PartitionKey { dataset: t * TENANT_STRIDE + ds.id, index: p });
+                    }
+                } else {
+                    // re-cache the recomputed partition where it ran
+                    for (di, ds) in prof.cached.iter().enumerate() {
+                        let true_part = ds.true_total_mb / parts as f64;
+                        let gkey =
+                            PartitionKey { dataset: t * TENANT_STRIDE + ds.id, index: p };
+                        let stored = fleet_insert(
+                            &mut machines[mi],
+                            gkey,
+                            true_part,
+                            prof.iterations - job + 1,
+                            t,
+                            n,
+                            fairness,
+                        );
+                        fleet_drain_evictions(
+                            mi, &mut machines, tenants, &mut locations, &mut stats, &mut logs,
+                        );
+                        if stored {
+                            locations[t][di][p] = Some(mi);
+                        }
+                    }
+                }
+            }
+        }
+
+        let b = barrier(&machines, job_start);
+        let end = b + prof.serial_s + fleet_overhead_s(prof, &machines, &groups);
+        if job == 0 {
+            stats[t].cached_fraction_after_load = if prof.cached.is_empty() {
+                0.0
+            } else {
+                locations[t][0].iter().filter(|l| l.is_some()).count() as f64 / parts as f64
+            };
+        } else {
+            logs[t].push(Event::JobEnd { job, duration_s: end - job_start });
+        }
+        stats[t].jobs += 1;
+        stats[t].finish_s = end;
+        next_job[t] += 1;
+        ready_s[t] = end;
+        fleet_now = end;
+    }
+
+    // per-tenant epilogue: final aggregate residency for non-detailed
+    // runs, then AppEnd at the tenant's own finish time
+    for t in 0..n {
+        let prof = &tenants[t].profile;
+        let parts = prof.parallelism.max(1);
+        if !detailed {
+            for (di, ds) in prof.cached.iter().enumerate() {
+                let resident = locations[t][di].iter().filter(|l| l.is_some()).count();
+                let measured_part = ds.measured_total_mb / parts as f64;
+                logs[t].push(Event::BlockUpdate {
+                    dataset: ds.id,
+                    partition: 0,
+                    size_mb: measured_part * resident as f64,
+                    stored: resident > 0,
+                });
+            }
+        }
+        logs[t].push(Event::AppEnd { duration_s: stats[t].finish_s });
+    }
+
+    let mut timeline = FleetTimeline { duration_s: fleet_now, entries: Vec::new() };
+    for (mi, m) in machines.iter().enumerate() {
+        for &(from, to) in &m.segments {
+            timeline.entries.push(TimelineEntry {
+                machine: mi,
+                instance: m.instance.clone(),
+                up_from_s: from,
+                up_to_s: to,
+            });
+        }
+        if m.alive {
+            timeline.entries.push(TimelineEntry {
+                machine: mi,
+                instance: m.instance.clone(),
+                up_from_s: m.up_from_s,
+                up_to_s: fleet_now,
+            });
+        }
+    }
+
+    Ok(FleetRunResult { duration_s: fleet_now, logs, tenants: stats, timeline })
 }
 
 #[cfg(test)]
@@ -1479,5 +2225,179 @@ mod tests {
         let base = run(&p, &worker_fleet(3), &NoDisturbances, opts(9)).unwrap();
         assert_eq!(disturbed.timeline, base.timeline, "zero-count join must be a no-op");
         assert_eq!(disturbed.sim.log.to_jsonl(), base.sim.log.to_jsonl());
+    }
+
+    // ------------------------------------------------ multi-tenant fleet ----
+
+    #[test]
+    fn single_tenant_fleet_degenerates_to_run_byte_for_byte() {
+        let p = toy_profile(2000.0, 4, 32);
+        let tenant = TenantSpec { name: "solo".into(), profile: p.clone() };
+        let single = run(&p, &worker_fleet(3), &NoDisturbances, opts(7)).unwrap();
+        let fleet = run_fleet(
+            &[tenant],
+            &worker_fleet(3),
+            &NoDisturbances,
+            FleetFairness::SharedLru,
+            opts(7),
+        )
+        .unwrap();
+        assert_eq!(fleet.logs.len(), 1);
+        assert_eq!(fleet.logs[0].to_jsonl(), single.sim.log.to_jsonl());
+        assert_eq!(fleet.timeline, single.timeline);
+        assert_eq!(fleet.tenants[0].jobs, p.iterations + 1);
+        assert_eq!(
+            fleet.tenants[0].cached_fraction_after_load,
+            single.sim.cached_fraction_after_load
+        );
+        assert_eq!(
+            run_fleet(&[], &worker_fleet(3), &NoDisturbances, FleetFairness::SharedLru, opts(7))
+                .unwrap_err(),
+            SimError::NoTenants
+        );
+    }
+
+    #[test]
+    fn fleet_interleave_is_deterministic_and_every_log_self_contained() {
+        let tenants = vec![
+            TenantSpec { name: "a".into(), profile: toy_profile(1500.0, 3, 16) },
+            TenantSpec { name: "b".into(), profile: toy_profile(2500.0, 2, 24) },
+            TenantSpec { name: "c".into(), profile: toy_profile(500.0, 4, 8) },
+        ];
+        let fleet = worker_fleet(3);
+        let r1 = run_fleet(&tenants, &fleet, &NoDisturbances, FleetFairness::SharedLru, opts(11))
+            .unwrap();
+        let r2 = run_fleet(&tenants, &fleet, &NoDisturbances, FleetFairness::SharedLru, opts(11))
+            .unwrap();
+        assert_eq!(r1.fingerprint(), r2.fingerprint(), "same inputs replay byte-identically");
+        for (i, log) in r1.logs.iter().enumerate() {
+            assert_eq!(log.to_jsonl(), r2.logs[i].to_jsonl());
+        }
+        assert_eq!(r1.logs.len(), 3);
+        for (log, (st, t)) in r1.logs.iter().zip(r1.tenants.iter().zip(&tenants)) {
+            // each tenant's log is the same self-contained listener trace
+            // a single-tenant run emits: AppStart first, AppEnd last, one
+            // JobEnd per iteration
+            assert!(matches!(log.events.first(), Some(Event::AppStart { .. })));
+            assert!(matches!(
+                log.events.last(),
+                Some(Event::AppEnd { duration_s }) if *duration_s == st.finish_s
+            ));
+            let job_ends =
+                log.events.iter().filter(|e| matches!(e, Event::JobEnd { .. })).count();
+            assert_eq!(job_ends, t.profile.iterations);
+            assert_eq!(st.jobs, t.profile.iterations + 1);
+        }
+        // jobs serialize: the fleet makespan is the last tenant's finish
+        let max_finish = r1.tenants.iter().map(|t| t.finish_s).fold(0.0, f64::max);
+        assert_eq!(r1.duration_s, max_finish);
+        // a different seed perturbs task noise, hence the fingerprint
+        let r3 = run_fleet(&tenants, &fleet, &NoDisturbances, FleetFairness::SharedLru, opts(12))
+            .unwrap();
+        assert_ne!(r1.fingerprint(), r3.fingerprint());
+    }
+
+    #[test]
+    fn reservation_floors_shield_a_small_tenant_from_a_big_neighbor() {
+        // "small" (500 MB/machine) sits well below its R/2 reservation
+        // (~1.8 GB/machine on the paper worker); "big" (8 GB/machine
+        // demanded) overflows the shared store. Under shared LRU the big
+        // tenant's inserts evict the small tenant's older blocks; under
+        // reservation floors the shielded predicate refuses those victims
+        // and the big tenant's surplus inserts fail instead.
+        let tenants = vec![
+            TenantSpec { name: "small".into(), profile: toy_profile(1000.0, 2, 8) },
+            TenantSpec { name: "big".into(), profile: toy_profile(16000.0, 2, 8) },
+        ];
+        let fleet = worker_fleet(2);
+        let shared =
+            run_fleet(&tenants, &fleet, &NoDisturbances, FleetFairness::SharedLru, opts(3))
+                .unwrap();
+        let floors =
+            run_fleet(&tenants, &fleet, &NoDisturbances, FleetFairness::ReservationFloors, opts(3))
+                .unwrap();
+        assert!(
+            shared.tenants[0].evictions > 0,
+            "shared LRU lets the big tenant steal the small tenant's blocks"
+        );
+        assert_eq!(
+            floors.tenants[0].evictions, 0,
+            "a tenant below its reservation floor is untouchable"
+        );
+        // no machines were lost in either run
+        assert_eq!(shared.tenants[0].cached_mb_lost, 0.0);
+        assert_eq!(floors.tenants[0].cached_mb_lost, 0.0);
+    }
+
+    #[test]
+    fn contention_scenario_squeezes_a_fleet_run_deterministically() {
+        use crate::sim::scenario::Contention;
+        // 7 GB cached per tenant over 3 workers fits untouched, but the
+        // contention squeeze (0.8 of the stealable region) drops the
+        // storage limit below residency and forces evictions
+        let tenants = vec![
+            TenantSpec { name: "a".into(), profile: toy_profile(7000.0, 3, 16) },
+            TenantSpec { name: "b".into(), profile: toy_profile(7000.0, 3, 16) },
+        ];
+        let fleet = worker_fleet(3);
+        let base = run_fleet(&tenants, &fleet, &NoDisturbances, FleetFairness::SharedLru, opts(5))
+            .unwrap();
+        let squeezed =
+            run_fleet(&tenants, &fleet, &Contention::default(), FleetFairness::SharedLru, opts(5))
+                .unwrap();
+        let squeezed2 =
+            run_fleet(&tenants, &fleet, &Contention::default(), FleetFairness::SharedLru, opts(5))
+                .unwrap();
+        assert_eq!(squeezed.fingerprint(), squeezed2.fingerprint());
+        let base_ev: usize = base.tenants.iter().map(|t| t.evictions).sum();
+        let squeezed_ev: usize = squeezed.tenants.iter().map(|t| t.evictions).sum();
+        assert!(squeezed_ev > base_ev, "the squeeze must evict ({squeezed_ev} vs {base_ev})");
+        assert_ne!(base.fingerprint(), squeezed.fingerprint());
+    }
+
+    #[test]
+    fn fleet_machine_loss_attributes_bytes_to_owning_tenants() {
+        struct LoseOne;
+        impl super::super::scenario::Scenario for LoseOne {
+            fn name(&self) -> &'static str {
+                "lose-one"
+            }
+            fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<super::super::scenario::Disturbance> {
+                vec![super::super::scenario::Disturbance {
+                    at_s: ctx.horizon_s * 0.4,
+                    kind: DisturbanceKind::Preempt { machine: 0 },
+                }]
+            }
+        }
+        let tenants = vec![
+            TenantSpec { name: "a".into(), profile: toy_profile(2000.0, 3, 16) },
+            TenantSpec { name: "b".into(), profile: toy_profile(3000.0, 3, 16) },
+        ];
+        let r = run_fleet(&tenants, &worker_fleet(3), &LoseOne, FleetFairness::SharedLru, opts(6))
+            .unwrap();
+        // every tenant's log records the loss with its own lost bytes,
+        // and the stats agree with the log
+        for (log, st) in r.logs.iter().zip(&r.tenants) {
+            let logged: f64 = log
+                .events
+                .iter()
+                .map(|e| match e {
+                    Event::MachineLost { cached_mb_lost, .. } => *cached_mb_lost,
+                    _ => 0.0,
+                })
+                .sum();
+            assert_eq!(logged, st.cached_mb_lost);
+        }
+        let total_lost: f64 = r.tenants.iter().map(|t| t.cached_mb_lost).sum();
+        assert!(total_lost > 0.0, "machine 0 held someone's blocks when it died");
+        // the realized timeline closed machine 0's segment early
+        let m0_up: f64 = r
+            .timeline
+            .entries
+            .iter()
+            .filter(|e| e.machine == 0)
+            .map(|e| e.up_to_s - e.up_from_s)
+            .sum();
+        assert!(m0_up < r.duration_s, "machine 0 billed less than the makespan");
     }
 }

@@ -42,6 +42,10 @@ pub enum SimError {
     /// a fraction past the horizon silently schedules nothing, a negative
     /// or NaN one schedules nonsense times.
     BadScheduleFraction { scenario: String, at_frac: f64 },
+    /// A multi-tenant entry point was handed an empty tenant list. There
+    /// is no sensible degenerate run (no logs, no stats), so intake
+    /// rejects it the same way `EmptyFleet` rejects a machine-less fleet.
+    NoTenants,
 }
 
 impl std::fmt::Display for SimError {
@@ -75,6 +79,7 @@ impl std::fmt::Display for SimError {
                     "scenario '{scenario}' has a horizon fraction outside [0, 1]: {at_frac}"
                 )
             }
+            SimError::NoTenants => write!(f, "fleet run declares no tenants"),
         }
     }
 }

@@ -35,7 +35,10 @@ pub mod profile;
 pub mod scenario;
 
 pub use cluster::{ClusterSpec, InstanceCatalog, InstanceType, MachineSpec};
-pub use engine::{EngineResult, FleetTimeline, IterationObservation, TimelineEntry};
+pub use engine::{
+    run_fleet, EngineResult, FleetFairness, FleetRunResult, FleetTimeline, IterationObservation,
+    TenantRunStats, TenantSpec, TimelineEntry,
+};
 pub use fleet::{FleetSpec, InstanceGroup, SimError};
 pub use profile::{CachedData, WorkloadProfile};
 pub use scenario::{scenario_names, Disturbance, DisturbanceKind, Scenario};

@@ -49,6 +49,11 @@ pub enum DisturbanceKind {
     Slowdown { machine: usize, factor: f64, duration_s: f64 },
     /// Step autoscaling: `count` new machines of `instance` join.
     ScaleOut { instance: InstanceType, count: usize },
+    /// Cross-job contention: co-resident tenants claim `claim_mb` of the
+    /// machine's unified region as extra execution pressure from this
+    /// point on, squeezing the storage region and evicting cached
+    /// partitions down to whatever headroom survives.
+    Pressure { machine: usize, claim_mb: f64 },
 }
 
 /// A disturbance scenario. Implementations are stateless (`&self`) so one
@@ -253,11 +258,21 @@ impl Scenario for StepAutoscale {
 /// sizes vs. the fleet's §5.4 storage floors — a well-provisioned fleet
 /// sees no disturbance at all, which is what separates it from
 /// [`StepAutoscale`]'s unconditional step.
+///
+/// The controller also has a surplus arm: when the deficit is negative
+/// (the fleet is oversized for the observed working set) and
+/// [`DeficitController::remove`] is set, it retires that many machines —
+/// highest index first, always leaving at least one — so an over-fit size
+/// prediction stops billing for machines the working set never needed.
 pub struct DeficitController {
     /// When the correction lands, as a fraction of the horizon.
     pub at_frac: f64,
     /// How many machines join; 0 = auto-size from the deficit.
     pub add: usize,
+    /// Machines to retire when the deficit is a surplus (≤ 0): highest
+    /// index first, capped so at least one machine survives. 0 keeps the
+    /// historical scale-out-only behavior (a surplus schedules nothing).
+    pub remove: usize,
     /// The cache deficit driving the controller (MB). `None` = derive
     /// from the profile's measured cached total minus the fleet's
     /// aggregate storage floor.
@@ -271,7 +286,7 @@ pub struct DeficitController {
 
 impl Default for DeficitController {
     fn default() -> Self {
-        DeficitController { at_frac: 0.3, add: 0, deficit_mb: None, at_s: None }
+        DeficitController { at_frac: 0.3, add: 0, remove: 0, deficit_mb: None, at_s: None }
     }
 }
 
@@ -298,8 +313,22 @@ impl Scenario for DeficitController {
 
     fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
         let deficit = self.deficit_for(ctx);
-        if deficit <= 0.0 || !deficit.is_finite() {
-            return Vec::new(); // the fleet already fits the working set
+        if !deficit.is_finite() {
+            return Vec::new();
+        }
+        if deficit <= 0.0 {
+            // the fleet already fits the working set; the surplus arm
+            // retires the configured count, highest index first, never
+            // emptying the fleet
+            let n = ctx.fleet.machines();
+            let count = self.remove.min(n.saturating_sub(1));
+            let at_s = self.at_s.unwrap_or(ctx.horizon_s * self.at_frac).max(0.0);
+            return (0..count)
+                .map(|i| Disturbance {
+                    at_s,
+                    kind: DisturbanceKind::Preempt { machine: n - 1 - i },
+                })
+                .collect();
         }
         let count = if self.add > 0 {
             self.add
@@ -342,11 +371,73 @@ impl Scenario for DeficitController {
     }
 }
 
+/// Cross-job eviction pressure: from a fraction of the horizon on, every
+/// machine loses `pressure_frac` of its unified region to co-resident
+/// tenants' execution claims. This is the single-tenant stand-in for the
+/// contention a shared fleet sees under concurrent load (ROADMAP item 5 /
+/// the multi-stage caching paper): the run's own execution share is
+/// unchanged, but the storage region shrinks, so a working set that fit
+/// comfortably starts thrashing mid-run. A fleet whose storage floor
+/// still covers the working set after the squeeze sees no evictions —
+/// like [`DeficitController`], the signature is conditional on headroom.
+pub struct Contention {
+    /// When the co-tenants arrive, as a fraction of the horizon.
+    pub at_frac: f64,
+    /// Fraction of each machine's unified region (beyond the protected
+    /// storage floor `R`) claimed by the co-tenants, in `[0, 1]`.
+    pub pressure_frac: f64,
+}
+
+impl Default for Contention {
+    fn default() -> Self {
+        Contention { at_frac: 0.35, pressure_frac: 0.8 }
+    }
+}
+
+impl Scenario for Contention {
+    fn name(&self) -> &'static str {
+        "contention"
+    }
+
+    fn schedule(&self, ctx: &ScenarioCtx<'_>) -> Vec<Disturbance> {
+        let at_s = ctx.horizon_s * self.at_frac;
+        let mut ds = Vec::new();
+        let mut machine = 0usize;
+        for group in &ctx.fleet.groups {
+            // execution can claim at most M - R, so the squeeze is sized
+            // against the stealable region, never the protected floor
+            let spec = &group.instance.spec;
+            let stealable = (spec.unified_mb() - spec.storage_floor_mb()).max(0.0);
+            let claim_mb = stealable * self.pressure_frac;
+            for _ in 0..group.count {
+                ds.push(Disturbance {
+                    at_s,
+                    kind: DisturbanceKind::Pressure { machine, claim_mb },
+                });
+                machine += 1;
+            }
+        }
+        ds
+    }
+
+    fn validate(&self) -> Result<(), SimError> {
+        validate_frac(self.name(), self.at_frac)?;
+        if self.pressure_frac.is_finite() && (0.0..=1.0).contains(&self.pressure_frac) {
+            Ok(())
+        } else {
+            Err(SimError::BadScheduleFraction {
+                scenario: self.name().to_string(),
+                at_frac: self.pressure_frac,
+            })
+        }
+    }
+}
+
 /// Every CLI-addressable scenario name, the vocabulary of
 /// [`by_name`] — error messages enumerate this so an unknown
 /// `--scenario` lists every valid spelling.
-pub fn scenario_names() -> [&'static str; 6] {
-    ["none", "spot", "straggler", "failure", "autoscale", "deficit"]
+pub fn scenario_names() -> [&'static str; 7] {
+    ["none", "spot", "straggler", "failure", "autoscale", "deficit", "contention"]
 }
 
 /// Look a scenario up by CLI name (`blink simulate --scenario ...`).
@@ -358,6 +449,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Scenario>> {
         "failure" => Some(Box::new(FailureRestart::default())),
         "autoscale" => Some(Box::new(StepAutoscale::default())),
         "deficit" => Some(Box::new(DeficitController::default())),
+        "contention" => Some(Box::new(Contention::default())),
         _ => None,
     }
 }
@@ -465,6 +557,37 @@ mod tests {
     }
 
     #[test]
+    fn contention_squeezes_every_machine_at_one_instant() {
+        let (fleet, profile) = ctx_fixture(4);
+        let ctx = ScenarioCtx { fleet: &fleet, profile: &profile, horizon_s: 100.0 };
+        let ds = Contention::default().schedule(&ctx);
+        assert_eq!(ds.len(), 4, "one pressure claim per machine");
+        let spec = &fleet.groups[0].instance.spec;
+        let want = (spec.unified_mb() - spec.storage_floor_mb()) * 0.8;
+        for (i, d) in ds.iter().enumerate() {
+            assert_eq!(d.at_s, 35.0);
+            let DisturbanceKind::Pressure { machine, claim_mb } = d.kind.clone() else {
+                panic!("expected a pressure claim")
+            };
+            assert_eq!(machine, i);
+            assert!((claim_mb - want).abs() < 1e-9, "{claim_mb} vs {want}");
+        }
+        // the squeeze never touches the protected floor: a full claim is
+        // capped at the stealable region M - R
+        let full = Contention { pressure_frac: 1.0, ..Default::default() };
+        for d in full.schedule(&ctx) {
+            let DisturbanceKind::Pressure { claim_mb, .. } = d.kind else { continue };
+            assert!(claim_mb <= spec.unified_mb() - spec.storage_floor_mb() + 1e-9);
+        }
+        // a bad pressure fraction is a typed intake error
+        let e = Contention { pressure_frac: 1.5, ..Default::default() }.validate().unwrap_err();
+        assert!(matches!(
+            e,
+            SimError::BadScheduleFraction { ref scenario, .. } if scenario == "contention"
+        ));
+    }
+
+    #[test]
     fn deficit_controller_acts_only_under_actual_deficit() {
         // 2 paper workers store far less than 5000 MB of cached data ->
         // the controller must scale out, sized from the deficit
@@ -495,5 +618,48 @@ mod tests {
             .validate()
             .unwrap_err();
         assert!(matches!(e, SimError::NonFiniteEventTime { .. }));
+    }
+
+    #[test]
+    fn deficit_controller_surplus_arm_retires_highest_machines_first() {
+        let (fleet, profile) = ctx_fixture(8);
+        let ctx = ScenarioCtx { fleet: &fleet, profile: &profile, horizon_s: 100.0 };
+        // a surplus with remove: 0 keeps the historical no-op
+        let idle = DeficitController { deficit_mb: Some(-500.0), ..Default::default() };
+        assert!(idle.schedule(&ctx).is_empty());
+        // retirements leave from the top of the index range at the
+        // decision time
+        let surplus = DeficitController {
+            deficit_mb: Some(-500.0),
+            remove: 3,
+            at_s: Some(10.0),
+            ..Default::default()
+        };
+        let ds = surplus.schedule(&ctx);
+        assert_eq!(ds.len(), 3);
+        for (i, d) in ds.iter().enumerate() {
+            assert_eq!(d.at_s, 10.0);
+            assert!(
+                matches!(d.kind, DisturbanceKind::Preempt { machine } if machine == 7 - i),
+                "retirement {i} targets the wrong machine: {:?}",
+                d.kind
+            );
+        }
+        // a greedy remove is capped so one machine always survives
+        let (two, profile) = ctx_fixture(2);
+        let ctx = ScenarioCtx { fleet: &two, profile: &profile, horizon_s: 100.0 };
+        let greedy = DeficitController {
+            deficit_mb: Some(-1.0),
+            remove: 99,
+            ..Default::default()
+        };
+        let ds = greedy.schedule(&ctx);
+        assert_eq!(ds.len(), 1, "2-machine fleet keeps a survivor");
+        assert!(matches!(ds[0].kind, DisturbanceKind::Preempt { machine: 1 }));
+        // the scale-out arm is untouched by the remove knob
+        let out = DeficitController { deficit_mb: Some(1.0), add: 2, remove: 5, ..Default::default() };
+        let ds = out.schedule(&ctx);
+        assert_eq!(ds.len(), 1);
+        assert!(matches!(ds[0].kind, DisturbanceKind::ScaleOut { count: 2, .. }));
     }
 }

@@ -28,7 +28,12 @@
 //!   re-plan → act loop never realizes a higher cost than the static
 //!   pick, never re-plans a well-estimated workload, always re-plans a
 //!   systematically under-fit one, and replays bit-identically under
-//!   every worker count.
+//!   every worker count;
+//! * **multi-tenant fleet** ([`check_fleet`]) — a one-tenant fleet run is
+//!   byte-identical to the single-tenant engine, adding a tenant never
+//!   shrinks any type's eviction-free floor, and the interleaved N-tenant
+//!   run replays byte-for-byte under every worker count and both
+//!   fairness knobs.
 //!
 //! Every [`Violation`] carries the workload's generation seed, so any
 //! counterexample found in CI reproduces from the log
@@ -37,14 +42,17 @@
 use std::fmt;
 
 use crate::blink::{
-    adaptive, machine_split, plan_exhaustive, plan_exhaustive_search, plan_search, results_bytes,
-    select_cluster_size, serve_batch, Advisor, PlanInput, ProfileStore, RustFit, SearchSpace,
-    TrainedProfile,
+    adaptive, machine_split, plan_exhaustive, plan_exhaustive_search, plan_fleet, plan_search,
+    results_bytes, select_cluster_size, serve_batch, Advisor, FleetPlanInput, PlanInput,
+    ProfileStore, RustFit, SearchSpace, TrainedProfile,
 };
 use crate::cost::pricing_by_name;
 use crate::memory::EvictionPolicy;
 use crate::metrics::RunSummary;
-use crate::sim::{engine, scenario, FleetSpec, InstanceCatalog, MachineSpec, SimOptions};
+use crate::sim::{
+    engine, scenario, FleetFairness, FleetSpec, InstanceCatalog, MachineSpec, SimOptions,
+    TenantSpec, WorkloadProfile,
+};
 use crate::util::par::sweep_range_with;
 use crate::workloads::{AppModel, SynthConfig};
 
@@ -98,7 +106,15 @@ impl Default for MatrixSpec {
         MatrixSpec {
             scales: vec![100.0, 400.0, 1000.0, 2000.0],
             engine_scale: 300.0,
-            scenario_names: vec!["none", "spot", "straggler", "failure", "autoscale", "deficit"],
+            scenario_names: vec![
+                "none",
+                "spot",
+                "straggler",
+                "failure",
+                "autoscale",
+                "deficit",
+                "contention",
+            ],
             catalog_names: vec!["paper", "cloud"],
             pricing_names: vec!["machine-seconds", "hourly"],
             max_machines: 12,
@@ -562,6 +578,14 @@ pub fn check_engine(
                         .then(|| fail("no deficit: must replay the baseline exactly"))
                 }
             }
+            "contention" => {
+                // foreign memory pressure keeps the fleet intact; evicted
+                // blocks recompute, so the run can only hold or stretch
+                (s.machines_lost != 0
+                    || s.machines_joined != 0
+                    || s.duration_s + 1e-9 < base.duration_s)
+                    .then(|| fail("pressure must keep the fleet intact and never shorten the run"))
+            }
             other => Some(format!("unknown scenario '{other}' in the matrix spec")),
         };
         if let Some(detail) = bad {
@@ -763,6 +787,193 @@ pub fn check_adaptive(preset: &str, first_seed: u64, count: usize) -> (usize, Ve
             }
         }
     }
+    (checks, out)
+}
+
+/// The multi-tenant fleet contract (`blink fleet` / [`engine::run_fleet`]
+/// / [`plan_fleet`]): generate `count` tenants from consecutive seeds at
+/// the matrix engine scale and assert three invariants on one shared
+/// 4-worker fleet:
+///
+/// * **fleet-degeneracy** — a one-tenant fleet run is byte-identical to
+///   the single-tenant engine: same event log (JSONL bytes), same
+///   bit-level duration;
+/// * **fleet-floor-monotone** — adding a tenant never *shrinks* any
+///   catalog type's minimal eviction-free machine count (the §5.4 bound
+///   over summed working sets only grows), and a type with no
+///   eviction-free count for k tenants has none for k+1 either;
+/// * **fleet-deterministic** — the full interleaved run under the
+///   `contention` scenario replays byte-for-byte
+///   ([`crate::sim::FleetRunResult::fingerprint`]) under every worker
+///   count of the thread matrix, for both fairness knobs.
+///
+/// Returns `(checks_run, violations)`; violations carry the workload's
+/// generator seed (batch-level ones the first seed) so a counterexample
+/// reproduces from the log.
+pub fn check_fleet(preset: &str, first_seed: u64, count: usize) -> (usize, Vec<Violation>) {
+    let mut checks = 0usize;
+    let mut out = Vec::new();
+    let cfg = SynthConfig::by_name(preset).expect("known synth preset");
+    let spec = MatrixSpec::default();
+    let scale = spec.engine_scale;
+    let apps: Vec<(u64, AppModel)> = cfg.generate_many(first_seed, count).into_iter().collect();
+    if apps.is_empty() {
+        return (checks, out);
+    }
+    let wps: Vec<WorkloadProfile> = apps.iter().map(|(_, a)| a.profile(scale)).collect();
+    let fleet = FleetSpec::homogeneous(crate::sim::InstanceType::paper_worker(), 4)
+        .expect("4 workers is a valid fleet");
+    let opts = || SimOptions {
+        policy: EvictionPolicy::Lru,
+        seed: spec.engine_seed,
+        compute: None,
+        detailed_log: false,
+    };
+
+    // degeneracy: one tenant on the fleet == the single-tenant engine
+    for ((gseed, app), wp) in apps.iter().zip(&wps) {
+        checks += 1;
+        let single = match engine::run(wp, &fleet, &scenario::NoDisturbances, opts()) {
+            Ok(r) => r,
+            Err(e) => {
+                out.push(violation(app, *gseed, "fleet-degeneracy", format!("engine failed: {e}")));
+                continue;
+            }
+        };
+        let tenant = TenantSpec { name: app.name.clone(), profile: wp.clone() };
+        let wrapped = match engine::run_fleet(
+            std::slice::from_ref(&tenant),
+            &fleet,
+            &scenario::NoDisturbances,
+            FleetFairness::SharedLru,
+            opts(),
+        ) {
+            Ok(r) => r,
+            Err(e) => {
+                out.push(violation(app, *gseed, "fleet-degeneracy", format!("fleet failed: {e}")));
+                continue;
+            }
+        };
+        if wrapped.logs.len() != 1
+            || wrapped.logs[0].to_jsonl() != single.sim.log.to_jsonl()
+            || wrapped.duration_s.to_bits() != single.timeline.duration_s.to_bits()
+        {
+            out.push(violation(
+                app,
+                *gseed,
+                "fleet-degeneracy",
+                "one-tenant fleet run diverged from the single-tenant engine".to_string(),
+            ));
+        }
+    }
+
+    // floor monotonicity: plan each tenant-count prefix over the true
+    // footprints; per type the eviction-free floor never shrinks
+    let pricing = pricing_by_name(spec.pricing_names[0]).expect("matrix pricing exists");
+    for catalog_name in &spec.catalog_names {
+        let catalog = InstanceCatalog::by_name(catalog_name).expect("matrix catalog exists");
+        let mut prev: Vec<Option<usize>> = vec![None; catalog.instances.len()];
+        for k in 1..=apps.len() {
+            checks += 1;
+            let inputs: Vec<FleetPlanInput<'_>> = apps[..k]
+                .iter()
+                .zip(&wps[..k])
+                .map(|((_, a), w)| FleetPlanInput {
+                    name: a.name.clone(),
+                    profile: w,
+                    cached_total_mb: a.total_true_cached_mb(scale),
+                    exec_total_mb: a.exec_mem_mb(scale),
+                })
+                .collect();
+            let plan = plan_fleet(&inputs, &catalog, pricing.as_ref(), spec.max_machines);
+            for (i, instance) in catalog.instances.iter().enumerate() {
+                let floor = plan.min_eviction_free_machines(&instance.name);
+                let (gseed, app) = &apps[k - 1];
+                match (prev[i], floor, k) {
+                    (_, _, 1) => {}
+                    (Some(p), Some(n), _) if n < p => out.push(violation(
+                        app,
+                        *gseed,
+                        "fleet-floor-monotone",
+                        format!(
+                            "catalog '{catalog_name}' type '{}': floor shrank {p} -> {n} \
+                             adding tenant {k}",
+                            instance.name
+                        ),
+                    )),
+                    (None, Some(n), _) => out.push(violation(
+                        app,
+                        *gseed,
+                        "fleet-floor-monotone",
+                        format!(
+                            "catalog '{catalog_name}' type '{}': saturated at {} tenants but \
+                             eviction-free at {n} machines for {k}",
+                            instance.name,
+                            k - 1
+                        ),
+                    )),
+                    _ => {}
+                }
+                prev[i] = floor;
+            }
+        }
+    }
+
+    // determinism: the full interleaved run under contention pressure
+    // replays byte-for-byte at every pool size, for both fairness knobs
+    let tenants: Vec<TenantSpec> = apps
+        .iter()
+        .zip(&wps)
+        .map(|((_, a), w)| TenantSpec { name: a.name.clone(), profile: w.clone() })
+        .collect();
+    let contention = scenario::by_name("contention").expect("contention scenario exists");
+    let batch = |invariant: &'static str, detail: String, out: &mut Vec<Violation>| {
+        out.push(Violation {
+            workload: format!("fleet:{preset}x{count}"),
+            seed: first_seed,
+            invariant,
+            detail,
+        });
+    };
+    for fairness in [FleetFairness::SharedLru, FleetFairness::ReservationFloors] {
+        let reference = match engine::run_fleet(
+            &tenants,
+            &fleet,
+            contention.as_ref(),
+            fairness,
+            opts(),
+        ) {
+            Ok(r) => r.fingerprint(),
+            Err(e) => {
+                checks += 1;
+                batch(
+                    "fleet-deterministic",
+                    format!("{fairness:?} reference run failed: {e}"),
+                    &mut out,
+                );
+                continue;
+            }
+        };
+        for &workers in &[0usize, 1, 2, 8] {
+            checks += 1;
+            let got = sweep_range_with(workers, 0, 2, |_| {
+                engine::run_fleet(&tenants, &fleet, contention.as_ref(), fairness, opts())
+                    .map(|r| r.fingerprint())
+                    .unwrap_or_default()
+            });
+            if got.iter().any(|fp| *fp != reference) {
+                batch(
+                    "fleet-deterministic",
+                    format!(
+                        "{fairness:?}: a {workers}-worker replay diverged from the serial \
+                         reference fingerprint"
+                    ),
+                    &mut out,
+                );
+            }
+        }
+    }
+
     (checks, out)
 }
 

@@ -12,15 +12,24 @@
 //!   smoke batches: realized adaptive cost dominates the static pick's,
 //!   the well-estimated `linear` preset never re-plans, and the
 //!   systematically under-fit `superlinear` preset always re-plans
-//!   somewhere in the batch.
+//!   somewhere in the batch;
+//! * the controller's **surplus arm** works end to end: a hand-planted
+//!   3× over-prediction makes the refit diverge downward, the re-plan
+//!   wants fewer machines, and the loop retires the excess — cost-gated,
+//!   never emptying the fleet, never firing both arms at once.
+
+use std::collections::BTreeMap;
 
 use blink::blink::models::{ModelKind, SelectedModel};
-use blink::blink::{adapt, AdaptConfig, Advisor, RlsState, RustFit, TrainedProfile};
+use blink::blink::{
+    adapt, AdaptConfig, Advisor, ExecMemoryPredictor, RlsState, RustFit, SizePredictor,
+    TrainedProfile,
+};
 use blink::cost::pricing_by_name;
-use blink::sim::{scenario, InstanceCatalog};
+use blink::sim::{scenario, InstanceCatalog, InstanceType};
 use blink::testkit::{check_adaptive, Violation};
 use blink::util::par::sweep_range_with;
-use blink::workloads::{SizeLaw, SynthConfig};
+use blink::workloads::{AppModel, DagSpec, SizeLaw, SizeNoise, SynthConfig, FULL_SCALE};
 
 fn render(violations: &[Violation]) -> String {
     violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
@@ -114,6 +123,170 @@ fn check_adaptive_smoke_superlinear_replans_and_dominates() {
     let (checks, violations) = check_adaptive("superlinear", 1, 3);
     assert!(checks >= 6, "{checks}");
     assert!(violations.is_empty(), "{}", render(&violations));
+}
+
+/// A trained profile whose planted size model predicts 3× the true flat
+/// 6 GB footprint: the static plan over-provisions, the run's own
+/// observations pull the refit back down, and the controller's surplus
+/// arm must retire the excess machines.
+fn shrinkable_profile() -> TrainedProfile {
+    let app = AppModel {
+        name: "shrinkable".into(),
+        input_mb_full: 4000.0,
+        blocks_full: 4,
+        cached_laws: vec![SizeLaw::new(6000.0, 0.0)],
+        exec_law: SizeLaw::new(500.0, 0.0),
+        size_noise: SizeNoise::new(0.0, 1.0),
+        iterations: 5,
+        compute_s_per_mb: 0.01,
+        cached_speedup: 97.0,
+        recompute_factor: 1.0,
+        serial_fixed_s: 1.0,
+        serial_per_scale_s: 0.0,
+        shuffle_mb_full: 0.0,
+        task_overhead_s: 0.01,
+        task_time_sigma: 0.0,
+        per_partition_overhead_mb: 0.0,
+        parallelism_cap: None,
+        force_block_s: false,
+        enlarged_scale: FULL_SCALE,
+        dag_spec: DagSpec::Layered { depth: 1, width: 1, cached: 1, iterations: 5 },
+    };
+    let planted = SelectedModel {
+        kind: ModelKind::Linear,
+        theta: vec![18_000.0, 0.0],
+        cv_rmse: 0.0,
+        cv_rel_err: 0.0,
+    };
+    let exec = SelectedModel {
+        kind: ModelKind::Linear,
+        theta: vec![500.0, 0.0],
+        cv_rmse: 0.0,
+        cv_rel_err: 0.0,
+    };
+    let mut models = BTreeMap::new();
+    models.insert(0usize, planted);
+    TrainedProfile {
+        app,
+        scales: vec![],
+        max_machines: 12,
+        sample_cost_machine_s: 0.0,
+        runs: vec![],
+        models: Some((SizePredictor { models }, ExecMemoryPredictor { model: exec })),
+    }
+}
+
+#[test]
+fn over_predicted_footprint_scales_in_and_the_cheaper_run_is_adopted() {
+    // the scale-in regression: before the surplus arm existed, this
+    // decision would have been advisory-only (add = 0) and the loop would
+    // have kept billing every over-provisioned machine to the end
+    let trained = shrinkable_profile();
+    let catalog = InstanceCatalog::single(InstanceType::paper_worker());
+    let pricing = pricing_by_name("machine-seconds").unwrap();
+    let o = adapt(
+        &trained,
+        FULL_SCALE,
+        &catalog,
+        pricing.as_ref(),
+        &scenario::NoDisturbances,
+        &AdaptConfig::default(),
+    )
+    .unwrap();
+    assert!((o.predicted_mb - 18_000.0).abs() < 1e-9, "{}", o.predicted_mb);
+    assert!(o.machines >= 2, "18 GB predicted cannot fit one worker: {}", o.machines);
+    let d = o.decision.as_ref().expect("a 3x over-prediction must trip the 0.5 threshold");
+    assert!(d.refit_mb < 7000.0, "refit must track the observed ~6000 MB: {}", d.refit_mb);
+    assert!(d.divergence >= 0.5, "{}", d.divergence);
+    assert!(d.deficit_mb < 0.0, "the observed footprint fits the fleet: {}", d.deficit_mb);
+    assert_eq!(d.add_machines, 0, "a surplus must never scale out");
+    assert!(
+        d.replanned_machines < o.machines,
+        "re-plan of a 6 GB footprint wants fewer than {} machines, got {}",
+        o.machines,
+        d.replanned_machines
+    );
+    assert_eq!(d.remove_machines, o.machines - d.replanned_machines.max(1));
+    assert!(d.remove_machines >= 1);
+    // retiring idle machines mid-run is strictly cheaper, so the cost
+    // gate adopts the corrective run
+    assert!(o.adopted, "scale-in must pay for itself");
+    assert!(o.adaptive_cost < o.static_cost, "{} vs {}", o.adaptive_cost, o.static_cost);
+    assert!(o.adaptive_time_s <= o.static_time_s + 1e-9);
+    assert!(o.fingerprint().contains("replan@"));
+}
+
+#[test]
+fn linear_preset_never_arms_the_controller() {
+    // the well-estimated preset must not trigger either controller arm:
+    // no decision, and the adaptive answer is the static one bit for bit
+    let catalog = InstanceCatalog::by_name("paper").unwrap();
+    let pricing = pricing_by_name("machine-seconds").unwrap();
+    let cfg = SynthConfig::by_name("linear").unwrap();
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().max_machines(12).build(&mut backend);
+    for (seed, app) in cfg.generate_many(1, 3) {
+        let profile = advisor.profile(&app);
+        let o = adapt(
+            &profile,
+            300.0,
+            &catalog,
+            pricing.as_ref(),
+            &scenario::NoDisturbances,
+            &AdaptConfig { seed, ..Default::default() },
+        )
+        .unwrap();
+        assert!(o.decision.is_none(), "seed {seed}: {:?}", o.decision);
+        assert!(!o.adopted, "seed {seed}");
+        assert_eq!(o.adaptive_time_s.to_bits(), o.static_time_s.to_bits(), "seed {seed}");
+        assert_eq!(o.adaptive_cost.to_bits(), o.static_cost.to_bits(), "seed {seed}");
+    }
+}
+
+#[test]
+fn sublinear_preset_decisions_respect_the_controller_arm_invariants() {
+    // a zero threshold makes the divergence check fire at the first
+    // eligible barrier for every workload, whatever the fit quality —
+    // exercising both controller arms' bookkeeping across a batch
+    let catalog = InstanceCatalog::by_name("paper").unwrap();
+    let pricing = pricing_by_name("machine-seconds").unwrap();
+    let cfg = SynthConfig::by_name("sublinear").unwrap();
+    let mut backend = RustFit::default();
+    let mut advisor = Advisor::builder().max_machines(12).build(&mut backend);
+    let mut decisions = 0usize;
+    for (seed, app) in cfg.generate_many(1, 3) {
+        let profile = advisor.profile(&app);
+        let o = adapt(
+            &profile,
+            300.0,
+            &catalog,
+            pricing.as_ref(),
+            &scenario::NoDisturbances,
+            &AdaptConfig { seed, threshold: 0.0, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            o.adaptive_cost <= o.static_cost * (1.0 + 1e-9),
+            "seed {seed}: {} vs {}",
+            o.adaptive_cost,
+            o.static_cost
+        );
+        let Some(d) = &o.decision else { continue };
+        decisions += 1;
+        assert!(
+            d.add_machines == 0 || d.remove_machines == 0,
+            "seed {seed}: both controller arms fired"
+        );
+        if d.add_machines > 0 {
+            assert!(d.deficit_mb > 0.0, "seed {seed}: scale-out without a deficit");
+        }
+        if d.remove_machines > 0 {
+            assert!(d.deficit_mb <= 0.0, "seed {seed}: scale-in without a surplus");
+            assert!(d.replanned_machines < o.machines, "seed {seed}");
+            assert!(d.remove_machines < o.machines, "seed {seed}: fleet must survive");
+        }
+    }
+    assert!(decisions >= 1, "a zero threshold must fire on every modeled workload");
 }
 
 #[test]

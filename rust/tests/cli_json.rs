@@ -165,6 +165,44 @@ fn text_mode_is_unchanged_and_not_json() {
 }
 
 #[test]
+fn fleet_json_is_a_byte_stable_snapshot() {
+    // the multi-tenant path is engine-driven end to end (no wall clock),
+    // so the full JSON document — plan grid, realized run, fingerprint —
+    // must replay byte-for-byte under a fixed seed
+    let args = [
+        "fleet", "--apps", "svm,km", "--scale", "200", "--catalog", "paper", "--pricing",
+        "machine-seconds", "--max-machines", "6", "--fairness", "shared-lru", "--scenario",
+        "none", "--seed", "1", "--format", "json",
+    ];
+    let first = blink_cli(&args);
+    let second = blink_cli(&args);
+    assert_eq!(first, second, "fleet JSON must replay byte-for-byte");
+    let j = parse(&first).expect("one JSON doc");
+    assert_eq!(marker(&j, "query"), "fleet");
+    assert_eq!(marker(&j, "fairness"), "shared-lru");
+    let tenants = j.get("tenants").and_then(Json::as_arr).expect("tenant rows");
+    assert_eq!(tenants.len(), 2);
+    let best = j.path(&["plan", "best", "candidate"]).expect("a feasible shared pick");
+    assert!(best.get("machines").and_then(Json::as_f64).unwrap() >= 1.0);
+    let realized = j.get("realized").expect("realized run present");
+    assert_eq!(marker(realized, "seed"), "1");
+    let fp = marker(realized, "fingerprint");
+    assert!(!fp.is_empty(), "realized fingerprint must be present:\n{first}");
+    assert_eq!(
+        realized.get("tenants").and_then(Json::as_arr).map(Vec::len),
+        Some(2),
+        "per-tenant stats for both apps"
+    );
+
+    // an unknown fairness knob is rejected listing both valid spellings
+    let err = blink_cli_err(&["fleet", "--apps", "svm", "--fairness", "communism"]);
+    assert!(
+        err.contains("shared-lru") && err.contains("reservation-floors"),
+        "stderr must list the fairness knobs: {err}"
+    );
+}
+
+#[test]
 fn serve_answers_a_jsonl_batch_as_one_document() {
     let dir = std::env::temp_dir().join(format!("blink-cli-serve-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

@@ -1,0 +1,239 @@
+//! Integration: multi-tenant fleet scheduling — `sim::run_fleet`,
+//! `planner::plan_fleet`, and the `testkit::check_fleet` contract.
+//!
+//! * a **one-tenant fleet run degenerates byte-for-byte** to the
+//!   single-tenant engine: identical event-log JSONL, bit-identical
+//!   makespan;
+//! * the **3-tenant interleaved run is byte-identical across the thread
+//!   matrix**: the fleet fingerprint replayed under `[0, 1, 2, 8]`
+//!   worker pools matches the serial reference, under contention
+//!   pressure, for both fairness knobs;
+//! * the **shared plan realizes**: the cheapest eviction-free pick from
+//!   `plan_fleet` over the summed true working sets actually runs every
+//!   tenant to completion with zero evictions;
+//! * the **eviction-free floor is monotone** in the tenant count on the
+//!   paper apps, per catalog type;
+//! * the `testkit::check_fleet` **differential invariants** hold on
+//!   smoke batches of synthetic tenants.
+
+use blink::blink::{plan_fleet, FleetPlanInput};
+use blink::cost::pricing_by_name;
+use blink::memory::EvictionPolicy;
+use blink::sim::{
+    engine, scenario, FleetFairness, FleetSpec, InstanceCatalog, InstanceType, SimError,
+    SimOptions, TenantSpec,
+};
+use blink::testkit::{check_fleet, Violation};
+use blink::util::par::sweep_range_with;
+use blink::workloads::app_by_name;
+
+fn render(violations: &[Violation]) -> String {
+    violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+fn opts(seed: u64) -> SimOptions<'static> {
+    SimOptions { policy: EvictionPolicy::Lru, seed, compute: None, detailed_log: false }
+}
+
+#[test]
+fn one_tenant_fleet_run_is_byte_identical_to_the_single_engine() {
+    let fleet = FleetSpec::homogeneous(InstanceType::paper_worker(), 4).unwrap();
+    for (name, seed) in [("svm", 7u64), ("km", 11), ("gbt", 23)] {
+        let app = app_by_name(name).unwrap();
+        let wp = app.profile(300.0);
+        let single = engine::run(&wp, &fleet, &scenario::NoDisturbances, opts(seed)).unwrap();
+        let tenant = TenantSpec { name: name.to_string(), profile: wp.clone() };
+        let wrapped = engine::run_fleet(
+            std::slice::from_ref(&tenant),
+            &fleet,
+            &scenario::NoDisturbances,
+            FleetFairness::SharedLru,
+            opts(seed),
+        )
+        .unwrap();
+        assert_eq!(wrapped.logs.len(), 1, "{name}");
+        assert_eq!(
+            wrapped.logs[0].to_jsonl(),
+            single.sim.log.to_jsonl(),
+            "{name}: one-tenant fleet log diverged from the engine"
+        );
+        assert_eq!(
+            wrapped.duration_s.to_bits(),
+            single.timeline.duration_s.to_bits(),
+            "{name}: makespan not bit-identical"
+        );
+        assert_eq!(wrapped.tenants.len(), 1, "{name}");
+        assert_eq!(wrapped.tenants[0].jobs, wp.iterations + 1, "{name}: job count");
+    }
+}
+
+#[test]
+fn three_tenants_interleave_deterministically_across_the_thread_matrix() {
+    // svm + km + lr at 30 % scale massively oversubscribe two paper
+    // workers, so the arbitration path (shared LRU / reservation
+    // floors) is actually exercised — and must still replay
+    // byte-for-byte at every pool size.
+    let tenants: Vec<TenantSpec> = ["svm", "km", "lr"]
+        .iter()
+        .map(|n| {
+            let app = app_by_name(n).unwrap();
+            TenantSpec { name: n.to_string(), profile: app.profile(300.0) }
+        })
+        .collect();
+    let fleet = FleetSpec::homogeneous(InstanceType::paper_worker(), 2).unwrap();
+    let contention = scenario::by_name("contention").unwrap();
+    for fairness in [FleetFairness::SharedLru, FleetFairness::ReservationFloors] {
+        let reference =
+            engine::run_fleet(&tenants, &fleet, contention.as_ref(), fairness, opts(11)).unwrap();
+        assert_eq!(reference.tenants.len(), 3);
+        for (t, spec) in reference.tenants.iter().zip(&tenants) {
+            assert_eq!(t.jobs, spec.profile.iterations + 1, "{}: job count", t.name);
+            assert!(
+                t.finish_s <= reference.duration_s + 1e-9,
+                "{}: finished after the fleet makespan",
+                t.name
+            );
+        }
+        assert!(
+            reference
+                .tenants
+                .iter()
+                .any(|t| (t.finish_s - reference.duration_s).abs() <= 1e-9),
+            "some tenant must define the makespan"
+        );
+        let want = reference.fingerprint();
+        for workers in [0usize, 1, 2, 8] {
+            let got = sweep_range_with(workers, 0, 3, |_| {
+                engine::run_fleet(&tenants, &fleet, contention.as_ref(), fairness, opts(11))
+                    .map(|r| r.fingerprint())
+                    .unwrap_or_default()
+            });
+            for fp in &got {
+                assert_eq!(
+                    fp, &want,
+                    "{fairness:?}: {workers}-worker replay diverged from the serial reference"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn the_cheapest_eviction_free_fleet_plan_realizes_with_zero_evictions() {
+    // als + gbt + pca at 30 % scale: the summed working set fits a
+    // single paper worker with >1 GB of headroom, so whatever count the
+    // plan picks, the realized run must never evict a tenant's block.
+    let apps: Vec<_> = ["als", "gbt", "pca"].iter().map(|n| app_by_name(n).unwrap()).collect();
+    let wps: Vec<_> = apps.iter().map(|a| a.profile(300.0)).collect();
+    let inputs: Vec<FleetPlanInput<'_>> = apps
+        .iter()
+        .zip(&wps)
+        .map(|(a, w)| FleetPlanInput {
+            name: a.name.clone(),
+            profile: w,
+            cached_total_mb: a.total_true_cached_mb(300.0),
+            exec_total_mb: a.exec_mem_mb(300.0),
+        })
+        .collect();
+    let catalog = InstanceCatalog::paper();
+    let pricing = pricing_by_name("machine-seconds").unwrap();
+    let plan = plan_fleet(&inputs, &catalog, pricing.as_ref(), 12);
+    let best = plan.best().expect("a feasible shared configuration exists");
+    assert!(
+        best.candidate.eviction_free,
+        "the summed working set fits the paper catalog: {:?}",
+        best.candidate
+    );
+    assert!(best.candidate.headroom_mb > 0.0, "{:?}", best.candidate);
+    assert_eq!(best.candidate.per_tenant_time_s.len(), 3);
+
+    let instance = catalog.get(&best.candidate.instance).unwrap().clone();
+    let fleet = FleetSpec::homogeneous(instance, best.candidate.machines).unwrap();
+    let tenants: Vec<TenantSpec> = apps
+        .iter()
+        .zip(&wps)
+        .map(|(a, w)| TenantSpec { name: a.name.clone(), profile: w.clone() })
+        .collect();
+    let run = engine::run_fleet(
+        &tenants,
+        &fleet,
+        &scenario::NoDisturbances,
+        FleetFairness::SharedLru,
+        opts(1),
+    )
+    .unwrap();
+    for (t, w) in run.tenants.iter().zip(&wps) {
+        assert_eq!(t.evictions, 0, "{}: plan promised eviction-free", t.name);
+        assert_eq!(t.cached_mb_lost, 0.0, "{}", t.name);
+        assert_eq!(t.jobs, w.iterations + 1, "{}", t.name);
+    }
+    assert!(run.duration_s > 0.0);
+}
+
+#[test]
+fn adding_a_paper_tenant_never_shrinks_the_eviction_free_floor() {
+    let apps: Vec<_> = ["svm", "km", "lr"].iter().map(|n| app_by_name(n).unwrap()).collect();
+    let wps: Vec<_> = apps.iter().map(|a| a.profile(300.0)).collect();
+    let pricing = pricing_by_name("machine-seconds").unwrap();
+    for catalog in [InstanceCatalog::paper(), InstanceCatalog::cloud()] {
+        let mut prev: Vec<Option<usize>> = vec![None; catalog.instances.len()];
+        for k in 1..=apps.len() {
+            let inputs: Vec<FleetPlanInput<'_>> = apps[..k]
+                .iter()
+                .zip(&wps[..k])
+                .map(|(a, w)| FleetPlanInput {
+                    name: a.name.clone(),
+                    profile: w,
+                    cached_total_mb: a.total_true_cached_mb(300.0),
+                    exec_total_mb: a.exec_mem_mb(300.0),
+                })
+                .collect();
+            let plan = plan_fleet(&inputs, &catalog, pricing.as_ref(), 16);
+            for (i, instance) in catalog.instances.iter().enumerate() {
+                let floor = plan.min_eviction_free_machines(&instance.name);
+                if k > 1 {
+                    match (prev[i], floor) {
+                        (Some(p), Some(n)) => assert!(
+                            n >= p,
+                            "'{}' floor shrank {p} -> {n} at {k} tenants",
+                            instance.name
+                        ),
+                        (None, Some(n)) => panic!(
+                            "'{}' saturated at {} tenants but eviction-free at {n} for {k}",
+                            instance.name,
+                            k - 1
+                        ),
+                        _ => {}
+                    }
+                }
+                prev[i] = floor;
+            }
+        }
+    }
+}
+
+#[test]
+fn an_empty_tenant_list_is_rejected() {
+    let fleet = FleetSpec::homogeneous(InstanceType::paper_worker(), 2).unwrap();
+    let res = engine::run_fleet(
+        &[],
+        &fleet,
+        &scenario::NoDisturbances,
+        FleetFairness::SharedLru,
+        opts(1),
+    );
+    match res {
+        Err(SimError::NoTenants) => {}
+        Err(other) => panic!("expected NoTenants, got {other:?}"),
+        Ok(_) => panic!("an empty tenant list must be rejected"),
+    }
+}
+
+#[test]
+fn check_fleet_release_matrix() {
+    for preset in ["linear", "noisy", "superlinear"] {
+        let (checks, violations) = check_fleet(preset, 1, 3);
+        assert!(checks >= 17, "{preset}: {checks}");
+        assert!(violations.is_empty(), "{preset}:\n{}", render(&violations));
+    }
+}

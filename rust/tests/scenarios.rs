@@ -285,6 +285,19 @@ fn every_scenario_from_by_name_leaves_its_engine_level_signature() {
                     assert_eq!((lost_events, joined_events), (0, 0));
                 }
             }
+            "contention" => {
+                // transient memory pressure: every machine squeezed at one
+                // instant — no lifecycle churn, and a cache squeeze can
+                // never make the run finish earlier
+                assert_eq!((lost_events, joined_events), (0, 0), "pressure keeps the fleet");
+                assert_eq!(run.timeline.entries.len(), 6, "no extra uptime segments");
+                assert!(
+                    s.duration_s + 1e-9 >= bs.duration_s,
+                    "a cache squeeze can never shorten the run: {} vs {}",
+                    s.duration_s,
+                    bs.duration_s
+                );
+            }
             other => unreachable!("unknown scenario {other}"),
         }
     }
